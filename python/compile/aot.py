@@ -1,0 +1,99 @@
+"""AOT pipeline: lower every workload graph to HLO *text* + manifest.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per workload:
+  artifacts/<name>.hlo.txt   -- the lowered module (return_tuple=True)
+  artifacts/manifest.json    -- input/output specs + numeric check values
+
+The manifest embeds oracle-computed check sums over the deterministic test
+input (model.test_input) so the rust runtime tests can verify end-to-end
+numerics without any python on the request path.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--only name,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_workload(w: model.Workload) -> tuple[str, dict]:
+    spec = jax.ShapeDtypeStruct(w.input_shape, jnp.float32)
+    lowered = jax.jit(w.fn).lower(spec)
+    text = to_hlo_text(lowered)
+
+    # Evaluate on the deterministic check vector for the rust-side test.
+    x = model.test_input(w.input_shape)
+    outs = jax.jit(w.fn)(x)
+    out_specs = []
+    checks = []
+    for o in outs:
+        o = np.asarray(o)
+        out_specs.append({"shape": list(o.shape), "dtype": str(o.dtype)})
+        checks.append(
+            {
+                "sum": float(np.sum(o, dtype=np.float64)),
+                "l2": float(np.sqrt(np.sum(np.square(o, dtype=np.float64)))),
+                "first": float(o.reshape(-1)[0]) if o.size else 0.0,
+            }
+        )
+
+    entry = {
+        "name": w.name,
+        "file": f"{w.name}.hlo.txt",
+        "doc": w.doc,
+        "flops": w.flops,
+        "inputs": [{"shape": list(w.input_shape), "dtype": "float32"}],
+        "outputs": out_specs,
+        "check": {"input": "sin037", "tol": 5e-4, "outputs": checks},
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated workload names")
+    args = ap.parse_args()
+
+    names = [n for n in args.only.split(",") if n] or list(model.WORKLOADS)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "functions": []}
+    for name in names:
+        w = model.WORKLOADS[name]
+        text, entry = lower_workload(w)
+        path = os.path.join(args.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["functions"].append(entry)
+        print(f"  {name:12s} -> {path}  ({len(text)} chars, flops={w.flops})")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest     -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

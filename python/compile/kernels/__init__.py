@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+All kernels use interpret=True so the lowered HLO contains plain XLA ops
+executable by the CPU PJRT client on the rust side.  `ref` holds the
+pure-jnp oracles used by the pytest/hypothesis correctness suite.
+"""
+
+from . import ref
+from .attention import attention, multi_head_attention
+from .fused_linear import fused_linear
+from .norm import layer_norm
+from .pool import avg_pool
+from .reduce import checksum
+
+__all__ = [
+    "ref",
+    "attention",
+    "multi_head_attention",
+    "fused_linear",
+    "layer_norm",
+    "avg_pool",
+    "checksum",
+]

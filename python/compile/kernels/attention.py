@@ -1,0 +1,104 @@
+"""Pallas kernel: single-head scaled-dot-product attention, online softmax.
+
+Flash-attention structure adapted for TPU/VMEM (DESIGN.md
+§Hardware-Adaptation): the grid tiles the query sequence; inside each
+program instance a fori_loop streams key/value tiles through VMEM and keeps
+the (running max, running denominator, accumulator) triple so the (S_q,
+S_kv) score matrix never materializes in HBM — the paper-era GPU trick
+(threadblock tiling of S) re-expressed as a BlockSpec + in-kernel loop.
+
+Ragged S_kv is handled with an explicit length operand and -inf masking, so
+the wrapper can zero-pad both sequence axes to tile multiples.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 64
+BLOCK_K = 64
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k):
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d**0.5)
+    q = q_ref[...].astype(jnp.float32) * scale
+    kv_len = len_ref[0]
+    n_kv_blocks = k_ref.shape[0] // block_k
+    bq = q.shape[0]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        vb = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jnp.dot(q, kb.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        col = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(col < kv_len, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        # alpha rescales the old accumulator; rows that were fully masked so
+        # far have m == -inf only before the first valid column, and column 0
+        # is always valid, so m_new is finite from block 0 on.
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, vb, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+) -> jax.Array:
+    """softmax(q k^T / sqrt(d)) v with q: (S_q, D), k/v: (S_kv, D)."""
+    sq, d = q.shape
+    skv, d2 = k.shape
+    assert d == d2 and v.shape == k.shape
+
+    bq = min(block_q, _pad_to(sq, 8))
+    bk = min(block_k, _pad_to(skv, 8))
+    sqp, skvp = _pad_to(sq, bq), _pad_to(skv, bk)
+    qp = jnp.pad(q, ((0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, skvp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, skvp - skv), (0, 0)))
+    kv_len = jnp.array([skv], dtype=jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=bk),
+        grid=(sqp // bq,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((skvp, d), lambda i: (0, 0)),
+            pl.BlockSpec((skvp, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sqp, d), q.dtype),
+        interpret=True,
+    )(kv_len, qp, kp, vp)
+    return out[:sq]
+
+
+def multi_head_attention(q: jax.Array, k: jax.Array, v: jax.Array, n_heads: int) -> jax.Array:
+    """(S, D) inputs split into n_heads of D//n_heads, single-head kernel per head."""
+    s, d = q.shape
+    assert d % n_heads == 0
+    dh = d // n_heads
+    split = lambda t: t.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    outs = jax.vmap(attention)(split(q), split(k), split(v))  # (H, S, dh)
+    return outs.transpose(1, 0, 2).reshape(s, d)

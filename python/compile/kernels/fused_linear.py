@@ -1,0 +1,86 @@
+"""Pallas kernel: tiled fused linear layer  y = act(x @ w + b).
+
+The FaaS "user function" hot-spot (MLP / transformer feed-forward) as a
+single fused kernel: one HBM->VMEM round-trip per tile instead of three
+separate matmul / bias / activation passes.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (bm, bn) output tile
+and its (bm, K) / (K, bn) operand stripes are the VMEM working set; the
+inner jnp.dot maps onto 128x128 MXU passes.  Lowered with interpret=True so
+the CPU PJRT client (rust side) can execute the resulting HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: one MXU-shaped output tile per program instance.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _act(y: jax.Array, activation: str) -> jax.Array:
+    if activation == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = _act(y, activation).astype(o_ref.dtype)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n"))
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "gelu",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """act(x @ w + b) with x: (M, K), w: (K, N), b: (N,).
+
+    Arbitrary M/N/K are supported: operands are zero-padded up to the tile
+    grid and the result is sliced back.  Padded output rows/cols never mix
+    with real data (zero rows of x produce garbage rows that are sliced off;
+    padded cols of w/b produce garbage cols that are sliced off).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"x/w contraction mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = min(block_m, _pad_to(m, 8))
+    bn = min(block_n, _pad_to(n, 8))
+    mp, np_ = _pad_to(m, bm), _pad_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]

@@ -1,0 +1,57 @@
+"""Pallas kernel: row-tiled layer normalization.
+
+Rows are independent, so the grid tiles the row axis; gamma/beta stay
+resident in VMEM across all program instances (BlockSpec pins them to
+block 0).  Statistics are computed in f32 regardless of input dtype.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    g = g_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (y * g[None, :] + b[None, :]).astype(o_ref.dtype)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layer_norm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    eps: float = 1e-5,
+    block_rows: int = BLOCK_ROWS,
+) -> jax.Array:
+    """Row-wise layer norm over the last axis of a (M, D) array."""
+    m, d = x.shape
+    assert gamma.shape == (d,) and beta.shape == (d,)
+    br = min(block_rows, _pad_to(m, 8))
+    mp = _pad_to(m, br)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(mp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:m]

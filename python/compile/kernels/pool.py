@@ -1,0 +1,52 @@
+"""Pallas kernel: 2-D average pooling for the thumbnail workload.
+
+Rows pool independently, so the grid tiles output rows; each program
+instance loads a (block_rows * factor, W, C) stripe into VMEM, reduces the
+factor x factor windows in f32, and writes the (block_rows, W/factor, C)
+output tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_OUT_ROWS = 8
+
+
+def _kernel(x_ref, o_ref, *, factor):
+    x = x_ref[...].astype(jnp.float32)
+    bh_in, w, c = x.shape
+    bh_out = bh_in // factor
+    pooled = x.reshape(bh_out, factor, w // factor, factor, c).mean(axis=(1, 3))
+    o_ref[...] = pooled.astype(o_ref.dtype)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(jax.jit, static_argnames=("factor", "block_rows"))
+def avg_pool(img: jax.Array, factor: int, block_rows: int = BLOCK_OUT_ROWS) -> jax.Array:
+    """Average-pool a (H, W, C) image by `factor` along H and W.
+
+    H and W must be divisible by `factor` (true for the thumbnail
+    workload); the output row axis is padded to the tile grid and sliced.
+    """
+    h, w, c = img.shape
+    assert h % factor == 0 and w % factor == 0, "image dims must divide the pool factor"
+    h_out, w_out = h // factor, w // factor
+    br = min(block_rows, _pad_to(h_out, 1))
+    h_out_p = _pad_to(h_out, br)
+    img_p = jnp.pad(img, ((0, (h_out_p - h_out) * factor), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, factor=factor),
+        grid=(h_out_p // br,),
+        in_specs=[pl.BlockSpec((br * factor, w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((br, w_out, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out_p, w_out, c), img.dtype),
+        interpret=True,
+    )(img_p)
+    return out[:h_out]

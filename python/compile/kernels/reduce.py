@@ -1,0 +1,52 @@
+"""Pallas kernel: positional-weighted checksum reduction.
+
+The 'checksum over request payload' FaaS workload: a sequential-grid
+reduction that accumulates one VMEM tile at a time into a (1,1) output ref.
+Demonstrates the multi-visit-output accumulation pattern (init on first
+program instance, += after), with iota-derived positional weights and
+tail masking so arbitrary lengths work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _kernel(x_ref, o_ref, *, block, n_total):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = 0.0
+
+    x = x_ref[...].astype(jnp.float32)
+    idx = i * block + jax.lax.iota(jnp.int32, block)
+    w = (((idx % 64) + 1).astype(jnp.float32)) / 64.0
+    contrib = jnp.where(idx < n_total, x * w, 0.0)
+    o_ref[0, 0] += jnp.sum(contrib)
+
+
+def _pad_to(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def checksum(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """sum_i x_i * (((i % 64) + 1) / 64) over a 1-D array, any length >= 1."""
+    (n,) = x.shape
+    blk = min(block, _pad_to(n, 8))
+    np_ = _pad_to(n, blk)
+    xp = jnp.pad(x, (0, np_ - n))
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=blk, n_total=n),
+        grid=(np_ // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[0, 0]

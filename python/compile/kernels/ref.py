@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with the same signature.
+The pytest suite (python/tests/) sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle; the AOT pipeline also embeds
+oracle-derived check values into the artifact manifest so the rust side can
+verify numerics end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear(x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "gelu") -> jax.Array:
+    """y = act(x @ w + b).  x: (M, K), w: (K, N), b: (N,)."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if activation == "gelu":
+        y = jax.nn.gelu(y, approximate=True)
+    elif activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention for a single head.
+
+    q: (S_q, D), k/v: (S_kv, D).  Numerically stable softmax in f32.
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("sd,td->st", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("st,td->sd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def checksum(x: jax.Array) -> jax.Array:
+    """Positional weighted sum: sum_i x_i * w_i with w_i = ((i % 64) + 1) / 64.
+
+    A cheap, order-sensitive reduction standing in for the 'checksum over the
+    request payload' FaaS workload.  Returns a f32 scalar.
+    """
+    n = x.shape[0]
+    w = ((jnp.arange(n, dtype=jnp.float32) % 64.0) + 1.0) / 64.0
+    return jnp.sum(x.astype(jnp.float32) * w)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Row-wise layer norm.  x: (..., D)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def avg_pool(img: jax.Array, factor: int) -> jax.Array:
+    """Average-pool a (H, W, C) image by `factor` along H and W."""
+    h, w, c = img.shape
+    assert h % factor == 0 and w % factor == 0
+    y = img.astype(jnp.float32).reshape(h // factor, factor, w // factor, factor, c)
+    return jnp.mean(y, axis=(1, 3)).astype(img.dtype)

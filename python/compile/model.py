@@ -1,0 +1,186 @@
+"""Layer-2: the FaaS *function workloads* as JAX compute graphs.
+
+Each deployable FaaS function in the paper's prototype (echo / date / Go
+test function) is mirrored here by a real compute graph of increasing
+weight, so the reproduction can also measure the paper's §IV-B claim that
+platform overhead shrinks relative to function complexity (experiment E8):
+
+  echo        -- identity over a small payload (the paper's echo app)
+  checksum    -- positional-weighted reduction over a 64 KiB payload
+  thumbnail   -- 4x average-pool of a 64x64 RGB image
+  mlp         -- 2-layer MLP inference, Pallas fused_linear kernels
+  transformer -- pre-LN transformer block (MHA + FFN), all Pallas kernels
+
+Weights are baked in as constants from a fixed PRNG seed, so every artifact
+is self-contained: the rust executor passes only the request payload.
+Python never runs on the request path — these graphs are AOT-lowered to HLO
+text by aot.py at build time.
+"""
+
+import os
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Workload definitions
+# ---------------------------------------------------------------------------
+
+ECHO_N = 256
+CHECKSUM_N = 65536
+THUMB_H, THUMB_W, THUMB_C, THUMB_FACTOR = 64, 64, 3, 4
+MLP_BATCH, MLP_D_IN, MLP_D_HIDDEN = 8, 256, 512
+TB_SEQ, TB_D, TB_HEADS, TB_FFN = 128, 256, 4, 1024
+
+
+def _w(key: int, shape, scale: float = 0.02) -> jax.Array:
+    """Deterministic baked weight (becomes an HLO constant)."""
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def echo(x: jax.Array):
+    """Identity over a (ECHO_N,) payload — the paper's echo/date app."""
+    return (x,)
+
+
+def checksum(x: jax.Array):
+    """Pallas checksum reduction over a (CHECKSUM_N,) payload -> f32 scalar."""
+    return (kernels.checksum(x).reshape(1),)
+
+
+def thumbnail(img: jax.Array):
+    """4x average-pool of a (64, 64, 3) image -> (16, 16, 3), Pallas kernel."""
+    return (kernels.avg_pool(img, THUMB_FACTOR),)
+
+
+def mlp(x: jax.Array):
+    """2-layer MLP inference over (MLP_BATCH, MLP_D_IN), fused Pallas kernels."""
+    w1, b1 = _w(10, (MLP_D_IN, MLP_D_HIDDEN)), _w(11, (MLP_D_HIDDEN,))
+    w2, b2 = _w(12, (MLP_D_HIDDEN, MLP_D_IN)), _w(13, (MLP_D_IN,))
+    h = kernels.fused_linear(x, w1, b1, activation="gelu")
+    y = kernels.fused_linear(h, w2, b2, activation="none")
+    return (y,)
+
+
+def transformer(x: jax.Array):
+    """Pre-LN transformer block over (TB_SEQ, TB_D): LN->MHA->res, LN->FFN->res.
+
+    §Perf L2 optimization: the q/k/v projections are fused into ONE
+    (D, 3D) matmul through the Pallas fused_linear kernel — one pass over
+    the normalized activations instead of three (before/after in
+    EXPERIMENTS.md §Perf)."""
+    g1, be1 = jnp.ones(TB_D), jnp.zeros(TB_D)
+    g2, be2 = jnp.ones(TB_D), jnp.zeros(TB_D)
+    wq, wk, wv, wo = (_w(i, (TB_D, TB_D)) for i in (20, 21, 22, 23))
+    w1, b1 = _w(24, (TB_D, TB_FFN)), _w(25, (TB_FFN,))
+    w2, b2 = _w(26, (TB_FFN, TB_D)), _w(27, (TB_D,))
+
+    h = kernels.layer_norm(x, g1, be1)
+    if os.environ.get("COLDFAAS_UNFUSED_QKV"):
+        # Pre-optimization variant kept for the §Perf A/B (three passes).
+        q = kernels.fused_linear(h, wq, jnp.zeros(TB_D), activation="none")
+        k = kernels.fused_linear(h, wk, jnp.zeros(TB_D), activation="none")
+        v = kernels.fused_linear(h, wv, jnp.zeros(TB_D), activation="none")
+    else:
+        wqkv = jnp.concatenate([wq, wk, wv], axis=1)  # (D, 3D), baked constant
+        qkv = kernels.fused_linear(h, wqkv, jnp.zeros(3 * TB_D), activation="none")
+        q, k, v = jnp.split(qkv, 3, axis=1)
+    a = kernels.multi_head_attention(q, k, v, TB_HEADS)
+    a = kernels.fused_linear(a, wo, jnp.zeros(TB_D), activation="none")
+    x = x + a
+
+    h = kernels.layer_norm(x, g2, be2)
+    f = kernels.fused_linear(h, w1, b1, activation="gelu")
+    f = kernels.fused_linear(f, w2, b2, activation="none")
+    return (x + f,)
+
+
+# Pure-jnp twins used to cross-check the full graphs (not just kernels).
+def mlp_ref(x: jax.Array):
+    w1, b1 = _w(10, (MLP_D_IN, MLP_D_HIDDEN)), _w(11, (MLP_D_HIDDEN,))
+    w2, b2 = _w(12, (MLP_D_HIDDEN, MLP_D_IN)), _w(13, (MLP_D_IN,))
+    return (ref.fused_linear(ref.fused_linear(x, w1, b1, "gelu"), w2, b2, "none"),)
+
+
+def transformer_ref(x: jax.Array):
+    g1, be1 = jnp.ones(TB_D), jnp.zeros(TB_D)
+    g2, be2 = jnp.ones(TB_D), jnp.zeros(TB_D)
+    wq, wk, wv, wo = (_w(i, (TB_D, TB_D)) for i in (20, 21, 22, 23))
+    w1, b1 = _w(24, (TB_D, TB_FFN)), _w(25, (TB_FFN,))
+    w2, b2 = _w(26, (TB_FFN, TB_D)), _w(27, (TB_D,))
+    h = ref.layer_norm(x, g1, be1)
+    q, k, v = (jnp.dot(h, w) for w in (wq, wk, wv))
+    dh = TB_D // TB_HEADS
+    split = lambda t: t.reshape(TB_SEQ, TB_HEADS, dh).transpose(1, 0, 2)
+    a = jax.vmap(ref.attention)(split(q), split(k), split(v))
+    a = a.transpose(1, 0, 2).reshape(TB_SEQ, TB_D) @ wo
+    x = x + a
+    h = ref.layer_norm(x, g2, be2)
+    f = ref.fused_linear(ref.fused_linear(h, w1, b1, "gelu"), w2, b2, "none")
+    return (x + f,)
+
+
+# ---------------------------------------------------------------------------
+# Registry consumed by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    fn: Callable
+    input_shape: tuple
+    flops: int  # rough per-invocation cost, used by the complexity experiment
+    ref_fn: Callable | None = None
+    doc: str = ""
+
+
+def _mlp_flops() -> int:
+    return 2 * MLP_BATCH * (MLP_D_IN * MLP_D_HIDDEN + MLP_D_HIDDEN * MLP_D_IN)
+
+
+def _tb_flops() -> int:
+    proj = 4 * 2 * TB_SEQ * TB_D * TB_D
+    attn = 2 * 2 * TB_SEQ * TB_SEQ * TB_D
+    ffn = 2 * 2 * TB_SEQ * TB_D * TB_FFN
+    return proj + attn + ffn
+
+
+WORKLOADS: dict[str, Workload] = {
+    w.name: w
+    for w in [
+        Workload("echo", echo, (ECHO_N,), 0, doc="identity payload echo"),
+        Workload("checksum", checksum, (CHECKSUM_N,), 2 * CHECKSUM_N, doc="payload checksum"),
+        Workload(
+            "thumbnail",
+            thumbnail,
+            (THUMB_H, THUMB_W, THUMB_C),
+            THUMB_H * THUMB_W * THUMB_C,
+            doc="image 4x downscale",
+        ),
+        Workload("mlp", mlp, (MLP_BATCH, MLP_D_IN), _mlp_flops(), ref_fn=mlp_ref, doc="MLP inference"),
+        Workload(
+            "transformer",
+            transformer,
+            (TB_SEQ, TB_D),
+            _tb_flops(),
+            ref_fn=transformer_ref,
+            doc="transformer block inference",
+        ),
+    ]
+}
+
+
+def test_input(shape: tuple) -> jax.Array:
+    """The deterministic check vector mirrored by the rust integration tests:
+    flat[i] = sin(0.37 * i) * 0.5 (f32), reshaped to `shape`."""
+    n = 1
+    for s in shape:
+        n *= s
+    i = jnp.arange(n, dtype=jnp.float32)
+    return (jnp.sin(0.37 * i) * 0.5).reshape(shape)

@@ -1,0 +1,73 @@
+"""AOT pipeline tests: HLO text round-trip validity + manifest integrity."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entries = {}
+    for name in ("echo", "checksum", "mlp"):
+        text, entry = aot.lower_workload(model.WORKLOADS[name])
+        with open(os.path.join(out, entry["file"]), "w") as f:
+            f.write(text)
+        entries[name] = (text, entry)
+    return out, entries
+
+
+class TestHloText:
+    def test_text_is_hlo_module(self, built):
+        _, entries = built
+        for name, (text, _) in entries.items():
+            assert text.startswith("HloModule"), f"{name}: not HLO text"
+            assert "ENTRY" in text
+
+    def test_no_custom_calls(self, built):
+        """interpret=True must leave no Mosaic custom-calls behind — the CPU
+        PJRT client on the rust side cannot execute them."""
+        _, entries = built
+        for name, (text, _) in entries.items():
+            assert "custom-call" not in text, f"{name}: has custom-call, CPU client will fail"
+
+    def test_entry_returns_tuple(self, built):
+        """Lowered with return_tuple=True: rust unwraps with to_tuple."""
+        _, entries = built
+        for name, (text, _) in entries.items():
+            root_lines = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+            assert root_lines, f"{name}: ENTRY root is not a tuple"
+
+    def test_lowering_deterministic(self):
+        t1, _ = aot.lower_workload(model.WORKLOADS["checksum"])
+        t2, _ = aot.lower_workload(model.WORKLOADS["checksum"])
+        assert t1 == t2
+
+
+class TestManifest:
+    def test_entry_schema(self, built):
+        _, entries = built
+        for name, (_, e) in entries.items():
+            assert e["name"] == name
+            assert e["inputs"][0]["dtype"] == "float32"
+            assert len(e["check"]["outputs"]) == len(e["outputs"])
+            for c in e["check"]["outputs"]:
+                assert np.isfinite(c["sum"]) and np.isfinite(c["l2"])
+
+    def test_echo_check_values(self, built):
+        """Echo is the identity: the manifest check must equal the input stats."""
+        _, entries = built
+        _, e = entries["echo"]
+        x = np.asarray(model.test_input((model.ECHO_N,)), dtype=np.float64)
+        assert abs(e["check"]["outputs"][0]["sum"] - x.sum()) < 1e-4
+        assert abs(e["check"]["outputs"][0]["l2"] - np.sqrt((x**2).sum())) < 1e-4
+
+    def test_manifest_json_serializable(self, built):
+        _, entries = built
+        blob = json.dumps({"functions": [e for _, e in entries.values()]})
+        assert json.loads(blob)["functions"][0]["name"]

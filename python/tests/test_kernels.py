@@ -1,0 +1,256 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps over shapes and dtypes.
+
+This is the CORE numeric signal for Layer 1: every Pallas kernel must match
+its pure-jnp oracle (kernels.ref) to tight tolerance across ragged shapes,
+tile-multiple shapes, and both f32/bf16 inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def _assert_close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+class TestFusedLinear:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 96),
+        n=st.integers(1, 200),
+        act=st.sampled_from(["gelu", "relu", "none"]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_ref(self, m, k, n, act, dtype):
+        x, w, b = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype), _rand(2, (n,), dtype)
+        _assert_close(
+            kernels.fused_linear(x, w, b, activation=act),
+            ref.fused_linear(x, w, b, activation=act),
+            dtype,
+        )
+
+    def test_exact_tile_multiple(self):
+        x, w, b = _rand(0, (256, 128), jnp.float32), _rand(1, (128, 256), jnp.float32), _rand(2, (256,), jnp.float32)
+        _assert_close(kernels.fused_linear(x, w, b), ref.fused_linear(x, w, b), jnp.float32)
+
+    def test_single_row_col(self):
+        x, w, b = _rand(0, (1, 7), jnp.float32), _rand(1, (7, 1), jnp.float32), _rand(2, (1,), jnp.float32)
+        _assert_close(kernels.fused_linear(x, w, b), ref.fused_linear(x, w, b), jnp.float32)
+
+    def test_output_dtype_preserved(self):
+        x, w, b = _rand(0, (8, 8), jnp.bfloat16), _rand(1, (8, 8), jnp.bfloat16), _rand(2, (8,), jnp.bfloat16)
+        assert kernels.fused_linear(x, w, b).dtype == jnp.bfloat16
+
+    def test_bad_activation_raises(self):
+        x, w, b = _rand(0, (8, 8), jnp.float32), _rand(1, (8, 8), jnp.float32), _rand(2, (8,), jnp.float32)
+        with pytest.raises(ValueError):
+            kernels.fused_linear(x, w, b, activation="tanhh")
+
+    def test_contraction_mismatch_raises(self):
+        x, w, b = _rand(0, (8, 9), jnp.float32), _rand(1, (8, 8), jnp.float32), _rand(2, (8,), jnp.float32)
+        with pytest.raises(AssertionError):
+            kernels.fused_linear(x, w, b)
+
+    @settings(**SETTINGS)
+    @given(bm=st.sampled_from([8, 32, 128]), bn=st.sampled_from([8, 32, 128]))
+    def test_block_size_invariance(self, bm, bn):
+        """Result must not depend on the tile decomposition."""
+        x, w, b = _rand(0, (50, 40), jnp.float32), _rand(1, (40, 60), jnp.float32), _rand(2, (60,), jnp.float32)
+        _assert_close(
+            kernels.fused_linear(x, w, b, block_m=bm, block_n=bn),
+            ref.fused_linear(x, w, b),
+            jnp.float32,
+        )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        sq=st.integers(1, 150),
+        skv=st.integers(1, 150),
+        d=st.sampled_from([8, 16, 32, 64]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_ref(self, sq, skv, d, dtype):
+        q, k, v = _rand(0, (sq, d), dtype), _rand(1, (skv, d), dtype), _rand(2, (skv, d), dtype)
+        _assert_close(kernels.attention(q, k, v), ref.attention(q, k, v), dtype)
+
+    def test_rows_sum_property(self):
+        """With v = ones, attention output must be exactly ones (softmax sums to 1)."""
+        q, k = _rand(0, (33, 16), jnp.float32), _rand(1, (47, 16), jnp.float32)
+        v = jnp.ones((47, 16), jnp.float32)
+        np.testing.assert_allclose(np.asarray(kernels.attention(q, k, v)), 1.0, rtol=1e-5)
+
+    def test_single_kv(self):
+        """One key/value: output must equal v broadcast to every query row."""
+        q = _rand(0, (9, 8), jnp.float32)
+        k, v = _rand(1, (1, 8), jnp.float32), _rand(2, (1, 8), jnp.float32)
+        out = kernels.attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.tile(np.asarray(v), (9, 1)), rtol=1e-5)
+
+    def test_large_logit_stability(self):
+        """Online softmax must stay finite when logits are huge."""
+        q = 50.0 * jnp.ones((16, 32), jnp.float32)
+        k = 50.0 * jnp.ones((80, 32), jnp.float32)
+        v = _rand(2, (80, 32), jnp.float32)
+        out = np.asarray(kernels.attention(q, k, v))
+        assert np.all(np.isfinite(out))
+        _assert_close(out, ref.attention(q, k, v), jnp.float32)
+
+    @settings(**SETTINGS)
+    @given(bq=st.sampled_from([8, 16, 64]), bk=st.sampled_from([8, 16, 64]))
+    def test_block_size_invariance(self, bq, bk):
+        q, k, v = _rand(0, (70, 16), jnp.float32), _rand(1, (90, 16), jnp.float32), _rand(2, (90, 16), jnp.float32)
+        _assert_close(
+            kernels.attention(q, k, v, block_q=bq, block_k=bk), ref.attention(q, k, v), jnp.float32
+        )
+
+    def test_multi_head_matches_per_head(self):
+        s, d, h = 32, 64, 4
+        q, k, v = _rand(0, (s, d), jnp.float32), _rand(1, (s, d), jnp.float32), _rand(2, (s, d), jnp.float32)
+        got = kernels.multi_head_attention(q, k, v, h)
+        dh = d // h
+        split = lambda t: np.asarray(t).reshape(s, h, dh).transpose(1, 0, 2)
+        want = np.stack(
+            [np.asarray(ref.attention(*(jnp.asarray(t[i]) for t in map(split, (q, k, v))))) for i in range(h)]
+        ).transpose(1, 0, 2).reshape(s, d)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# checksum
+# ---------------------------------------------------------------------------
+
+
+class TestChecksum:
+    @settings(**SETTINGS)
+    @given(n=st.integers(1, 5000), dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+    def test_matches_ref(self, n, dtype):
+        x = _rand(0, (n,), dtype)
+        got = kernels.checksum(x)
+        want = ref.checksum(x)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-3, atol=1e-3)
+
+    def test_order_sensitive(self):
+        """Positional weights make the checksum detect payload reordering."""
+        x = jnp.arange(128, dtype=jnp.float32)
+        assert abs(float(kernels.checksum(x)) - float(kernels.checksum(x[::-1]))) > 1e-3
+
+    def test_zero_payload(self):
+        assert float(kernels.checksum(jnp.zeros(100))) == 0.0
+
+    @settings(**SETTINGS)
+    @given(block=st.sampled_from([8, 64, 512, 1024]))
+    def test_block_size_invariance(self, block):
+        x = _rand(0, (3000,), jnp.float32)
+        np.testing.assert_allclose(
+            float(kernels.checksum(x, block=block)), float(ref.checksum(x)), rtol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# avg_pool
+# ---------------------------------------------------------------------------
+
+
+class TestAvgPool:
+    @settings(**SETTINGS)
+    @given(
+        h_out=st.integers(1, 24),
+        w_out=st.integers(1, 24),
+        c=st.integers(1, 4),
+        factor=st.sampled_from([1, 2, 4]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_ref(self, h_out, w_out, c, factor, dtype):
+        img = _rand(0, (h_out * factor, w_out * factor, c), dtype)
+        _assert_close(kernels.avg_pool(img, factor), ref.avg_pool(img, factor), dtype)
+
+    def test_constant_image_is_preserved(self):
+        img = jnp.full((16, 16, 3), 2.5, jnp.float32)
+        out = kernels.avg_pool(img, 4)
+        np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-6)
+
+    def test_mean_preserved(self):
+        """Global mean is invariant under average pooling."""
+        img = _rand(0, (32, 32, 3), jnp.float32)
+        out = kernels.avg_pool(img, 4)
+        np.testing.assert_allclose(
+            float(jnp.mean(out)), float(jnp.mean(img)), rtol=1e-5, atol=1e-6
+        )
+
+    def test_indivisible_factor_rejected(self):
+        with pytest.raises(AssertionError):
+            kernels.avg_pool(_rand(0, (10, 10, 3), jnp.float32), 4)
+
+    @settings(**SETTINGS)
+    @given(br=st.sampled_from([1, 2, 8, 16]))
+    def test_block_size_invariance(self, br):
+        img = _rand(0, (40, 20, 3), jnp.float32)
+        _assert_close(
+            kernels.avg_pool(img, 2, block_rows=br), ref.avg_pool(img, 2), jnp.float32
+        )
+
+
+# ---------------------------------------------------------------------------
+# layer_norm
+# ---------------------------------------------------------------------------
+
+
+class TestLayerNorm:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 150),
+        d=st.integers(2, 128),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_ref(self, m, d, dtype):
+        x = _rand(0, (m, d), dtype)
+        g, b = _rand(1, (d,), dtype), _rand(2, (d,), dtype)
+        _assert_close(kernels.layer_norm(x, g, b), ref.layer_norm(x, g, b), dtype)
+
+    def test_normalized_stats(self):
+        """gamma=1, beta=0 => each row has ~zero mean, ~unit variance."""
+        x = _rand(0, (64, 100), jnp.float32)
+        y = np.asarray(kernels.layer_norm(x, jnp.ones(100), jnp.zeros(100)))
+        np.testing.assert_allclose(y.mean(axis=1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.var(axis=1), 1.0, rtol=1e-3)
+
+    def test_shift_invariance(self):
+        """LN(x + c) == LN(x) for constant row shift."""
+        x = _rand(0, (16, 64), jnp.float32)
+        g, b = jnp.ones(64), jnp.zeros(64)
+        _assert_close(
+            kernels.layer_norm(x + 100.0, g, b), kernels.layer_norm(x, g, b), jnp.float32
+        )

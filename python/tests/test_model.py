@@ -1,0 +1,64 @@
+"""Layer-2 workload graph tests: shapes, determinism, and graph-vs-oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+class TestRegistry:
+    def test_all_workloads_present(self):
+        assert set(model.WORKLOADS) == {"echo", "checksum", "thumbnail", "mlp", "transformer"}
+
+    def test_flops_ordering_matches_complexity_experiment(self):
+        """E8 relies on a strict complexity ladder."""
+        f = {n: w.flops for n, w in model.WORKLOADS.items()}
+        assert f["echo"] < f["thumbnail"] < f["checksum"] < f["mlp"] < f["transformer"]
+
+    def test_test_input_deterministic_and_mirrorable(self):
+        """The rust integration test recomputes this exact vector."""
+        x = np.asarray(model.test_input((5,)))
+        want = np.sin(0.37 * np.arange(5, dtype=np.float32)) * 0.5
+        np.testing.assert_allclose(x, want, rtol=1e-6)
+
+
+class TestShapes:
+    @pytest.mark.parametrize("name", list(model.WORKLOADS))
+    def test_output_shapes(self, name):
+        w = model.WORKLOADS[name]
+        outs = jax.jit(w.fn)(model.test_input(w.input_shape))
+        assert isinstance(outs, tuple) and len(outs) >= 1
+        for o in outs:
+            assert o.dtype == jnp.float32
+
+    def test_echo_is_identity(self):
+        x = model.test_input((model.ECHO_N,))
+        (y,) = model.echo(x)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_thumbnail_shape(self):
+        (y,) = model.thumbnail(model.test_input((64, 64, 3)))
+        assert y.shape == (16, 16, 3)
+
+
+class TestGraphVsOracle:
+    def test_mlp_matches_ref(self):
+        x = model.test_input((model.MLP_BATCH, model.MLP_D_IN))
+        (got,) = jax.jit(model.mlp)(x)
+        (want,) = model.mlp_ref(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+    def test_transformer_matches_ref(self):
+        x = model.test_input((model.TB_SEQ, model.TB_D))
+        (got,) = jax.jit(model.transformer)(x)
+        (want,) = model.transformer_ref(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+    def test_weights_are_baked_constants(self):
+        """Same input twice -> bit-identical output (no hidden randomness)."""
+        x = model.test_input((model.MLP_BATCH, model.MLP_D_IN))
+        a = np.asarray(jax.jit(model.mlp)(x)[0])
+        b = np.asarray(jax.jit(model.mlp)(x)[0])
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,14 @@
+//! Bench E11: cluster burst scale-out — placement policy x image size.
+//!
+//!     cargo bench --bench e11_scaleout
+
+use coldfaas::experiments::{scaleout, ExpConfig};
+
+fn main() {
+    println!("== bench e11_scaleout: co-location vs spread under burst ==\n");
+    let t0 = std::time::Instant::now();
+    let report = scaleout(&ExpConfig::default());
+    print!("{}", report.render());
+    println!("\nE11 regeneration: {:.2} s wall", t0.elapsed().as_secs_f64());
+    assert!(report.all_pass(), "e11 regressions: {:#?}", report.failures());
+}

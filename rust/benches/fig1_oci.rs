@@ -1,0 +1,33 @@
+//! Bench E1 / Fig 1: end-to-end regeneration of the OCI-runtime startup
+//! sweep, plus per-cell timing of the DES itself.
+//!
+//!     cargo bench --bench fig1_oci
+
+use coldfaas::experiments::{fig1, startup::sweep, ExpConfig};
+use coldfaas::metrics::Recorder;
+use coldfaas::testkit::bench;
+use coldfaas::virt::Tech;
+
+fn main() {
+    println!("== bench fig1_oci: OCI runtimes + Firecracker startup sweep ==\n");
+
+    // Paper-scale regeneration (10 000 requests/cell), timed end to end.
+    let cfg = ExpConfig::default();
+    let t0 = std::time::Instant::now();
+    let report = fig1(&cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    println!("\nfull Fig 1 regeneration (20 cells x 10k requests): {wall:.2} s wall");
+    assert!(report.all_pass(), "fig1 regressions: {:#?}", report.failures());
+
+    // Per-cell micro-bench: one tech at paper load.
+    for tech in [Tech::Runc, Tech::Kata] {
+        let r = bench(&format!("{} @40x10k cell", tech.name()), 1500, || {
+            let mut rec = Recorder::new();
+            let cell = ExpConfig { requests: 10_000, parallelisms: vec![40], ..Default::default() };
+            sweep(tech, &cell, &mut rec);
+            std::hint::black_box(rec.count(&format!("{}@40", tech.name())));
+        });
+        println!("{}", r.row());
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench E2 / Fig 2: full-Docker-stack startup sweep regeneration.
+//!
+//!     cargo bench --bench fig2_docker
+
+use coldfaas::experiments::{fig2, ExpConfig};
+
+fn main() {
+    println!("== bench fig2_docker: Docker-stack startup sweep ==\n");
+    let cfg = ExpConfig::default();
+    let t0 = std::time::Instant::now();
+    let report = fig2(&cfg);
+    print!("{}", report.render());
+    println!(
+        "\nfull Fig 2 regeneration (15 cells x 10k requests): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "fig2 regressions: {:#?}", report.failures());
+}

@@ -1,0 +1,18 @@
+//! Bench E3 / Fig 3: processes + unikernels startup sweep regeneration.
+//!
+//!     cargo bench --bench fig3_unikernels
+
+use coldfaas::experiments::{fig3, ExpConfig};
+
+fn main() {
+    println!("== bench fig3_unikernels: processes & unikernels sweep ==\n");
+    let cfg = ExpConfig::default();
+    let t0 = std::time::Instant::now();
+    let report = fig3(&cfg);
+    print!("{}", report.render());
+    println!(
+        "\nfull Fig 3 regeneration (30 cells x 10k requests): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "fig3 regressions: {:#?}", report.failures());
+}

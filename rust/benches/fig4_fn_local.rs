@@ -1,0 +1,18 @@
+//! Bench E4 / Fig 4: Fn platform local-lab comparison regeneration.
+//!
+//!     cargo bench --bench fig4_fn_local
+
+use coldfaas::experiments::{fig4, ExpConfig};
+
+fn main() {
+    println!("== bench fig4_fn_local: Fn IncludeOS-cold vs Docker-warm ==\n");
+    let cfg = ExpConfig::default();
+    let t0 = std::time::Instant::now();
+    let report = fig4(&cfg);
+    print!("{}", report.render());
+    println!(
+        "\nfull Fig 4 regeneration (10 cells x 10k requests): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "fig4 regressions: {:#?}", report.failures());
+}

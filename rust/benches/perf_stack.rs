@@ -1,0 +1,115 @@
+//! §Perf micro-benchmarks for the three hot paths (EXPERIMENTS.md §Perf):
+//!   L3a  DES engine event throughput (drives every figure regeneration)
+//!   L3b  HTTP gateway /noop round trip (the live serving floor)
+//!   L3c  dispatch overhead: coordinator invoke minus PJRT exec
+//!   L1/L2 PJRT execution per workload (the function-body floor)
+//!
+//!     cargo bench --bench perf_stack
+
+use std::sync::Arc;
+
+use coldfaas::coordinator::{Config, Coordinator, SchedMode};
+use coldfaas::gateway::http::{http_request, Handler, Response, Server};
+use coldfaas::sim::{Dist, Domain, Engine, Host, ReqId, Spawn, Step};
+use coldfaas::testkit::bench;
+use coldfaas::workload::run_closed_loop;
+
+struct Chain {
+    remaining: u64,
+}
+impl Domain for Chain {
+    fn done(&mut self, _r: ReqId, c: u32, _s: u64, _n: u64) -> Vec<Spawn> {
+        if self.remaining == 0 {
+            return Vec::new();
+        }
+        self.remaining -= 1;
+        vec![Spawn {
+            delay_ns: 0,
+            class: c,
+            steps: vec![Step::cpu("c", Dist::ms(1.0, 0.1))],
+        }]
+    }
+}
+
+fn des_events_per_sec() -> f64 {
+    // 200k requests x (Start+Finish) through the cpu-contention path.
+    let n: u64 = 200_000;
+    let t0 = std::time::Instant::now();
+    let mut e = Engine::new(Chain { remaining: n }, Host::default(), 7);
+    for _ in 0..32 {
+        e.spawn_at(0, 0, vec![Step::cpu("c", Dist::ms(1.0, 0.1))]);
+    }
+    e.run(n * 8);
+    e.events_processed() as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== perf_stack: hot-path micro-benchmarks ==\n");
+
+    // --- L3a: DES engine ---
+    let eps = des_events_per_sec();
+    println!("L3a DES engine: {:.2} M events/s  (target >= 1 M/s)", eps / 1e6);
+    assert!(eps > 1e6, "DES engine below 1M events/s: {eps}");
+
+    // Closed-loop end-to-end cell as a single number.
+    let r = bench("L3a fig-cell 10k req @ p=40 (runc)", 2000, || {
+        let res = run_closed_loop(
+            coldfaas::virt::Tech::Runc.pipeline(),
+            40,
+            10_000,
+            Host::default(),
+            3,
+        );
+        std::hint::black_box(res.latencies_ns.len());
+    });
+    println!("{}", r.row());
+
+    // --- L3b: gateway round trip: fresh connection vs keep-alive ---
+    let handler: Handler = Arc::new(|_req| Response::ok(""));
+    let srv = Server::start("127.0.0.1:0", 8, handler).unwrap();
+    let addr = srv.addr();
+    let r = bench("L3b gateway /noop (connect per request)", 1500, || {
+        let (s, _) = http_request(addr, "GET", "/noop", b"").unwrap();
+        assert_eq!(s, 200);
+    });
+    println!("{}", r.row());
+    let cold_conn = r.ns_per_iter_p50;
+    let mut client = coldfaas::gateway::http::HttpClient::connect(addr).unwrap();
+    let r = bench("L3b gateway /noop (keep-alive)", 1500, || {
+        let (s, _) = client.request("GET", "/noop", b"").unwrap();
+        assert_eq!(s, 200);
+    });
+    println!("{}", r.row());
+    println!(
+        "    keep-alive speedup: {:.2}x  (paper §IV-B: connection reuse is 'a powerful optimization option')",
+        cold_conn / r.ns_per_iter_p50
+    );
+    srv.shutdown();
+
+    // --- L3c + L1/2: live invoke with PJRT ---
+    let artifacts = coldfaas::runtime::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        let coord = Coordinator::start(Config {
+            mode: SchedMode::ColdOnly,
+            time_scale: 0.0, // isolate dispatch overhead from the model sleeps
+            functions: vec!["echo".into(), "transformer".into()],
+            ..Config::default()
+        })
+        .expect("coordinator");
+        for f in ["echo", "transformer"] {
+            let r = bench(&format!("L1/2 invoke {f} (PJRT, no model sleep)"), 2500, || {
+                let o = coord.invoke(f, b"").unwrap();
+                std::hint::black_box(o.exec_ms);
+            });
+            println!("{}", r.row());
+        }
+        // Dispatch overhead = total - exec for the cheapest function.
+        let o = coord.invoke("echo", b"").unwrap();
+        println!(
+            "L3c dispatch overhead (total - exec on echo): {:.3} ms  (target < 0.5 ms)",
+            o.total_ms - o.exec_ms
+        );
+    } else {
+        println!("(artifacts missing; run `make artifacts` for the PJRT benches)");
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench E5 / Table I + E10: cloud-deployment medians regeneration.
+//!
+//!     cargo bench --bench table1_cloud
+
+use coldfaas::experiments::{distance_sweep, table1, ExpConfig};
+
+fn main() {
+    println!("== bench table1_cloud: Fn + Lambda from the Stockholm lab ==\n");
+    let cfg = ExpConfig::default();
+    let t0 = std::time::Instant::now();
+    let report = table1(&cfg);
+    print!("{}", report.render());
+    println!("\nTable I regeneration: {:.2} s wall", t0.elapsed().as_secs_f64());
+    assert!(report.all_pass(), "table1 regressions: {:#?}", report.failures());
+
+    let report = distance_sweep(&cfg);
+    print!("{}", report.render());
+    assert!(report.all_pass(), "distance regressions: {:#?}", report.failures());
+}

@@ -1,0 +1,123 @@
+//! Hand-rolled CLI (the offline registry has no clap): subcommands +
+//! `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  Options may be `--key value` or `--key=value`;
+    /// bare `--key` followed by another option (or end) is a flag.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut it = argv.iter().peekable();
+        let subcommand = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    opts.insert(rest.to_string(), it.next().unwrap().clone());
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { subcommand, positional, opts, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated u32 list option.
+    pub fn get_u32_list(&self, key: &str, default: &[u32]) -> Vec<u32> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["experiment", "fig1"]);
+        assert_eq!(a.subcommand, "experiment");
+        assert_eq!(a.positional, vec!["fig1"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse(&["serve", "--port", "8080", "--mode=warm"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("warm"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["experiment", "fig1", "--quick"]);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse(&["x", "--verbose", "--n", "5"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_u64("n", 0), 5);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_f64("scale", 1.5), 1.5);
+        assert_eq!(a.get_u64("n", 7), 7);
+    }
+
+    #[test]
+    fn u32_list() {
+        let a = parse(&["x", "--parallelism", "1,5, 10"]);
+        assert_eq!(a.get_u32_list("parallelism", &[2]), vec![1, 5, 10]);
+        assert_eq!(a.get_u32_list("other", &[2]), vec![2]);
+    }
+
+    #[test]
+    fn empty_argv_gives_help() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.subcommand, "help");
+    }
+}

@@ -1,0 +1,130 @@
+//! Engine threads: each owns a full PJRT [`Runtime`] (the `xla` client is
+//! `Rc`-based and cannot cross threads) and drains a shared job queue.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::FuncInfo;
+
+/// Result of one engine execution.
+pub struct ExecReply {
+    pub output: Vec<f32>,
+    pub exec_ms: f64,
+}
+
+struct Job {
+    name: String,
+    payload: Vec<f32>,
+    reply: mpsc::Sender<Result<ExecReply, String>>,
+}
+
+/// Fixed pool of engine threads sharing one job queue.
+pub struct EnginePool {
+    tx: mpsc::Sender<Job>,
+    registry: Vec<FuncInfo>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Spawn `n` engine threads; each builds its own [`Runtime`] *inside*
+    /// the thread (the PJRT client is `Rc`-based and cannot be moved in).
+    /// Fails fast if the first engine cannot load.
+    pub fn start(n: usize, dir: std::path::PathBuf, names: &[String]) -> Result<EnginePool> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::new();
+        let mut registry: Option<Vec<FuncInfo>> = None;
+
+        for i in 0..n.max(1) {
+            let dir = dir.clone();
+            let names: Vec<String> = names.to_vec();
+            let rx = rx.clone();
+            // The first thread reports its load result (and the registry)
+            // so startup errors surface synchronously.
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<FuncInfo>, String>>();
+            threads.push(std::thread::spawn(move || {
+                let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                match crate::runtime::Runtime::load_only(&dir, &name_refs) {
+                    Ok(rt) => {
+                        let reg = rt
+                            .names()
+                            .iter()
+                            .map(|&n| {
+                                let e = rt.entry(n).expect("loaded entry");
+                                FuncInfo {
+                                    name: n.to_string(),
+                                    input_elements: e.inputs[0].elements(),
+                                    flops: e.flops,
+                                    doc: e.doc.clone(),
+                                }
+                            })
+                            .collect();
+                        let _ = ready_tx.send(Ok(reg));
+                        Self::engine_loop(rt, rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        log::error!("engine thread failed to load runtime: {e}");
+                    }
+                }
+            }));
+            if i == 0 {
+                match ready_rx.recv() {
+                    Ok(Ok(reg)) => registry = Some(reg),
+                    Ok(Err(e)) => return Err(anyhow::anyhow!("engine 0 failed: {e}")),
+                    Err(_) => return Err(anyhow::anyhow!("engine 0 died during load")),
+                }
+            }
+        }
+        Ok(EnginePool { tx, registry: registry.expect("first engine ready"), threads })
+    }
+
+    fn engine_loop(mut rt: crate::runtime::Runtime, rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+        loop {
+            // Hold the queue lock only while dequeuing.
+            let job = {
+                let guard = rx.lock().unwrap();
+                guard.recv()
+            };
+            let Ok(job) = job else { return }; // senders dropped: shut down
+            // Lazy deploy: compile manifest functions on first use, so a
+            // freshly deployed function works on every engine thread.
+            if rt.get(&job.name).is_none() {
+                if let Err(e) = rt.ensure_loaded(&job.name) {
+                    let _ = job.reply.send(Err(e.to_string()));
+                    continue;
+                }
+            }
+            let t0 = Instant::now();
+            let result = rt
+                .execute(&job.name, &job.payload)
+                .map(|output| ExecReply { output, exec_ms: t0.elapsed().as_secs_f64() * 1e3 })
+                .map_err(|e| e.to_string());
+            let _ = job.reply.send(result);
+        }
+    }
+
+    pub fn registry(&self) -> Vec<FuncInfo> {
+        self.registry.clone()
+    }
+
+    /// Synchronously execute on some engine thread.
+    pub fn execute(&self, name: &str, payload: Vec<f32>) -> Result<ExecReply, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job { name: name.to_string(), payload, reply: reply_tx })
+            .map_err(|_| "engine pool shut down".to_string())?;
+        reply_rx.recv().map_err(|_| "engine dropped reply".to_string())?
+    }
+
+    /// Drop the queue and join the engine threads.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}

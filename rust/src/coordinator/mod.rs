@@ -1,0 +1,399 @@
+//! Live serving coordinator (S9): the cold-only FaaS control plane, plus
+//! the warm-pool baseline, over real HTTP and real PJRT execution.
+//!
+//! Architecture (PjRtClient is `Rc`-based, so executables cannot cross
+//! threads): gateway worker threads parse requests and apply the startup
+//! model; one or more dedicated **engine threads** each own a complete
+//! PJRT runtime and drain a shared job queue — the same frontend/engine
+//! split a serving system like vLLM uses.
+//!
+//! ```text
+//!  HTTP workers ──(startup model: sleep)──> job queue ──> engine thread(s)
+//!       ^                                                     │  PJRT
+//!       └───────────────── reply channel ────────────────────┘
+//! ```
+
+mod engine;
+mod stats;
+
+pub use engine::{EnginePool, ExecReply};
+pub use stats::CoordStats;
+
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::exec::{parse_payload, summarize_output, RealtimeStartup};
+use crate::fnplat::pool::{Dispatch, WarmPool};
+use crate::fnplat::DriverKind;
+use crate::gateway::http::{Handler, Request, Response, Server};
+use crate::sim::Rng;
+
+/// Scheduling mode for the platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// The paper's contribution: boot a fresh unikernel per request,
+    /// let it exit afterwards.  No pool, no monitoring.
+    ColdOnly,
+    /// The baseline: Docker-style warm pool with an idle timeout.
+    WarmPool,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub mode: SchedMode,
+    /// Scale factor on modeled startup sleeps (0 = off, 1 = faithful).
+    pub time_scale: f64,
+    pub idle_timeout_s: f64,
+    pub engine_threads: usize,
+    pub gateway_workers: usize,
+    pub artifacts_dir: std::path::PathBuf,
+    /// Compile only these functions (empty = all in the manifest).
+    pub functions: Vec<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mode: SchedMode::ColdOnly,
+            time_scale: 1.0,
+            idle_timeout_s: 30.0,
+            engine_threads: 1,
+            gateway_workers: 20,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            functions: Vec::new(),
+        }
+    }
+}
+
+/// One function's registry entry (derived from the manifest).
+#[derive(Clone, Debug)]
+pub struct FuncInfo {
+    pub name: String,
+    pub input_elements: usize,
+    pub flops: u64,
+    pub doc: String,
+}
+
+pub struct Coordinator {
+    cfg: Config,
+    engines: EnginePool,
+    registry: RwLock<Vec<FuncInfo>>,
+    cold_startup: RealtimeStartup,
+    warm_unpause: RealtimeStartup,
+    pool: Mutex<WarmPool>,
+    rng: Mutex<Rng>,
+    clock: Instant,
+    pub stats: Arc<CoordStats>,
+}
+
+/// The reply for one invocation.
+#[derive(Debug, Clone)]
+pub struct InvokeOutcome {
+    pub function: String,
+    pub cold: bool,
+    pub startup_model_ms: f64,
+    pub exec_ms: f64,
+    pub total_ms: f64,
+    pub output_sum: f64,
+    pub output_l2: f64,
+    pub output_head: Vec<f32>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: Config) -> anyhow::Result<Arc<Coordinator>> {
+        let names: Vec<String> = if cfg.functions.is_empty() {
+            let m = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+            m.functions.iter().map(|f| f.name.clone()).collect()
+        } else {
+            cfg.functions.clone()
+        };
+        let engines = EnginePool::start(cfg.engine_threads, cfg.artifacts_dir.clone(), &names)?;
+        let registry = engines.registry();
+        let mem = DriverKind::DockerWarm.tech().warm_memory_bytes();
+        let pool = WarmPool::new((cfg.idle_timeout_s * 1e9) as u64, mem);
+        let cold_steps = match cfg.mode {
+            SchedMode::ColdOnly => DriverKind::IncludeOsCold.cold_start_steps(),
+            SchedMode::WarmPool => DriverKind::DockerWarm.cold_start_steps(),
+        };
+        Ok(Arc::new(Coordinator {
+            cold_startup: RealtimeStartup::new(cold_steps, cfg.time_scale),
+            warm_unpause: RealtimeStartup::new(
+                DriverKind::DockerWarm.warm_invoke_steps(),
+                cfg.time_scale,
+            ),
+            engines,
+            registry: RwLock::new(registry),
+            pool: Mutex::new(pool),
+            rng: Mutex::new(Rng::new(0xC0F_FEE)),
+            clock: Instant::now(),
+            stats: Arc::new(CoordStats::default()),
+            cfg,
+        }))
+    }
+
+    pub fn registry(&self) -> Vec<FuncInfo> {
+        self.registry.read().unwrap().clone()
+    }
+
+    pub fn mode(&self) -> SchedMode {
+        self.cfg.mode
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.clock.elapsed().as_nanos() as u64
+    }
+
+    /// The full request path: startup model -> PJRT execution -> summary.
+    pub fn invoke(&self, name: &str, body: &[u8]) -> Result<InvokeOutcome, String> {
+        let t0 = Instant::now();
+        let input_elements = self
+            .registry
+            .read()
+            .unwrap()
+            .iter()
+            .find(|f| f.name == name)
+            .map(|f| f.input_elements)
+            .ok_or_else(|| format!("unknown function '{name}'"))?;
+        let payload = parse_payload(body, input_elements)?;
+
+        // Dispatch: consult the pool (warm mode) or always-cold.
+        let (cold, startup_ns) = match self.cfg.mode {
+            SchedMode::ColdOnly => {
+                let ns = {
+                    let mut rng = self.rng.lock().unwrap();
+                    self.cold_startup.sample_ns(&mut rng)
+                };
+                // Sleep outside the rng lock.
+                Self::scaled_sleep(ns, self.cfg.time_scale);
+                (true, ns)
+            }
+            SchedMode::WarmPool => {
+                let d = self.pool.lock().unwrap().dispatch(name, self.now_ns());
+                let model =
+                    if d == Dispatch::Cold { &self.cold_startup } else { &self.warm_unpause };
+                let ns = {
+                    let mut rng = self.rng.lock().unwrap();
+                    model.sample_ns(&mut rng)
+                };
+                Self::scaled_sleep(ns, self.cfg.time_scale);
+                (d == Dispatch::Cold, ns)
+            }
+        };
+
+        let reply = self.engines.execute(name, payload)?;
+        if self.cfg.mode == SchedMode::WarmPool {
+            self.pool.lock().unwrap().release(name, self.now_ns());
+        }
+
+        let (sum, l2, head) = summarize_output(&reply.output);
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.record(name, cold, total_ms, reply.exec_ms);
+        Ok(InvokeOutcome {
+            function: name.to_string(),
+            cold,
+            startup_model_ms: startup_ns as f64 / 1e6,
+            exec_ms: reply.exec_ms,
+            total_ms,
+            output_sum: sum,
+            output_l2: l2,
+            output_head: head,
+        })
+    }
+
+    fn scaled_sleep(ns: u64, scale: f64) {
+        let scaled = (ns as f64 * scale) as u64;
+        if scaled > 0 {
+            std::thread::sleep(std::time::Duration::from_nanos(scaled));
+        }
+    }
+
+    /// Waste snapshot (warm mode): idle GB·s and monitor events so far.
+    pub fn waste_snapshot(&self) -> (f64, u64) {
+        let pool = self.pool.lock().unwrap();
+        let now = self.now_ns();
+        // Non-destructive estimate: clone and finalize the clone.
+        let mut snap = pool.clone();
+        snap.finalize(now);
+        (snap.idle_gb_seconds(), snap.monitor_events)
+    }
+
+    /// Deploy a manifest function onto the live platform: simulate the
+    /// §IV-B build (IncludeOS `boot` vs Docker FDK image, scaled by
+    /// time_scale), warm the engine compile, and register the route.
+    /// Returns (build_seconds_modeled, compile_warmup_ms).
+    pub fn deploy(&self, name: &str) -> Result<(f64, f64), String> {
+        if self.registry.read().unwrap().iter().any(|f| f.name == name) {
+            return Err(format!("function '{name}' already deployed"));
+        }
+        let manifest = crate::runtime::Manifest::load(&self.cfg.artifacts_dir)
+            .map_err(|e| e.to_string())?;
+        let entry = manifest
+            .get(name)
+            .ok_or_else(|| format!("function '{name}' not in artifact manifest"))?;
+
+        // §IV-B deploy-time build: 3.5 s IncludeOS boot vs 9.5 s Docker FDK.
+        let build = match self.cfg.mode {
+            SchedMode::ColdOnly => crate::image::BuildKind::IncludeOsBoot,
+            SchedMode::WarmPool => crate::image::BuildKind::DockerFdk,
+        };
+        let build_s = build.build_seconds();
+        Self::scaled_sleep((build_s * 1e9) as u64, self.cfg.time_scale);
+
+        let info = FuncInfo {
+            name: entry.name.clone(),
+            input_elements: entry.inputs[0].elements(),
+            flops: entry.flops,
+            doc: entry.doc.clone(),
+        };
+        // Warm one engine's compile cache so the first request isn't a
+        // multi-second XLA compile (remaining engines compile lazily).
+        let t0 = Instant::now();
+        let warm = crate::runtime::test_input(info.input_elements);
+        self.engines.execute(name, warm)?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        self.registry.write().unwrap().push(info);
+        Ok((build_s, compile_ms))
+    }
+
+    /// HTTP handler wiring all routes.
+    pub fn handler(self: &Arc<Self>) -> Handler {
+        let me = self.clone();
+        Arc::new(move |req: &Request| me.route(req))
+    }
+
+    fn route(&self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/noop") => Response::ok(""),
+            ("GET", "/healthz") => Response::ok("ok"),
+            ("POST", p) if p.starts_with("/deploy/") => {
+                let name = &p["/deploy/".len()..];
+                match self.deploy(name) {
+                    Ok((build_s, compile_ms)) => Response::json(format!(
+                        "{{\"deployed\":\"{name}\",\"build_s\":{build_s:.1},\"compile_warmup_ms\":{compile_ms:.1}}}"
+                    )),
+                    Err(e) if e.contains("not in artifact manifest") => Response::not_found(),
+                    Err(e) => Response::bad_request(&e),
+                }
+            }
+            ("GET", "/functions") => {
+                let mut out = String::new();
+                for f in self.registry.read().unwrap().iter() {
+                    out.push_str(&format!(
+                        "{{\"name\":\"{}\",\"inputs\":{},\"flops\":{},\"doc\":\"{}\"}}\n",
+                        f.name, f.input_elements, f.flops, f.doc
+                    ));
+                }
+                Response::json(out)
+            }
+            ("GET", "/stats") => Response::json(self.stats.render_json(self.cfg.mode)),
+            ("POST", p) if p.starts_with("/invoke/") => {
+                let name = &p["/invoke/".len()..];
+                match self.invoke(name, &req.body) {
+                    Ok(o) => Response::json(format!(
+                        "{{\"fn\":\"{}\",\"cold\":{},\"startup_model_ms\":{:.3},\"exec_ms\":{:.3},\
+                         \"total_ms\":{:.3},\"output_sum\":{:.6},\"output_l2\":{:.6},\"output_head\":{:?}}}",
+                        o.function,
+                        o.cold,
+                        o.startup_model_ms,
+                        o.exec_ms,
+                        o.total_ms,
+                        o.output_sum,
+                        o.output_l2,
+                        o.output_head
+                    )),
+                    Err(e) if e.starts_with("unknown function") => Response::not_found(),
+                    Err(e) => Response::bad_request(&e),
+                }
+            }
+            _ => Response::not_found(),
+        }
+    }
+
+    /// Start the HTTP gateway for this coordinator.
+    pub fn serve(self: &Arc<Self>, bind: &str) -> std::io::Result<Server> {
+        Server::start(bind, self.cfg.gateway_workers, self.handler())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        crate::runtime::default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn test_config(mode: SchedMode) -> Config {
+        Config {
+            mode,
+            time_scale: 0.0, // no sleeps in unit tests
+            engine_threads: 1,
+            gateway_workers: 4,
+            functions: vec!["echo".into(), "checksum".into()],
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn cold_only_invoke_roundtrip() {
+        if !artifacts_ready() {
+            return;
+        }
+        let c = Coordinator::start(test_config(SchedMode::ColdOnly)).unwrap();
+        let o = c.invoke("echo", b"").unwrap();
+        assert!(o.cold);
+        assert_eq!(o.function, "echo");
+        // echo(test_input): sum must match the manifest oracle value.
+        let want: f64 = crate::runtime::test_input(256).iter().map(|&x| x as f64).sum();
+        assert!((o.output_sum - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn warm_pool_second_invoke_is_warm() {
+        if !artifacts_ready() {
+            return;
+        }
+        let c = Coordinator::start(test_config(SchedMode::WarmPool)).unwrap();
+        assert!(c.invoke("echo", b"").unwrap().cold);
+        assert!(!c.invoke("echo", b"").unwrap().cold);
+        let (waste, _) = c.waste_snapshot();
+        assert!(waste >= 0.0);
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let c = Coordinator::start(test_config(SchedMode::ColdOnly)).unwrap();
+        assert!(c.invoke("nope", b"").is_err());
+    }
+
+    #[test]
+    fn bad_payload_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let c = Coordinator::start(test_config(SchedMode::ColdOnly)).unwrap();
+        assert!(c.invoke("echo", b"1,2,3").is_err());
+    }
+
+    #[test]
+    fn http_end_to_end() {
+        if !artifacts_ready() {
+            return;
+        }
+        let c = Coordinator::start(test_config(SchedMode::ColdOnly)).unwrap();
+        let srv = c.serve("127.0.0.1:0").unwrap();
+        let (status, body) =
+            crate::gateway::http::http_request(srv.addr(), "POST", "/invoke/echo", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("\"cold\":true"));
+        let (status, _) = crate::gateway::http::http_request(srv.addr(), "GET", "/stats", b"").unwrap();
+        assert_eq!(status, 200);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,84 @@
+//! Lock-cheap serving statistics: per-outcome histograms on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::Histogram;
+
+#[derive(Default)]
+pub struct CoordStats {
+    pub requests: AtomicU64,
+    pub cold_starts: AtomicU64,
+    pub warm_hits: AtomicU64,
+    pub errors: AtomicU64,
+    total: Mutex<Histogram>,
+    exec: Mutex<Histogram>,
+}
+
+impl CoordStats {
+    pub fn record(&self, _name: &str, cold: bool, total_ms: f64, exec_ms: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if cold {
+            self.cold_starts.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.warm_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        self.total.lock().unwrap().record_ns((total_ms * 1e6) as u64);
+        self.exec.lock().unwrap().record_ns((exec_ms * 1e6) as u64);
+    }
+
+    pub fn total_quantiles_ms(&self) -> (f64, f64, f64) {
+        let h = self.total.lock().unwrap();
+        (h.quantile_ms(0.5), h.quantile_ms(0.99), h.mean_ms())
+    }
+
+    pub fn exec_quantiles_ms(&self) -> (f64, f64, f64) {
+        let h = self.exec.lock().unwrap();
+        (h.quantile_ms(0.5), h.quantile_ms(0.99), h.mean_ms())
+    }
+
+    pub fn render_json(&self, mode: super::SchedMode) -> String {
+        let (tp50, tp99, tmean) = self.total_quantiles_ms();
+        let (ep50, ep99, emean) = self.exec_quantiles_ms();
+        format!(
+            "{{\"mode\":\"{:?}\",\"requests\":{},\"cold_starts\":{},\"warm_hits\":{},\"errors\":{},\
+             \"total_ms\":{{\"p50\":{tp50:.3},\"p99\":{tp99:.3},\"mean\":{tmean:.3}}},\
+             \"exec_ms\":{{\"p50\":{ep50:.3},\"p99\":{ep99:.3},\"mean\":{emean:.3}}}}}",
+            mode,
+            self.requests.load(Ordering::Relaxed),
+            self.cold_starts.load(Ordering::Relaxed),
+            self.warm_hits.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_render() {
+        let s = CoordStats::default();
+        s.record("f", true, 10.0, 2.0);
+        s.record("f", false, 5.0, 2.0);
+        assert_eq!(s.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(s.cold_starts.load(Ordering::Relaxed), 1);
+        assert_eq!(s.warm_hits.load(Ordering::Relaxed), 1);
+        let json = s.render_json(crate::coordinator::SchedMode::ColdOnly);
+        assert!(json.contains("\"requests\":2"));
+        assert!(crate::runtime::Json::parse(&json).is_ok(), "stats must be valid json: {json}");
+    }
+
+    #[test]
+    fn quantiles_reflect_samples() {
+        let s = CoordStats::default();
+        for i in 1..=100 {
+            s.record("f", true, i as f64, 1.0);
+        }
+        let (p50, p99, mean) = s.total_quantiles_ms();
+        assert!((p50 / 50.0 - 1.0).abs() < 0.1, "p50 {p50}");
+        assert!((p99 / 99.0 - 1.0).abs() < 0.1, "p99 {p99}");
+        assert!((mean / 50.5 - 1.0).abs() < 0.05, "mean {mean}");
+    }
+}

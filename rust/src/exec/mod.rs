@@ -1,0 +1,159 @@
+//! Executor units for the live stack (S10): apply a startup model in real
+//! time (scaled sleeps), then run the function body through PJRT.
+//!
+//! The realtime path intentionally models only the *per-start* latency of
+//! the sandbox pipeline — kernel-lock contention under parallel starts is
+//! the DES's job (`sim::Engine`); here the host OS provides real
+//! contention for the actual PJRT compute.
+
+use std::time::Duration;
+
+use crate::sim::{Dist, Rng, Step, StepKind};
+
+/// A startup-latency model applied with real sleeps.
+#[derive(Clone)]
+pub struct RealtimeStartup {
+    steps: Vec<Step>,
+    /// 1.0 = model-faithful sleeps; 0.0 = skip sleeps (unit tests);
+    /// 0.1 = 10x-compressed demo runs.
+    pub time_scale: f64,
+}
+
+impl RealtimeStartup {
+    pub fn new(steps: Vec<Step>, time_scale: f64) -> RealtimeStartup {
+        RealtimeStartup { steps, time_scale }
+    }
+
+    /// Sample the total modeled startup for one request (ns, unscaled).
+    pub fn sample_ns(&self, rng: &mut Rng) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match s.kind {
+                StepKind::Effect(_) | StepKind::Decision(_) => 0,
+                StepKind::Disk(bytes) => (bytes as f64 / 1.2e9 * 1e9) as u64,
+                _ => s.dur.sample(rng),
+            })
+            .sum()
+    }
+
+    /// Sleep out one sampled startup; returns the modeled (unscaled) ns.
+    pub fn apply(&self, rng: &mut Rng) -> u64 {
+        let ns = self.sample_ns(rng);
+        let scaled = (ns as f64 * self.time_scale) as u64;
+        if scaled > 0 {
+            std::thread::sleep(Duration::from_nanos(scaled));
+        }
+        ns
+    }
+
+    /// Nominal (median-sum) startup in ms.
+    pub fn nominal_ms(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| match s.kind {
+                StepKind::Disk(bytes) => bytes as f64 / 1.2e9 * 1e3,
+                _ => s.dur.median_ns() / 1e6,
+            })
+            .sum()
+    }
+
+    /// Instant completion (for tests) while keeping the model shape.
+    pub fn instant() -> RealtimeStartup {
+        RealtimeStartup { steps: vec![Step::delay("none", Dist::Const(0.0))], time_scale: 0.0 }
+    }
+}
+
+/// Payload codec: request bodies are either empty (use the deterministic
+/// check input) or ASCII floats separated by commas/whitespace.
+pub fn parse_payload(body: &[u8], expected: usize) -> Result<Vec<f32>, String> {
+    if body.is_empty() {
+        return Ok(crate::runtime::test_input(expected));
+    }
+    let text = std::str::from_utf8(body).map_err(|_| "payload is not utf-8".to_string())?;
+    let vals: Result<Vec<f32>, _> = text
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(str::parse::<f32>)
+        .collect();
+    let vals = vals.map_err(|e| format!("bad float in payload: {e}"))?;
+    if vals.len() != expected {
+        return Err(format!("payload has {} values, function expects {expected}", vals.len()));
+    }
+    Ok(vals)
+}
+
+/// Summarize an output tensor for the HTTP reply (full tensors can be
+/// hundreds of KB; the summary keeps the serving path cheap and still
+/// verifiable against the manifest checks).
+pub fn summarize_output(out: &[f32]) -> (f64, f64, Vec<f32>) {
+    let sum: f64 = out.iter().map(|&x| x as f64).sum();
+    let l2: f64 = out.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let head: Vec<f32> = out.iter().take(8).copied().collect();
+    (sum, l2, head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::virt::Tech;
+
+    #[test]
+    fn sample_matches_nominal_roughly() {
+        let m = RealtimeStartup::new(Tech::IncludeOsHvt.pipeline(), 0.0);
+        let mut rng = Rng::new(1);
+        let n = 2000;
+        let mean: f64 = (0..n).map(|_| m.sample_ns(&mut rng) as f64 / 1e6).sum::<f64>() / n as f64;
+        let nominal = m.nominal_ms();
+        assert!((mean / nominal - 1.0).abs() < 0.1, "mean {mean} vs nominal {nominal}");
+    }
+
+    #[test]
+    fn zero_scale_does_not_sleep() {
+        let m = RealtimeStartup::new(Tech::DockerRunc.pipeline(), 0.0);
+        let mut rng = Rng::new(2);
+        let t0 = std::time::Instant::now();
+        m.apply(&mut rng);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn scaled_sleep_is_proportional() {
+        let m = RealtimeStartup::new(
+            vec![Step::delay("d", Dist::const_ms(100.0))],
+            0.05, // 5 ms real
+        );
+        let mut rng = Rng::new(3);
+        let t0 = std::time::Instant::now();
+        let modeled = m.apply(&mut rng);
+        let real = t0.elapsed().as_millis();
+        assert_eq!(modeled, 100_000_000);
+        assert!((4..60).contains(&(real as i64)), "slept {real} ms");
+    }
+
+    #[test]
+    fn empty_payload_yields_test_input() {
+        let p = parse_payload(b"", 4).unwrap();
+        assert_eq!(p, crate::runtime::test_input(4));
+    }
+
+    #[test]
+    fn parses_ascii_floats() {
+        let p = parse_payload(b"1.5, -2.0  3\n4e-1", 4).unwrap();
+        assert_eq!(p, vec![1.5, -2.0, 3.0, 0.4]);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        assert!(parse_payload(b"1,2,3", 4).is_err());
+        assert!(parse_payload(b"1,2,x,4", 4).is_err());
+        assert!(parse_payload(&[0xff, 0xfe], 2).is_err());
+    }
+
+    #[test]
+    fn summary_values() {
+        let (sum, l2, head) = summarize_output(&[3.0, 4.0]);
+        assert_eq!(sum, 7.0);
+        assert!((l2 - 5.0).abs() < 1e-9);
+        assert_eq!(head, vec![3.0, 4.0]);
+    }
+}

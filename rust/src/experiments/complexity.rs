@@ -1,0 +1,118 @@
+//! E8 (§IV-B closing claim): "by using more complex functions the overhead
+//! of Fn with IncludeOS gets less and less significant compared to the
+//! execution time."  Sweeps the AOT workload ladder (echo → transformer)
+//! through both drivers and reports platform-overhead share.
+
+use super::ExpConfig;
+use crate::fnplat::{run_scenario, DriverKind, Scenario};
+use crate::report::Report;
+use crate::runtime::static_exec_ms;
+
+pub struct ComplexityRow {
+    pub workload: &'static str,
+    pub exec_ms: f64,
+    pub cold_includeos_ms: f64,
+    pub warm_docker_ms: f64,
+    /// Fraction of the cold-IncludeOS latency that is platform overhead.
+    pub overhead_share: f64,
+}
+
+/// The AOT workload ladder, ordered by rising execution cost (matches the
+/// flops ordering asserted in python/tests/test_model.py).
+pub const WORKLOADS: [&str; 5] = ["echo", "thumbnail", "checksum", "mlp", "transformer"];
+
+/// Optionally measure execution medians live through PJRT; fall back to
+/// the recorded constants (`runtime::static_exec_ms`).
+pub fn exec_times(live: bool) -> Vec<(&'static str, f64)> {
+    if live {
+        if let Ok(rt) = crate::runtime::Runtime::load(crate::runtime::default_artifacts_dir()) {
+            return WORKLOADS
+                .iter()
+                .map(|&w| (w, rt.measure_exec_ms(w, 30).unwrap_or(static_exec_ms(w))))
+                .collect();
+        }
+    }
+    WORKLOADS.iter().map(|&w| (w, static_exec_ms(w))).collect()
+}
+
+pub fn complexity_rows(cfg: &ExpConfig, live: bool) -> Vec<ComplexityRow> {
+    let n = cfg.requests.min(2000);
+    exec_times(live)
+        .into_iter()
+        .map(|(w, exec_ms)| {
+            let sc = Scenario {
+                exec_ms: exec_ms.max(0.01),
+                seed: cfg.seed ^ w.len() as u64,
+                ..Scenario::local(DriverKind::IncludeOsCold, 4, n, false)
+            };
+            let cold = run_scenario(&sc, cfg.host).median_ms();
+            let sc = Scenario {
+                exec_ms: exec_ms.max(0.01),
+                seed: cfg.seed ^ (w.len() as u64) << 8,
+                ..Scenario::local(DriverKind::DockerWarm, 4, n, true)
+            };
+            let warm = run_scenario(&sc, cfg.host).median_ms();
+            ComplexityRow {
+                workload: w,
+                exec_ms,
+                cold_includeos_ms: cold,
+                warm_docker_ms: warm,
+                overhead_share: (cold - exec_ms) / cold,
+            }
+        })
+        .collect()
+}
+
+pub fn complexity(cfg: &ExpConfig) -> Report {
+    let rows = complexity_rows(cfg, false);
+    let mut report = Report::new(
+        "E8: platform overhead vs function complexity (cold IncludeOS vs warm Docker)",
+    );
+    for r in &rows {
+        report.note(format!(
+            "{:<12} exec={:>7.2} ms  cold-includeos={:>7.2} ms  warm-docker={:>7.2} ms  overhead-share={:>5.1}%",
+            r.workload,
+            r.exec_ms,
+            r.cold_includeos_ms,
+            r.warm_docker_ms,
+            r.overhead_share * 100.0
+        ));
+    }
+    // Overhead share must fall monotonically along the complexity ladder.
+    for w in rows.windows(2) {
+        report.band(
+            &format!("overhead share falls: {} -> {}", w[0].workload, w[1].workload),
+            "delta",
+            w[1].overhead_share - w[0].overhead_share,
+            -1.0,
+            0.001,
+        );
+    }
+    // For the heaviest workload the cold/warm gap closes substantially.
+    let last = rows.last().unwrap();
+    let first = &rows[0];
+    let gap_heavy = last.cold_includeos_ms / last.warm_docker_ms;
+    let gap_light = first.cold_includeos_ms / first.warm_docker_ms;
+    report.band("cold/warm gap shrinks with complexity", "ratio", gap_heavy / gap_light, 0.0, 0.8);
+    report.note("the claim: cold-start overhead amortizes as functions do real work");
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complexity_checks_pass_quick() {
+        let r = complexity(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+
+    #[test]
+    fn exec_ladder_monotone() {
+        let t = exec_times(false);
+        for w in t.windows(2) {
+            assert!(w[0].1 <= w[1].1, "exec times must rise along the ladder: {t:?}");
+        }
+    }
+}

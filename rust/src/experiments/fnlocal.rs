@@ -1,0 +1,90 @@
+//! E4 / Fig 4: the Fn prototype in the local lab — cold IncludeOS vs warm
+//! Docker (Go function) across parallelism, plus deployment-time numbers.
+
+use super::ExpConfig;
+use crate::fnplat::{run_scenario, DriverKind, Scenario};
+use crate::image::BuildKind;
+use crate::metrics::Recorder;
+use crate::report::Report;
+
+/// Fig 4: measurement in the local lab environment.
+pub fn fig4(cfg: &ExpConfig) -> Report {
+    let mut rec = Recorder::new();
+    for &p in &cfg.parallelisms {
+        let sc = Scenario {
+            seed: cfg.seed ^ (p as u64) << 24,
+            ..Scenario::local(DriverKind::IncludeOsCold, p, cfg.requests, false)
+        };
+        let r = run_scenario(&sc, cfg.host);
+        for &ns in &r.latencies_ns {
+            rec.record_ns(&format!("fn-includeos-cold@{p}"), ns);
+        }
+
+        let sc = Scenario {
+            seed: cfg.seed ^ (p as u64) << 25,
+            ..Scenario::local(DriverKind::DockerWarm, p, cfg.requests, true)
+        };
+        let r = run_scenario(&sc, cfg.host);
+        for &ns in &r.warm_latencies_ns {
+            rec.record_ns(&format!("fn-docker-warm@{p}"), ns);
+        }
+    }
+
+    let mut report = Report::new("Fig 4: Fn measurement results in the local lab");
+    for &p in &cfg.parallelisms {
+        for series in ["fn-includeos-cold", "fn-docker-warm"] {
+            let label = format!("{series}@{p}");
+            if let Some(s) = rec.stats(&label) {
+                report.add_series(&label, s);
+            }
+        }
+    }
+
+    let p50 = |l: &str| rec.quantile(l, 0.5).unwrap_or(f64::NAN);
+    let moderate = if cfg.parallelisms.contains(&10) { 10 } else { cfg.parallelisms[0] };
+    // §IV-B: "startup and execution of our test function with IncludeOS
+    // takes around 10-20 ms".
+    report.band(
+        &format!("fn-includeos-cold@{moderate}"),
+        "p50",
+        p50(&format!("fn-includeos-cold@{moderate}")),
+        10.0,
+        20.0,
+    );
+    // "the latency with a warm Go function takes 3-5 ms".
+    report.band(
+        &format!("fn-docker-warm@{moderate}"),
+        "p50",
+        p50(&format!("fn-docker-warm@{moderate}")),
+        3.0,
+        5.5,
+    );
+    // Deployment times (§IV-B).
+    report.check(
+        "deploy includeos (C++ boot build)",
+        "seconds",
+        BuildKind::IncludeOsBoot.build_seconds(),
+        3.5,
+        0.01,
+    );
+    report.band(
+        "deploy docker (FDK image build)",
+        "seconds",
+        BuildKind::DockerFdk.build_seconds(),
+        9.0,
+        10.0,
+    );
+    report.note("warm Docker wins on pure latency; the price is idle-reserved resources (E9)");
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_checks_pass_quick() {
+        let r = fig4(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+}

@@ -1,0 +1,76 @@
+//! E7: image sizes (§II-C), deploy-time builds (§IV-B), and the cluster
+//! distribution footprint the paper's §IV-C limitations discuss.
+
+use super::ExpConfig;
+use crate::image::{cluster_footprint_bytes, BuildKind, Image, NodeCache};
+use crate::net::transfer_step;
+use crate::report::Report;
+use crate::virt::Tech;
+
+pub fn images(_cfg: &ExpConfig) -> Report {
+    let mut report = Report::new("E7: image sizes, deploy times, distribution footprint");
+
+    // §II-C sizes.
+    let sizes = [
+        (Tech::Solo5Spt, 0.2),
+        (Tech::IncludeOsHvt, 2.5),
+        (Tech::DockerRunc, 6.0),
+        (Tech::Firecracker, 70.0),
+    ];
+    for (t, want_mb) in sizes {
+        report.check(
+            &format!("{} image", t.name()),
+            "MB",
+            t.image_bytes() as f64 / 1e6,
+            want_mb,
+            0.05,
+        );
+    }
+
+    // §IV-B deploy/build times.
+    report.check("includeos boot build", "s", BuildKind::IncludeOsBoot.build_seconds(), 3.5, 0.01);
+    report.band("docker image build", "s", BuildKind::DockerFdk.build_seconds(), 9.0, 10.0);
+
+    // §IV-C: pre-seeding 1000 functions on 100 nodes.
+    let nodes = 100u64;
+    let funcs = 1000u64;
+    let uni = cluster_footprint_bytes(&[Tech::IncludeOsHvt], nodes * funcs);
+    let doc = cluster_footprint_bytes(&[Tech::DockerRunc], nodes * funcs);
+    report.note(format!(
+        "seeding {funcs} fns x {nodes} nodes: includeos {:.1} GB vs docker {:.1} GB",
+        uni as f64 / 1e9,
+        doc as f64 / 1e9
+    ));
+    report.band("uni/docker footprint", "ratio", uni as f64 / doc as f64, 0.3, 0.5);
+
+    // Cache-miss transfer over the 40 Gbps lab fabric.
+    let t_uni = transfer_step("x", Tech::IncludeOsHvt.image_bytes(), 40.0).dur.median_ns() / 1e6;
+    let t_fc = transfer_step("x", Tech::Firecracker.image_bytes(), 40.0).dur.median_ns() / 1e6;
+    report.note(format!("cache-miss pull: includeos {t_uni:.2} ms vs firecracker {t_fc:.2} ms"));
+    report.band("includeos pull", "ms", t_uni, 0.3, 1.0);
+
+    // Cache behaviour: a 1 GB node cache fits 400 IncludeOS functions but
+    // only ~14 Firecracker images.
+    let mut cache = NodeCache::new(Some(1 << 30));
+    let mut fit = 0;
+    loop {
+        let img = Image::for_function(&format!("f{fit}"), Tech::IncludeOsHvt);
+        if cache.fetch(&img).is_err() {
+            break;
+        }
+        fit += 1;
+    }
+    report.band("includeos fns per GB cache", "count", fit as f64, 400.0, 430.0);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_checks_pass() {
+        let r = images(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+}

@@ -1,0 +1,75 @@
+//! Experiment harnesses (S14): one function per paper figure/table, each
+//! returning a [`Report`] with measured series and paper-vs-measured
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E10).
+
+pub mod cloud;
+pub mod complexity;
+pub mod decompose;
+pub mod fnlocal;
+pub mod images;
+pub mod scaleout;
+pub mod startup;
+pub mod waste;
+
+pub use cloud::{distance_sweep, table1};
+pub use complexity::complexity;
+pub use decompose::decompose;
+pub use fnlocal::fig4;
+pub use images::images;
+pub use scaleout::scaleout;
+pub use startup::{fig1, fig2, fig3};
+pub use waste::waste;
+
+/// All experiment names accepted by the CLI, with the report generator.
+pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
+    Some(match name {
+        "fig1" => fig1(cfg),
+        "fig2" => fig2(cfg),
+        "fig3" => fig3(cfg),
+        "fig4" => fig4(cfg),
+        "table1" => table1(cfg),
+        "decompose" => decompose(cfg),
+        "images" => images(cfg),
+        "complexity" => complexity(cfg),
+        "waste" => waste(cfg),
+        "distance" => distance_sweep(cfg),
+        "scaleout" => scaleout(cfg),
+        _ => return None,
+    })
+}
+
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
+    "distance", "scaleout",
+];
+
+use crate::sim::Host;
+
+/// Shared experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Requests per (technology, parallelism) cell. Paper: 10 000.
+    pub requests: u64,
+    /// In-flight request counts. Paper: up to 40 on a 24-core host.
+    pub parallelisms: Vec<u32>,
+    pub host: Host,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            requests: 10_000,
+            parallelisms: vec![1, 5, 10, 20, 40],
+            host: Host::default(),
+            seed: 0xC01D_FAA5,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// A reduced-load configuration for unit tests and quick CI runs.
+    pub fn quick() -> Self {
+        ExpConfig { requests: 1_500, parallelisms: vec![1, 10, 40], ..Default::default() }
+    }
+}

@@ -1,0 +1,158 @@
+//! E9: the resource-waste / complexity argument of §IV quantified —
+//! warm-pool platforms trade idle memory (and monitoring machinery)
+//! against cold-start frequency; the cold-only unikernel platform deletes
+//! the tradeoff.  Sweeps the idle timeout over Poisson and bursty traces.
+
+use super::ExpConfig;
+use crate::fnplat::{run_scenario, DriverKind, Placement, Scenario};
+use crate::fnplat::sim::Load;
+use crate::net::Site;
+use crate::report::Report;
+use crate::workload::traces::Trace;
+
+pub struct WastePoint {
+    pub label: String,
+    pub idle_timeout_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cold_fraction: f64,
+    pub idle_gb_seconds: f64,
+    pub monitor_events: u64,
+}
+
+fn run_point(
+    driver: DriverKind,
+    timeout_s: f64,
+    trace: Trace,
+    seed: u64,
+    host: crate::sim::Host,
+) -> WastePoint {
+    let sc = Scenario {
+        driver,
+        db: crate::fnplat::DbBackend::Postgres,
+        placement: Placement::LocalLab,
+        client: Site::LabStockholm,
+        server: Site::LabStockholm,
+        include_conn_setup: false,
+        exec_ms: crate::fnplat::DEFAULT_EXEC_MS,
+        idle_timeout_s: timeout_s,
+        load: Load::OpenLoop(trace),
+        seed,
+    };
+    let r = run_scenario(&sc, host);
+    let mut lat = r.latencies_ns.clone();
+    lat.sort_unstable();
+    let q = |f: f64| lat[((f * lat.len() as f64) as usize).min(lat.len() - 1)] as f64 / 1e6;
+    let total = r.warm_hits + r.cold_starts;
+    WastePoint {
+        label: format!("{:?}@{timeout_s}s", driver),
+        idle_timeout_s: timeout_s,
+        p50_ms: q(0.5),
+        p99_ms: q(0.99),
+        cold_fraction: if total == 0 { 0.0 } else { r.cold_starts as f64 / total as f64 },
+        idle_gb_seconds: r.idle_gb_seconds,
+        monitor_events: r.monitor_events,
+    }
+}
+
+pub fn waste_points(cfg: &ExpConfig, bursty: bool) -> Vec<WastePoint> {
+    let dur = (cfg.requests as f64 / 20.0).clamp(30.0, 600.0);
+    let trace = if bursty {
+        Trace::bursty(60.0, 2.0, 20.0, dur, cfg.seed)
+    } else {
+        Trace::poisson(20.0, dur, cfg.seed)
+    };
+    let mut pts = Vec::new();
+    for timeout in [1.0, 10.0, 30.0, 120.0, 27.0 * 60.0] {
+        pts.push(run_point(DriverKind::DockerWarm, timeout, trace.clone(), cfg.seed, cfg.host));
+    }
+    pts.push(run_point(DriverKind::IncludeOsCold, 0.0, trace, cfg.seed, cfg.host));
+    pts.last_mut().unwrap().label = "IncludeOsCold".into();
+    pts
+}
+
+pub fn waste(cfg: &ExpConfig) -> Report {
+    let mut report =
+        Report::new("E9: idle-timeout tradeoff — warm-pool waste vs cold-start frequency");
+    for bursty in [false, true] {
+        let pts = waste_points(cfg, bursty);
+        report.note(format!("--- {} trace ---", if bursty { "bursty" } else { "poisson" }));
+        for p in &pts {
+            report.note(format!(
+                "{:<24} p50={:>7.1} ms  p99={:>8.1} ms  cold={:>5.1}%  idle-waste={:>8.2} GB·s  monitor-evts={}",
+                p.label,
+                p.p50_ms,
+                p.p99_ms,
+                p.cold_fraction * 100.0,
+                p.idle_gb_seconds,
+                p.monitor_events
+            ));
+        }
+        let docker = &pts[..pts.len() - 1];
+        let cold_only = pts.last().unwrap();
+
+        // Monotone tradeoff: longer timeout => fewer colds, more waste.
+        for w in docker.windows(2) {
+            report.band(
+                &format!("{} cold-frac <= shorter timeout ({})", w[1].label, w[0].label),
+                "ratio",
+                if w[0].cold_fraction == 0.0 { 0.0 } else { w[1].cold_fraction / w[0].cold_fraction },
+                0.0,
+                1.02,
+            );
+            // Waste grows with timeout *approximately*: a longer timeout can
+            // convert an expiry (charged `timeout`) into a warm claim
+            // (charged the actual gap), so allow a small dip.
+            report.band(
+                &format!("{} waste >= shorter timeout", w[1].label),
+                "ratio",
+                if w[0].idle_gb_seconds == 0.0 { 2.0 } else { w[1].idle_gb_seconds / w[0].idle_gb_seconds },
+                0.85,
+                f64::INFINITY,
+            );
+        }
+        // Cold-only: zero waste, zero monitoring, flat predictable latency.
+        report.band("cold-only idle waste", "GB·s", cold_only.idle_gb_seconds, 0.0, 0.0);
+        report.band(
+            "cold-only p99/p50 predictability",
+            "ratio",
+            cold_only.p99_ms / cold_only.p50_ms,
+            1.0,
+            2.0,
+        );
+        // Warm pool at short timeouts suffers unpredictable tail: its p99
+        // (a cold start) dwarfs its p50 (warm hit).
+        let short = &docker[0];
+        if short.cold_fraction > 0.01 && short.cold_fraction < 0.99 {
+            report.band(
+                "short-timeout warm-pool tail blowup",
+                "p99/p50",
+                short.p99_ms / short.p50_ms,
+                5.0,
+                f64::INFINITY,
+            );
+        }
+    }
+    report.note("the cold-only column is the paper's pitch: no waste, no monitoring, flat tail");
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waste_checks_pass_quick() {
+        let r = waste(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+
+    #[test]
+    fn lambda_timeout_wastes_most() {
+        let pts = waste_points(&ExpConfig::quick(), false);
+        let lambda_like = &pts[pts.len() - 2]; // 27 min timeout
+        let short = &pts[0];
+        assert!(lambda_like.idle_gb_seconds > short.idle_gb_seconds);
+        assert!(lambda_like.cold_fraction <= short.cold_fraction);
+    }
+}

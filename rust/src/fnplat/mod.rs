@@ -1,0 +1,204 @@
+//! Fn-like FaaS platform (S7): the paper's prototype system.
+//!
+//! The Fn server decomposes into *gateway*, *agent*, and *driver* (§IV-A).
+//! We model both drivers the paper compares:
+//!
+//! * [`DriverKind::DockerWarm`] — the stock Fn path: containers created
+//!   through the Docker engine, wrapped by an FDK speaking HTTP over a
+//!   unix socket, kept warm in a paused state until an idle timeout
+//!   (requires the [`pool::WarmPool`] machinery, per-function monitoring,
+//!   and routing to warm executors);
+//! * [`DriverKind::IncludeOsCold`] — the paper's contribution: every
+//!   request boots a fresh IncludeOS unikernel via solo5-hvt, speaks
+//!   stdin/stdout (no FDK), and the unikernel exits on completion — no
+//!   lifecycle management at all.
+
+pub mod pool;
+pub mod sim;
+
+pub use pool::{ColdOnly, Dispatch, WarmPool};
+pub use sim::{run_scenario, FnDomain, Scenario, ScenarioResult};
+
+use crate::sim::{Dist, LockClass, Step};
+use crate::virt::Tech;
+
+/// Metadata database backing the Fn server (§IV-B: "we used Postgres ...
+/// as we got significant performance improvements compared to the default
+/// sqlite option").  sqlite's single writer is a global lock; Postgres
+/// costs a bit more CPU per query but doesn't serialize the agent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DbBackend {
+    Sqlite,
+    Postgres,
+}
+
+impl DbBackend {
+    pub fn lookup_steps(&self) -> Vec<Step> {
+        match self {
+            DbBackend::Sqlite => vec![Step::lock(
+                "db-sqlite",
+                LockClass::Db,
+                Dist::ms(1.1, 0.3),
+            )],
+            DbBackend::Postgres => vec![
+                Step::delay("db-pg-rtt", Dist::ms(0.25, 0.15)),
+                Step::cpu("db-pg-query", Dist::ms(0.35, 0.2)),
+            ],
+        }
+    }
+
+    pub fn nominal_ms(&self) -> f64 {
+        self.lookup_steps().iter().map(|s| s.dur.median_ns() / 1e6).sum()
+    }
+}
+
+/// Function runtime driver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Docker containers + FDK, kept warm (pause/unpause) until timeout.
+    DockerWarm,
+    /// IncludeOS unikernel per request over solo5-hvt; exits after reply.
+    IncludeOsCold,
+}
+
+impl DriverKind {
+    pub fn tech(&self) -> Tech {
+        match self {
+            DriverKind::DockerWarm => Tech::DockerRunc,
+            DriverKind::IncludeOsCold => Tech::IncludeOsHvt,
+        }
+    }
+
+    /// Cold-start pipeline *inside Fn* (Table I: 288.3 ms for Fn Docker —
+    /// lower than the 450 ms CLI path because the agent hits the engine
+    /// API directly with a prepared config; 33.4 ms for Fn IncludeOS).
+    pub fn cold_start_steps(&self) -> Vec<Step> {
+        match self {
+            DriverKind::DockerWarm => {
+                let mut v = vec![
+                    Step::lock("engine-serial", LockClass::DockerEngine, Dist::ms(125.0, 0.3)),
+                    Step::cpu("containerd", Dist::ms(18.0, 0.12)),
+                    Step::cpu("shim-spawn", Dist::ms(14.0, 0.12)),
+                    Step::lock("overlay2-mount", LockClass::Mount, Dist::ms(28.0, 0.25)),
+                    Step::disk("layer-setup", 4 * 1024 * 1024),
+                ];
+                v.extend(crate::virt::profiles::namespace_phases(1.0));
+                v.extend([
+                    Step::cpu("exec-init", Dist::ms(28.0, 0.12)),
+                    Step::cpu("fdk-boot", Dist::ms(12.0, 0.12)),
+                ]);
+                v
+            }
+            DriverKind::IncludeOsCold => {
+                let mut v = Tech::IncludeOsHvt.pipeline();
+                // stdio plumbing to the fresh unikernel (no FDK, §IV-A).
+                v.push(Step::cpu("stdio-attach", Dist::ms(0.8, 0.2)));
+                v
+            }
+        }
+    }
+
+    /// Warm-invoke pipeline (only meaningful for the Docker driver):
+    /// unpause the paused container and cross the FDK's unix-socket HTTP hop.
+    pub fn warm_invoke_steps(&self) -> Vec<Step> {
+        match self {
+            DriverKind::DockerWarm => vec![
+                Step::cpu("unpause", Dist::ms(1.2, 0.2)),
+                Step::cpu("fdk-http-hop", Dist::ms(0.6, 0.2)),
+            ],
+            DriverKind::IncludeOsCold => Vec::new(),
+        }
+    }
+
+    pub fn nominal_cold_ms(&self) -> f64 {
+        self.cold_start_steps().iter().map(|s| s.dur.median_ns() / 1e6).sum()
+    }
+}
+
+/// Where the Fn server runs, and what per-request overheads that implies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// The paper's local lab machines (Fig 4).
+    LocalLab,
+    /// AWS m5.metal in eu-north-1 (Table I): EBS-backed storage and the
+    /// busier metal host add measurable per-request and per-start cost.
+    AwsMetal,
+}
+
+impl Placement {
+    /// Extra per-request latency on the cloud host (request path through
+    /// the busier m5.metal + Postgres-on-box deployment).
+    pub fn request_tax_steps(&self) -> Vec<Step> {
+        match self {
+            Placement::LocalLab => Vec::new(),
+            Placement::AwsMetal => vec![Step::delay("cloud-host-tax", Dist::ms(8.5, 0.25))],
+        }
+    }
+
+    /// Extra per-cold-start cost on the cloud host (EBS-backed image I/O).
+    pub fn cold_tax_steps(&self) -> Vec<Step> {
+        match self {
+            Placement::LocalLab => Vec::new(),
+            Placement::AwsMetal => vec![Step::delay("ebs-image-io", Dist::ms(9.0, 0.3))],
+        }
+    }
+}
+
+/// Fn gateway + agent request-path steps shared by both drivers.
+pub fn agent_steps(db: DbBackend) -> Vec<Step> {
+    let mut v = vec![
+        Step::cpu("http-parse", Dist::ms(0.35, 0.2)),
+        Step::cpu("agent-route", Dist::ms(0.55, 0.2)),
+    ];
+    v.extend(db.lookup_steps());
+    v
+}
+
+/// Function-body execution cost (ms) for the deployed test function.
+/// The DES uses a constant measured from the live PJRT runtime (see
+/// `runtime::measured_exec_ms`); the default mirrors the paper's Go echo.
+pub const DEFAULT_EXEC_MS: f64 = 0.8;
+
+pub fn exec_step(exec_ms: f64) -> Step {
+    Step::cpu("fn-exec", Dist::ms(exec_ms, 0.15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_docker_cold_near_table1() {
+        // Table I: 288.3 ms total; subtract request-path + taxes ≈ 270 here.
+        let ms = DriverKind::DockerWarm.nominal_cold_ms();
+        assert!((240.0..285.0).contains(&ms), "fn docker cold {ms}");
+    }
+
+    #[test]
+    fn fn_includeos_cold_order_of_magnitude_faster() {
+        let d = DriverKind::DockerWarm.nominal_cold_ms();
+        let i = DriverKind::IncludeOsCold.nominal_cold_ms();
+        assert!(d / i > 10.0, "docker {d} vs includeos {i}");
+    }
+
+    #[test]
+    fn includeos_has_no_warm_path() {
+        assert!(DriverKind::IncludeOsCold.warm_invoke_steps().is_empty());
+        assert!(!DriverKind::DockerWarm.warm_invoke_steps().is_empty());
+    }
+
+    #[test]
+    fn postgres_beats_sqlite_under_no_contention_is_false() {
+        // Single-shot sqlite is *cheaper*; the win is concurrency (no
+        // global write lock).  That's exactly why the paper saw gains only
+        // under load — asserted end-to-end in the db ablation bench.
+        assert!(DbBackend::Sqlite.nominal_ms() > DbBackend::Postgres.nominal_ms() * 0.5);
+    }
+
+    #[test]
+    fn cloud_taxes_only_on_aws() {
+        assert!(Placement::LocalLab.request_tax_steps().is_empty());
+        assert!(Placement::LocalLab.cold_tax_steps().is_empty());
+        assert_eq!(Placement::AwsMetal.request_tax_steps().len(), 1);
+    }
+}

@@ -1,0 +1,309 @@
+//! Warm-executor pool bookkeeping — the machinery the paper argues a
+//! cold-only platform can delete (§I, §IV).
+//!
+//! Pure logic (no simulator dependency): used by both the DES experiments
+//! and the live coordinator.  Tracks, per function, the idle warm
+//! executors, their idle-timeout expiry, and the headline waste metric —
+//! **idle memory-seconds** — plus the monitoring-event count that stands
+//! for the per-function load-tracking complexity of warm platforms.
+
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Clone, Copy, Debug)]
+struct WarmSlot {
+    idle_since_ns: u64,
+}
+
+/// Outcome of a dispatch attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// A warm executor was claimed (unpause + reuse path).
+    Warm,
+    /// No warm executor: a cold start is required.
+    Cold,
+}
+
+#[derive(Clone, Debug)]
+pub struct WarmPool {
+    /// Idle timeout before a warm executor is torn down.
+    pub idle_timeout_ns: u64,
+    /// Resident bytes one warm executor holds while idle.
+    pub mem_bytes_per_slot: u64,
+    /// Liveness-poll period for idle executors (monitoring complexity).
+    pub poll_period_ns: u64,
+    idle: HashMap<String, VecDeque<WarmSlot>>,
+    /// Total executors alive (idle + busy) per function.
+    alive: HashMap<String, u64>,
+    // --- accounting ---
+    pub idle_mem_byte_ns: u128,
+    pub monitor_events: u64,
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+    pub expirations: u64,
+}
+
+impl WarmPool {
+    pub fn new(idle_timeout_ns: u64, mem_bytes_per_slot: u64) -> WarmPool {
+        WarmPool {
+            idle_timeout_ns,
+            mem_bytes_per_slot,
+            poll_period_ns: 1_000_000_000, // 1 s liveness poll
+            idle: HashMap::new(),
+            alive: HashMap::new(),
+            idle_mem_byte_ns: 0,
+            monitor_events: 0,
+            warm_hits: 0,
+            cold_starts: 0,
+            expirations: 0,
+        }
+    }
+
+    fn account_idle(&mut self, idle_ns: u64) {
+        self.idle_mem_byte_ns += idle_ns as u128 * self.mem_bytes_per_slot as u128;
+        self.monitor_events += idle_ns / self.poll_period_ns;
+    }
+
+    /// Drop idle slots whose timeout has elapsed by `now`.
+    fn expire(&mut self, func: &str, now: u64) {
+        let timeout = self.idle_timeout_ns;
+        let mut expired = 0u64;
+        let mut acct = 0u64;
+        if let Some(q) = self.idle.get_mut(func) {
+            while let Some(front) = q.front() {
+                if now.saturating_sub(front.idle_since_ns) >= timeout {
+                    q.pop_front();
+                    expired += 1;
+                    acct += timeout;
+                } else {
+                    break;
+                }
+            }
+        }
+        if expired > 0 {
+            self.expirations += expired;
+            *self.alive.get_mut(func).expect("alive entry") -= expired;
+            for _ in 0..expired {
+                self.account_idle(acct / expired);
+            }
+        }
+    }
+
+    /// Try to claim a warm executor for `func` at `now`.
+    pub fn dispatch(&mut self, func: &str, now: u64) -> Dispatch {
+        self.expire(func, now);
+        let slot = self.idle.get_mut(func).and_then(|q| q.pop_back());
+        match slot {
+            Some(s) => {
+                // LIFO claim (most recently idle): matches Fn's behaviour
+                // and maximizes expiry of the cold tail.
+                self.account_idle(now - s.idle_since_ns);
+                self.warm_hits += 1;
+                Dispatch::Warm
+            }
+            None => {
+                self.cold_starts += 1;
+                *self.alive.entry(func.to_string()).or_insert(0) += 1;
+                Dispatch::Cold
+            }
+        }
+    }
+
+    /// Return an executor to the idle pool after it served a request.
+    pub fn release(&mut self, func: &str, now: u64) {
+        self.idle
+            .entry(func.to_string())
+            .or_default()
+            .push_back(WarmSlot { idle_since_ns: now });
+    }
+
+    /// Pre-create `n` warm executors (measurement warmup).
+    pub fn prewarm(&mut self, func: &str, n: u64, now: u64) {
+        *self.alive.entry(func.to_string()).or_insert(0) += n;
+        let q = self.idle.entry(func.to_string()).or_default();
+        for _ in 0..n {
+            q.push_back(WarmSlot { idle_since_ns: now });
+        }
+    }
+
+    pub fn idle_count(&self, func: &str) -> usize {
+        self.idle.get(func).map_or(0, |q| q.len())
+    }
+
+    pub fn alive_count(&self, func: &str) -> u64 {
+        self.alive.get(func).copied().unwrap_or(0)
+    }
+
+    /// Account all still-idle slots up to `now` (end of run).
+    pub fn finalize(&mut self, now: u64) {
+        let funcs: Vec<String> = self.idle.keys().cloned().collect();
+        for f in funcs {
+            self.expire(&f, now);
+            if let Some(q) = self.idle.get_mut(&f) {
+                let slots: Vec<WarmSlot> = q.drain(..).collect();
+                for s in slots {
+                    let idle_ns = now.saturating_sub(s.idle_since_ns).min(self.idle_timeout_ns);
+                    self.account_idle(idle_ns);
+                }
+            }
+        }
+    }
+
+    /// Account every remaining idle slot with its *full* timeout: after the
+    /// measurement ends the platform will keep it resident until expiry
+    /// regardless (how AWS's ~27 min keep-alive turns one invocation into
+    /// hundreds of GB·s of waste).
+    pub fn finalize_expiring(&mut self) {
+        let timeout = self.idle_timeout_ns;
+        let funcs: Vec<String> = self.idle.keys().cloned().collect();
+        for f in funcs {
+            if let Some(q) = self.idle.get_mut(&f) {
+                let n = q.len() as u64;
+                q.clear();
+                self.expirations += n;
+                if let Some(a) = self.alive.get_mut(&f) {
+                    *a -= n.min(*a);
+                }
+                for _ in 0..n {
+                    self.account_idle(timeout);
+                }
+            }
+        }
+    }
+
+    /// Headline waste metric in gigabyte-seconds.
+    pub fn idle_gb_seconds(&self) -> f64 {
+        self.idle_mem_byte_ns as f64 / 1e9 / (1u64 << 30) as f64
+    }
+}
+
+/// A cold-only "pool" for symmetry: every dispatch is cold, nothing is
+/// retained, waste is identically zero (the unikernel exits on completion).
+#[derive(Clone, Debug, Default)]
+pub struct ColdOnly {
+    pub starts: u64,
+}
+
+impl ColdOnly {
+    pub fn dispatch(&mut self) -> Dispatch {
+        self.starts += 1;
+        Dispatch::Cold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    fn pool() -> WarmPool {
+        WarmPool::new(30 * S, 16 << 20) // 30 s timeout, 16 MiB per slot
+    }
+
+    #[test]
+    fn first_dispatch_is_cold() {
+        let mut p = pool();
+        assert_eq!(p.dispatch("f", 0), Dispatch::Cold);
+        assert_eq!(p.cold_starts, 1);
+    }
+
+    #[test]
+    fn release_then_dispatch_is_warm() {
+        let mut p = pool();
+        assert_eq!(p.dispatch("f", 0), Dispatch::Cold);
+        p.release("f", 5 * S);
+        assert_eq!(p.dispatch("f", 6 * S), Dispatch::Warm);
+        assert_eq!(p.warm_hits, 1);
+        // 1 s idle at 16 MiB accounted.
+        assert_eq!(p.idle_mem_byte_ns, (1 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn timeout_expires_warm_slot() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        // 31 s later: slot expired, dispatch is cold again.
+        assert_eq!(p.dispatch("f", 31 * S), Dispatch::Cold);
+        assert_eq!(p.expirations, 1);
+        // Expired slot wasted exactly `timeout` of memory time.
+        assert_eq!(p.idle_mem_byte_ns, (30 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn per_function_isolation() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        assert_eq!(p.dispatch("g", 1), Dispatch::Cold);
+        assert_eq!(p.dispatch("f", 1), Dispatch::Warm);
+    }
+
+    #[test]
+    fn lifo_claim_lets_tail_expire() {
+        let mut p = pool();
+        p.prewarm("f", 2, 0);
+        // Claim at t=1s takes the most recent; the other keeps aging.
+        assert_eq!(p.dispatch("f", S), Dispatch::Warm);
+        p.release("f", 2 * S);
+        assert_eq!(p.idle_count("f"), 2);
+        // At t=35s the t=0 slot expired; one release-refreshed slot left.
+        p.expire("f", 35 * S);
+        assert_eq!(p.idle_count("f"), 0); // 2s + 30s = 32s < 35s: both gone
+        assert_eq!(p.expirations, 2);
+    }
+
+    #[test]
+    fn prewarm_counts_alive() {
+        let mut p = pool();
+        p.prewarm("f", 10, 0);
+        assert_eq!(p.alive_count("f"), 10);
+        assert_eq!(p.idle_count("f"), 10);
+    }
+
+    #[test]
+    fn monitor_events_grow_with_idle_time() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        p.dispatch("f", 10 * S); // 10 s idle => 10 poll events
+        assert_eq!(p.monitor_events, 10);
+    }
+
+    #[test]
+    fn finalize_accounts_remaining_idle() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        p.finalize(5 * S);
+        assert_eq!(p.idle_mem_byte_ns, (5 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn finalize_caps_at_timeout() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        p.finalize(500 * S);
+        // Slot would have expired at 30 s: waste capped there.
+        assert_eq!(p.idle_mem_byte_ns, (30 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn cold_only_never_warm_and_zero_waste() {
+        let mut c = ColdOnly::default();
+        for _ in 0..100 {
+            assert_eq!(c.dispatch(), Dispatch::Cold);
+        }
+        assert_eq!(c.starts, 100);
+    }
+
+    #[test]
+    fn idle_gb_seconds_units() {
+        let mut p = WarmPool::new(3600 * S, 1 << 30); // 1 GiB slots
+        p.dispatch("f", 0);
+        p.release("f", 0);
+        p.dispatch("f", 10 * S);
+        assert!((p.idle_gb_seconds() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,335 @@
+//! DES wiring for the Fn platform: a [`Domain`] that dispatches requests
+//! through the gateway/agent/driver pipeline, consulting the warm pool
+//! at virtual-dispatch time (E4 Fig 4, E5 Table I, E9 waste).
+
+use super::pool::{Dispatch, WarmPool};
+use super::{agent_steps, exec_step, DbBackend, DriverKind, Placement};
+use crate::net::{rtt_step, Frontend, Site};
+use crate::sim::{Domain, Engine, Host, ReqId, Rng, Spawn, Step};
+use crate::workload::traces::Trace;
+
+const TAG_DISPATCH: u32 = 1;
+const TAG_RELEASE: u32 = 2;
+
+/// Offered load shape.
+#[derive(Clone, Debug)]
+pub enum Load {
+    /// `hey`-style closed loop; `gap_ns` spaces successive requests per
+    /// slot (used to force cold starts past the idle timeout).
+    ClosedLoop { parallelism: u32, total: u64, prewarm: bool, gap_ns: u64 },
+    /// Open-loop arrivals from a trace (E9).
+    OpenLoop(Trace),
+}
+
+/// A full platform measurement scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub driver: DriverKind,
+    pub db: DbBackend,
+    pub placement: Placement,
+    pub client: Site,
+    pub server: Site,
+    /// Include TCP/TLS connection setup in the measured latency
+    /// (Table I reports it as a separate column, so table runs disable it).
+    pub include_conn_setup: bool,
+    pub exec_ms: f64,
+    pub idle_timeout_s: f64,
+    pub load: Load,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The paper's local-lab Fig 4 setup.
+    pub fn local(driver: DriverKind, parallelism: u32, total: u64, prewarm: bool) -> Scenario {
+        Scenario {
+            driver,
+            db: DbBackend::Postgres,
+            placement: Placement::LocalLab,
+            client: Site::LabStockholm,
+            server: Site::LabStockholm,
+            include_conn_setup: false,
+            exec_ms: super::DEFAULT_EXEC_MS,
+            idle_timeout_s: 30.0,
+            load: Load::ClosedLoop { parallelism, total, prewarm, gap_ns: 0 },
+            seed: 0xF16_4,
+        }
+    }
+
+    /// The Table I cloud deployment (lab → AWS Stockholm, m5.metal).
+    pub fn cloud(driver: DriverKind, total: u64, prewarm: bool, gap_ns: u64) -> Scenario {
+        Scenario {
+            driver,
+            db: DbBackend::Postgres,
+            placement: Placement::AwsMetal,
+            client: Site::LabStockholm,
+            server: Site::AwsStockholm,
+            include_conn_setup: false,
+            exec_ms: super::DEFAULT_EXEC_MS,
+            idle_timeout_s: 30.0,
+            load: Load::ClosedLoop { parallelism: 1, total, prewarm, gap_ns },
+            seed: 0x7AB1E_1,
+        }
+    }
+
+    fn frontend(&self) -> Frontend {
+        match self.driver {
+            DriverKind::DockerWarm => Frontend::FN_DOCKER,
+            DriverKind::IncludeOsCold => Frontend::FN_INCLUDEOS,
+        }
+    }
+
+    /// Request-path steps up to (and including) the dispatch decision.
+    fn head_steps(&self) -> Vec<Step> {
+        let mut v = Vec::new();
+        if self.include_conn_setup {
+            v.extend(self.frontend().connect_steps(self.client, self.server));
+        }
+        v.push(rtt_step("req-resp-rtt", self.client, self.server));
+        v.extend(self.placement.request_tax_steps());
+        v.extend(agent_steps(self.db));
+        v.push(Step::decision("dispatch", TAG_DISPATCH));
+        v
+    }
+}
+
+/// The Fn platform as a simulation domain.
+pub struct FnDomain {
+    scenario: Scenario,
+    pub pool: WarmPool,
+    template: Vec<Step>,
+    remaining: u64,
+    gap_ns: u64,
+    pub latencies_ns: Vec<u64>,
+    pub cold_latencies_ns: Vec<u64>,
+    pub warm_latencies_ns: Vec<u64>,
+    /// Requests currently on a cold path (set at decide, cleared at done).
+    cold_inflight: std::collections::HashSet<ReqId>,
+}
+
+const FUNC: &str = "f";
+
+impl FnDomain {
+    fn dispatch_tail(&mut self, req: ReqId, now: u64) -> Vec<Step> {
+        let s = &self.scenario;
+        let mut tail = Vec::new();
+        match s.driver {
+            DriverKind::IncludeOsCold => {
+                // Always cold; the unikernel exits after the reply: no
+                // release, no pool, no lifecycle management (§IV-A).
+                tail.extend(s.placement.cold_tax_steps());
+                tail.extend(s.driver.cold_start_steps());
+                tail.push(exec_step(s.exec_ms));
+                self.cold_inflight.insert(req);
+            }
+            DriverKind::DockerWarm => match self.pool.dispatch(FUNC, now) {
+                Dispatch::Warm => {
+                    tail.extend(s.driver.warm_invoke_steps());
+                    tail.push(exec_step(s.exec_ms));
+                    tail.push(Step::effect("release", TAG_RELEASE));
+                }
+                Dispatch::Cold => {
+                    tail.extend(s.placement.cold_tax_steps());
+                    tail.extend(s.driver.cold_start_steps());
+                    tail.push(exec_step(s.exec_ms));
+                    tail.push(Step::effect("release", TAG_RELEASE));
+                    self.cold_inflight.insert(req);
+                }
+            },
+        }
+        tail
+    }
+}
+
+impl Domain for FnDomain {
+    fn decide(&mut self, req: ReqId, _class: u32, tag: u32, now: u64, _rng: &mut Rng) -> Vec<Step> {
+        debug_assert_eq!(tag, TAG_DISPATCH);
+        self.dispatch_tail(req, now)
+    }
+
+    fn effect(&mut self, _req: ReqId, _class: u32, tag: u32, now: u64) {
+        debug_assert_eq!(tag, TAG_RELEASE);
+        self.pool.release(FUNC, now);
+    }
+
+    fn done(&mut self, req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+        let lat = now - start;
+        self.latencies_ns.push(lat);
+        if self.cold_inflight.remove(&req) {
+            self.cold_latencies_ns.push(lat);
+        } else {
+            self.warm_latencies_ns.push(lat);
+        }
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            vec![Spawn { delay_ns: self.gap_ns, class, steps: self.template.clone() }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Aggregated outcome of one scenario run.
+pub struct ScenarioResult {
+    pub latencies_ns: Vec<u64>,
+    pub cold_latencies_ns: Vec<u64>,
+    pub warm_latencies_ns: Vec<u64>,
+    pub elapsed_ns: u64,
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+    pub idle_gb_seconds: f64,
+    pub monitor_events: u64,
+    /// Median connection-setup cost for this scenario's frontend (reported
+    /// separately, as in Table I).
+    pub conn_setup_ms: f64,
+}
+
+pub fn run_scenario(sc: &Scenario, host: Host) -> ScenarioResult {
+    let timeout_ns = (sc.idle_timeout_s * 1e9) as u64;
+    let mem = sc.driver.tech().warm_memory_bytes();
+    let domain = FnDomain {
+        scenario: sc.clone(),
+        pool: WarmPool::new(timeout_ns, mem),
+        template: Vec::new(),
+        remaining: 0,
+        gap_ns: 0,
+        latencies_ns: Vec::new(),
+        cold_latencies_ns: Vec::new(),
+        warm_latencies_ns: Vec::new(),
+        cold_inflight: std::collections::HashSet::new(),
+    };
+    let mut e = Engine::new(domain, host, sc.seed);
+    let head = sc.head_steps();
+    e.domain.template = head.clone();
+
+    match &sc.load {
+        Load::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
+            assert!(*parallelism as u64 <= *total);
+            if *prewarm {
+                e.domain.pool.prewarm(FUNC, *parallelism as u64, 0);
+            }
+            e.domain.remaining = total - *parallelism as u64;
+            e.domain.gap_ns = *gap_ns;
+            for _ in 0..*parallelism {
+                e.spawn_at(0, 0, head.clone());
+            }
+            e.run(total.saturating_mul(96).max(1 << 20));
+        }
+        Load::OpenLoop(trace) => {
+            for &t in &trace.arrivals_ns {
+                e.spawn_at(t, 0, head.clone());
+            }
+            e.run((trace.len() as u64).saturating_mul(96).max(1 << 20));
+        }
+    }
+
+    let now = e.now();
+    e.domain.pool.finalize(now);
+    let conn = sc.frontend().nominal_setup_ms(sc.client, sc.server);
+    let cold_starts = e.domain.pool.cold_starts
+        + if sc.driver == DriverKind::IncludeOsCold {
+            e.domain.cold_latencies_ns.len() as u64
+        } else {
+            0
+        };
+    ScenarioResult {
+        latencies_ns: std::mem::take(&mut e.domain.latencies_ns),
+        cold_latencies_ns: std::mem::take(&mut e.domain.cold_latencies_ns),
+        warm_latencies_ns: std::mem::take(&mut e.domain.warm_latencies_ns),
+        elapsed_ns: now,
+        warm_hits: e.domain.pool.warm_hits,
+        cold_starts,
+        idle_gb_seconds: e.domain.pool.idle_gb_seconds(),
+        monitor_events: e.domain.pool.monitor_events,
+        conn_setup_ms: conn,
+    }
+}
+
+fn median_ms(v: &[u64]) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = v.to_vec();
+    s.sort_unstable();
+    s[s.len() / 2] as f64 / 1e6
+}
+
+impl ScenarioResult {
+    pub fn median_ms(&self) -> f64 {
+        median_ms(&self.latencies_ns)
+    }
+    pub fn cold_median_ms(&self) -> f64 {
+        median_ms(&self.cold_latencies_ns)
+    }
+    pub fn warm_median_ms(&self) -> f64 {
+        median_ms(&self.warm_latencies_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_includeos_cold_in_fig4_band() {
+        // Fig 4: IncludeOS startup+execution ≈ 10–20 ms in the local lab.
+        let sc = Scenario::local(DriverKind::IncludeOsCold, 5, 2000, false);
+        let r = run_scenario(&sc, Host::default());
+        let med = r.median_ms();
+        assert!((10.0..20.0).contains(&med), "local includeos median {med}");
+        assert_eq!(r.warm_hits, 0);
+    }
+
+    #[test]
+    fn local_docker_warm_in_fig4_band() {
+        // Fig 4: warm Go function ≈ 3–5 ms.
+        let sc = Scenario::local(DriverKind::DockerWarm, 5, 2000, true);
+        let r = run_scenario(&sc, Host::default());
+        let med = r.warm_median_ms();
+        assert!((3.0..5.5).contains(&med), "local warm docker median {med}");
+    }
+
+    #[test]
+    fn cloud_cold_medians_near_table1() {
+        // Table I: Fn IncludeOS 33.4 ms, Fn Docker 288.3 ms (cold).
+        let sc = Scenario::cloud(DriverKind::IncludeOsCold, 800, false, 0);
+        let inc = run_scenario(&sc, Host::default()).cold_median_ms();
+        assert!((inc / 33.4 - 1.0).abs() < 0.25, "fn-includeos cold {inc}");
+
+        // Space requests past the idle timeout so every start is cold.
+        let sc = Scenario::cloud(DriverKind::DockerWarm, 300, false, 31_000_000_000);
+        let dock = run_scenario(&sc, Host::default()).cold_median_ms();
+        assert!((dock / 288.3 - 1.0).abs() < 0.25, "fn-docker cold {dock}");
+    }
+
+    #[test]
+    fn cloud_warm_median_near_table1() {
+        // Table I: Fn Docker warm 13.6 ms.
+        let sc = Scenario::cloud(DriverKind::DockerWarm, 1500, true, 0);
+        let r = run_scenario(&sc, Host::default());
+        let warm = r.warm_median_ms();
+        assert!((warm / 13.6 - 1.0).abs() < 0.25, "fn-docker warm {warm}");
+    }
+
+    #[test]
+    fn includeos_wastes_nothing() {
+        let sc = Scenario::local(DriverKind::IncludeOsCold, 2, 500, false);
+        let r = run_scenario(&sc, Host::default());
+        assert_eq!(r.idle_gb_seconds, 0.0);
+        assert_eq!(r.monitor_events, 0);
+    }
+
+    #[test]
+    fn docker_warm_pool_wastes_memory() {
+        let sc = Scenario::local(DriverKind::DockerWarm, 2, 500, true);
+        let r = run_scenario(&sc, Host::default());
+        assert!(r.idle_gb_seconds > 0.0);
+    }
+
+    #[test]
+    fn deterministic_scenarios() {
+        let sc = Scenario::local(DriverKind::IncludeOsCold, 3, 300, false);
+        let a = run_scenario(&sc, Host::default());
+        let b = run_scenario(&sc, Host::default());
+        assert_eq!(a.latencies_ns, b.latencies_ns);
+    }
+}

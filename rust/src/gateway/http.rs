@@ -1,0 +1,522 @@
+//! Minimal HTTP/1.1 server and client (S6), std::net only.
+//!
+//! The offline registry has no tokio/hyper, and the paper's gateway
+//! (CppCMS) is itself a thread-pool HTTP server — so this mirrors that
+//! architecture: one accept thread, a bounded queue, and N worker threads
+//! (§III-B: "multiple processes for accepting connections and 20 worker
+//! threads").  Handlers are routed by (method, path-prefix).
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// HTTP/1.1 persistent connection (absent `Connection: close`).
+    pub keep_alive: bool,
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+}
+
+impl Response {
+    pub fn ok(body: impl Into<Vec<u8>>) -> Response {
+        Response { status: 200, body: body.into(), content_type: "text/plain" }
+    }
+    pub fn json(body: impl Into<Vec<u8>>) -> Response {
+        Response { status: 200, body: body.into(), content_type: "application/json" }
+    }
+    pub fn not_found() -> Response {
+        Response { status: 404, body: b"not found".to_vec(), content_type: "text/plain" }
+    }
+    pub fn bad_request(msg: &str) -> Response {
+        Response { status: 400, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+    }
+    pub fn error(msg: &str) -> Response {
+        Response { status: 500, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        self.write_conn(w, false)
+    }
+
+    pub fn write_conn(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Parse one request from a buffered stream (request line + headers + body).
+/// Returns Ok(None) on clean EOF (client closed a persistent connection).
+pub fn parse_request_buf(
+    reader: &mut BufReader<TcpStream>,
+) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None); // clean close between requests
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "empty request line"));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let lower = h.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:").map(str::trim) {
+            content_length = v.parse().map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "bad content-length")
+            })?;
+        } else if let Some(v) = lower.strip_prefix("connection:").map(str::trim) {
+            keep_alive = v != "close";
+        }
+    }
+    // Bound request bodies to 16 MiB: the gateway must not be a memory DoS.
+    if content_length > 16 << 20 {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
+/// Parse one request from a raw stream (compat shim for one-shot use).
+pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    parse_request_buf(&mut reader)?
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "closed"))
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Bounded connection queue feeding the worker pool.
+struct ConnQueue {
+    q: Mutex<VecDeque<TcpStream>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl ConnQueue {
+    fn push(&self, s: TcpStream) -> bool {
+        let mut q = self.q.lock().unwrap();
+        if q.len() >= self.capacity {
+            return false; // overload: shed the connection
+        }
+        q.push_back(s);
+        self.cv.notify_one();
+        true
+    }
+
+    fn pop(&self, stop: &AtomicBool) -> Option<TcpStream> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(s) = q.pop_front() {
+                return Some(s);
+            }
+            if stop.load(Ordering::Acquire) {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = guard;
+        }
+    }
+}
+
+/// Gateway request counters.
+#[derive(Default)]
+pub struct GatewayStats {
+    pub accepted: AtomicU64,
+    pub served: AtomicU64,
+    pub shed: AtomicU64,
+    pub parse_errors: AtomicU64,
+}
+
+/// The gateway server.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    pub stats: Arc<GatewayStats>,
+}
+
+impl Server {
+    /// Bind and serve `handler` with `workers` worker threads.  Pass port 0
+    /// for an ephemeral port; the bound address is `addr()`.
+    pub fn start(bind: &str, workers: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ConnQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            capacity: 1024,
+        });
+        let stats = Arc::new(GatewayStats::default());
+        let mut threads = Vec::new();
+
+        // Accept thread.
+        {
+            let (stop, queue, stats) = (stop.clone(), queue.clone(), stats.clone());
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((s, _)) => {
+                            stats.accepted.fetch_add(1, Ordering::Relaxed);
+                            if !queue.push(s) {
+                                stats.shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        // Worker pool.
+        for _ in 0..workers.max(1) {
+            let (stop, queue, stats, handler) =
+                (stop.clone(), queue.clone(), stats.clone(), handler.clone());
+            threads.push(std::thread::spawn(move || {
+                while let Some(s) = queue.pop(&stop) {
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    let _ = s.set_nodelay(true);
+                    let mut writer = match s.try_clone() {
+                        Ok(w) => w,
+                        Err(_) => continue,
+                    };
+                    let mut reader = BufReader::new(s);
+                    // Serve the whole persistent connection on this worker
+                    // (paper-faithful: CppCMS workers are per-connection).
+                    loop {
+                        match parse_request_buf(&mut reader) {
+                            Ok(Some(req)) => {
+                                let resp = handler(&req);
+                                let keep = req.keep_alive && !stop.load(Ordering::Acquire);
+                                // Count before the write completes: clients
+                                // may observe the response (and /stats)
+                                // before this thread runs again.
+                                stats.served.fetch_add(1, Ordering::Relaxed);
+                                if resp.write_conn(&mut writer, keep).is_err() || !keep {
+                                    break;
+                                }
+                            }
+                            Ok(None) => break, // client closed
+                            Err(_) => {
+                                stats.parse_errors.fetch_add(1, Ordering::Relaxed);
+                                let _ = Response::bad_request("malformed request")
+                                    .write_conn(&mut writer, false);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        Ok(Server { addr, stop, threads, stats })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Persistent-connection HTTP client (keep-alive), for load generation —
+/// the §Perf L3b optimization: amortizes the TCP connect across requests,
+/// mirroring the paper's note that "re-using the same TCP/TLS connection
+/// is a powerful optimization option".
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    addr: std::net::SocketAddr,
+}
+
+impl HttpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<HttpClient> {
+        let s = TcpStream::connect(addr)?;
+        s.set_read_timeout(Some(Duration::from_secs(30)))?;
+        s.set_nodelay(true)?;
+        Ok(HttpClient { reader: BufReader::new(s), addr })
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let result = self.request_inner(method, path, body);
+        if result.is_err() {
+            // Transparent reconnect once (server may have timed us out).
+            *self = HttpClient::connect(self.addr)?;
+            return self.request_inner(method, path, body);
+        }
+        result
+    }
+
+    fn request_inner(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        {
+            let s = self.reader.get_mut();
+            write!(
+                s,
+                "{method} {path} HTTP/1.1\r\nHost: coldfaas\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            )?;
+            s.write_all(body)?;
+            s.flush()?;
+        }
+        read_response(&mut self.reader)
+    }
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut status_line = String::new();
+    if reader.read_line(&mut status_line)? == 0 {
+        return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server closed"));
+    }
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+/// Blocking one-shot HTTP client (Connection: close) for tests/examples.
+pub fn http_request(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: coldfaas\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    s.write_all(body)?;
+    s.flush()?;
+    let mut reader = BufReader::new(s);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        let handler: Handler = Arc::new(|req: &Request| match req.path.as_str() {
+            "/noop" => Response::ok(""),
+            p if p.starts_with("/echo") => Response::ok(req.body.clone()),
+            _ => Response::not_found(),
+        });
+        Server::start("127.0.0.1:0", 4, handler).unwrap()
+    }
+
+    #[test]
+    fn serves_noop() {
+        let srv = echo_server();
+        let (status, body) = http_request(srv.addr(), "GET", "/noop", b"").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.is_empty());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn echoes_post_body() {
+        let srv = echo_server();
+        let payload = b"1.5, 2.5, 3.5";
+        let (status, body) = http_request(srv.addr(), "POST", "/echo", payload).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let srv = echo_server();
+        let (status, _) = http_request(srv.addr(), "GET", "/nope", b"").unwrap();
+        assert_eq!(status, 404);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let srv = echo_server();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let body = format!("req-{i}");
+                    let (status, got) =
+                        http_request(addr, "POST", "/echo", body.as_bytes()).unwrap();
+                    assert_eq!(status, 200);
+                    assert_eq!(got, body.as_bytes());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.stats.served.load(Ordering::Relaxed), 16);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_is_400_not_crash() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        // Server must keep serving afterwards.
+        let (status, _) = http_request(srv.addr(), "GET", "/noop", b"").unwrap();
+        assert_eq!(status, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "POST /echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 64 << 20).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_per_connection() {
+        let srv = echo_server();
+        let mut c = HttpClient::connect(srv.addr()).unwrap();
+        for i in 0..20 {
+            let body = format!("r{i}");
+            let (status, got) = c.request("POST", "/echo", body.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(got, body.as_bytes());
+        }
+        assert_eq!(srv.stats.served.load(Ordering::Relaxed), 20);
+        // 20 requests over ONE accepted connection.
+        assert_eq!(srv.stats.accepted.load(Ordering::Relaxed), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn connection_close_honored() {
+        let srv = echo_server();
+        // http_request sends Connection: close; server must close after 1.
+        let (status, _) = http_request(srv.addr(), "GET", "/noop", b"").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(srv.stats.served.load(Ordering::Relaxed), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_threads() {
+        let srv = echo_server();
+        let addr = srv.addr();
+        srv.shutdown();
+        assert!(TcpStream::connect_timeout(&addr.into(), Duration::from_millis(200)).is_err()
+            || http_request(addr, "GET", "/noop", b"").is_err());
+    }
+}

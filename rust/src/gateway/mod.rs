@@ -1,0 +1,6 @@
+//! HTTP gateway (S6): the real request frontend for the live coordinator,
+//! mirroring the paper's CppCMS accept-thread + worker-pool architecture.
+
+pub mod http;
+
+pub use http::{http_request, parse_request, Handler, Request, Response, Server};

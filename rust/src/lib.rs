@@ -1,0 +1,36 @@
+//! # coldfaas
+//!
+//! A cold-start-only FaaS platform with unikernel-style executors —
+//! a full-system reproduction of Géhberger & Kovács, *"Cooling Down FaaS:
+//! Towards Getting Rid of Warm Starts"* (2022).
+//!
+//! The crate has two halves that share one set of substrate models:
+//!
+//! * a **discrete-event simulation** stack ([`sim`], [`virt`], [`net`],
+//!   [`workload`], [`fnplat`], [`lambda`]) that regenerates every figure
+//!   and table of the paper's evaluation in virtual time, and
+//! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
+//!   [`runtime`]) — a real HTTP control plane whose executors run
+//!   AOT-compiled JAX/Pallas functions through PJRT (python never on the
+//!   request path), with the same startup models applied in real time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod exec;
+pub mod experiments;
+pub mod gateway;
+pub mod fnplat;
+pub mod image;
+pub mod lambda;
+pub mod metrics;
+pub mod net;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod virt;
+pub mod workload;

@@ -1,0 +1,288 @@
+//! coldfaas — cold-start-only FaaS with unikernel-style executors.
+//!
+//! Subcommands:
+//!   experiment <name>|all   regenerate a paper figure/table (DESIGN.md §5)
+//!   serve                   start the live platform (HTTP + PJRT)
+//!   invoke <fn>             one-shot local invocation through the stack
+//!   verify                  check every AOT artifact against its oracle
+//!   measure-exec            PJRT execution medians for the workload ladder
+//!   list                    list deployable functions
+
+use std::io::Write;
+
+use coldfaas::cli::Args;
+use coldfaas::coordinator::{Config, Coordinator, SchedMode};
+use coldfaas::experiments::{self, ExpConfig};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match args.subcommand.as_str() {
+        "experiment" => cmd_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "invoke" => cmd_invoke(&args),
+        "verify" => cmd_verify(&args),
+        "measure-exec" => cmd_measure_exec(&args),
+        "list" => cmd_list(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
+
+USAGE: coldfaas <subcommand> [options]
+
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|all>
+      --requests N          requests per cell (default 10000; paper value)
+      --parallelism LIST    e.g. 1,5,10,20,40 (default)
+      --seed N              deterministic seed
+      --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+
+  serve
+      --bind ADDR           default 127.0.0.1:8080
+      --mode cold|warm      scheduler (default cold)
+      --time-scale F        startup-model sleep scale (default 1.0)
+      --engines N           PJRT engine threads (default 1)
+      --workers N           gateway worker threads (default 20)
+      --functions a,b       compile only these (default: all)
+
+  invoke <fn>  [--payload '1,2,3'] [--mode cold|warm] [--time-scale F]
+  verify       [--artifacts DIR]
+  measure-exec [--iters N]
+  list
+";
+
+fn exp_config(args: &Args) -> ExpConfig {
+    let mut cfg = if args.has_flag("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    if let Some(r) = args.get("requests") {
+        cfg.requests = r.parse().unwrap_or(cfg.requests);
+    }
+    cfg.parallelisms = args.get_u32_list("parallelism", &cfg.parallelisms);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(name) = args.positional.first() else {
+        eprintln!("usage: coldfaas experiment <name>|all");
+        return 2;
+    };
+    let cfg = exp_config(args);
+    let names: Vec<&str> = if name == "all" {
+        experiments::ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    let mut all_pass = true;
+    let mut rendered = String::new();
+    for n in names {
+        let t0 = std::time::Instant::now();
+        match experiments::by_name(n, &cfg) {
+            Some(report) => {
+                let txt = report.render();
+                print!("{txt}");
+                println!("  ({} in {:.1} s)", n, t0.elapsed().as_secs_f64());
+                rendered.push_str(&txt);
+                all_pass &= report.all_pass();
+            }
+            None => {
+                eprintln!("unknown experiment '{n}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(path) = args.get("out") {
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(rendered.as_bytes());
+        }
+    }
+    if all_pass {
+        0
+    } else {
+        1
+    }
+}
+
+fn coord_config(args: &Args) -> Config {
+    let mode = match args.get_or("mode", "cold").as_str() {
+        "warm" => SchedMode::WarmPool,
+        _ => SchedMode::ColdOnly,
+    };
+    Config {
+        mode,
+        time_scale: args.get_f64("time-scale", 1.0),
+        idle_timeout_s: args.get_f64("idle-timeout", 30.0),
+        engine_threads: args.get_u64("engines", 1) as usize,
+        gateway_workers: args.get_u64("workers", 20) as usize,
+        artifacts_dir: args
+            .get("artifacts")
+            .map(Into::into)
+            .unwrap_or_else(coldfaas::runtime::default_artifacts_dir),
+        functions: args
+            .get("functions")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = coord_config(args);
+    let bind = args.get_or("bind", "127.0.0.1:8080");
+    let coord = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("failed to start coordinator: {e}");
+            eprintln!("hint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    let srv = match coord.serve(&bind) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {bind}: {e}");
+            return 1;
+        }
+    };
+    println!("coldfaas serving on http://{} (mode={:?})", srv.addr(), coord.mode());
+    println!("functions:");
+    for f in coord.registry() {
+        println!("  {:<12} inputs={:<6} flops={}", f.name, f.input_elements, f.flops);
+    }
+    println!("try: curl -X POST http://{}/invoke/echo", srv.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_invoke(args: &Args) -> i32 {
+    let Some(name) = args.positional.first() else {
+        eprintln!("usage: coldfaas invoke <fn> [--payload '1,2,...']");
+        return 2;
+    };
+    let mut cfg = coord_config(args);
+    cfg.functions = vec![name.clone()];
+    let coord = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("start: {e}\nhint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    let payload = args.get_or("payload", "");
+    match coord.invoke(name, payload.as_bytes()) {
+        Ok(o) => {
+            println!(
+                "fn={} cold={} startup_model={:.2} ms exec={:.2} ms total={:.2} ms",
+                o.function, o.cold, o.startup_model_ms, o.exec_ms, o.total_ms
+            );
+            println!(
+                "output: sum={:.6} l2={:.6} head={:?}",
+                o.output_sum, o.output_l2, o.output_head
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("invoke failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(coldfaas::runtime::default_artifacts_dir);
+    let rt = match coldfaas::runtime::Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("load artifacts from {}: {e}", dir.display());
+            return 1;
+        }
+    };
+    let mut ok = true;
+    for name in rt.names() {
+        match rt.verify(name) {
+            Ok(rep) => {
+                println!(
+                    "{:<12} sum {:>14.6} (want {:>14.6})  l2 {:>12.6} (want {:>12.6})  {}",
+                    name,
+                    rep.got_sum,
+                    rep.want_sum,
+                    rep.got_l2,
+                    rep.want_l2,
+                    if rep.pass { "PASS" } else { "FAIL" }
+                );
+                ok &= rep.pass;
+            }
+            Err(e) => {
+                println!("{name:<12} ERROR: {e}");
+                ok = false;
+            }
+        }
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_measure_exec(args: &Args) -> i32 {
+    let iters = args.get_u64("iters", 50) as usize;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(coldfaas::runtime::default_artifacts_dir);
+    let rt = match coldfaas::runtime::Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("load artifacts: {e}");
+            return 1;
+        }
+    };
+    println!("PJRT CPU execution medians over {iters} iters (update runtime::static_exec_ms):");
+    for name in rt.names() {
+        match rt.measure_exec_ms(name, iters) {
+            Ok(ms) => {
+                let compile = rt.get(name).map(|l| l.compile_ms).unwrap_or(f64::NAN);
+                println!("  {name:<12} exec {ms:>8.3} ms   (compile {compile:>8.1} ms)");
+            }
+            Err(e) => println!("  {name:<12} ERROR: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_list(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(coldfaas::runtime::default_artifacts_dir);
+    match coldfaas::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            for f in &m.functions {
+                println!(
+                    "{:<12} {:<28} in={:?} out={:?} flops={}",
+                    f.name, f.doc, f.inputs[0].shape, f.outputs[0].shape, f.flops
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("load manifest: {e}\nhint: run `make artifacts` first");
+            1
+        }
+    }
+}

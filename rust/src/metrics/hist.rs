@@ -1,0 +1,172 @@
+//! Streaming log-bucket histogram for hot-path latency recording in the
+//! live coordinator, where keeping raw samples per request would allocate.
+//!
+//! Buckets grow geometrically (~4.6% width), bounding quantile error to
+//! one bucket (<5%) with a fixed 512-slot footprint and O(1) record.
+
+const BUCKETS: usize = 512;
+/// Bucket boundaries: b(i) = MIN_NS * GROWTH^i, covering 100 ns .. >1000 s.
+const MIN_NS: f64 = 100.0;
+const GROWTH: f64 = 1.0461;
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    n: u64,
+    sum_ns: f64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: [0; BUCKETS],
+            n: 0,
+            sum_ns: 0.0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(ns: u64) -> usize {
+        if ns as f64 <= MIN_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / MIN_NS).ln() / GROWTH.ln()) as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.n += 1;
+        self.sum_ns += ns as f64;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum_ns / self.n as f64 / 1e6
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max_ns as f64 / 1e6 }
+    }
+
+    /// Approximate quantile (bucket upper edge), in ms; error < one bucket.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let upper = MIN_NS * GROWTH.powi(i as i32 + 1);
+                return upper.min(self.max_ns as f64) / 1e6;
+            }
+        }
+        self.max_ns as f64 / 1e6
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            self.counts[i] += other.counts[i];
+        }
+        self.n += other.n;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn quantile_within_bucket_error() {
+        let mut h = Histogram::new();
+        // 1..=1000 ms uniform.
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1_000_000);
+        }
+        let p50 = h.quantile_ms(0.5);
+        assert!((p50 / 500.0 - 1.0).abs() < 0.06, "p50 {p50}");
+        let p99 = h.quantile_ms(0.99);
+        assert!((p99 / 990.0 - 1.0).abs() < 0.06, "p99 {p99}");
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        h.record_ns(1_000_000);
+        h.record_ns(3_000_000);
+        assert!((h.mean_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extreme_values_clamp_to_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record_ns(1); // below MIN
+        h.record_ns(u64::MAX / 2); // beyond top bucket
+        assert_eq!(h.len(), 2);
+        assert!(h.quantile_ms(1.0) > 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_ns(1_000_000);
+        b.record_ns(9_000_000);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean_ms() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = Histogram::new();
+        let mut x = 131u64;
+        for _ in 0..5000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            h.record_ns(1000 + x % 50_000_000);
+        }
+        let qs: Vec<f64> = [0.01, 0.25, 0.5, 0.75, 0.99]
+            .iter()
+            .map(|&q| h.quantile_ms(q))
+            .collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "quantiles must be monotone: {qs:?}");
+        }
+    }
+}

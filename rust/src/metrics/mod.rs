@@ -1,0 +1,8 @@
+//! Metrics substrate (S13): latency recording, quantiles, boxplot stats,
+//! and a streaming log-bucket histogram for the live coordinator hot path.
+
+mod hist;
+mod recorder;
+
+pub use hist::Histogram;
+pub use recorder::{BoxStats, Recorder};

@@ -1,0 +1,186 @@
+//! Exact-quantile latency recorder, keyed by a label, plus the boxplot
+//! statistics the paper uses (whiskers at p1/p99, box at p25/p50/p75).
+
+use std::collections::BTreeMap;
+
+/// Boxplot summary in milliseconds, matching the paper's figures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub n: usize,
+    pub p1: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl BoxStats {
+    pub fn row(&self) -> String {
+        format!(
+            "n={:<6} p1={:>9.2} p25={:>9.2} p50={:>9.2} p75={:>9.2} p99={:>9.2} max={:>9.2}",
+            self.n, self.p1, self.p25, self.p50, self.p75, self.p99, self.max
+        )
+    }
+}
+
+/// Collects raw samples per label; quantiles are exact (sorted copy).
+/// BTreeMap keeps report ordering stable across runs.
+#[derive(Default, Clone)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ms(&mut self, label: &str, ms: f64) {
+        match self.series.get_mut(label) {
+            Some(v) => v.push(ms),
+            None => {
+                self.series.insert(label.to_string(), vec![ms]);
+            }
+        }
+    }
+
+    pub fn record_ns(&mut self, label: &str, ns: u64) {
+        self.record_ms(label, ns as f64 / 1e6);
+    }
+
+    pub fn labels(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+
+    pub fn count(&self, label: &str) -> usize {
+        self.series.get(label).map_or(0, |v| v.len())
+    }
+
+    pub fn samples(&self, label: &str) -> &[f64] {
+        self.series.get(label).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Exact quantile (nearest-rank on the sorted samples), q in [0, 1].
+    pub fn quantile(&self, label: &str, q: f64) -> Option<f64> {
+        let v = self.series.get(label)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut s = v.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(quantile_sorted(&s, q))
+    }
+
+    pub fn stats(&self, label: &str) -> Option<BoxStats> {
+        let v = self.series.get(label)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut s = v.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        Some(BoxStats {
+            n: s.len(),
+            p1: quantile_sorted(&s, 0.01),
+            p25: quantile_sorted(&s, 0.25),
+            p50: quantile_sorted(&s, 0.50),
+            p75: quantile_sorted(&s, 0.75),
+            p99: quantile_sorted(&s, 0.99),
+            mean,
+            max: *s.last().unwrap(),
+        })
+    }
+
+    pub fn merge(&mut self, other: &Recorder) {
+        for (k, v) in &other.series {
+            self.series.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.series.clear();
+    }
+}
+
+/// Nearest-rank quantile over an already-sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((q * sorted.len() as f64).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_label_gives_none() {
+        let r = Recorder::new();
+        assert!(r.stats("x").is_none());
+        assert!(r.quantile("x", 0.5).is_none());
+    }
+
+    #[test]
+    fn median_of_odd_count() {
+        let mut r = Recorder::new();
+        for x in [5.0, 1.0, 3.0] {
+            r.record_ms("a", x);
+        }
+        assert_eq!(r.quantile("a", 0.5), Some(3.0));
+    }
+
+    #[test]
+    fn quantiles_of_1_to_100() {
+        let mut r = Recorder::new();
+        for i in 1..=100 {
+            r.record_ms("a", i as f64);
+        }
+        let s = r.stats("a").unwrap();
+        assert_eq!(s.p1, 1.0);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nearest_rank_edge_cases() {
+        let v = [10.0];
+        assert_eq!(quantile_sorted(&v, 0.0), 10.0);
+        assert_eq!(quantile_sorted(&v, 1.0), 10.0);
+        let v2 = [1.0, 2.0];
+        assert_eq!(quantile_sorted(&v2, 0.5), 1.0);
+        assert_eq!(quantile_sorted(&v2, 0.75), 2.0);
+    }
+
+    #[test]
+    fn record_ns_converts_to_ms() {
+        let mut r = Recorder::new();
+        r.record_ns("a", 2_500_000);
+        assert_eq!(r.samples("a"), &[2.5]);
+    }
+
+    #[test]
+    fn merge_combines_series() {
+        let mut a = Recorder::new();
+        a.record_ms("x", 1.0);
+        let mut b = Recorder::new();
+        b.record_ms("x", 2.0);
+        b.record_ms("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn labels_sorted_and_stable() {
+        let mut r = Recorder::new();
+        r.record_ms("z", 1.0);
+        r.record_ms("a", 1.0);
+        let l: Vec<&str> = r.labels().collect();
+        assert_eq!(l, vec!["a", "z"]);
+    }
+}

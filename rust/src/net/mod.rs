@@ -1,0 +1,187 @@
+//! Network model (S5): geographic RTTs, TCP/TLS connection setup, and
+//! link-bandwidth transfer costs, for the cloud experiments (Table I, E10).
+//!
+//! Table I's connection-setup column is mostly protocol arithmetic: a plain
+//! TCP connect costs one RTT before the request can be sent, TLS 1.2 adds
+//! two more round trips plus handshake crypto (§IV-B: "3 round-trips and
+//! the computational costs").
+
+use crate::sim::{Dist, Step, MS};
+
+/// A measurement vantage point / deployment site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// Ericsson lab, Stockholm (the paper's measurement point).
+    LabStockholm,
+    /// AWS eu-north-1 (Stockholm region) — where Fn + Lambda are deployed.
+    AwsStockholm,
+    /// Ericsson lab, Budapest (the distance experiment).
+    LabBudapest,
+    /// An EC2 instance inside the same AWS region.
+    Ec2SameRegion,
+}
+
+/// Median round-trip time between two sites, in milliseconds.
+///
+/// Calibrated so Table I reproduces: lab→AWS-Stockholm plain TCP setup is
+/// ~0.9–6.9 ms depending on the frontend, Lambda's TLS setup is ~50 ms,
+/// and Budapest→Stockholm TLS grows to ~200 ms (§IV-B).
+pub fn rtt_ms(a: Site, b: Site) -> f64 {
+    use Site::*;
+    if a == b {
+        return 0.08; // intra-site/loopback-ish
+    }
+    match a.min_key(b) {
+        (LabStockholm, AwsStockholm) => 0.8,
+        (LabStockholm, LabBudapest) => 24.0,
+        (AwsStockholm, LabBudapest) => 24.5,
+        (LabStockholm, Ec2SameRegion) => 0.85,
+        (AwsStockholm, Ec2SameRegion) => 0.25,
+        (LabBudapest, Ec2SameRegion) => 24.5,
+        _ => 1.0,
+    }
+}
+
+impl Site {
+    fn min_key(self, other: Site) -> (Site, Site) {
+        if (self as u8) <= (other as u8) { (self, other) } else { (other, self) }
+    }
+}
+
+/// Jitter sigma applied to each one-way hop.
+const RTT_SIGMA: f64 = 0.08;
+
+/// One network round trip as a simulation step.
+pub fn rtt_step(tag: &'static str, a: Site, b: Site) -> Step {
+    Step::delay(tag, Dist::ms(rtt_ms(a, b), RTT_SIGMA))
+}
+
+/// Frontend connection-termination style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnKind {
+    /// Plain TCP: one RTT (SYN/SYN-ACK) before the request flows.
+    Tcp,
+    /// TLS 1.2 over TCP through an API gateway: 3 RTTs + handshake crypto.
+    Tls,
+}
+
+/// Server-side accept overhead (ms) — covers the frontend's listener,
+/// e.g. Fn's HTTP server vs the hypervisor-host port proxying for the
+/// IncludeOS deployment (Table I measures 0.9 vs 6.9 ms setup on the same
+/// host pair: the difference is frontend accept-path work, not distance).
+#[derive(Clone, Copy, Debug)]
+pub struct Frontend {
+    pub kind: ConnKind,
+    pub accept_overhead_ms: f64,
+}
+
+impl Frontend {
+    pub const FN_DOCKER: Frontend = Frontend { kind: ConnKind::Tcp, accept_overhead_ms: 0.1 };
+    /// The prototype's IncludeOS frontend: extra accept-path cost from the
+    /// qemu-free but unoptimized solo5 port forwarding on the metal host.
+    pub const FN_INCLUDEOS: Frontend = Frontend { kind: ConnKind::Tcp, accept_overhead_ms: 5.2 };
+    /// AWS API Gateway terminating TLS in front of Lambda.  Table I's
+    /// 50.1 ms setup is far above 3 bare RTTs in-region: the bulk is the
+    /// managed edge — DNS resolution, the edge-optimized endpoint hop, and
+    /// the gateway's own TLS/session machinery — modeled as a flat accept
+    /// overhead on top of the protocol round trips.
+    pub const LAMBDA_API_GW: Frontend = Frontend { kind: ConnKind::Tls, accept_overhead_ms: 42.0 };
+
+    /// TLS handshake crypto cost (both sides), ms.
+    const TLS_CRYPTO_MS: f64 = 3.0;
+
+    /// Connection-setup steps from `client` to `server`.
+    pub fn connect_steps(&self, client: Site, server: Site) -> Vec<Step> {
+        let mut v = Vec::new();
+        let rtts = match self.kind {
+            ConnKind::Tcp => 1.0,
+            ConnKind::Tls => 3.0,
+        };
+        v.push(Step::delay(
+            "conn-rtts",
+            Dist::ms(rtts * rtt_ms(client, server), RTT_SIGMA),
+        ));
+        if self.kind == ConnKind::Tls {
+            v.push(Step::cpu("tls-crypto", Dist::ms(Self::TLS_CRYPTO_MS, 0.2)));
+        }
+        if self.accept_overhead_ms > 0.0 {
+            v.push(Step::delay("accept-overhead", Dist::ms(self.accept_overhead_ms, 0.15)));
+        }
+        v
+    }
+
+    /// Nominal (median-sum) connection setup in ms, for checks.
+    pub fn nominal_setup_ms(&self, client: Site, server: Site) -> f64 {
+        self.connect_steps(client, server)
+            .iter()
+            .map(|s| s.dur.median_ns() / 1e6)
+            .sum()
+    }
+}
+
+/// Transfer time for `bytes` over a link of `gbps`, as a delay step.
+pub fn transfer_step(tag: &'static str, bytes: u64, gbps: f64) -> Step {
+    let ns = bytes as f64 * 8.0 / (gbps * 1e9) * 1e9;
+    Step::delay(tag, Dist::Const(ns.max(0.001 * MS)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtt_symmetric() {
+        assert_eq!(
+            rtt_ms(Site::LabStockholm, Site::AwsStockholm),
+            rtt_ms(Site::AwsStockholm, Site::LabStockholm)
+        );
+    }
+
+    #[test]
+    fn same_site_near_zero() {
+        assert!(rtt_ms(Site::AwsStockholm, Site::AwsStockholm) < 0.1);
+    }
+
+    #[test]
+    fn table1_connection_setups() {
+        // Table I: Fn Docker 0.9, Fn IncludeOS 6.9, Lambda 50.1 ms (medians).
+        let fd = Frontend::FN_DOCKER.nominal_setup_ms(Site::LabStockholm, Site::AwsStockholm);
+        assert!((fd / 0.9 - 1.0).abs() < 0.25, "fn-docker setup {fd}");
+        let fi = Frontend::FN_INCLUDEOS.nominal_setup_ms(Site::LabStockholm, Site::AwsStockholm);
+        assert!((fi / 6.9 - 1.0).abs() < 0.25, "fn-includeos setup {fi}");
+        // Lambda through the TLS API gateway: 50.1 ms (3 RTTs + crypto +
+        // the managed-edge overhead).
+        let la = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::LabStockholm, Site::AwsStockholm);
+        assert!((la / 50.1 - 1.0).abs() < 0.25, "lambda setup {la}");
+    }
+
+    #[test]
+    fn budapest_tls_setup_grows_with_distance() {
+        // §IV-B: "up to around 200 ms if the Lambda function is called from
+        // our lab in Budapest" — for the *full* call; setup alone must be
+        // the dominant part of that (3 RTTs ≈ 74 ms + crypto + accept).
+        let near = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::LabStockholm, Site::AwsStockholm);
+        let far = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::LabBudapest, Site::AwsStockholm);
+        // The distance term is the 3 extra RTTs (~71 ms Budapest).
+        assert!(far - near > 50.0, "far {far} near {near}");
+        assert!((90.0..140.0).contains(&far), "far setup {far}");
+    }
+
+    #[test]
+    fn ec2_same_region_slightly_lower() {
+        // §IV-B: EC2 in-region gives only slightly lower setup overhead.
+        let lab = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::LabStockholm, Site::AwsStockholm);
+        let ec2 = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::Ec2SameRegion, Site::AwsStockholm);
+        assert!(ec2 < lab);
+        assert!(ec2 > lab * 0.5, "should be 'only slightly lower': {ec2} vs {lab}");
+    }
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let s1 = transfer_step("t", 1_000_000, 40.0);
+        let s2 = transfer_step("t", 2_000_000, 40.0);
+        assert!((s2.dur.median_ns() / s1.dur.median_ns() - 2.0).abs() < 1e-9);
+        // 1 MB over 40 Gbps = 0.2 ms
+        assert!((s1.dur.median_ns() / 1e6 - 0.2).abs() < 0.01);
+    }
+}

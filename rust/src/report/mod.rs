@@ -1,0 +1,177 @@
+//! Report rendering (S15): ASCII tables/series for every regenerated
+//! figure, plus paper-vs-measured tolerance checks.
+
+use crate::metrics::BoxStats;
+
+/// One paper-vs-measured comparison point.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub label: String,
+    pub metric: &'static str,
+    pub got: f64,
+    pub want: f64,
+    /// Fractional tolerance; e.g. 0.25 = ±25 %.
+    pub tol: f64,
+}
+
+impl Check {
+    pub fn pass(&self) -> bool {
+        if self.want == 0.0 {
+            return self.got.abs() <= self.tol;
+        }
+        (self.got / self.want - 1.0).abs() <= self.tol
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<38} {:<12} paper={:>9.1}  measured={:>9.1}  ({:+6.1}%)  {}",
+            self.label,
+            self.metric,
+            self.want,
+            self.got,
+            (self.got / self.want - 1.0) * 100.0,
+            if self.pass() { "PASS" } else { "MISS" }
+        )
+    }
+}
+
+/// A lower/upper band check (for "8–15 ms"-style paper statements).
+#[derive(Clone, Debug)]
+pub struct BandCheck {
+    pub label: String,
+    pub metric: &'static str,
+    pub got: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl BandCheck {
+    pub fn pass(&self) -> bool {
+        (self.lo..=self.hi).contains(&self.got)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<38} {:<12} band=[{:>7.1},{:>7.1}]  measured={:>9.1}  {}",
+            self.label,
+            self.metric,
+            self.lo,
+            self.hi,
+            self.got,
+            if self.pass() { "PASS" } else { "MISS" }
+        )
+    }
+}
+
+/// A rendered experiment: measured series + checks + free-form notes.
+pub struct Report {
+    pub title: String,
+    pub series: Vec<(String, BoxStats)>,
+    pub checks: Vec<Check>,
+    pub bands: Vec<BandCheck>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Report {
+        Report {
+            title: title.to_string(),
+            series: Vec::new(),
+            checks: Vec::new(),
+            bands: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn add_series(&mut self, label: &str, stats: BoxStats) {
+        self.series.push((label.to_string(), stats));
+    }
+
+    pub fn check(&mut self, label: &str, metric: &'static str, got: f64, want: f64, tol: f64) {
+        self.checks.push(Check { label: label.to_string(), metric, got, want, tol });
+    }
+
+    pub fn band(&mut self, label: &str, metric: &'static str, got: f64, lo: f64, hi: f64) {
+        self.bands.push(BandCheck { label: label.to_string(), metric, got, lo, hi });
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn all_pass(&self) -> bool {
+        self.checks.iter().all(|c| c.pass()) && self.bands.iter().all(|b| b.pass())
+    }
+
+    pub fn failures(&self) -> Vec<String> {
+        self.checks
+            .iter()
+            .filter(|c| !c.pass())
+            .map(|c| c.row())
+            .chain(self.bands.iter().filter(|b| !b.pass()).map(|b| b.row()))
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        if !self.series.is_empty() {
+            out.push_str("\n  measured latency (ms):\n");
+            for (label, s) in &self.series {
+                out.push_str(&format!("  {:<40} {}\n", label, s.row()));
+            }
+        }
+        if !self.checks.is_empty() || !self.bands.is_empty() {
+            out.push_str("\n  paper-vs-measured:\n");
+            for c in &self.checks {
+                out.push_str(&format!("  {}\n", c.row()));
+            }
+            for b in &self.bands {
+                out.push_str(&format!("  {}\n", b.row()));
+            }
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        let verdict = if self.all_pass() { "ALL CHECKS PASS" } else { "SOME CHECKS MISS" };
+        out.push_str(&format!("  -> {verdict}\n"));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> BoxStats {
+        BoxStats { n: 10, p1: 1.0, p25: 2.0, p50: 3.0, p75: 4.0, p99: 5.0, mean: 3.0, max: 6.0 }
+    }
+
+    #[test]
+    fn check_tolerance_boundaries() {
+        let c = Check { label: "x".into(), metric: "p50", got: 124.9, want: 100.0, tol: 0.25 };
+        assert!(c.pass());
+        let c2 = Check { label: "x".into(), metric: "p50", got: 126.0, want: 100.0, tol: 0.25 };
+        assert!(!c2.pass());
+    }
+
+    #[test]
+    fn band_check_inclusive() {
+        let b = BandCheck { label: "x".into(), metric: "p50", got: 8.0, lo: 8.0, hi: 15.0 };
+        assert!(b.pass());
+        let b2 = BandCheck { label: "x".into(), metric: "p50", got: 15.01, lo: 8.0, hi: 15.0 };
+        assert!(!b2.pass());
+    }
+
+    #[test]
+    fn report_verdict_and_render() {
+        let mut r = Report::new("t");
+        r.add_series("s", stats());
+        r.check("a", "p50", 100.0, 100.0, 0.1);
+        assert!(r.all_pass());
+        assert!(r.render().contains("ALL CHECKS PASS"));
+        r.check("b", "p50", 200.0, 100.0, 0.1);
+        assert!(!r.all_pass());
+        assert_eq!(r.failures().len(), 1);
+    }
+}

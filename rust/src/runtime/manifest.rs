@@ -1,0 +1,212 @@
+//! Typed view of `artifacts/manifest.json` (emitted by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Oracle-computed check values over the deterministic test input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutputCheck {
+    pub sum: f64,
+    pub l2: f64,
+    pub first: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct FunctionEntry {
+    pub name: String,
+    pub file: String,
+    pub doc: String,
+    pub flops: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub check_tol: f64,
+    pub checks: Vec<OutputCheck>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub functions: Vec<FunctionEntry>,
+}
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Parse(m) => write!(f, "manifest parse: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn specs(v: &Json, key: &str) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ManifestError::Parse(format!("missing {key}[]")))?;
+    arr.iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError::Parse("missing shape".into()))?
+                .iter()
+                .map(|d| d.as_u64().map(|u| u as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| ManifestError::Parse("bad shape dim".into()))?;
+            let dtype = s
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Parse("missing dtype".into()))?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(ManifestError::Io)?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let fns = root
+            .get("functions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("missing functions[]".into()))?;
+        let mut functions = Vec::new();
+        for f in fns {
+            let get_str = |k: &str| -> Result<String, ManifestError> {
+                f.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| ManifestError::Parse(format!("missing {k}")))
+            };
+            let check = f
+                .get("check")
+                .ok_or_else(|| ManifestError::Parse("missing check".into()))?;
+            let checks = check
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError::Parse("missing check.outputs".into()))?
+                .iter()
+                .map(|c| {
+                    Ok(OutputCheck {
+                        sum: c.get("sum").and_then(Json::as_f64).ok_or_else(|| {
+                            ManifestError::Parse("missing check sum".into())
+                        })?,
+                        l2: c.get("l2").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                        first: c.get("first").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    })
+                })
+                .collect::<Result<Vec<_>, ManifestError>>()?;
+            functions.push(FunctionEntry {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                doc: f.get("doc").and_then(Json::as_str).unwrap_or("").to_string(),
+                flops: f.get("flops").and_then(Json::as_u64).unwrap_or(0),
+                inputs: specs(f, "inputs")?,
+                outputs: specs(f, "outputs")?,
+                check_tol: check.get("tol").and_then(Json::as_f64).unwrap_or(1e-3),
+                checks,
+            });
+        }
+        Ok(Manifest { dir, functions })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&FunctionEntry> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+
+    pub fn hlo_path(&self, entry: &FunctionEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// The deterministic check vector mirrored from `model.test_input`:
+/// flat[i] = sin(0.37 * i) * 0.5, f32.
+pub fn test_input(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((0.37 * i as f64).sin() * 0.5) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": 1,
+      "functions": [
+        {"name": "echo", "file": "echo.hlo.txt", "doc": "identity",
+         "flops": 0,
+         "inputs": [{"shape": [256], "dtype": "float32"}],
+         "outputs": [{"shape": [256], "dtype": "float32"}],
+         "check": {"input": "sin037", "tol": 0.0005,
+                   "outputs": [{"sum": 1.0, "l2": 2.0, "first": 0.0}]}},
+        {"name": "mlp", "file": "mlp.hlo.txt", "doc": "inference",
+         "flops": 4194304,
+         "inputs": [{"shape": [8, 256], "dtype": "float32"}],
+         "outputs": [{"shape": [8, 256], "dtype": "float32"}],
+         "check": {"input": "sin037", "tol": 0.0005,
+                   "outputs": [{"sum": -3.0, "l2": 4.0, "first": 0.1}]}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_two_functions() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.functions.len(), 2);
+        let mlp = m.get("mlp").unwrap();
+        assert_eq!(mlp.flops, 4_194_304);
+        assert_eq!(mlp.inputs[0].shape, vec![8, 256]);
+        assert_eq!(mlp.inputs[0].elements(), 2048);
+        assert_eq!(m.hlo_path(mlp), PathBuf::from("/tmp/mlp.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_function_is_none() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"functions": [{"name": "x"}]}"#, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn test_input_matches_python_formula() {
+        let v = test_input(4);
+        assert_eq!(v[0], 0.0);
+        assert!((v[1] as f64 - (0.37f64).sin() * 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scalar_output_elements_is_one() {
+        let t = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(t.elements(), 1);
+    }
+}

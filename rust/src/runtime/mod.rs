@@ -1,0 +1,31 @@
+//! PJRT runtime (S11): loads the AOT-compiled HLO artifacts and executes
+//! them on the request path.  `json`/`manifest` are the (serde-free)
+//! manifest layer; `pjrt` wraps the `xla` crate.
+
+pub mod json;
+pub mod manifest;
+pub mod pjrt;
+
+pub use json::Json;
+pub use manifest::{test_input, FunctionEntry, Manifest, TensorSpec};
+pub use pjrt::{CheckReport, LoadedFunction, Runtime};
+
+/// Default artifact directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Per-workload function execution medians (ms) measured on this testbed
+/// via `coldfaas measure-exec` (PJRT CPU, single thread).  The DES
+/// experiments use these when the artifacts aren't loaded; keep in sync
+/// with EXPERIMENTS.md §Runtime-calibration.
+pub fn static_exec_ms(name: &str) -> f64 {
+    match name {
+        "echo" => 0.023,
+        "thumbnail" => 0.038,
+        "checksum" => 0.951,
+        "mlp" => 2.246,
+        "transformer" => 11.7,
+        _ => crate::fnplat::DEFAULT_EXEC_MS,
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT execution of the AOT artifacts (S11).
+//!
+//! Loads `artifacts/<fn>.hlo.txt` (HLO *text* — see aot.py for why not
+//! serialized protos), compiles each once on the PJRT CPU client, and
+//! executes them from the rust request path.  This is the "user function
+//! body" of every live executor: python never runs here.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{test_input, FunctionEntry, Manifest};
+
+/// One compiled function.
+pub struct LoadedFunction {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: FunctionEntry,
+    /// One-time compile cost (the cold *deploy* cost, not per-request).
+    pub compile_ms: f64,
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per function.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedFunction>,
+}
+
+/// Result of verifying a function against its manifest check values.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub name: String,
+    pub got_sum: f64,
+    pub want_sum: f64,
+    pub got_l2: f64,
+    pub want_l2: f64,
+    pub pass: bool,
+}
+
+impl Runtime {
+    /// Load the manifest and compile every listed function.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir).context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut rt = Runtime { client, manifest: manifest.clone(), loaded: HashMap::new() };
+        for entry in &manifest.functions {
+            rt.compile_entry(entry)?;
+        }
+        Ok(rt)
+    }
+
+    /// Load the manifest but compile only `names` (faster cold start for
+    /// single-function examples).
+    pub fn load_only(dir: impl AsRef<std::path::Path>, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir).context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut rt = Runtime { client, manifest: manifest.clone(), loaded: HashMap::new() };
+        for name in names {
+            let entry = manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("function {name} not in manifest"))?
+                .clone();
+            rt.compile_entry(&entry)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile_entry(&mut self, entry: &FunctionEntry) -> Result<()> {
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.loaded.insert(
+            entry.name.clone(),
+            LoadedFunction { exe, entry: entry.clone(), compile_ms },
+        );
+        Ok(())
+    }
+
+    /// Compile `name` from the manifest if it is not already loaded
+    /// (used by the live deploy path).  Returns true if newly compiled.
+    pub fn ensure_loaded(&mut self, name: &str) -> Result<bool> {
+        if self.loaded.contains_key(name) {
+            return Ok(false);
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("function {name} not in manifest"))?
+            .clone();
+        self.compile_entry(&entry)?;
+        Ok(true)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.loaded.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedFunction> {
+        self.loaded.get(name)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&FunctionEntry> {
+        self.loaded.get(name).map(|l| &l.entry)
+    }
+
+    /// Execute `name` on a flat f32 payload (length must match the input
+    /// spec).  Returns the flattened f32 output.
+    pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let lf = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("function {name} not loaded"))?;
+        let spec = &lf.entry.inputs[0];
+        if input.len() != spec.elements() {
+            return Err(anyhow!(
+                "{name}: payload has {} elements, expects {}",
+                input.len(),
+                spec.elements()
+            ));
+        }
+        let mut lit = xla::Literal::vec1(input);
+        if spec.shape.len() > 1 {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            lit = lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?;
+        }
+        let result = lf
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True; all workloads emit 1 output.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// Execute and time one request; returns (output, wall ms).
+    pub fn execute_timed(&self, name: &str, input: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let out = self.execute(name, input)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1e3))
+    }
+
+    /// Median execution time over `iters` runs on the check input.
+    pub fn measure_exec_ms(&self, name: &str, iters: usize) -> Result<f64> {
+        let entry = self.entry(name).ok_or_else(|| anyhow!("{name} not loaded"))?;
+        let input = test_input(entry.inputs[0].elements());
+        let mut times: Vec<f64> = Vec::with_capacity(iters);
+        for _ in 0..iters.max(1) {
+            let (_, ms) = self.execute_timed(name, &input)?;
+            times.push(ms);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// Verify a function's numerics against the manifest check values
+    /// (computed by the jax oracle at AOT time) — the rust-side end of the
+    /// python-free correctness chain.
+    pub fn verify(&self, name: &str) -> Result<CheckReport> {
+        let entry = self.entry(name).ok_or_else(|| anyhow!("{name} not loaded"))?.clone();
+        let input = test_input(entry.inputs[0].elements());
+        let out = self.execute(name, &input)?;
+        let got_sum: f64 = out.iter().map(|&x| x as f64).sum();
+        let got_l2: f64 = out.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let want = &entry.checks[0];
+        // Tolerance scales with magnitude; manifest tol is relative-ish.
+        let tol = entry.check_tol;
+        let rel = |got: f64, want: f64| {
+            if want.abs() < 1.0 {
+                (got - want).abs()
+            } else {
+                (got / want - 1.0).abs()
+            }
+        };
+        let pass = rel(got_sum, want.sum) < tol.max(1e-3) * 10.0
+            && rel(got_l2, want.l2) < tol.max(1e-3) * 10.0;
+        Ok(CheckReport {
+            name: name.to_string(),
+            got_sum,
+            want_sum: want.sum,
+            got_l2,
+            want_l2: want.l2,
+            pass,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests run only when `make artifacts` has produced the AOT
+    //! outputs; the integration suite (rust/tests/) requires them.
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn echo_round_trips() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_only(&dir, &["echo"]).unwrap();
+        let input = test_input(256);
+        let out = rt.execute("echo", &input).unwrap();
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn wrong_payload_size_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_only(&dir, &["echo"]).unwrap();
+        assert!(rt.execute("echo", &[1.0; 7]).is_err());
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_only(&dir, &["echo"]).unwrap();
+        assert!(rt.execute("nope", &[0.0; 256]).is_err());
+    }
+
+    #[test]
+    fn all_functions_verify_against_oracle() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        for name in rt.names() {
+            let rep = rt.verify(name).unwrap();
+            assert!(
+                rep.pass,
+                "{name}: sum {} vs {}, l2 {} vs {}",
+                rep.got_sum, rep.want_sum, rep.got_l2, rep.want_l2
+            );
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Latency distributions for simulated phases.
+//!
+//! Startup-phase latencies are modeled as lognormals parameterized by their
+//! *median* (what the paper reports) plus a shape sigma; the heavy right
+//! tail of a lognormal matches the long-tailed startup samples behind the
+//! paper's p99 whiskers.  All samples are returned in nanoseconds.
+
+use super::rng::Rng;
+
+pub const MS: f64 = 1e6; // ns per millisecond
+pub const US: f64 = 1e3; // ns per microsecond
+
+/// A latency distribution; `sample` returns nanoseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Exactly `ns` nanoseconds.
+    Const(f64),
+    /// Lognormal with the given median (ns) and log-space sigma.
+    LogNormal { median_ns: f64, sigma: f64 },
+    /// Exponential with the given mean (ns).
+    Exp { mean_ns: f64 },
+    /// Uniform in [lo, hi) ns.
+    Uniform { lo_ns: f64, hi_ns: f64 },
+}
+
+impl Dist {
+    /// Lognormal given the median in milliseconds (the unit the paper uses).
+    pub const fn ms(median_ms: f64, sigma: f64) -> Dist {
+        Dist::LogNormal { median_ns: median_ms * MS, sigma }
+    }
+
+    pub const fn const_ms(ms: f64) -> Dist {
+        Dist::Const(ms * MS)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let ns = match *self {
+            Dist::Const(ns) => ns,
+            Dist::LogNormal { median_ns, sigma } => median_ns * (sigma * rng.normal()).exp(),
+            Dist::Exp { mean_ns } => rng.exponential(mean_ns),
+            Dist::Uniform { lo_ns, hi_ns } => lo_ns + rng.next_f64() * (hi_ns - lo_ns),
+        };
+        ns.max(0.0) as u64
+    }
+
+    /// The distribution median in nanoseconds (used by calibration checks).
+    pub fn median_ns(&self) -> f64 {
+        match *self {
+            Dist::Const(ns) => ns,
+            Dist::LogNormal { median_ns, .. } => median_ns,
+            Dist::Exp { mean_ns } => mean_ns * std::f64::consts::LN_2,
+            Dist::Uniform { lo_ns, hi_ns } => 0.5 * (lo_ns + hi_ns),
+        }
+    }
+
+    /// Scale the location parameter by `f` (used for what-if ablations).
+    pub fn scaled(&self, f: f64) -> Dist {
+        match *self {
+            Dist::Const(ns) => Dist::Const(ns * f),
+            Dist::LogNormal { median_ns, sigma } => {
+                Dist::LogNormal { median_ns: median_ns * f, sigma }
+            }
+            Dist::Exp { mean_ns } => Dist::Exp { mean_ns: mean_ns * f },
+            Dist::Uniform { lo_ns, hi_ns } => Dist::Uniform { lo_ns: lo_ns * f, hi_ns: hi_ns * f },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn median_of(d: Dist, seed: u64, n: usize) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<u64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        v.sort_unstable();
+        v[n / 2] as f64
+    }
+
+    #[test]
+    fn const_is_exact() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Dist::const_ms(5.0).sample(&mut rng), 5_000_000);
+    }
+
+    #[test]
+    fn lognormal_median_matches_parameter() {
+        let d = Dist::ms(150.0, 0.25);
+        let med = median_of(d, 2, 50_001);
+        assert!((med / (150.0 * MS) - 1.0).abs() < 0.02, "median {med}");
+    }
+
+    #[test]
+    fn lognormal_right_skewed() {
+        let d = Dist::ms(10.0, 0.4);
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!(mean > 10.0 * MS, "lognormal mean should exceed median");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let d = Dist::Exp { mean_ns: 1000.0 };
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 1000.0).abs() < 20.0, "mean {mean}");
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let d = Dist::Uniform { lo_ns: 100.0, hi_ns: 200.0 };
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((100..200).contains(&x));
+        }
+    }
+
+    #[test]
+    fn scaled_scales_median() {
+        let d = Dist::ms(100.0, 0.2).scaled(0.5);
+        assert!((d.median_ns() - 50.0 * MS).abs() < 1e-6);
+    }
+
+    #[test]
+    fn never_negative() {
+        let d = Dist::Uniform { lo_ns: -50.0, hi_ns: 1.0 };
+        let mut rng = Rng::new(6);
+        for _ in 0..1000 {
+            // saturates at zero rather than wrapping
+            assert!(d.sample(&mut rng) < 2);
+        }
+    }
+}

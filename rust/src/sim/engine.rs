@@ -1,0 +1,629 @@
+//! Discrete-event simulation engine.
+//!
+//! A *request* is a linear sequence of [`Step`]s (the phase pipeline of a
+//! container/VM startup, a network hop, a function execution...).  Timed
+//! steps contend for the host's resources — a core pool, serializing
+//! kernel-lock classes, and a FIFO disk — which is what makes overload
+//! behaviour (the paper's parallelism > cores degradation, Docker's
+//! kernel-lock blowup) *emergent* rather than fitted.
+//!
+//! Experiment-specific logic (warm pools, closed-loop load generation)
+//! lives behind the [`Domain`] trait: `Decision` steps let the domain
+//! splice steps into a running request, `Effect` steps let it mutate its
+//! own state at a point in virtual time, and `done` lets it record the
+//! latency and spawn follow-up requests.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::dist::Dist;
+use super::rng::Rng;
+
+pub type ReqId = u32;
+
+/// Serializing kernel/host lock classes (one global queue each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockClass {
+    /// rtnl / network-namespace creation (veth, bridge attach).
+    Netns = 0,
+    /// Mount table + union-filesystem superblock creation.
+    Mount = 1,
+    /// IPC/UTS/PID namespace bookkeeping.
+    Ipc = 2,
+    /// KVM VM creation (kvm_lock + memory-region setup).
+    Kvm = 3,
+    /// Docker engine internal serialization (container map, libnetwork).
+    DockerEngine = 4,
+    /// Metadata DB write path (Fn's sqlite global write lock).
+    Db = 5,
+}
+pub const N_LOCKS: usize = 6;
+
+/// What a step does while it holds time.
+#[derive(Clone, Copy, Debug)]
+pub enum StepKind {
+    /// Occupy one CPU core for the sampled duration.
+    Cpu,
+    /// Hold the given serializing lock for the sampled duration.
+    Lock(LockClass),
+    /// Pure latency (network RTT, timer); no resource held.
+    Delay,
+    /// Read this many bytes through the shared FIFO disk.
+    Disk(u64),
+    /// Occupy one slot of a bounded worker pool (see [`Engine::add_pool`])
+    /// for the sampled duration — e.g. the gateway's worker threads.
+    Pool(u8),
+    /// Zero-time synchronous callback into the domain.
+    Effect(u32),
+    /// Zero-time callback; the returned steps replace this one.
+    Decision(u32),
+}
+
+/// One stage of a request pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Step {
+    pub kind: StepKind,
+    pub dur: Dist,
+    /// Stable phase label, used by tracing / the decomposition experiment.
+    pub tag: &'static str,
+}
+
+impl Step {
+    pub const fn cpu(tag: &'static str, dur: Dist) -> Step {
+        Step { kind: StepKind::Cpu, dur, tag }
+    }
+    pub const fn lock(tag: &'static str, class: LockClass, dur: Dist) -> Step {
+        Step { kind: StepKind::Lock(class), dur, tag }
+    }
+    pub const fn delay(tag: &'static str, dur: Dist) -> Step {
+        Step { kind: StepKind::Delay, dur, tag }
+    }
+    pub const fn disk(tag: &'static str, bytes: u64) -> Step {
+        Step { kind: StepKind::Disk(bytes), dur: Dist::Const(0.0), tag }
+    }
+    pub const fn pool(tag: &'static str, pool: u8, dur: Dist) -> Step {
+        Step { kind: StepKind::Pool(pool), dur, tag }
+    }
+    pub const fn effect(tag: &'static str, id: u32) -> Step {
+        Step { kind: StepKind::Effect(id), dur: Dist::Const(0.0), tag }
+    }
+    pub const fn decision(tag: &'static str, id: u32) -> Step {
+        Step { kind: StepKind::Decision(id), dur: Dist::Const(0.0), tag }
+    }
+}
+
+/// A request to start later (returned by [`Domain::done`]).
+pub struct Spawn {
+    pub delay_ns: u64,
+    pub class: u32,
+    pub steps: Vec<Step>,
+}
+
+/// Experiment-specific logic driven by the engine.
+pub trait Domain {
+    /// Called for `Decision` steps; returned steps are spliced in place.
+    fn decide(&mut self, _req: ReqId, _class: u32, _tag: u32, _now: u64, _rng: &mut Rng) -> Vec<Step> {
+        Vec::new()
+    }
+    /// Called for `Effect` steps (zero virtual time).
+    fn effect(&mut self, _req: ReqId, _class: u32, _tag: u32, _now: u64) {}
+    /// Called when a request finishes; records latency, returns follow-ups.
+    fn done(&mut self, req: ReqId, class: u32, start_ns: u64, now: u64) -> Vec<Spawn>;
+}
+
+/// Host resource configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Host {
+    pub cores: u32,
+    pub disk_bw_bytes_per_s: f64,
+}
+
+impl Default for Host {
+    fn default() -> Self {
+        // The paper's testbed: dual-socket Xeon E5-2670 (24 threads used),
+        // Samsung PM1633a SAS SSD (~1.2 GB/s sequential read).
+        Host { cores: 24, disk_bw_bytes_per_s: 1.2e9 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Ev {
+    Start(ReqId),
+    Finish(ReqId),
+}
+
+struct HeapItem {
+    t: u64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, seq): earlier first; FIFO for ties.
+        other.t.cmp(&self.t).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct ReqState {
+    steps: Vec<Step>,
+    idx: usize,
+    start_ns: u64,
+    step_arrival: u64,
+    class: u32,
+    live: bool,
+}
+
+#[derive(Default)]
+struct LockState {
+    busy: bool,
+    queue: VecDeque<ReqId>,
+}
+
+struct PoolState {
+    free: u32,
+    queue: VecDeque<ReqId>,
+}
+
+/// A recorded (class, phase-tag, wall-duration-ns) sample; wall duration
+/// includes resource wait, matching what external measurement would see.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSample {
+    pub class: u32,
+    pub tag: &'static str,
+    pub dur_ns: u64,
+}
+
+pub struct Engine<D: Domain> {
+    pub domain: D,
+    pub rng: Rng,
+    pub host: Host,
+    now: u64,
+    seq: u64,
+    heap: BinaryHeap<HeapItem>,
+    reqs: Vec<ReqState>,
+    free_slots: Vec<ReqId>,
+    cores_free: u32,
+    core_queue: VecDeque<ReqId>,
+    locks: [LockState; N_LOCKS],
+    pools: Vec<PoolState>,
+    disk_next_free: u64,
+    events_processed: u64,
+    /// When true, every timed step records a [`PhaseSample`].
+    pub trace_phases: bool,
+    pub phase_trace: Vec<PhaseSample>,
+}
+
+impl<D: Domain> Engine<D> {
+    pub fn new(domain: D, host: Host, seed: u64) -> Self {
+        Engine {
+            domain,
+            rng: Rng::new(seed),
+            host,
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            reqs: Vec::new(),
+            free_slots: Vec::new(),
+            cores_free: host.cores,
+            core_queue: VecDeque::new(),
+            locks: Default::default(),
+            pools: Vec::new(),
+            disk_next_free: 0,
+            events_processed: 0,
+            trace_phases: false,
+            phase_trace: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Register a bounded worker pool; returns the id for [`Step::pool`].
+    pub fn add_pool(&mut self, slots: u32) -> u8 {
+        assert!(self.pools.len() < u8::MAX as usize);
+        self.pools.push(PoolState { free: slots, queue: VecDeque::new() });
+        (self.pools.len() - 1) as u8
+    }
+
+    fn push(&mut self, t: u64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(HeapItem { t, seq: self.seq, ev });
+    }
+
+    /// Seed a request at absolute virtual time `at_ns`.
+    pub fn spawn_at(&mut self, at_ns: u64, class: u32, steps: Vec<Step>) -> ReqId {
+        let state = ReqState {
+            steps,
+            idx: 0,
+            start_ns: at_ns,
+            step_arrival: at_ns,
+            class,
+            live: true,
+        };
+        let id = if let Some(id) = self.free_slots.pop() {
+            self.reqs[id as usize] = state;
+            id
+        } else {
+            self.reqs.push(state);
+            (self.reqs.len() - 1) as ReqId
+        };
+        self.push(at_ns, Ev::Start(id));
+        id
+    }
+
+    /// Run until the event queue drains. Panics if `max_events` is exceeded
+    /// (runaway-model backstop).
+    pub fn run(&mut self, max_events: u64) {
+        while let Some(item) = self.heap.pop() {
+            debug_assert!(item.t >= self.now, "time went backwards");
+            self.now = item.t;
+            self.events_processed += 1;
+            if self.events_processed > max_events {
+                panic!("simulation exceeded {max_events} events — runaway model?");
+            }
+            match item.ev {
+                Ev::Start(r) => {
+                    self.reqs[r as usize].start_ns = self.now;
+                    self.advance(r);
+                }
+                Ev::Finish(r) => self.finish_step(r),
+            }
+        }
+    }
+
+    /// Move a request forward through zero-time steps until it blocks on a
+    /// timed step, queues on a resource, or completes.
+    fn advance(&mut self, r: ReqId) {
+        loop {
+            let idx = self.reqs[r as usize].idx;
+            if idx >= self.reqs[r as usize].steps.len() {
+                self.complete(r);
+                return;
+            }
+            let step = self.reqs[r as usize].steps[idx];
+            match step.kind {
+                StepKind::Effect(tag) => {
+                    let class = self.reqs[r as usize].class;
+                    self.domain.effect(r, class, tag, self.now);
+                    self.reqs[r as usize].idx += 1;
+                }
+                StepKind::Decision(tag) => {
+                    let class = self.reqs[r as usize].class;
+                    let new_steps = self.domain.decide(r, class, tag, self.now, &mut self.rng);
+                    let req = &mut self.reqs[r as usize];
+                    req.steps.splice(idx..idx + 1, new_steps);
+                }
+                StepKind::Delay => {
+                    self.reqs[r as usize].step_arrival = self.now;
+                    let d = step.dur.sample(&mut self.rng);
+                    self.push(self.now + d, Ev::Finish(r));
+                    return;
+                }
+                StepKind::Cpu => {
+                    self.reqs[r as usize].step_arrival = self.now;
+                    if self.cores_free > 0 {
+                        self.cores_free -= 1;
+                        let d = step.dur.sample(&mut self.rng);
+                        self.push(self.now + d, Ev::Finish(r));
+                    } else {
+                        self.core_queue.push_back(r);
+                    }
+                    return;
+                }
+                StepKind::Lock(class) => {
+                    self.reqs[r as usize].step_arrival = self.now;
+                    let lock = &mut self.locks[class as usize];
+                    if !lock.busy {
+                        lock.busy = true;
+                        let d = step.dur.sample(&mut self.rng);
+                        self.push(self.now + d, Ev::Finish(r));
+                    } else {
+                        lock.queue.push_back(r);
+                    }
+                    return;
+                }
+                StepKind::Disk(bytes) => {
+                    self.reqs[r as usize].step_arrival = self.now;
+                    let service = (bytes as f64 / self.host.disk_bw_bytes_per_s * 1e9) as u64;
+                    self.disk_next_free = self.disk_next_free.max(self.now) + service;
+                    self.push(self.disk_next_free, Ev::Finish(r));
+                    return;
+                }
+                StepKind::Pool(p) => {
+                    self.reqs[r as usize].step_arrival = self.now;
+                    let pool = &mut self.pools[p as usize];
+                    if pool.free > 0 {
+                        pool.free -= 1;
+                        let d = step.dur.sample(&mut self.rng);
+                        self.push(self.now + d, Ev::Finish(r));
+                    } else {
+                        pool.queue.push_back(r);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// A timed step finished: release its resource, hand it to the next
+    /// queued request, record the trace, and move on.
+    fn finish_step(&mut self, r: ReqId) {
+        let idx = self.reqs[r as usize].idx;
+        let step = self.reqs[r as usize].steps[idx];
+        match step.kind {
+            StepKind::Cpu => {
+                if let Some(q) = self.core_queue.pop_front() {
+                    // Grant the freed core directly: sample the waiter's
+                    // duration now (acquisition time).
+                    let qidx = self.reqs[q as usize].idx;
+                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    self.push(self.now + d, Ev::Finish(q));
+                } else {
+                    self.cores_free += 1;
+                }
+            }
+            StepKind::Lock(class) => {
+                let next = self.locks[class as usize].queue.pop_front();
+                if let Some(q) = next {
+                    let qidx = self.reqs[q as usize].idx;
+                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    self.push(self.now + d, Ev::Finish(q));
+                } else {
+                    self.locks[class as usize].busy = false;
+                }
+            }
+            StepKind::Pool(p) => {
+                let next = self.pools[p as usize].queue.pop_front();
+                if let Some(q) = next {
+                    let qidx = self.reqs[q as usize].idx;
+                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    self.push(self.now + d, Ev::Finish(q));
+                } else {
+                    self.pools[p as usize].free += 1;
+                }
+            }
+            StepKind::Delay | StepKind::Disk(_) => {}
+            StepKind::Effect(_) | StepKind::Decision(_) => {
+                unreachable!("zero-time steps never schedule Finish")
+            }
+        }
+        if self.trace_phases {
+            let req = &self.reqs[r as usize];
+            self.phase_trace.push(PhaseSample {
+                class: req.class,
+                tag: step.tag,
+                dur_ns: self.now - req.step_arrival,
+            });
+        }
+        self.reqs[r as usize].idx += 1;
+        self.advance(r);
+    }
+
+    fn complete(&mut self, r: ReqId) {
+        let (class, start) = {
+            let req = &mut self.reqs[r as usize];
+            debug_assert!(req.live);
+            req.live = false;
+            (req.class, req.start_ns)
+        };
+        let spawns = self.domain.done(r, class, start, self.now);
+        self.free_slots.push(r);
+        for s in spawns {
+            self.spawn_at(self.now + s.delay_ns, s.class, s.steps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dist::MS;
+
+    /// Domain that records latencies and optionally chains new requests.
+    struct Collect {
+        latencies: Vec<(u32, u64)>,
+        remaining: u64,
+        template: Vec<Step>,
+    }
+
+    impl Domain for Collect {
+        fn done(&mut self, _req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+            self.latencies.push((class, now - start));
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                vec![Spawn { delay_ns: 0, class, steps: self.template.clone() }]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+
+    fn engine(remaining: u64, template: Vec<Step>) -> Engine<Collect> {
+        Engine::new(
+            Collect { latencies: Vec::new(), remaining, template },
+            Host { cores: 2, disk_bw_bytes_per_s: 1e9 },
+            42,
+        )
+    }
+
+    #[test]
+    fn single_delay_request() {
+        let mut e = engine(0, vec![]);
+        e.spawn_at(0, 0, vec![Step::delay("d", Dist::const_ms(5.0))]);
+        e.run(1000);
+        assert_eq!(e.domain.latencies, vec![(0, (5.0 * MS) as u64)]);
+    }
+
+    #[test]
+    fn steps_are_sequential() {
+        let mut e = engine(0, vec![]);
+        e.spawn_at(
+            0,
+            0,
+            vec![
+                Step::delay("a", Dist::const_ms(2.0)),
+                Step::cpu("b", Dist::const_ms(3.0)),
+            ],
+        );
+        e.run(1000);
+        assert_eq!(e.domain.latencies[0].1, (5.0 * MS) as u64);
+    }
+
+    #[test]
+    fn cpu_contention_queues_beyond_cores() {
+        // 4 requests, 2 cores, 10 ms each: completions at 10, 10, 20, 20.
+        let mut e = engine(0, vec![]);
+        for _ in 0..4 {
+            e.spawn_at(0, 0, vec![Step::cpu("c", Dist::const_ms(10.0))]);
+        }
+        e.run(1000);
+        let mut l: Vec<u64> = e.domain.latencies.iter().map(|&(_, d)| d).collect();
+        l.sort_unstable();
+        assert_eq!(l, vec![10_000_000, 10_000_000, 20_000_000, 20_000_000]);
+    }
+
+    #[test]
+    fn lock_serializes_fully() {
+        // 3 requests on one lock, 5 ms each: 5, 10, 15.
+        let mut e = engine(0, vec![]);
+        for _ in 0..3 {
+            e.spawn_at(
+                0,
+                0,
+                vec![Step::lock("l", LockClass::Netns, Dist::const_ms(5.0))],
+            );
+        }
+        e.run(1000);
+        let mut l: Vec<u64> = e.domain.latencies.iter().map(|&(_, d)| d).collect();
+        l.sort_unstable();
+        assert_eq!(l, vec![5_000_000, 10_000_000, 15_000_000]);
+    }
+
+    #[test]
+    fn disk_is_fifo_bandwidth() {
+        // 1e9 B/s; two 0.5 GB reads: finish at 0.5 s and 1.0 s.
+        let mut e = engine(0, vec![]);
+        e.spawn_at(0, 0, vec![Step::disk("r", 500_000_000)]);
+        e.spawn_at(0, 1, vec![Step::disk("r", 500_000_000)]);
+        e.run(1000);
+        let mut l: Vec<u64> = e.domain.latencies.iter().map(|&(_, d)| d).collect();
+        l.sort_unstable();
+        assert_eq!(l, vec![500 * MS as u64, 1000 * MS as u64]);
+    }
+
+    #[test]
+    fn closed_loop_chains_requests() {
+        let template = vec![Step::delay("d", Dist::const_ms(1.0))];
+        let mut e = engine(9, template.clone());
+        e.spawn_at(0, 0, template);
+        e.run(10_000);
+        assert_eq!(e.domain.latencies.len(), 10);
+        assert_eq!(e.now(), (10.0 * MS) as u64);
+    }
+
+    struct Splicer;
+    impl Domain for Splicer {
+        fn decide(&mut self, _r: ReqId, _c: u32, tag: u32, _now: u64, _rng: &mut Rng) -> Vec<Step> {
+            if tag == 7 {
+                vec![Step::delay("spliced", Dist::const_ms(4.0))]
+            } else {
+                vec![]
+            }
+        }
+        fn done(&mut self, _r: ReqId, _c: u32, start: u64, now: u64) -> Vec<Spawn> {
+            assert_eq!(now - start, 4_000_000);
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn decision_splices_steps() {
+        let mut e = Engine::new(Splicer, Host::default(), 1);
+        e.spawn_at(0, 0, vec![Step::decision("dec", 7)]);
+        e.run(100);
+        assert_eq!(e.events_processed(), 2); // Start + Finish of spliced step
+    }
+
+    #[test]
+    fn empty_decision_is_noop() {
+        let mut e = Engine::new(Splicer, Host::default(), 1);
+        e.spawn_at(
+            0,
+            0,
+            vec![
+                Step::decision("dec", 0),
+                Step::delay("d", Dist::const_ms(4.0)),
+            ],
+        );
+        e.run(100);
+    }
+
+    #[test]
+    fn phase_trace_records_wait_time() {
+        let mut e = engine(0, vec![]);
+        e.trace_phases = true;
+        // Second request waits 5 ms for the lock, so its wall phase is 10 ms.
+        for _ in 0..2 {
+            e.spawn_at(0, 0, vec![Step::lock("l", LockClass::Mount, Dist::const_ms(5.0))]);
+        }
+        e.run(100);
+        let durs: Vec<u64> = e.phase_trace.iter().map(|p| p.dur_ns).collect();
+        assert_eq!(durs, vec![5_000_000, 10_000_000]);
+    }
+
+    #[test]
+    fn pool_bounds_concurrency() {
+        // Pool of 1 slot, 3 requests of 2 ms: completions 2/4/6 ms.
+        let mut e = engine(0, vec![]);
+        let p = e.add_pool(1);
+        for _ in 0..3 {
+            e.spawn_at(0, 0, vec![Step::pool("w", p, Dist::const_ms(2.0))]);
+        }
+        e.run(100);
+        let mut l: Vec<u64> = e.domain.latencies.iter().map(|&(_, d)| d).collect();
+        l.sort_unstable();
+        assert_eq!(l, vec![2_000_000, 4_000_000, 6_000_000]);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut e = engine(
+                100,
+                vec![Step::cpu("c", Dist::ms(3.0, 0.3))],
+            );
+            for _ in 0..4 {
+                e.spawn_at(0, 0, vec![Step::cpu("c", Dist::ms(3.0, 0.3))]);
+            }
+            e.run(100_000);
+            e.domain.latencies.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn slot_reuse_bounds_memory() {
+        let template = vec![Step::delay("d", Dist::const_ms(1.0))];
+        let mut e = engine(1000, template.clone());
+        e.spawn_at(0, 0, template);
+        e.run(100_000);
+        assert!(e.reqs.len() <= 2, "finished slots must be reused");
+    }
+}

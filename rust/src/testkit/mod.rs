@@ -1,0 +1,196 @@
+//! Property-testing kit (S16) — the offline registry has no proptest, so
+//! this provides the 90% that matters: seeded generators over the sim's
+//! own deterministic [`Rng`], a `forall` runner that reports the failing
+//! seed + case, and greedy input shrinking for `Vec` cases.  Also hosts
+//! the micro-bench timer used by `benches/` (no criterion offline).
+
+use crate::sim::Rng;
+
+/// Run `prop` on `n` generated cases; on failure, re-derives the failing
+/// case's seed so the panic message is directly reproducible.
+pub fn forall<T: std::fmt::Debug, G, P>(seed: u64, n: usize, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    for i in 0..n {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            panic!("property failed at case {i} (seed {case_seed:#x}): {case:?}");
+        }
+    }
+}
+
+/// `forall` over `Vec<u64>` with greedy shrinking: on failure, tries to
+/// remove elements/halve values while the property still fails, then
+/// reports the minimized counterexample.
+pub fn forall_vec<P>(seed: u64, n: usize, max_len: usize, max_val: u64, prop: P)
+where
+    P: Fn(&[u64]) -> bool,
+{
+    for i in 0..n {
+        let case_seed = seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let len = rng.below(max_len as u64 + 1) as usize;
+        let case: Vec<u64> = (0..len).map(|_| rng.below(max_val.max(1))).collect();
+        if !prop(&case) {
+            let minimal = shrink_vec(case, &prop);
+            panic!(
+                "property failed at case {i} (seed {case_seed:#x}); minimized: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: drop elements, then halve values, while still failing.
+pub fn shrink_vec<P: Fn(&[u64]) -> bool>(mut case: Vec<u64>, prop: &P) -> Vec<u64> {
+    // Element removal.
+    let mut i = 0;
+    while i < case.len() {
+        let mut smaller = case.clone();
+        smaller.remove(i);
+        if !prop(&smaller) {
+            case = smaller;
+        } else {
+            i += 1;
+        }
+    }
+    // Value halving.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..case.len() {
+            if case[i] == 0 {
+                continue;
+            }
+            let mut smaller = case.clone();
+            smaller[i] /= 2;
+            if !prop(&smaller) {
+                case = smaller;
+                changed = true;
+            }
+        }
+    }
+    case
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::sim::Rng;
+
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    pub fn u64_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        (0..len).map(|_| f64_in(rng, lo, hi)).collect()
+    }
+}
+
+/// Minimal bench timer for `benches/` (criterion is not in the offline
+/// registry): warms up, runs timed iterations, reports ns/iter stats.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter_p50: f64,
+    pub ns_per_iter_mean: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        let (unit, div) = if self.ns_per_iter_p50 > 1e6 {
+            ("ms", 1e6)
+        } else if self.ns_per_iter_p50 > 1e3 {
+            ("us", 1e3)
+        } else {
+            ("ns", 1.0)
+        };
+        format!(
+            "{:<44} {:>12.2} {unit}/iter (mean {:>12.2} {unit}, {} iters)",
+            self.name,
+            self.ns_per_iter_p50 / div,
+            self.ns_per_iter_mean / div,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for roughly `target_ms` of wall time (after one warmup call).
+pub fn bench(name: &str, target_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut samples: Vec<f64> = Vec::new();
+    let start = std::time::Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed().as_millis() < target_ms as u128 || iters < 5 {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+        if iters > 1_000_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult { name: name.to_string(), iters, ns_per_iter_p50: p50, ns_per_iter_mean: mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true() {
+        forall(1, 100, |rng| rng.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 100, |rng| rng.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property: "no element >= 10".  Minimal failing vec: [10].
+        let prop = |v: &[u64]| v.iter().all(|&x| x < 10);
+        let minimal = shrink_vec(vec![3, 40, 7, 22], &prop);
+        assert_eq!(minimal.len(), 1);
+        assert!(minimal[0] >= 10 && minimal[0] <= 20, "{minimal:?}");
+    }
+
+    #[test]
+    fn shrink_keeps_failing_property() {
+        let prop = |v: &[u64]| v.iter().sum::<u64>() < 100;
+        let minimal = shrink_vec(vec![60, 70, 80], &prop);
+        assert!(!prop(&minimal));
+        assert!(minimal.iter().sum::<u64>() >= 100);
+    }
+
+    #[test]
+    fn bench_returns_sane_numbers() {
+        let r = bench("noop-closure", 5, || { std::hint::black_box(1 + 1); });
+        assert!(r.iters >= 5);
+        assert!(r.ns_per_iter_p50 < 1e7);
+        assert!(!r.row().is_empty());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut rng = crate::sim::Rng::new(3);
+        for _ in 0..1000 {
+            let x = gen::u64_in(&mut rng, 5, 10);
+            assert!((5..=10).contains(&x));
+            let f = gen::f64_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Load generation (S12): the paper's `hey`-style closed-loop benchmark in
+//! virtual time, plus the measurement-rig composition of §III-B — a
+//! CppCMS-like gateway (multi-process accept + 20 worker threads) in front
+//! of whichever startup technology is being measured.
+
+pub mod traces;
+
+use crate::metrics::Recorder;
+use crate::sim::{Dist, Domain, Engine, Host, ReqId, Spawn, Step};
+
+/// §III-B: CppCMS gateway worker threads.
+pub const GATEWAY_WORKERS: u32 = 20;
+/// §III-E: /noop gateway overhead ≈ 0.7 ms at low load.  The worker-thread
+/// hold time is the bottleneck constant: 20 workers × 0.55 ms caps the
+/// gateway at ~36 k rps, which is what makes /noop grow past 20 parallel.
+pub const GATEWAY_WORKER_MS: f64 = 0.55;
+pub const GATEWAY_CPU_MS: f64 = 0.15;
+/// Dedicated 40 Gbps lab link: sub-ms RTT between load generator and host.
+pub const LAB_RTT_MS: f64 = 0.15;
+
+/// Closed-loop domain: keeps `parallelism` requests in flight until
+/// `total` have completed, recording each latency under a label.
+struct HeyDomain {
+    template: Vec<Step>,
+    remaining: u64,
+    latencies_ns: Vec<u64>,
+}
+
+impl Domain for HeyDomain {
+    fn done(&mut self, _req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+        self.latencies_ns.push(now - start);
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            vec![Spawn { delay_ns: 0, class, steps: self.template.clone() }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Result of one closed-loop run.
+pub struct RunResult {
+    pub latencies_ns: Vec<u64>,
+    /// Virtual makespan of the whole run.
+    pub elapsed_ns: u64,
+    /// Completed requests per second of virtual time.
+    pub throughput_rps: f64,
+}
+
+/// Run `total` requests of `pipeline` with `parallelism` in flight on
+/// `host`.  Mirrors `hey -n total -c parallelism`.
+pub fn run_closed_loop(
+    pipeline: Vec<Step>,
+    parallelism: u32,
+    total: u64,
+    host: Host,
+    seed: u64,
+) -> RunResult {
+    assert!(parallelism as u64 <= total, "parallelism exceeds total requests");
+    let domain = HeyDomain {
+        template: pipeline.clone(),
+        remaining: total - parallelism as u64,
+        latencies_ns: Vec::with_capacity(total as usize),
+    };
+    let mut e = Engine::new(domain, host, seed);
+    for _ in 0..parallelism {
+        e.spawn_at(0, 0, pipeline.clone());
+    }
+    // Generous backstop: ~32 events per request covers the longest pipeline.
+    e.run(total.saturating_mul(64).max(1 << 20));
+    let elapsed_ns = e.now();
+    let n = e.domain.latencies_ns.len() as f64;
+    RunResult {
+        latencies_ns: std::mem::take(&mut e.domain.latencies_ns),
+        elapsed_ns,
+        throughput_rps: if elapsed_ns == 0 { 0.0 } else { n / (elapsed_ns as f64 / 1e9) },
+    }
+}
+
+/// The §III-B measurement pipeline: lab RTT + gateway (worker pool + CPU)
+/// wrapped around the startup phases under test.  `pool_id` must come from
+/// the same engine the pipeline will run on, so this variant takes the
+/// engine and seeds it directly.
+pub fn run_gateway_front(
+    startup: Vec<Step>,
+    parallelism: u32,
+    total: u64,
+    host: Host,
+    seed: u64,
+) -> RunResult {
+    assert!(parallelism as u64 <= total);
+    let domain = HeyDomain {
+        template: Vec::new(), // filled below once the pool id exists
+        remaining: total - parallelism as u64,
+        latencies_ns: Vec::with_capacity(total as usize),
+    };
+    let mut e = Engine::new(domain, host, seed);
+    let gw = e.add_pool(GATEWAY_WORKERS);
+    let mut pipeline = vec![
+        Step::delay("net-rtt", Dist::ms(LAB_RTT_MS, 0.10)),
+        Step::pool("gateway-worker", gw, Dist::ms(GATEWAY_WORKER_MS, 0.20)),
+        Step::cpu("gateway-dispatch", Dist::ms(GATEWAY_CPU_MS, 0.20)),
+    ];
+    pipeline.extend(startup);
+    e.domain.template = pipeline.clone();
+    for _ in 0..parallelism {
+        e.spawn_at(0, 0, pipeline.clone());
+    }
+    e.run(total.saturating_mul(64).max(1 << 20));
+    let elapsed_ns = e.now();
+    let n = e.domain.latencies_ns.len() as f64;
+    RunResult {
+        latencies_ns: std::mem::take(&mut e.domain.latencies_ns),
+        elapsed_ns,
+        throughput_rps: if elapsed_ns == 0 { 0.0 } else { n / (elapsed_ns as f64 / 1e9) },
+    }
+}
+
+/// Record a run's latencies into a recorder under `label`.
+pub fn record(rec: &mut Recorder, label: &str, result: &RunResult) {
+    for &ns in &result.latencies_ns {
+        rec.record_ns(label, ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Dist;
+
+    fn const_pipeline(ms: f64) -> Vec<Step> {
+        vec![Step::delay("d", Dist::const_ms(ms))]
+    }
+
+    #[test]
+    fn completes_exactly_total() {
+        let r = run_closed_loop(const_pipeline(1.0), 4, 100, Host::default(), 1);
+        assert_eq!(r.latencies_ns.len(), 100);
+    }
+
+    #[test]
+    fn throughput_scales_with_parallelism_for_delay() {
+        // Pure-delay pipeline: no contention, so X = parallelism / latency.
+        let r1 = run_closed_loop(const_pipeline(10.0), 1, 200, Host::default(), 1);
+        let r4 = run_closed_loop(const_pipeline(10.0), 4, 200, Host::default(), 1);
+        assert!((r1.throughput_rps - 100.0).abs() < 2.0, "{}", r1.throughput_rps);
+        assert!((r4.throughput_rps - 400.0).abs() < 10.0, "{}", r4.throughput_rps);
+    }
+
+    #[test]
+    fn parallelism_must_not_exceed_total() {
+        let result = std::panic::catch_unwind(|| {
+            run_closed_loop(const_pipeline(1.0), 10, 5, Host::default(), 1)
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_closed_loop(const_pipeline(2.0), 2, 50, Host::default(), 7);
+        let b = run_closed_loop(const_pipeline(2.0), 2, 50, Host::default(), 7);
+        assert_eq!(a.latencies_ns, b.latencies_ns);
+    }
+
+    #[test]
+    fn gateway_noop_overhead_near_paper() {
+        // §III-E: /noop ≈ 0.7 ms at low load, grows considerably > 20 parallel.
+        let low = run_gateway_front(Vec::new(), 5, 2000, Host::default(), 3);
+        let mut rec = Recorder::new();
+        record(&mut rec, "noop", &low);
+        let p50 = rec.quantile("noop", 0.5).unwrap();
+        assert!((0.5..1.2).contains(&p50), "noop p50 {p50} ms");
+
+        let over = run_gateway_front(Vec::new(), 40, 2000, Host::default(), 3);
+        let mut rec40 = Recorder::new();
+        record(&mut rec40, "noop", &over);
+        let p50_40 = rec40.quantile("noop", 0.5).unwrap();
+        assert!(p50_40 > 1.2 * p50, "overload should inflate noop: {p50_40} vs {p50}");
+    }
+}

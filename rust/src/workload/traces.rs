@@ -1,0 +1,123 @@
+//! Open-loop arrival traces for the resource-waste experiment (E9):
+//! Poisson and bursty (on/off) request processes, generated deterministically.
+
+use crate::sim::Rng;
+
+/// An arrival trace: absolute request times in nanoseconds, sorted.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub arrivals_ns: Vec<u64>,
+}
+
+impl Trace {
+    /// Poisson arrivals at `rate_rps` for `duration_s` seconds.
+    pub fn poisson(rate_rps: f64, duration_s: f64, seed: u64) -> Trace {
+        assert!(rate_rps > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let horizon = duration_s * 1e9;
+        let mean_gap = 1e9 / rate_rps;
+        let mut arrivals = Vec::new();
+        loop {
+            t += rng.exponential(mean_gap);
+            if t >= horizon {
+                break;
+            }
+            arrivals.push(t as u64);
+        }
+        Trace { arrivals_ns: arrivals }
+    }
+
+    /// Bursty on/off trace: Poisson at `burst_rps` during on-periods,
+    /// silent during off-periods (both exponentially distributed).
+    pub fn bursty(
+        burst_rps: f64,
+        on_mean_s: f64,
+        off_mean_s: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let horizon = duration_s * 1e9;
+        let mut arrivals = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            // On period.
+            let on_end = t + rng.exponential(on_mean_s * 1e9);
+            let mean_gap = 1e9 / burst_rps;
+            let mut a = t;
+            loop {
+                a += rng.exponential(mean_gap);
+                if a >= on_end || a >= horizon {
+                    break;
+                }
+                arrivals.push(a as u64);
+            }
+            t = on_end + rng.exponential(off_mean_s * 1e9);
+            if t >= horizon {
+                break;
+            }
+        }
+        arrivals.sort_unstable();
+        Trace { arrivals_ns: arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_ns.is_empty()
+    }
+
+    /// Mean arrival rate over the trace span (requests/second).
+    pub fn mean_rate_rps(&self) -> f64 {
+        if self.arrivals_ns.len() < 2 {
+            return 0.0;
+        }
+        let span = (*self.arrivals_ns.last().unwrap() - self.arrivals_ns[0]) as f64 / 1e9;
+        if span == 0.0 { 0.0 } else { (self.arrivals_ns.len() - 1) as f64 / span }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_converges() {
+        let t = Trace::poisson(100.0, 100.0, 1);
+        let rate = t.mean_rate_rps();
+        assert!((rate / 100.0 - 1.0).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn poisson_sorted_and_bounded() {
+        let t = Trace::poisson(50.0, 10.0, 2);
+        assert!(t.arrivals_ns.windows(2).all(|w| w[0] <= w[1]));
+        assert!(*t.arrivals_ns.last().unwrap() < 10_000_000_000);
+    }
+
+    #[test]
+    fn bursty_has_gaps() {
+        let t = Trace::bursty(200.0, 1.0, 5.0, 120.0, 3);
+        assert!(!t.is_empty());
+        // There must exist inter-arrival gaps far above the in-burst mean
+        // (5 ms): that's what makes the warm-pool idle-timeout tradeoff real.
+        let max_gap = t
+            .arrivals_ns
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .max()
+            .unwrap();
+        assert!(max_gap > 1_000_000_000, "max gap {max_gap} ns");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            Trace::poisson(10.0, 5.0, 9).arrivals_ns,
+            Trace::poisson(10.0, 5.0, 9).arrivals_ns
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Process-level CLI tests: spawn the real `coldfaas` binary.
+
+use std::process::Command;
+
+fn coldfaas() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_coldfaas"))
+}
+
+fn run(args: &[&str]) -> (i32, String, String) {
+    let out = coldfaas().args(args).output().expect("spawn coldfaas");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (code, stdout, _) = run(&["help"]);
+    assert_eq!(code, 0);
+    for sub in ["experiment", "serve", "invoke", "verify", "measure-exec", "list"] {
+        assert!(stdout.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let (code, _, stderr) = run(&["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn experiment_quick_passes_and_prints_checks() {
+    let (code, stdout, _) = run(&["experiment", "fig3", "--quick"]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("ALL CHECKS PASS"));
+    assert!(stdout.contains("includeos-hvt"));
+}
+
+#[test]
+fn experiment_unknown_name_fails() {
+    let (code, _, stderr) = run(&["experiment", "fig99"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown experiment"));
+}
+
+#[test]
+fn experiment_requires_name() {
+    let (code, _, stderr) = run(&["experiment"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("usage"));
+}
+
+#[test]
+fn list_shows_manifest_functions() {
+    let (code, stdout, stderr) = run(&["list"]);
+    assert_eq!(code, 0, "{stderr}");
+    for f in ["echo", "checksum", "thumbnail", "mlp", "transformer"] {
+        assert!(stdout.contains(f), "list missing {f}: {stdout}");
+    }
+}
+
+#[test]
+fn verify_all_artifacts_pass() {
+    let (code, stdout, stderr) = run(&["verify"]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.matches("PASS").count() >= 5);
+    assert!(!stdout.contains("FAIL"));
+}
+
+#[test]
+fn invoke_echo_end_to_end() {
+    let (code, stdout, stderr) =
+        run(&["invoke", "echo", "--time-scale", "0", "--payload", ""]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("cold=true"));
+    assert!(stdout.contains("output: sum="));
+}
+
+#[test]
+fn invoke_unknown_function_fails() {
+    let (code, _, stderr) = run(&["invoke", "nope", "--time-scale", "0"]);
+    assert_eq!(code, 1, "{stderr}");
+}
+
+#[test]
+fn experiment_seed_changes_output() {
+    let (_, a, _) = run(&["experiment", "fig3", "--quick", "--seed", "1"]);
+    let (_, b, _) = run(&["experiment", "fig3", "--quick", "--seed", "2"]);
+    let (_, a2, _) = run(&["experiment", "fig3", "--quick", "--seed", "1"]);
+    let strip = |s: &str| {
+        s.lines()
+            .filter(|l| !l.contains(" in ") /* timing line */)
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(strip(&a), strip(&a2), "same seed must reproduce");
+    assert_ne!(strip(&a), strip(&b), "different seed must differ");
+}

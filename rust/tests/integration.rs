@@ -1,0 +1,173 @@
+//! Cross-module integration tests: every experiment regenerates with its
+//! paper checks green at reduced load, results are deterministic per seed,
+//! and the cross-figure orderings the paper's argument depends on hold.
+
+use coldfaas::experiments::{self, ExpConfig};
+use coldfaas::fnplat::{run_scenario, DriverKind, Scenario};
+use coldfaas::metrics::Recorder;
+use coldfaas::sim::Host;
+use coldfaas::virt::Tech;
+use coldfaas::workload::{record, run_gateway_front};
+
+fn quick() -> ExpConfig {
+    ExpConfig::quick()
+}
+
+#[test]
+fn all_experiments_pass_their_paper_checks() {
+    let cfg = quick();
+    for name in experiments::ALL_EXPERIMENTS {
+        let report = experiments::by_name(name, &cfg).expect("known experiment");
+        assert!(
+            report.all_pass(),
+            "experiment {name} has failing checks:\n{}",
+            report.failures().join("\n")
+        );
+    }
+}
+
+#[test]
+fn unknown_experiment_is_none() {
+    assert!(experiments::by_name("fig9", &quick()).is_none());
+}
+
+#[test]
+fn experiments_deterministic_per_seed() {
+    let cfg = quick();
+    let a = experiments::fig1(&cfg).render();
+    let b = experiments::fig1(&cfg).render();
+    assert_eq!(a, b, "same seed must give byte-identical reports");
+    let cfg2 = ExpConfig { seed: cfg.seed + 1, ..quick() };
+    let c = experiments::fig1(&cfg2).render();
+    assert_ne!(a, c, "different seed must actually change samples");
+}
+
+/// The paper's §III conclusion as one cross-technology ordering, measured
+/// through the full gateway + DES stack (not just nominal sums).
+#[test]
+fn measured_startup_ordering_across_figures() {
+    let mut rec = Recorder::new();
+    for tech in [
+        Tech::Process,
+        Tech::Solo5Spt,
+        Tech::IncludeOsHvt,
+        Tech::Gvisor,
+        Tech::Runc,
+        Tech::Firecracker,
+        Tech::DockerRunc,
+        Tech::Kata,
+    ] {
+        let r = run_gateway_front(tech.pipeline(), 5, 2000, Host::default(), 99);
+        record(&mut rec, tech.name(), &r);
+    }
+    let p50 = |n: &str| rec.quantile(n, 0.5).unwrap();
+    // unikernel land < container land < VM land, docker over everything OCI.
+    assert!(p50("process") < p50("includeos-hvt"));
+    assert!(p50("solo5-spt") < p50("includeos-hvt"));
+    assert!(p50("includeos-hvt") < p50("gvisor") / 5.0);
+    assert!(p50("gvisor") < p50("runc"));
+    assert!(p50("runc") < p50("docker-runc"));
+    assert!(p50("firecracker") < p50("kata") / 3.0);
+    assert!(p50("docker-runc") < p50("kata") * 2.0);
+}
+
+/// Table I's rows, cross-checked against Fig 4's local numbers: cloud
+/// deployment must cost more than the local lab for the same driver.
+#[test]
+fn cloud_costs_more_than_local() {
+    let local = run_scenario(
+        &Scenario::local(DriverKind::IncludeOsCold, 4, 1200, false),
+        Host::default(),
+    );
+    let cloud = run_scenario(
+        &Scenario::cloud(DriverKind::IncludeOsCold, 1200, false, 0),
+        Host::default(),
+    );
+    assert!(
+        cloud.cold_median_ms() > local.cold_median_ms() + 5.0,
+        "cloud {} vs local {}",
+        cloud.cold_median_ms(),
+        local.cold_median_ms()
+    );
+}
+
+/// The headline sentence of the abstract, end to end: the cold-only
+/// prototype's latency (incl. connection setup) is in the same band as
+/// AWS Lambda's *warm* path.
+#[test]
+fn abstract_headline_cold_matches_lambda_warm() {
+    let rows = experiments::cloud::table1_rows(&quick());
+    let includeos_total = rows[0].cold_ms + rows[0].conn_ms;
+    let lambda_warm_total = rows[2].warm_ms.unwrap() + rows[2].conn_ms;
+    assert!(
+        includeos_total < 1.1 * lambda_warm_total,
+        "cold unikernel {includeos_total} ms should be <= warm lambda {lambda_warm_total} ms"
+    );
+}
+
+/// Fn-Docker's cold start must sit *below* standalone Docker's (the agent
+/// skips the CLI) but far above IncludeOS — the three-way wedge in §IV.
+#[test]
+fn fn_cold_start_wedge() {
+    let fn_docker = DriverKind::DockerWarm.nominal_cold_ms();
+    let standalone = Tech::DockerRunc.nominal_startup_ms();
+    let includeos = DriverKind::IncludeOsCold.nominal_cold_ms();
+    assert!(fn_docker < standalone);
+    assert!(includeos * 10.0 < fn_docker);
+}
+
+#[test]
+fn waste_experiment_cold_only_is_free_and_flat() {
+    for bursty in [false, true] {
+        let pts = experiments::waste::waste_points(&quick(), bursty);
+        let cold = pts.last().unwrap();
+        assert_eq!(cold.idle_gb_seconds, 0.0);
+        assert_eq!(cold.monitor_events, 0);
+        assert_eq!(cold.cold_fraction, 1.0);
+        assert!(cold.p99_ms / cold.p50_ms < 2.0, "cold-only tail must stay flat");
+    }
+}
+
+#[test]
+fn complexity_overhead_amortizes() {
+    let rows = experiments::complexity::complexity_rows(&quick(), false);
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(first.overhead_share > 0.9, "echo is all overhead: {}", first.overhead_share);
+    assert!(
+        last.overhead_share < 0.6,
+        "transformer amortizes the platform: {}",
+        last.overhead_share
+    );
+}
+
+/// Artifacts + manifest + PJRT round trip — requires `make artifacts`.
+#[test]
+fn artifacts_manifest_matches_python_emitter() {
+    let dir = coldfaas::runtime::default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    let m = coldfaas::runtime::Manifest::load(&dir).unwrap();
+    let names: Vec<&str> = m.functions.iter().map(|f| f.name.as_str()).collect();
+    for expected in ["echo", "checksum", "thumbnail", "mlp", "transformer"] {
+        assert!(names.contains(&expected), "manifest missing {expected}");
+    }
+    for f in &m.functions {
+        assert!(m.hlo_path(f).exists(), "{} artifact file missing", f.name);
+        assert_eq!(f.inputs.len(), 1);
+        assert_eq!(f.outputs.len(), 1);
+        assert!(f.checks[0].sum.is_finite());
+    }
+}
+
+#[test]
+fn pjrt_runtime_verifies_all_functions() {
+    let dir = coldfaas::runtime::default_artifacts_dir();
+    let rt = coldfaas::runtime::Runtime::load(&dir).expect("run `make artifacts` first");
+    for name in rt.names() {
+        let rep = rt.verify(name).unwrap();
+        assert!(rep.pass, "{name} numerics drifted from the jax oracle: {rep:?}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Live-stack integration: the real HTTP gateway + coordinator + PJRT
+//! engine threads under concurrent load.  Requires `make artifacts`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use coldfaas::coordinator::{Config, Coordinator, SchedMode};
+use coldfaas::gateway::http::http_request;
+use coldfaas::runtime::Json;
+
+fn cfg(mode: SchedMode, functions: &[&str]) -> Config {
+    Config {
+        mode,
+        time_scale: 0.0, // keep tests fast; model values still reported
+        engine_threads: 1,
+        gateway_workers: 8,
+        functions: functions.iter().map(|s| s.to_string()).collect(),
+        ..Config::default()
+    }
+}
+
+#[test]
+fn cold_only_http_under_concurrent_load() {
+    let coord = Coordinator::start(cfg(SchedMode::ColdOnly, &["echo"])).expect("make artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+    let addr = srv.addr();
+    let errors = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let errors = errors.clone();
+            std::thread::spawn(move || {
+                for _ in 0..25 {
+                    match http_request(addr, "POST", "/invoke/echo", b"") {
+                        Ok((200, body)) => {
+                            let text = String::from_utf8(body).unwrap();
+                            if !text.contains("\"cold\":true") {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(errors.load(Ordering::Relaxed), 0);
+    assert_eq!(coord.stats.requests.load(Ordering::Relaxed), 200);
+    assert_eq!(coord.stats.cold_starts.load(Ordering::Relaxed), 200);
+    assert_eq!(coord.stats.warm_hits.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn warm_pool_mode_reuses_executors_over_http() {
+    let coord = Coordinator::start(cfg(SchedMode::WarmPool, &["echo"])).expect("make artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+    // Sequential requests: first cold, rest warm.
+    for i in 0..10 {
+        let (status, body) = http_request(srv.addr(), "POST", "/invoke/echo", b"").unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        if i == 0 {
+            assert!(text.contains("\"cold\":true"), "{text}");
+        } else {
+            assert!(text.contains("\"cold\":false"), "{text}");
+        }
+    }
+    let (waste, _) = coord.waste_snapshot();
+    assert!(waste > 0.0, "warm pool must accumulate idle waste");
+    srv.shutdown();
+}
+
+#[test]
+fn stats_endpoint_is_valid_json_with_counts() {
+    let coord = Coordinator::start(cfg(SchedMode::ColdOnly, &["echo"])).expect("make artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+    for _ in 0..5 {
+        let (s, _) = http_request(srv.addr(), "POST", "/invoke/echo", b"").unwrap();
+        assert_eq!(s, 200);
+    }
+    let (s, body) = http_request(srv.addr(), "GET", "/stats", b"").unwrap();
+    assert_eq!(s, 200);
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(json.get("requests").and_then(Json::as_u64), Some(5));
+    assert_eq!(json.get("cold_starts").and_then(Json::as_u64), Some(5));
+    assert!(json.get("total_ms").and_then(|t| t.get("p50")).is_some());
+    srv.shutdown();
+}
+
+#[test]
+fn functions_endpoint_lists_registry() {
+    let coord =
+        Coordinator::start(cfg(SchedMode::ColdOnly, &["echo", "checksum"])).expect("artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+    let (s, body) = http_request(srv.addr(), "GET", "/functions", b"").unwrap();
+    assert_eq!(s, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("\"echo\"") && text.contains("\"checksum\""));
+    srv.shutdown();
+}
+
+#[test]
+fn invalid_requests_rejected_cleanly() {
+    let coord = Coordinator::start(cfg(SchedMode::ColdOnly, &["echo"])).expect("make artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+    // Unknown function -> 404.
+    let (s, _) = http_request(srv.addr(), "POST", "/invoke/nope", b"").unwrap();
+    assert_eq!(s, 404);
+    // Wrong payload arity -> 400.
+    let (s, body) = http_request(srv.addr(), "POST", "/invoke/echo", b"1,2,3").unwrap();
+    assert_eq!(s, 400, "{}", String::from_utf8_lossy(&body));
+    // Garbage payload -> 400.
+    let (s, _) = http_request(srv.addr(), "POST", "/invoke/echo", &[0xff, 0x00, 0x80]).unwrap();
+    assert_eq!(s, 400);
+    // Server still healthy afterwards.
+    let (s, _) = http_request(srv.addr(), "GET", "/healthz", b"").unwrap();
+    assert_eq!(s, 200);
+    srv.shutdown();
+}
+
+#[test]
+fn payload_values_flow_through_pjrt() {
+    let coord = Coordinator::start(cfg(SchedMode::ColdOnly, &["echo"])).expect("make artifacts");
+    // 256 explicit values; echo must return them (summary head).
+    let payload: String = (0..256).map(|i| format!("{}.5", i % 3)).collect::<Vec<_>>().join(",");
+    let o = coord.invoke("echo", payload.as_bytes()).unwrap();
+    assert_eq!(o.output_head[0], 0.5);
+    assert_eq!(o.output_head[1], 1.5);
+    assert_eq!(o.output_head[2], 2.5);
+    let want_sum: f64 = (0..256).map(|i| (i % 3) as f64 + 0.5).sum();
+    assert!((o.output_sum - want_sum).abs() < 1e-3);
+}
+
+#[test]
+fn multi_engine_pool_serves_in_parallel() {
+    let mut c = cfg(SchedMode::ColdOnly, &["checksum"]);
+    c.engine_threads = 2;
+    let coord = Coordinator::start(c).expect("make artifacts");
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                for _ in 0..10 {
+                    coord.invoke("checksum", b"").unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(coord.stats.requests.load(Ordering::Relaxed), 40);
+}
+
+#[test]
+fn engine_pool_shutdown_fails_cleanly() {
+    use coldfaas::coordinator::EnginePool;
+    let dir = coldfaas::runtime::default_artifacts_dir();
+    let pool = EnginePool::start(1, dir, &["echo".to_string()]).expect("make artifacts");
+    let input = coldfaas::runtime::test_input(256);
+    assert!(pool.execute("echo", input.clone()).is_ok());
+    pool.shutdown();
+    // A fresh pool still works (shutdown is per-instance, not global).
+    let pool2 =
+        EnginePool::start(1, coldfaas::runtime::default_artifacts_dir(), &["echo".to_string()])
+            .unwrap();
+    assert!(pool2.execute("echo", input).is_ok());
+}
+
+#[test]
+fn engine_pool_rejects_missing_artifact_dir() {
+    use coldfaas::coordinator::EnginePool;
+    let err = EnginePool::start(1, "/nonexistent/path".into(), &["echo".to_string()]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn deploy_route_registers_new_function() {
+    // Start with only echo; transformer exists in the manifest but is not
+    // deployed (and not compiled).
+    let coord = Coordinator::start(cfg(SchedMode::ColdOnly, &["echo"])).expect("make artifacts");
+    let srv = coord.serve("127.0.0.1:0").unwrap();
+
+    // Not yet routable.
+    let (s, _) = http_request(srv.addr(), "POST", "/invoke/checksum", b"").unwrap();
+    assert_eq!(s, 404);
+
+    // Deploy it (build time is scaled by time_scale = 0 in tests).
+    let (s, body) = http_request(srv.addr(), "POST", "/deploy/checksum", b"").unwrap();
+    assert_eq!(s, 200, "{}", String::from_utf8_lossy(&body));
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(json.get("deployed").and_then(Json::as_str), Some("checksum"));
+    assert!(json.get("build_s").and_then(Json::as_f64).unwrap() >= 3.0);
+
+    // Now invocable, numerics verified downstream by the engine.
+    let (s, body) = http_request(srv.addr(), "POST", "/invoke/checksum", b"").unwrap();
+    assert_eq!(s, 200, "{}", String::from_utf8_lossy(&body));
+
+    // Double deploy rejected; unknown function 404.
+    let (s, _) = http_request(srv.addr(), "POST", "/deploy/checksum", b"").unwrap();
+    assert_eq!(s, 400);
+    let (s, _) = http_request(srv.addr(), "POST", "/deploy/not_a_fn", b"").unwrap();
+    assert_eq!(s, 404);
+    srv.shutdown();
+}
+
+#[test]
+fn lazy_compile_on_second_engine() {
+    // Two engines, function deployed after start: both engines must be
+    // able to serve it (the second compiles lazily on first use).
+    let mut c = cfg(SchedMode::ColdOnly, &["echo"]);
+    c.engine_threads = 2;
+    let coord = Coordinator::start(c).expect("make artifacts");
+    coord.deploy("thumbnail").unwrap();
+    for _ in 0..8 {
+        let o = coord.invoke("thumbnail", b"").unwrap();
+        assert!(o.output_sum.is_finite());
+    }
+}
+
+#[test]
+fn realtime_startup_model_actually_delays() {
+    // time_scale = 1.0 on the IncludeOS model: ~11 ms per cold start.
+    let mut c = cfg(SchedMode::ColdOnly, &["echo"]);
+    c.time_scale = 1.0;
+    let coord = Coordinator::start(c).expect("make artifacts");
+    let t0 = std::time::Instant::now();
+    let o = coord.invoke("echo", b"").unwrap();
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(o.startup_model_ms > 5.0, "modeled startup {}", o.startup_model_ms);
+    assert!(wall >= o.startup_model_ms * 0.8, "wall {wall} vs model {}", o.startup_model_ms);
+}

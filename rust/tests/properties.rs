@@ -1,0 +1,281 @@
+//! Property-based tests (testkit) on the coordinator/simulator invariants:
+//! work conservation, clock monotonicity, resource serialization bounds,
+//! warm-pool accounting identities, quantile monotonicity, and parser
+//! robustness on adversarial inputs.
+
+use coldfaas::fnplat::pool::{Dispatch, WarmPool};
+use coldfaas::metrics::Recorder;
+use coldfaas::runtime::Json;
+use coldfaas::sim::{Dist, Domain, Engine, Host, LockClass, ReqId, Rng, Spawn, Step};
+use coldfaas::testkit::{forall, forall_vec, gen};
+
+struct Collect {
+    done: u64,
+    last_now: u64,
+}
+impl Domain for Collect {
+    fn done(&mut self, _r: ReqId, _c: u32, _s: u64, now: u64) -> Vec<Spawn> {
+        assert!(now >= self.last_now, "completion times must be monotone");
+        self.last_now = now;
+        self.done += 1;
+        Vec::new()
+    }
+}
+
+/// Work conservation: every spawned request completes exactly once, for
+/// arbitrary mixes of step kinds and host sizes.
+#[test]
+fn prop_engine_work_conservation() {
+    forall(
+        0xA11CE,
+        60,
+        |rng| {
+            let cores = gen::u64_in(rng, 1, 8) as u32;
+            let n = gen::u64_in(rng, 1, 80);
+            let kinds = gen::u64_in(rng, 0, 3);
+            (cores, n, kinds, rng.next_u64())
+        },
+        |&(cores, n, kinds, seed)| {
+            let mut e = Engine::new(
+                Collect { done: 0, last_now: 0 },
+                Host { cores, disk_bw_bytes_per_s: 1e9 },
+                seed,
+            );
+            for i in 0..n {
+                let step = match (kinds + i) % 4 {
+                    0 => Step::cpu("c", Dist::ms(1.0, 0.3)),
+                    1 => Step::lock("l", LockClass::Netns, Dist::ms(0.5, 0.3)),
+                    2 => Step::delay("d", Dist::ms(2.0, 0.3)),
+                    _ => Step::disk("k", 100_000),
+                };
+                e.spawn_at(i * 1000, 0, vec![step, Step::delay("t", Dist::ms(0.1, 0.1))]);
+            }
+            e.run(n * 64 + 1024);
+            e.domain.done == n
+        },
+    );
+}
+
+/// A serializing lock's makespan is at least the sum of its hold times
+/// and at most sum + max-gap slack; cores never run more jobs than exist.
+#[test]
+fn prop_lock_serialization_lower_bound() {
+    forall(
+        0xB0B,
+        40,
+        |rng| (gen::u64_in(rng, 1, 30), rng.next_u64()),
+        |&(n, seed)| {
+            let hold_ms = 2.0;
+            let mut e = Engine::new(Collect { done: 0, last_now: 0 }, Host::default(), seed);
+            for _ in 0..n {
+                e.spawn_at(0, 0, vec![Step::lock("l", LockClass::Mount, Dist::const_ms(hold_ms))]);
+            }
+            e.run(n * 16);
+            let makespan_ms = e.now() as f64 / 1e6;
+            (makespan_ms - n as f64 * hold_ms).abs() < 1e-6
+        },
+    );
+}
+
+/// CPU pool: with c cores and n identical jobs, makespan = ceil(n/c)*d.
+#[test]
+fn prop_cpu_pool_makespan_exact() {
+    forall(
+        0xC0DE,
+        50,
+        |rng| (gen::u64_in(rng, 1, 6) as u32, gen::u64_in(rng, 1, 40), rng.next_u64()),
+        |&(cores, n, seed)| {
+            let mut e = Engine::new(
+                Collect { done: 0, last_now: 0 },
+                Host { cores, disk_bw_bytes_per_s: 1e9 },
+                seed,
+            );
+            for _ in 0..n {
+                e.spawn_at(0, 0, vec![Step::cpu("c", Dist::const_ms(3.0))]);
+            }
+            e.run(n * 16);
+            let want = n.div_ceil(cores as u64) as f64 * 3.0;
+            (e.now() as f64 / 1e6 - want).abs() < 1e-6
+        },
+    );
+}
+
+/// Warm-pool identity: dispatches = warm_hits + cold_starts, and the pool
+/// never reports more idle slots than releases minus claims.
+#[test]
+fn prop_pool_accounting_identity() {
+    forall_vec(0xD00D, 80, 60, 3, |ops| {
+        // ops: 0/1 => dispatch, 2 => release, 3 => time jump
+        let mut pool = WarmPool::new(5_000_000_000, 1 << 20);
+        let mut now = 0u64;
+        let mut dispatches = 0u64;
+        let mut outstanding = 0i64; // claimed-or-cold executors not yet released
+        for &op in ops {
+            match op {
+                0 | 1 => {
+                    let d = pool.dispatch("f", now);
+                    dispatches += 1;
+                    if d == Dispatch::Warm || d == Dispatch::Cold {
+                        outstanding += 1;
+                    }
+                }
+                2 => {
+                    if outstanding > 0 {
+                        pool.release("f", now);
+                        outstanding -= 1;
+                    }
+                }
+                _ => now += 1_000_000_000,
+            }
+        }
+        pool.warm_hits + pool.cold_starts == dispatches
+    });
+}
+
+/// Waste monotonicity: a strictly longer idle timeout never yields *less*
+/// idle memory waste on the same dispatch/release schedule.
+#[test]
+fn prop_pool_waste_monotone_in_timeout() {
+    forall_vec(0xE66, 60, 40, 2, |ops| {
+        let run = |timeout_s: u64| -> u128 {
+            let mut pool = WarmPool::new(timeout_s * 1_000_000_000, 1 << 20);
+            let mut now = 0u64;
+            let mut outstanding = 0i64;
+            for &op in ops {
+                match op {
+                    0 => {
+                        pool.dispatch("f", now);
+                        outstanding += 1;
+                    }
+                    1 => {
+                        if outstanding > 0 {
+                            pool.release("f", now);
+                            outstanding -= 1;
+                        }
+                    }
+                    _ => now += 2_000_000_000,
+                }
+            }
+            pool.finalize(now);
+            pool.idle_mem_byte_ns
+        };
+        run(1) <= run(10) && run(10) <= run(1000)
+    });
+}
+
+/// Quantiles are monotone in q and bounded by min/max for arbitrary data.
+#[test]
+fn prop_recorder_quantiles_monotone() {
+    forall(
+        0xF00,
+        80,
+        |rng| gen::vec_f64(rng, 200, 0.0, 1e6),
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let mut rec = Recorder::new();
+            for &x in v {
+                rec.record_ms("s", x);
+            }
+            let qs: Vec<f64> =
+                [0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0].iter().map(|&q| rec.quantile("s", q).unwrap()).collect();
+            let sorted_ok = qs.windows(2).all(|w| w[0] <= w[1]);
+            let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            sorted_ok && qs[0] >= min - 1e-9 && *qs.last().unwrap() <= max + 1e-9
+        },
+    );
+}
+
+/// Histogram quantiles stay within one bucket (<6%) of exact quantiles.
+#[test]
+fn prop_histogram_quantile_error_bounded() {
+    forall(
+        0xAB,
+        40,
+        |rng| {
+            (0..500)
+                .map(|_| gen::u64_in(rng, 1_000, 5_000_000_000))
+                .collect::<Vec<u64>>()
+        },
+        |v| {
+            let mut h = coldfaas::metrics::Histogram::new();
+            let mut exact: Vec<u64> = v.clone();
+            for &ns in v {
+                h.record_ns(ns);
+            }
+            exact.sort_unstable();
+            [0.5, 0.9, 0.99].iter().all(|&q| {
+                let approx = h.quantile_ms(q);
+                let idx = ((q * exact.len() as f64).ceil() as usize).saturating_sub(1);
+                let want = exact[idx.min(exact.len() - 1)] as f64 / 1e6;
+                approx >= want * 0.94 && approx <= want * 1.06
+            })
+        },
+    );
+}
+
+/// The JSON parser never panics on arbitrary byte soup and accepts
+/// everything the generator can emit.
+#[test]
+fn prop_json_parser_total() {
+    forall(
+        0xCAFE,
+        300,
+        |rng| {
+            let len = rng.below(60) as usize;
+            (0..len).map(|_| (rng.below(96) + 32) as u8 as char).collect::<String>()
+        },
+        |s| {
+            let _ = Json::parse(s); // must not panic; Err is fine
+            true
+        },
+    );
+    // Round-trip-ish: generated numeric arrays parse to the same values.
+    forall(
+        0xCAFF,
+        100,
+        |rng| (0..rng.below(20)).map(|_| rng.below(1_000_000) as i64).collect::<Vec<i64>>(),
+        |v| {
+            let doc = format!("[{}]", v.iter().map(i64::to_string).collect::<Vec<_>>().join(","));
+            match Json::parse(&doc) {
+                Ok(Json::Arr(a)) => {
+                    a.len() == v.len()
+                        && a.iter().zip(v).all(|(j, &want)| j.as_f64() == Some(want as f64))
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+/// Engine determinism under arbitrary workload shapes: same seed, same
+/// event count and final clock.
+#[test]
+fn prop_engine_deterministic() {
+    forall(
+        0x5EED,
+        30,
+        |rng| (gen::u64_in(rng, 1, 50), rng.next_u64()),
+        |&(n, seed)| {
+            let run = || {
+                let mut e =
+                    Engine::new(Collect { done: 0, last_now: 0 }, Host::default(), seed);
+                for i in 0..n {
+                    e.spawn_at(
+                        i * 500_000,
+                        0,
+                        vec![
+                            Step::cpu("c", Dist::ms(1.0, 0.4)),
+                            Step::lock("l", LockClass::Kvm, Dist::ms(0.3, 0.4)),
+                        ],
+                    );
+                }
+                e.run(n * 32);
+                (e.now(), e.events_processed())
+            };
+            run() == run()
+        },
+    );
+}
