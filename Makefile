@@ -1,0 +1,21 @@
+# Convenience targets; the rust crate lives in rust/, the AOT pipeline
+# in python/compile (emits rust/artifacts/ for the live stack).
+
+.PHONY: build test artifacts experiments policies
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+	python -m pytest python/tests -q
+
+# JAX/Pallas AOT pipeline -> HLO text + manifest under rust/artifacts/.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+experiments: build
+	./rust/target/release/coldfaas experiment all --quick
+
+policies: build
+	./rust/target/release/coldfaas policies --quick

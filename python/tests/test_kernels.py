@@ -9,6 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property sweeps need hypothesis; skip this module (not the whole
+# session) in environments that don't carry it.
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels

@@ -1,0 +1,19 @@
+//! Bench E12: keep-alive policy lab — lifecycle policy x driver over a
+//! production-shaped multi-tenant Zipf trace (1000 functions), reporting
+//! the p50/p99-latency vs GB·s-idle-waste frontier.
+//!
+//!     cargo bench --bench e12_policies
+
+use coldfaas::experiments::{policies, ExpConfig};
+
+fn main() {
+    println!("== bench e12_policies: lifecycle policies vs the cold-only thesis ==\n");
+    let t0 = std::time::Instant::now();
+    let report = policies(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE12 regeneration (8 cells x ~120k multi-tenant invocations): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e12 regressions: {:#?}", report.failures());
+}

@@ -9,6 +9,12 @@ use anyhow::Result;
 
 use super::FuncInfo;
 
+/// Backend-loss error messages: the HTTP layer classifies these as 503
+/// (service unavailable) rather than 400 — keep the constants shared so
+/// rewording can't silently downgrade them.
+pub const ERR_POOL_DOWN: &str = "engine pool shut down";
+pub const ERR_REPLY_DROPPED: &str = "engine dropped reply";
+
 /// Result of one engine execution.
 pub struct ExecReply {
     pub output: Vec<f32>,
@@ -67,7 +73,7 @@ impl EnginePool {
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e.to_string()));
-                        log::error!("engine thread failed to load runtime: {e}");
+                        eprintln!("engine thread failed to load runtime: {e}");
                     }
                 }
             }));
@@ -116,8 +122,8 @@ impl EnginePool {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Job { name: name.to_string(), payload, reply: reply_tx })
-            .map_err(|_| "engine pool shut down".to_string())?;
-        reply_rx.recv().map_err(|_| "engine dropped reply".to_string())?
+            .map_err(|_| ERR_POOL_DOWN.to_string())?;
+        reply_rx.recv().map_err(|_| ERR_REPLY_DROPPED.to_string())?
     }
 
     /// Drop the queue and join the engine threads.

@@ -304,6 +304,11 @@ impl Coordinator {
                         o.output_head
                     )),
                     Err(e) if e.starts_with("unknown function") => Response::not_found(),
+                    // Backend gone (pool shut down mid-drain): overload-path
+                    // semantics, not a client error.
+                    Err(e) if e == engine::ERR_POOL_DOWN || e == engine::ERR_REPLY_DROPPED => {
+                        Response::unavailable(&e)
+                    }
                     Err(e) => Response::bad_request(&e),
                 }
             }

@@ -1,12 +1,13 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E10).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E12).
 
 pub mod cloud;
 pub mod complexity;
 pub mod decompose;
 pub mod fnlocal;
 pub mod images;
+pub mod policies;
 pub mod scaleout;
 pub mod startup;
 pub mod waste;
@@ -16,6 +17,7 @@ pub use complexity::complexity;
 pub use decompose::decompose;
 pub use fnlocal::fig4;
 pub use images::images;
+pub use policies::policies;
 pub use scaleout::scaleout;
 pub use startup::{fig1, fig2, fig3};
 pub use waste::waste;
@@ -34,13 +36,14 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "waste" => waste(cfg),
         "distance" => distance_sweep(cfg),
         "scaleout" => scaleout(cfg),
+        "policies" => policies(cfg),
         _ => return None,
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
-    "distance", "scaleout",
+    "distance", "scaleout", "policies",
 ];
 
 use crate::sim::Host;

@@ -12,6 +12,10 @@ use std::collections::{HashMap, VecDeque};
 #[derive(Clone, Copy, Debug)]
 struct WarmSlot {
     idle_since_ns: u64,
+    /// Absolute teardown deadline.  The classic pool sets this to
+    /// `idle_since + idle_timeout`; lifecycle policies ([`crate::policy`])
+    /// pick a per-release deadline instead.
+    expires_at_ns: u64,
 }
 
 /// Outcome of a dispatch attempt.
@@ -40,6 +44,8 @@ pub struct WarmPool {
     pub warm_hits: u64,
     pub cold_starts: u64,
     pub expirations: u64,
+    /// Executors torn down immediately after serving (cold-only policies).
+    pub retirements: u64,
 }
 
 impl WarmPool {
@@ -55,6 +61,7 @@ impl WarmPool {
             warm_hits: 0,
             cold_starts: 0,
             expirations: 0,
+            retirements: 0,
         }
     }
 
@@ -63,27 +70,27 @@ impl WarmPool {
         self.monitor_events += idle_ns / self.poll_period_ns;
     }
 
-    /// Drop idle slots whose timeout has elapsed by `now`.
+    /// Drop idle slots whose deadline has passed by `now`.  Deadlines are
+    /// per-slot (policies may vary them release to release), so this scans
+    /// the whole queue rather than popping an ordered front.
     fn expire(&mut self, func: &str, now: u64) {
-        let timeout = self.idle_timeout_ns;
-        let mut expired = 0u64;
-        let mut acct = 0u64;
-        if let Some(q) = self.idle.get_mut(func) {
-            while let Some(front) = q.front() {
-                if now.saturating_sub(front.idle_since_ns) >= timeout {
-                    q.pop_front();
-                    expired += 1;
-                    acct += timeout;
-                } else {
-                    break;
-                }
+        let Some(q) = self.idle.get_mut(func) else { return };
+        let mut charges: Vec<u64> = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].expires_at_ns <= now {
+                let s = q.remove(i).expect("index in range");
+                charges.push(s.expires_at_ns.saturating_sub(s.idle_since_ns));
+            } else {
+                i += 1;
             }
         }
-        if expired > 0 {
-            self.expirations += expired;
-            *self.alive.get_mut(func).expect("alive entry") -= expired;
-            for _ in 0..expired {
-                self.account_idle(acct / expired);
+        if !charges.is_empty() {
+            self.expirations += charges.len() as u64;
+            let a = self.alive.get_mut(func).expect("alive entry");
+            *a -= (charges.len() as u64).min(*a);
+            for c in charges {
+                self.account_idle(c);
             }
         }
     }
@@ -108,20 +115,45 @@ impl WarmPool {
         }
     }
 
-    /// Return an executor to the idle pool after it served a request.
+    /// Return an executor to the idle pool after it served a request,
+    /// retained until the pool-wide idle timeout.
     pub fn release(&mut self, func: &str, now: u64) {
+        let expires = now.saturating_add(self.idle_timeout_ns);
+        self.release_until(func, now, expires);
+    }
+
+    /// Return an executor to the idle pool with an explicit teardown
+    /// deadline (lifecycle-policy path: the deadline is per release).
+    pub fn release_until(&mut self, func: &str, now: u64, expires_at_ns: u64) {
         self.idle
             .entry(func.to_string())
             .or_default()
-            .push_back(WarmSlot { idle_since_ns: now });
+            .push_back(WarmSlot { idle_since_ns: now, expires_at_ns });
     }
 
-    /// Pre-create `n` warm executors (measurement warmup).
+    /// Tear an executor down immediately after it served (the cold-only
+    /// lifecycle): nothing idles, nothing is charged.
+    pub fn retire(&mut self, func: &str) {
+        if let Some(a) = self.alive.get_mut(func) {
+            *a = a.saturating_sub(1);
+        }
+        self.retirements += 1;
+    }
+
+    /// Pre-create `n` warm executors (measurement warmup), retained until
+    /// the pool-wide idle timeout.
     pub fn prewarm(&mut self, func: &str, n: u64, now: u64) {
+        let expires = now.saturating_add(self.idle_timeout_ns);
+        self.prewarm_until(func, n, now, expires);
+    }
+
+    /// Pre-create `n` warm executors with an explicit teardown deadline
+    /// (predictive-prewarm policies).
+    pub fn prewarm_until(&mut self, func: &str, n: u64, now: u64, expires_at_ns: u64) {
         *self.alive.entry(func.to_string()).or_insert(0) += n;
         let q = self.idle.entry(func.to_string()).or_default();
         for _ in 0..n {
-            q.push_back(WarmSlot { idle_since_ns: now });
+            q.push_back(WarmSlot { idle_since_ns: now, expires_at_ns });
         }
     }
 
@@ -141,30 +173,29 @@ impl WarmPool {
             if let Some(q) = self.idle.get_mut(&f) {
                 let slots: Vec<WarmSlot> = q.drain(..).collect();
                 for s in slots {
-                    let idle_ns = now.saturating_sub(s.idle_since_ns).min(self.idle_timeout_ns);
+                    let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
                     self.account_idle(idle_ns);
                 }
             }
         }
     }
 
-    /// Account every remaining idle slot with its *full* timeout: after the
-    /// measurement ends the platform will keep it resident until expiry
+    /// Account every remaining idle slot up to its *full* deadline: after
+    /// the measurement ends the platform will keep it resident until expiry
     /// regardless (how AWS's ~27 min keep-alive turns one invocation into
     /// hundreds of GB·s of waste).
     pub fn finalize_expiring(&mut self) {
-        let timeout = self.idle_timeout_ns;
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
             if let Some(q) = self.idle.get_mut(&f) {
-                let n = q.len() as u64;
-                q.clear();
+                let slots: Vec<WarmSlot> = q.drain(..).collect();
+                let n = slots.len() as u64;
                 self.expirations += n;
                 if let Some(a) = self.alive.get_mut(&f) {
                     *a -= n.min(*a);
                 }
-                for _ in 0..n {
-                    self.account_idle(timeout);
+                for s in slots {
+                    self.account_idle(s.expires_at_ns.saturating_sub(s.idle_since_ns));
                 }
             }
         }
@@ -287,6 +318,70 @@ mod tests {
         p.finalize(500 * S);
         // Slot would have expired at 30 s: waste capped there.
         assert_eq!(p.idle_mem_byte_ns, (30 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn release_until_overrides_pool_timeout() {
+        let mut p = pool(); // pool-wide timeout is 30 s
+        p.dispatch("f", 0);
+        // Policy keeps this slot only 2 s.
+        p.release_until("f", 0, 2 * S);
+        assert_eq!(p.dispatch("f", 3 * S), Dispatch::Cold);
+        assert_eq!(p.expirations, 1);
+        assert_eq!(p.idle_mem_byte_ns, (2 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn per_slot_deadlines_expire_out_of_order() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.dispatch("f", 0);
+        // Older release has the *longer* deadline: the scan must still
+        // expire the younger slot first.
+        p.release_until("f", 0, 100 * S);
+        p.release_until("f", 1 * S, 5 * S);
+        p.expire("f", 6 * S);
+        assert_eq!(p.idle_count("f"), 1);
+        assert_eq!(p.expirations, 1);
+        // Expired slot idled from 1 s to its 5 s deadline.
+        assert_eq!(p.idle_mem_byte_ns, (4 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn retire_drops_executor_without_idle_charge() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        assert_eq!(p.alive_count("f"), 1);
+        p.retire("f");
+        assert_eq!(p.alive_count("f"), 0);
+        assert_eq!(p.retirements, 1);
+        assert_eq!(p.idle_mem_byte_ns, 0);
+        assert_eq!(p.dispatch("f", 5 * S), Dispatch::Cold);
+    }
+
+    #[test]
+    fn prewarm_until_claim_before_deadline_is_warm() {
+        let mut p = pool();
+        p.prewarm_until("f", 1, 10 * S, 20 * S);
+        assert_eq!(p.dispatch("f", 15 * S), Dispatch::Warm);
+        assert_eq!(p.idle_mem_byte_ns, (5 * S) as u128 * (16 << 20) as u128);
+        p.prewarm_until("f", 1, 30 * S, 40 * S);
+        assert_eq!(p.dispatch("f", 41 * S), Dispatch::Cold);
+        assert_eq!(p.expirations, 1);
+    }
+
+    #[test]
+    fn finalize_caps_at_per_slot_deadline() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release_until("f", 0, 7 * S);
+        let mut q = p.clone();
+        // Finalize before the deadline: charge only elapsed idle time.
+        q.finalize(3 * S);
+        assert_eq!(q.idle_mem_byte_ns, (3 * S) as u128 * (16 << 20) as u128);
+        // Finalize after: charge up to the deadline, not the wall clock.
+        p.finalize(500 * S);
+        assert_eq!(p.idle_mem_byte_ns, (7 * S) as u128 * (16 << 20) as u128);
     }
 
     #[test]

@@ -44,8 +44,18 @@ impl Response {
     pub fn bad_request(msg: &str) -> Response {
         Response { status: 400, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
     }
+    /// 429: the caller exceeded what the platform will queue (overload
+    /// shedding at the gateway, rate limits on the invoke path).
+    pub fn too_many_requests(msg: &str) -> Response {
+        Response { status: 429, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+    }
     pub fn error(msg: &str) -> Response {
         Response { status: 500, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+    }
+    /// 503: the serving backend is down or draining (engine pool shut
+    /// down, coordinator not ready).
+    pub fn unavailable(msg: &str) -> Response {
+        Response { status: 503, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
     }
 
     fn status_text(&self) -> &'static str {
@@ -53,7 +63,9 @@ impl Response {
             200 => "OK",
             400 => "Bad Request",
             404 => "Not Found",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
@@ -136,14 +148,16 @@ struct ConnQueue {
 }
 
 impl ConnQueue {
-    fn push(&self, s: TcpStream) -> bool {
+    /// Enqueue, or hand the stream back on overload so the caller can
+    /// shed it with an explicit 429.
+    fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
         let mut q = self.q.lock().unwrap();
         if q.len() >= self.capacity {
-            return false; // overload: shed the connection
+            return Err(s);
         }
         q.push_back(s);
         self.cv.notify_one();
-        true
+        Ok(())
     }
 
     fn pop(&self, stop: &AtomicBool) -> Option<TcpStream> {
@@ -202,8 +216,27 @@ impl Server {
                     match listener.accept() {
                         Ok((s, _)) => {
                             stats.accepted.fetch_add(1, Ordering::Relaxed);
-                            if !queue.push(s) {
+                            if let Err(mut s) = queue.push(s) {
+                                // Overload: shed with an explicit 429 so
+                                // clients can back off instead of timing out.
+                                // Off-thread: the drain below may block up
+                                // to ~200 ms and must not stall accepts.
                                 stats.shed.fetch_add(1, Ordering::Relaxed);
+                                std::thread::spawn(move || {
+                                    // Drain what the client already sent —
+                                    // closing with unread bytes RSTs the
+                                    // socket and can discard the 429.
+                                    let _ = s.set_read_timeout(Some(Duration::from_millis(50)));
+                                    let mut sink = [0u8; 4096];
+                                    for _ in 0..4 {
+                                        match s.read(&mut sink) {
+                                            Ok(n) if n == sink.len() => continue,
+                                            _ => break,
+                                        }
+                                    }
+                                    let _ = Response::too_many_requests("gateway queue full")
+                                        .write_conn(&mut s, false);
+                                });
                             }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -483,6 +516,21 @@ mod tests {
         let text = String::from_utf8_lossy(&buf);
         assert!(text.contains("400"), "got: {text}");
         srv.shutdown();
+    }
+
+    #[test]
+    fn overload_and_unavailable_status_lines() {
+        let mut buf = Vec::new();
+        Response::too_many_requests("slow down").write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.ends_with("slow down"));
+
+        let mut buf = Vec::new();
+        Response::unavailable("draining").write_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 8\r\n"));
     }
 
     #[test]

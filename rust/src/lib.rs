@@ -7,8 +7,10 @@
 //! The crate has two halves that share one set of substrate models:
 //!
 //! * a **discrete-event simulation** stack ([`sim`], [`virt`], [`net`],
-//!   [`workload`], [`fnplat`], [`lambda`]) that regenerates every figure
-//!   and table of the paper's evaluation in virtual time, and
+//!   [`workload`], [`fnplat`], [`lambda`], [`policy`]) that regenerates
+//!   every figure and table of the paper's evaluation in virtual time —
+//!   plus the keep-alive policy lab (E12) that quantifies the cold-only
+//!   thesis against the lifecycle policies real platforms run — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
 //!   [`runtime`]) — a real HTTP control plane whose executors run
 //!   AOT-compiled JAX/Pallas functions through PJRT (python never on the
@@ -28,6 +30,7 @@ pub mod image;
 pub mod lambda;
 pub mod metrics;
 pub mod net;
+pub mod policy;
 pub mod report;
 pub mod runtime;
 pub mod sim;

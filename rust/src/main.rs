@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   experiment <name>|all   regenerate a paper figure/table (DESIGN.md §5)
+//!   policies                keep-alive policy lab (E12): latency-vs-waste frontier
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
@@ -19,6 +20,7 @@ fn main() {
     let args = Args::parse(&argv);
     let code = match args.subcommand.as_str() {
         "experiment" => cmd_experiment(&args),
+        "policies" => cmd_policies(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -41,9 +43,19 @@ coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
 
 USAGE: coldfaas <subcommand> [options]
 
-  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|all>
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|all>
       --requests N          requests per cell (default 10000; paper value)
       --parallelism LIST    e.g. 1,5,10,20,40 (default)
+      --seed N              deterministic seed
+      --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+
+  policies                  keep-alive policy lab (E12): every lifecycle
+                            policy x driver over a multi-tenant Zipf trace
+      --functions N         distinct functions (default 1000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default sized from --requests)
+      --zipf S              popularity exponent (default 1.1)
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
       --out FILE            also append the report to FILE
@@ -70,6 +82,15 @@ fn exp_config(args: &Args) -> ExpConfig {
     cfg.parallelisms = args.get_u32_list("parallelism", &cfg.parallelisms);
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg
+}
+
+/// Append rendered report text to the `--out` file, if requested.
+fn append_out(args: &Args, rendered: &str) {
+    if let Some(path) = args.get("out") {
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(rendered.as_bytes());
+        }
+    }
 }
 
 fn cmd_experiment(args: &Args) -> i32 {
@@ -101,12 +122,32 @@ fn cmd_experiment(args: &Args) -> i32 {
             }
         }
     }
-    if let Some(path) = args.get("out") {
-        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
-            let _ = f.write_all(rendered.as_bytes());
-        }
-    }
+    append_out(args, &rendered);
     if all_pass {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_policies(args: &Args) -> i32 {
+    use coldfaas::experiments::policies::{e12_config, policies_with};
+    let mut cfg = e12_config(&exp_config(args));
+    cfg.tenant.functions = args.get_u64("functions", cfg.tenant.functions as u64) as u32;
+    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
+    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
+    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
+    if cfg.tenant.functions == 0 || cfg.tenant.total_rps <= 0.0 || cfg.tenant.duration_s <= 0.0 {
+        eprintln!("policies: --functions, --rps and --duration must be positive");
+        return 2;
+    }
+    let t0 = std::time::Instant::now();
+    let report = policies_with(&cfg);
+    let txt = report.render();
+    print!("{txt}");
+    println!("  (policies in {:.1} s)", t0.elapsed().as_secs_f64());
+    append_out(args, &txt);
+    if report.all_pass() {
         0
     } else {
         1

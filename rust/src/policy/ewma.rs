@@ -1,0 +1,181 @@
+//! EWMA inter-arrival forecasting policy: a cheap online stand-in for the
+//! learned cold-start predictors in the literature (transformer/LSTM
+//! arrival forecasters).  Per function it maintains exponentially weighted
+//! estimates of the inter-arrival mean and variance; on idle it either
+//! retains the executor through the forecast gap (plus an uncertainty
+//! margin) or, when the forecast gap is long and confident, tears down and
+//! pre-warms just ahead of the predicted arrival.
+
+use super::{IdleAction, LifecyclePolicy};
+
+/// EWMA arrival-forecast keep-alive/pre-warm policy.
+pub struct EwmaPredictive {
+    /// EWMA of the inter-arrival gap (ns).
+    mean_ns: Vec<f64>,
+    /// EWMA of the squared deviation (ns^2).
+    var_ns2: Vec<f64>,
+    last_invoke_ns: Vec<Option<u64>>,
+    samples: Vec<u32>,
+    /// Smoothing factor for mean and variance updates.
+    pub alpha: f64,
+    /// Keep-alive while a function has too little history to forecast.
+    pub bootstrap_keep_ns: u64,
+    /// Hard cap on any keep-alive window.
+    pub max_keep_ns: u64,
+    /// Pre-warm (rather than keep) only for forecast gaps beyond this.
+    pub prewarm_threshold_ns: u64,
+    /// Gap observations required before the forecast drives decisions.
+    pub min_samples: u32,
+}
+
+impl EwmaPredictive {
+    /// Coefficient-of-variation bound under which a long forecast gap is
+    /// trusted enough to pre-warm instead of retaining.
+    const PREDICTABLE_CV: f64 = 0.5;
+
+    pub fn new(n_funcs: u32) -> EwmaPredictive {
+        EwmaPredictive {
+            mean_ns: vec![0.0; n_funcs as usize],
+            var_ns2: vec![0.0; n_funcs as usize],
+            last_invoke_ns: vec![None; n_funcs as usize],
+            samples: vec![0; n_funcs as usize],
+            alpha: 0.2,
+            bootstrap_keep_ns: 120 * 1_000_000_000,
+            max_keep_ns: super::FixedKeepAlive::DEFAULT_KEEP_NS,
+            prewarm_threshold_ns: 60 * 1_000_000_000,
+            min_samples: 4,
+        }
+    }
+
+    fn sigma_ns(&self, f: usize) -> f64 {
+        self.var_ns2[f].max(0.0).sqrt()
+    }
+}
+
+impl LifecyclePolicy for EwmaPredictive {
+    fn name(&self) -> String {
+        "ewma".to_string()
+    }
+
+    fn on_invoke(&mut self, func: u32, now_ns: u64) {
+        let f = func as usize;
+        if let Some(prev) = self.last_invoke_ns[f] {
+            let gap = now_ns.saturating_sub(prev) as f64;
+            if self.samples[f] == 0 {
+                self.mean_ns[f] = gap;
+            } else {
+                let dev = gap - self.mean_ns[f];
+                self.mean_ns[f] += self.alpha * dev;
+                self.var_ns2[f] = (1.0 - self.alpha) * (self.var_ns2[f] + self.alpha * dev * dev);
+            }
+            self.samples[f] = self.samples[f].saturating_add(1);
+        }
+        self.last_invoke_ns[f] = Some(now_ns);
+    }
+
+    fn on_idle(&mut self, func: u32, _now_ns: u64) -> IdleAction {
+        let f = func as usize;
+        if self.samples[f] < self.min_samples {
+            return IdleAction::KeepFor { keep_ns: self.bootstrap_keep_ns.min(self.max_keep_ns) };
+        }
+        let mean = self.mean_ns[f];
+        let sigma = self.sigma_ns(f);
+        // Far edge of the retention window: forecast gap + 2-sigma margin.
+        // Uncapped here — a pre-warm window must cover the forecast arrival
+        // even beyond max_keep; only the window LENGTH is capped below.
+        let keep_edge = (mean + 2.0 * sigma).max(0.0) as u64;
+        if mean > self.prewarm_threshold_ns as f64 && sigma < Self::PREDICTABLE_CV * mean {
+            // Long, confident gap: idle through it cold, warm up just
+            // before the forecast arrival (2 sigma early).  The window
+            // spans [delay, keep_edge], which is always non-empty.
+            let delay = ((mean - 2.0 * sigma).max(0.0) * 0.95) as u64;
+            let keep = keep_edge.saturating_sub(delay).clamp(1, self.max_keep_ns);
+            IdleAction::PrewarmAfter { delay_ns: delay, keep_ns: keep }
+        } else {
+            IdleAction::KeepFor { keep_ns: keep_edge.clamp(1, self.max_keep_ns) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    #[test]
+    fn bootstrap_before_enough_samples() {
+        let mut p = EwmaPredictive::new(1);
+        p.on_invoke(0, 0);
+        p.on_invoke(0, 5 * S);
+        match p.on_idle(0, 6 * S) {
+            IdleAction::KeepFor { keep_ns } => assert_eq!(keep_ns, p.bootstrap_keep_ns),
+            other => panic!("expected bootstrap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn steady_short_gaps_keep_near_mean() {
+        let mut p = EwmaPredictive::new(1);
+        for i in 0..40u64 {
+            p.on_invoke(0, i * 3 * S);
+        }
+        match p.on_idle(0, 200 * S) {
+            IdleAction::KeepFor { keep_ns } => {
+                // Constant 3 s gaps: sigma -> 0, keep ~ mean.
+                assert!(
+                    (2 * S..=6 * S).contains(&keep_ns),
+                    "keep should track the 3 s gap: {keep_ns}"
+                );
+            }
+            other => panic!("short gaps must retain: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn long_confident_gaps_prewarm() {
+        let mut p = EwmaPredictive::new(1);
+        for i in 0..20u64 {
+            p.on_invoke(0, i * 240 * S); // steady 4 min gaps
+        }
+        match p.on_idle(0, 5000 * S) {
+            IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
+                assert!(delay_ns > 150 * S && delay_ns < 240 * S, "delay {delay_ns}");
+                assert!(delay_ns + keep_ns >= 235 * S, "window must cover the forecast");
+            }
+            other => panic!("long steady gaps should prewarm: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn erratic_long_gaps_do_not_prewarm() {
+        let mut p = EwmaPredictive::new(1);
+        // Alternating 30 s / 600 s gaps: high variance, no confident
+        // forecast -> retain (capped), don't gamble on a prewarm point.
+        let mut t = 0u64;
+        for i in 0..40u64 {
+            t += if i % 2 == 0 { 30 * S } else { 600 * S };
+            p.on_invoke(0, t);
+        }
+        match p.on_idle(0, t + S) {
+            IdleAction::KeepFor { keep_ns } => assert!(keep_ns <= p.max_keep_ns),
+            other => panic!("erratic gaps must not prewarm: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mean_tracks_rate_changes() {
+        let mut p = EwmaPredictive::new(1);
+        let mut t = 0u64;
+        for _ in 0..30 {
+            t += 10 * S;
+            p.on_invoke(0, t);
+        }
+        let slow = p.mean_ns[0];
+        for _ in 0..30 {
+            t += S;
+            p.on_invoke(0, t);
+        }
+        assert!(p.mean_ns[0] < slow / 3.0, "EWMA must adapt downward");
+    }
+}

@@ -1,0 +1,174 @@
+//! Hybrid-histogram lifecycle policy: per-function log-bucket histograms
+//! over inter-arrival times pick a keep-alive window (tail percentile) and
+//! a pre-warm point (head percentile) — the production policy family
+//! Shahrad et al. shipped, reproduced over this repo's substrate.
+//!
+//! Per function the policy tracks the distribution of gaps between
+//! invocations.  Once enough gaps are observed:
+//!
+//! * if the head percentile (p5) of the gap distribution is *short*, the
+//!   next invocation usually lands soon — keep the executor warm until a
+//!   margin past the tail percentile (p99);
+//! * if even the head percentile is long, idling through the gap is pure
+//!   waste — tear down now, pre-warm just before the head percentile, and
+//!   retain the pre-warmed executor through the tail percentile window.
+//!
+//! Until enough history exists the policy falls back to a short bootstrap
+//! keep-alive (observation mode).
+
+use crate::metrics::Histogram;
+
+use super::{IdleAction, LifecyclePolicy};
+
+const NS_PER_MS: f64 = 1e6;
+
+/// Hybrid histogram keep-alive/pre-warm policy.
+pub struct HistogramPrewarm {
+    hists: Vec<Histogram>,
+    last_invoke_ns: Vec<Option<u64>>,
+    /// Keep-alive while a function has too little history to classify.
+    pub bootstrap_keep_ns: u64,
+    /// Hard cap on any keep-alive window (the commercial default).
+    pub max_keep_ns: u64,
+    /// Pre-warm (rather than keep) only when the head-percentile gap
+    /// exceeds this — short gaps make teardown+reboot churn pointless.
+    pub prewarm_threshold_ns: u64,
+    /// Gap observations required before the histogram drives decisions.
+    pub min_samples: u64,
+}
+
+impl HistogramPrewarm {
+    /// Head/tail margins of the hybrid policy: pre-warm at 85% of the head
+    /// percentile, keep until 115% of the tail percentile.
+    const HEAD_MARGIN: f64 = 0.85;
+    const TAIL_MARGIN: f64 = 1.15;
+
+    pub fn new(n_funcs: u32) -> HistogramPrewarm {
+        HistogramPrewarm {
+            hists: (0..n_funcs).map(|_| Histogram::new()).collect(),
+            last_invoke_ns: vec![None; n_funcs as usize],
+            bootstrap_keep_ns: 120 * 1_000_000_000,
+            max_keep_ns: super::FixedKeepAlive::DEFAULT_KEEP_NS,
+            prewarm_threshold_ns: 60 * 1_000_000_000,
+            min_samples: 8,
+        }
+    }
+
+    fn quantile_ns(&self, func: u32, q: f64) -> u64 {
+        (self.hists[func as usize].quantile_ms(q) * NS_PER_MS) as u64
+    }
+}
+
+impl LifecyclePolicy for HistogramPrewarm {
+    fn name(&self) -> String {
+        "histogram".to_string()
+    }
+
+    fn on_invoke(&mut self, func: u32, now_ns: u64) {
+        let f = func as usize;
+        if let Some(prev) = self.last_invoke_ns[f] {
+            self.hists[f].record_ns(now_ns.saturating_sub(prev));
+        }
+        self.last_invoke_ns[f] = Some(now_ns);
+    }
+
+    fn on_idle(&mut self, func: u32, _now_ns: u64) -> IdleAction {
+        if self.hists[func as usize].len() < self.min_samples {
+            return IdleAction::KeepFor { keep_ns: self.bootstrap_keep_ns.min(self.max_keep_ns) };
+        }
+        let head = self.quantile_ns(func, 0.05);
+        let tail = self.quantile_ns(func, 0.99);
+        // Retain-until edge of the hybrid window, *uncapped*: a pre-warm
+        // window's far edge must cover the forecast arrival even when it
+        // lies beyond max_keep — only the window's LENGTH is capped
+        // (tail >= head, so the length 1.15*tail - 0.85*head is > 0).
+        let tail_edge = (tail as f64 * Self::TAIL_MARGIN) as u64;
+        if head > self.prewarm_threshold_ns {
+            // Reliably long gaps: skip the idle stretch, be warm in time.
+            let delay = (head as f64 * Self::HEAD_MARGIN) as u64;
+            let keep = tail_edge.saturating_sub(delay).clamp(1, self.max_keep_ns);
+            IdleAction::PrewarmAfter { delay_ns: delay, keep_ns: keep }
+        } else {
+            IdleAction::KeepFor { keep_ns: tail_edge.clamp(1, self.max_keep_ns) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    #[test]
+    fn bootstrap_keep_until_enough_history() {
+        let mut p = HistogramPrewarm::new(4);
+        p.on_invoke(0, 0);
+        match p.on_idle(0, S) {
+            IdleAction::KeepFor { keep_ns } => assert_eq!(keep_ns, p.bootstrap_keep_ns),
+            other => panic!("expected bootstrap keep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tight_periodic_function_gets_short_keep() {
+        let mut p = HistogramPrewarm::new(1);
+        // Metronome at 2 s gaps: p99 ~ 2 s, so keep ~ 2.3 s, not 10 min.
+        for i in 0..50u64 {
+            p.on_invoke(0, i * 2 * S);
+        }
+        match p.on_idle(0, 100 * S) {
+            IdleAction::KeepFor { keep_ns } => {
+                assert!(
+                    keep_ns > S && keep_ns < 5 * S,
+                    "periodic keep should hug the gap: {keep_ns}"
+                );
+            }
+            other => panic!("2 s gaps are below the prewarm threshold: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slow_periodic_function_prewarms() {
+        let mut p = HistogramPrewarm::new(1);
+        // Metronome at 5 min gaps: even p5 is far beyond the threshold.
+        for i in 0..20u64 {
+            p.on_invoke(0, i * 300 * S);
+        }
+        match p.on_idle(0, 6000 * S) {
+            IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
+                // Pre-warm before the gap elapses, keep through the tail.
+                assert!(delay_ns > 120 * S && delay_ns < 300 * S, "delay {delay_ns}");
+                assert!(keep_ns >= 1, "keep {keep_ns}");
+                assert!(delay_ns + keep_ns >= 290 * S, "window must cover the gap");
+            }
+            other => panic!("5 min gaps should prewarm: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_never_exceeds_cap() {
+        let mut p = HistogramPrewarm::new(1);
+        p.prewarm_threshold_ns = u64::MAX; // force KeepFor
+        for i in 0..30u64 {
+            p.on_invoke(0, i * 2000 * S); // 33 min gaps
+        }
+        match p.on_idle(0, 100_000 * S) {
+            IdleAction::KeepFor { keep_ns } => assert!(keep_ns <= p.max_keep_ns),
+            other => panic!("forced keep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_function_state_is_isolated() {
+        let mut p = HistogramPrewarm::new(2);
+        for i in 0..50u64 {
+            p.on_invoke(0, i * 2 * S);
+        }
+        // Function 1 has no history: still in bootstrap.
+        match p.on_idle(1, 100 * S) {
+            IdleAction::KeepFor { keep_ns } => assert_eq!(keep_ns, p.bootstrap_keep_ns),
+            other => panic!("func 1 must bootstrap: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Executor lifecycle policies (S17): the keep-alive policy lab.
+//!
+//! The paper argues that a cold-only unikernel platform can *delete* the
+//! keep-alive machinery real FaaS platforms run.  This module makes that
+//! claim measurable by implementing the machinery: a [`LifecyclePolicy`]
+//! observes per-function invocation history and decides, every time an
+//! executor goes idle, whether to retain it, tear it down, or tear it down
+//! and pre-warm a fresh one ahead of the predicted next arrival.
+//!
+//! Four policies span the design space the literature actually occupies:
+//!
+//! * [`ColdOnlyPolicy`] — the paper: never retain anything;
+//! * [`FixedKeepAlive`] — the commercial default (a fixed idle window,
+//!   10 minutes on the big public clouds);
+//! * [`HistogramPrewarm`] — the hybrid-histogram policy family (per-
+//!   function inter-arrival histograms choosing a keep-alive window and a
+//!   pre-warm point, à la Shahrad et al.'s production policy);
+//! * [`EwmaPredictive`] — inter-arrival forecasting via an exponentially
+//!   weighted moving average + variance, standing in for learned
+//!   predictors (transformer/LSTM cold-start forecasters).
+//!
+//! Policies are pure observers/deciders: the pool mechanics stay in
+//! [`crate::fnplat::pool::WarmPool`] (per-slot deadlines), and the DES
+//! wiring that replays a multi-tenant trace through a policy lives in
+//! [`sim`].  Experiment E12 ([`crate::experiments::policies`]) sweeps
+//! policy x driver and reports the latency-vs-idle-waste frontier.
+
+pub mod ewma;
+pub mod histogram;
+pub mod sim;
+
+pub use ewma::EwmaPredictive;
+pub use histogram::HistogramPrewarm;
+pub use sim::{run_policy_scenario, PolicyResult, PolicyScenario};
+
+/// What to do with an executor that just went idle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdleAction {
+    /// Tear the executor down now (nothing stays resident).
+    Retire,
+    /// Keep the executor warm for `keep_ns` from now.
+    KeepFor { keep_ns: u64 },
+    /// Tear down now, then boot a fresh warm executor `delay_ns` from now
+    /// and retain it for `keep_ns` once booted (predictive pre-warming:
+    /// skip the idle gap, be warm just before the forecast arrival).
+    PrewarmAfter { delay_ns: u64, keep_ns: u64 },
+}
+
+/// A per-function executor lifecycle policy.
+///
+/// Functions are dense `u32` ids (multi-tenant traces run thousands of
+/// them); implementations size their state from `n_funcs` at construction.
+pub trait LifecyclePolicy {
+    /// Display name, including the parameters that matter (report labels).
+    fn name(&self) -> String;
+
+    /// Observe an invocation of `func` arriving at `now_ns`.
+    fn on_invoke(&mut self, func: u32, now_ns: u64);
+
+    /// An executor for `func` finished serving at `now_ns`: decide its
+    /// fate.
+    fn on_idle(&mut self, func: u32, now_ns: u64) -> IdleAction;
+}
+
+/// The paper's lifecycle: every executor exits on completion.  No state,
+/// no monitoring, no waste — and every start is cold.
+#[derive(Clone, Debug, Default)]
+pub struct ColdOnlyPolicy;
+
+impl LifecyclePolicy for ColdOnlyPolicy {
+    fn name(&self) -> String {
+        "cold-only".to_string()
+    }
+
+    fn on_invoke(&mut self, _func: u32, _now_ns: u64) {}
+
+    fn on_idle(&mut self, _func: u32, _now_ns: u64) -> IdleAction {
+        IdleAction::Retire
+    }
+}
+
+/// The commercial default: retain every idle executor for a fixed window.
+#[derive(Clone, Debug)]
+pub struct FixedKeepAlive {
+    pub keep_ns: u64,
+}
+
+impl FixedKeepAlive {
+    /// The 10-minute window the large public platforms default to.
+    pub const DEFAULT_KEEP_NS: u64 = 600 * 1_000_000_000;
+
+    pub fn new(keep_ns: u64) -> FixedKeepAlive {
+        FixedKeepAlive { keep_ns }
+    }
+}
+
+impl Default for FixedKeepAlive {
+    fn default() -> Self {
+        FixedKeepAlive::new(Self::DEFAULT_KEEP_NS)
+    }
+}
+
+impl LifecyclePolicy for FixedKeepAlive {
+    fn name(&self) -> String {
+        format!("fixed-{}s", self.keep_ns / 1_000_000_000)
+    }
+
+    fn on_invoke(&mut self, _func: u32, _now_ns: u64) {}
+
+    fn on_idle(&mut self, _func: u32, _now_ns: u64) -> IdleAction {
+        IdleAction::KeepFor { keep_ns: self.keep_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    #[test]
+    fn cold_only_always_retires() {
+        let mut p = ColdOnlyPolicy;
+        for t in 0..100u64 {
+            p.on_invoke(t as u32 % 7, t * S);
+            assert_eq!(p.on_idle(t as u32 % 7, t * S), IdleAction::Retire);
+        }
+        assert_eq!(p.name(), "cold-only");
+    }
+
+    #[test]
+    fn fixed_keeps_for_configured_window() {
+        let mut p = FixedKeepAlive::new(30 * S);
+        p.on_invoke(0, 0);
+        assert_eq!(p.on_idle(0, S), IdleAction::KeepFor { keep_ns: 30 * S });
+        assert_eq!(p.name(), "fixed-30s");
+    }
+
+    #[test]
+    fn fixed_default_is_ten_minutes() {
+        assert_eq!(FixedKeepAlive::default().keep_ns, 600 * S);
+    }
+}

@@ -1,0 +1,372 @@
+//! DES wiring for the policy lab: replay a multi-tenant trace through a
+//! [`LifecyclePolicy`] driving the per-slot-deadline
+//! [`WarmPool`](crate::fnplat::pool::WarmPool), over either Fn driver.
+//!
+//! Request pipeline per arrival (same request-path model as
+//! [`crate::fnplat::sim`], local lab): RTT -> gateway/agent/DB -> dispatch
+//! decision -> warm-invoke or cold-start pipeline -> execution -> release
+//! decision.  On release the policy picks Retire / KeepFor / PrewarmAfter;
+//! pre-warms are injected back into virtual time as zero-latency control
+//! requests whose only step is a pool effect at the scheduled boot time.
+
+use crate::fnplat::pool::{Dispatch, WarmPool};
+use crate::fnplat::{agent_steps, exec_step, DbBackend, DriverKind};
+use crate::net::{rtt_step, Site};
+use crate::sim::{Domain, Engine, Host, ReqId, Rng, Spawn, Step};
+use crate::workload::tenants::TenantTrace;
+
+use super::{IdleAction, LifecyclePolicy};
+
+const TAG_DISPATCH: u32 = 1;
+const TAG_RELEASE: u32 = 2;
+const TAG_PREWARM: u32 = 3;
+
+/// High bit of the request class marks policy control requests (pre-warm
+/// boots) rather than user invocations.
+const CONTROL_BIT: u32 = 1 << 31;
+
+/// One cell of the policy lab: a driver serving a tenant trace under one
+/// lifecycle policy.
+#[derive(Clone, Debug)]
+pub struct PolicyScenario {
+    pub driver: DriverKind,
+    pub trace: TenantTrace,
+    /// Function-body execution cost (ms).
+    pub exec_ms: f64,
+    /// Resident bytes one retained executor holds while idle.  For the
+    /// Docker driver this is the container's warm footprint; for the
+    /// unikernel driver it models *hypothetically* pausing the unikernel
+    /// instead of letting it exit (the lab's what-if; the real system
+    /// exits, which is exactly the cold-only policy row).
+    pub mem_bytes_per_slot: u64,
+    pub seed: u64,
+}
+
+impl PolicyScenario {
+    pub fn new(driver: DriverKind, trace: TenantTrace, seed: u64) -> PolicyScenario {
+        let mem = match driver {
+            DriverKind::DockerWarm => driver.tech().warm_memory_bytes(),
+            // A retained (paused) IncludeOS unikernel would hold its guest
+            // memory: ~2.5 MB image + boot heap.  The shipped system never
+            // retains one — this powers the lab's what-if rows only.
+            DriverKind::IncludeOsCold => 6 << 20,
+        };
+        PolicyScenario {
+            driver,
+            trace,
+            exec_ms: crate::fnplat::DEFAULT_EXEC_MS,
+            mem_bytes_per_slot: mem,
+            seed,
+        }
+    }
+
+    fn head_steps(&self) -> Vec<Step> {
+        let mut v = vec![rtt_step("req-resp-rtt", Site::LabStockholm, Site::LabStockholm)];
+        v.extend(agent_steps(DbBackend::Postgres));
+        v.push(Step::decision("dispatch", TAG_DISPATCH));
+        v
+    }
+}
+
+struct PolicyDomain<'a> {
+    driver: DriverKind,
+    exec_ms: f64,
+    policy: &'a mut dyn LifecyclePolicy,
+    pool: WarmPool,
+    /// Pool keys per function id (the pool is string-keyed).
+    func_names: Vec<String>,
+    /// Pre-warms decided during the current request's release effect,
+    /// drained into spawns when the request completes.
+    pending_prewarms: Vec<(u32, u64, u64)>, // (func, delay_ns, keep_ns)
+    /// Keep windows for in-flight pre-warm control requests, per function,
+    /// keyed by absolute boot time (boots may fire out of schedule order
+    /// when forecast delays differ).
+    prewarm_keeps: Vec<std::collections::VecDeque<(u64, u64)>>, // (fire_at_ns, keep_ns)
+    prewarm_boots: u64,
+    latencies_ns: Vec<u64>,
+    cold_served: u64,
+    warm_served: u64,
+}
+
+impl PolicyDomain<'_> {
+    fn dispatch_tail(&mut self, func: u32, now: u64) -> Vec<Step> {
+        self.policy.on_invoke(func, now);
+        let mut tail = Vec::new();
+        match self.pool.dispatch(&self.func_names[func as usize], now) {
+            Dispatch::Warm => {
+                self.warm_served += 1;
+                tail.extend(self.driver.warm_invoke_steps());
+            }
+            Dispatch::Cold => {
+                self.cold_served += 1;
+                tail.extend(self.driver.cold_start_steps());
+            }
+        }
+        tail.push(exec_step(self.exec_ms));
+        tail.push(Step::effect("release", TAG_RELEASE));
+        tail
+    }
+}
+
+impl Domain for PolicyDomain<'_> {
+    fn decide(&mut self, _req: ReqId, class: u32, tag: u32, now: u64, _rng: &mut Rng) -> Vec<Step> {
+        debug_assert_eq!(tag, TAG_DISPATCH);
+        self.dispatch_tail(class, now)
+    }
+
+    fn effect(&mut self, _req: ReqId, class: u32, tag: u32, now: u64) {
+        let func = class & !CONTROL_BIT;
+        match tag {
+            TAG_RELEASE => match self.policy.on_idle(func, now) {
+                IdleAction::Retire => self.pool.retire(&self.func_names[func as usize]),
+                IdleAction::KeepFor { keep_ns } => self.pool.release_until(
+                    &self.func_names[func as usize],
+                    now,
+                    now.saturating_add(keep_ns),
+                ),
+                IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
+                    self.pool.retire(&self.func_names[func as usize]);
+                    self.pending_prewarms.push((func, delay_ns, keep_ns));
+                }
+            },
+            TAG_PREWARM => {
+                // Match this boot to its scheduled keep window by fire
+                // time: boots fire at exactly their scheduled instant.
+                let q = &mut self.prewarm_keeps[func as usize];
+                let keep = q
+                    .iter()
+                    .position(|&(fire_at, _)| fire_at == now)
+                    .and_then(|i| q.remove(i))
+                    .map(|(_, keep)| keep)
+                    .unwrap_or(0);
+                // Skip stale pre-warms: an arrival already repopulated the
+                // pool, or the keep window degenerated.
+                if keep > 0 && self.pool.idle_count(&self.func_names[func as usize]) == 0 {
+                    self.prewarm_boots += 1;
+                    self.pool.prewarm_until(
+                        &self.func_names[func as usize],
+                        1,
+                        now,
+                        now.saturating_add(keep),
+                    );
+                }
+            }
+            other => debug_assert!(false, "unexpected effect tag {other}"),
+        }
+    }
+
+    fn done(&mut self, _req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+        let mut spawns = Vec::new();
+        for (func, delay_ns, keep_ns) in self.pending_prewarms.drain(..) {
+            self.prewarm_keeps[func as usize].push_back((now.saturating_add(delay_ns), keep_ns));
+            spawns.push(Spawn {
+                delay_ns,
+                class: func | CONTROL_BIT,
+                steps: vec![Step::effect("prewarm-boot", TAG_PREWARM)],
+            });
+        }
+        if class & CONTROL_BIT == 0 {
+            self.latencies_ns.push(now - start);
+        }
+        spawns
+    }
+}
+
+/// Aggregated outcome of one policy-lab cell.
+#[derive(Clone, Debug)]
+pub struct PolicyResult {
+    pub latencies_ns: Vec<u64>,
+    pub elapsed_ns: u64,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub prewarm_boots: u64,
+    pub expirations: u64,
+    pub retirements: u64,
+    pub idle_gb_seconds: f64,
+    pub monitor_events: u64,
+}
+
+impl PolicyResult {
+    pub fn requests(&self) -> u64 {
+        self.latencies_ns.len() as u64
+    }
+
+    pub fn cold_fraction(&self) -> f64 {
+        let total = self.cold_starts + self.warm_hits;
+        if total == 0 { 0.0 } else { self.cold_starts as f64 / total as f64 }
+    }
+
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.latencies_ns.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.latencies_ns.clone();
+        s.sort_unstable();
+        let idx = ((q * s.len() as f64).ceil() as usize).saturating_sub(1);
+        s[idx.min(s.len() - 1)] as f64 / 1e6
+    }
+}
+
+/// Replay `sc.trace` through `policy` on `host`.
+pub fn run_policy_scenario(
+    sc: &PolicyScenario,
+    policy: &mut dyn LifecyclePolicy,
+    host: Host,
+) -> PolicyResult {
+    let n_funcs = sc.trace.functions;
+    let domain = PolicyDomain {
+        driver: sc.driver,
+        exec_ms: sc.exec_ms,
+        policy,
+        // The pool-wide timeout is irrelevant here (every release carries a
+        // per-slot deadline), but keep it sane for the classic entrypoints.
+        pool: WarmPool::new(30 * 1_000_000_000, sc.mem_bytes_per_slot),
+        func_names: (0..n_funcs).map(|f| format!("f{f}")).collect(),
+        pending_prewarms: Vec::new(),
+        prewarm_keeps: (0..n_funcs).map(|_| std::collections::VecDeque::new()).collect(),
+        prewarm_boots: 0,
+        latencies_ns: Vec::with_capacity(sc.trace.len()),
+        cold_served: 0,
+        warm_served: 0,
+    };
+    let mut e = Engine::new(domain, host, sc.seed);
+    let head = sc.head_steps();
+    for &(at, func) in &sc.trace.arrivals {
+        e.spawn_at(at, func, head.clone());
+    }
+    e.run((sc.trace.len() as u64).saturating_mul(128).max(1 << 20));
+    let now = e.now();
+    e.domain.pool.finalize(now);
+    PolicyResult {
+        latencies_ns: std::mem::take(&mut e.domain.latencies_ns),
+        elapsed_ns: now,
+        cold_starts: e.domain.cold_served,
+        warm_hits: e.domain.warm_served,
+        prewarm_boots: e.domain.prewarm_boots,
+        expirations: e.domain.pool.expirations,
+        retirements: e.domain.pool.retirements,
+        idle_gb_seconds: e.domain.pool.idle_gb_seconds(),
+        monitor_events: e.domain.pool.monitor_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm};
+    use crate::workload::tenants::{TenantConfig, TenantTrace};
+
+    fn tiny_trace() -> TenantTrace {
+        TenantTrace::generate(&TenantConfig {
+            functions: 50,
+            duration_s: 60.0,
+            total_rps: 40.0,
+            seed: 0x7E57,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn cold_only_serves_everything_cold_with_zero_waste() {
+        let trace = tiny_trace();
+        let n = trace.len() as u64;
+        let sc = PolicyScenario::new(DriverKind::IncludeOsCold, trace, 1);
+        let mut p = ColdOnlyPolicy;
+        let r = run_policy_scenario(&sc, &mut p, Host::default());
+        assert_eq!(r.requests(), n);
+        assert_eq!(r.warm_hits, 0);
+        assert_eq!(r.cold_starts, n);
+        assert_eq!(r.retirements, n);
+        assert_eq!(r.idle_gb_seconds, 0.0);
+        assert_eq!(r.monitor_events, 0);
+        assert_eq!(r.prewarm_boots, 0);
+    }
+
+    #[test]
+    fn fixed_keepalive_gets_warm_hits_and_pays_waste() {
+        let sc = PolicyScenario::new(DriverKind::DockerWarm, tiny_trace(), 1);
+        let mut p = FixedKeepAlive::default();
+        let r = run_policy_scenario(&sc, &mut p, Host::default());
+        assert!(r.warm_hits > r.cold_starts, "head functions must reuse executors");
+        assert!(r.idle_gb_seconds > 0.0);
+        assert!(r.monitor_events > 0);
+    }
+
+    #[test]
+    fn warm_latency_below_cold_latency_docker() {
+        let trace = tiny_trace();
+        let cold = {
+            let sc = PolicyScenario::new(DriverKind::DockerWarm, trace.clone(), 1);
+            run_policy_scenario(&sc, &mut ColdOnlyPolicy, Host::default())
+        };
+        let warm = {
+            let sc = PolicyScenario::new(DriverKind::DockerWarm, trace, 1);
+            run_policy_scenario(&sc, &mut FixedKeepAlive::default(), Host::default())
+        };
+        assert!(
+            warm.quantile_ms(0.5) < cold.quantile_ms(0.5) / 5.0,
+            "warm p50 {} vs cold p50 {}",
+            warm.quantile_ms(0.5),
+            cold.quantile_ms(0.5)
+        );
+    }
+
+    #[test]
+    fn adaptive_policies_run_and_account_consistently() {
+        let trace = tiny_trace();
+        let n = trace.len() as u64;
+        for policy in [true, false] {
+            let sc = PolicyScenario::new(DriverKind::DockerWarm, trace.clone(), 1);
+            let r = if policy {
+                let mut p = HistogramPrewarm::new(sc.trace.functions);
+                run_policy_scenario(&sc, &mut p, Host::default())
+            } else {
+                let mut p = EwmaPredictive::new(sc.trace.functions);
+                run_policy_scenario(&sc, &mut p, Host::default())
+            };
+            assert_eq!(r.requests(), n);
+            assert_eq!(r.cold_starts + r.warm_hits, n);
+            assert!(r.idle_gb_seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn prewarm_lands_ahead_of_a_metronome() {
+        // One function, strict 90 s period: after the histogram fills, the
+        // policy must pre-warm ahead of arrivals and serve them warm.
+        let arrivals: Vec<(u64, u32)> =
+            (1..30u64).map(|i| (i * 90 * 1_000_000_000, 0)).collect();
+        let trace = TenantTrace { functions: 1, arrivals };
+        let sc = PolicyScenario::new(DriverKind::DockerWarm, trace, 1);
+        let mut p = HistogramPrewarm::new(1);
+        let r = run_policy_scenario(&sc, &mut p, Host::default());
+        assert!(r.prewarm_boots > 5, "prewarm boots {}", r.prewarm_boots);
+        assert!(r.warm_hits > 10, "warm hits {}", r.warm_hits);
+        // Pre-warming pays memory only around predicted arrivals — far
+        // less than fixed keep-alive would (90 s idle per gap).
+        let sc2 = PolicyScenario::new(DriverKind::DockerWarm, TenantTrace {
+            functions: 1,
+            arrivals: (1..30u64).map(|i| (i * 90 * 1_000_000_000, 0)).collect(),
+        }, 1);
+        let f = run_policy_scenario(&sc2, &mut FixedKeepAlive::default(), Host::default());
+        assert!(
+            r.idle_gb_seconds < f.idle_gb_seconds * 0.6,
+            "prewarm waste {} vs fixed {}",
+            r.idle_gb_seconds,
+            f.idle_gb_seconds
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = || {
+            let sc = PolicyScenario::new(DriverKind::DockerWarm, tiny_trace(), 9);
+            let mut p = EwmaPredictive::new(sc.trace.functions);
+            run_policy_scenario(&sc, &mut p, Host::default())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.latencies_ns, b.latencies_ns);
+        assert_eq!(a.idle_gb_seconds, b.idle_gb_seconds);
+        assert_eq!(a.prewarm_boots, b.prewarm_boots);
+    }
+}

@@ -1,9 +1,19 @@
 //! PJRT runtime (S11): loads the AOT-compiled HLO artifacts and executes
 //! them on the request path.  `json`/`manifest` are the (serde-free)
 //! manifest layer; `pjrt` wraps the `xla` crate.
+//!
+//! The `xla` crate is not in the offline registry, so real PJRT execution
+//! sits behind the `pjrt` cargo feature (which additionally requires
+//! adding the dependency by hand).  Without it the live stack compiles
+//! against an API-identical stub whose `Runtime::load` reports the
+//! missing backend; the DES half of the crate is unaffected.
 
 pub mod json;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use json::Json;

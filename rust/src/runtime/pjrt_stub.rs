@@ -1,0 +1,99 @@
+//! API-identical stand-in for [`pjrt`](self) when the `pjrt` cargo
+//! feature is off (the `xla` crate is not in the offline registry).
+//!
+//! `Runtime::load`/`load_only` always fail with a clear message, so the
+//! coordinator, CLI and examples compile and report the missing backend
+//! at runtime instead of the whole crate failing to build.  `Runtime` is
+//! uninhabited: every method body is statically unreachable.
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{FunctionEntry, Manifest};
+
+/// One compiled function (stub: never constructed).
+pub struct LoadedFunction {
+    pub entry: FunctionEntry,
+    /// One-time compile cost (the cold *deploy* cost, not per-request).
+    pub compile_ms: f64,
+}
+
+/// The PJRT runtime (stub: uninhabited, construction always fails).
+pub struct Runtime {
+    pub manifest: Manifest,
+    never: std::convert::Infallible,
+}
+
+/// Result of verifying a function against its manifest check values.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub name: String,
+    pub got_sum: f64,
+    pub want_sum: f64,
+    pub got_l2: f64,
+    pub want_l2: f64,
+    pub pass: bool,
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow!(
+        "PJRT runtime unavailable: coldfaas was built without the `pjrt` \
+         feature (the `xla` crate is not in the offline registry). \
+         The simulation stack (`coldfaas experiment ...`, `coldfaas policies`) \
+         is fully functional without it."
+    )
+}
+
+impl Runtime {
+    pub fn load(_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn load_only(_dir: impl AsRef<std::path::Path>, _names: &[&str]) -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn ensure_loaded(&mut self, _name: &str) -> Result<bool> {
+        match self.never {}
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        match self.never {}
+    }
+
+    pub fn get(&self, _name: &str) -> Option<&LoadedFunction> {
+        match self.never {}
+    }
+
+    pub fn entry(&self, _name: &str) -> Option<&FunctionEntry> {
+        match self.never {}
+    }
+
+    pub fn execute(&self, _name: &str, _input: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn execute_timed(&self, _name: &str, _input: &[f32]) -> Result<(Vec<f32>, f64)> {
+        match self.never {}
+    }
+
+    pub fn measure_exec_ms(&self, _name: &str, _iters: usize) -> Result<f64> {
+        match self.never {}
+    }
+
+    pub fn verify(&self, _name: &str) -> Result<CheckReport> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_backend() {
+        let err = Runtime::load("/nonexistent").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = Runtime::load_only("/nonexistent", &["echo"]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

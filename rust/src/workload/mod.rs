@@ -3,6 +3,7 @@
 //! CppCMS-like gateway (multi-process accept + 20 worker threads) in front
 //! of whichever startup technology is being measured.
 
+pub mod tenants;
 pub mod traces;
 
 use crate::metrics::Recorder;

@@ -1,0 +1,289 @@
+//! Multi-tenant arrival traces (S18): thousands of functions with
+//! Zipf-distributed popularity, diurnal load swings, and per-function
+//! burstiness — the workload shape production FaaS platforms actually
+//! schedule, layered on the same deterministic primitives as
+//! [`super::traces`].
+//!
+//! Azure-trace-style structure, synthesized: a few head functions carry
+//! most of the traffic (Zipf), mid-tail functions arrive every few
+//! seconds to minutes, and the long tail is invoked rarely enough that
+//! any fixed keep-alive window is pure waste.  Experiment E12 replays
+//! these traces through the lifecycle-policy lab.
+
+use crate::sim::Rng;
+
+/// Configuration for a multi-tenant trace.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Number of distinct functions (tenants), N >= 1.
+    pub functions: u32,
+    /// Trace horizon in (virtual) seconds.
+    pub duration_s: f64,
+    /// Aggregate mean arrival rate across all functions (req/s).
+    pub total_rps: f64,
+    /// Zipf popularity exponent (~1.1 matches measured FaaS skew).
+    pub zipf_exponent: f64,
+    /// Diurnal modulation depth in [0, 1): per-function rate swings by
+    /// `±depth` over one virtual day.
+    pub diurnal_depth: f64,
+    /// Virtual day length in seconds (compressed for simulation).
+    pub diurnal_period_s: f64,
+    /// Fraction of functions with on/off bursty arrivals instead of
+    /// (modulated) Poisson.
+    pub bursty_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            functions: 1000,
+            duration_s: 300.0,
+            total_rps: 200.0,
+            zipf_exponent: 1.1,
+            diurnal_depth: 0.6,
+            diurnal_period_s: 240.0,
+            bursty_fraction: 0.2,
+            seed: 0xE12,
+        }
+    }
+}
+
+/// A generated multi-tenant trace: `(arrival_ns, function_id)` pairs
+/// sorted by time.
+#[derive(Clone, Debug)]
+pub struct TenantTrace {
+    pub functions: u32,
+    pub arrivals: Vec<(u64, u32)>,
+}
+
+/// Normalized Zipf weights over `n` ranks with exponent `s`.
+pub fn zipf_weights(n: u32, s: f64) -> Vec<f64> {
+    let raw: Vec<f64> = (1..=n as u64).map(|i| (i as f64).powf(-s)).collect();
+    let z: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / z).collect()
+}
+
+impl TenantTrace {
+    /// Generate a trace deterministically from `cfg.seed`.  Each function
+    /// draws from its own forked RNG stream, so the result is independent
+    /// of generation order and stable across refactors.
+    pub fn generate(cfg: &TenantConfig) -> TenantTrace {
+        assert!(cfg.functions >= 1, "need at least one function");
+        assert!(cfg.total_rps > 0.0 && cfg.duration_s > 0.0);
+        assert!((0.0..1.0).contains(&cfg.diurnal_depth));
+        let weights = zipf_weights(cfg.functions, cfg.zipf_exponent);
+        let horizon_ns = cfg.duration_s * 1e9;
+        // Every k-th function is bursty (deterministic assignment);
+        // fraction 0 disables burstiness entirely.
+        let bursty_every = if cfg.bursty_fraction <= 0.0 {
+            0
+        } else {
+            ((1.0 / cfg.bursty_fraction).round() as u32).max(1)
+        };
+
+        let mut arrivals: Vec<(u64, u32)> = Vec::new();
+        for func in 0..cfg.functions {
+            let rate = cfg.total_rps * weights[func as usize];
+            if rate <= 0.0 {
+                continue;
+            }
+            let mut rng =
+                Rng::new(cfg.seed ^ (func as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            if bursty_every > 0 && func % bursty_every == 0 {
+                Self::gen_bursty(func, rate, horizon_ns, &mut rng, &mut arrivals);
+            } else {
+                Self::gen_diurnal_poisson(func, rate, cfg, horizon_ns, &mut rng, &mut arrivals);
+            }
+        }
+        arrivals.sort_unstable();
+        TenantTrace { functions: cfg.functions, arrivals }
+    }
+
+    /// Nonhomogeneous Poisson via thinning: candidate arrivals at the peak
+    /// rate, accepted with probability rate(t)/peak — preserves the mean
+    /// rate while the instantaneous rate follows the diurnal curve.
+    fn gen_diurnal_poisson(
+        func: u32,
+        rate: f64,
+        cfg: &TenantConfig,
+        horizon_ns: f64,
+        rng: &mut Rng,
+        out: &mut Vec<(u64, u32)>,
+    ) {
+        let peak = rate * (1.0 + cfg.diurnal_depth);
+        let mean_gap = 1e9 / peak;
+        // Per-function phase: tenants live in different timezones.
+        let phase = rng.next_f64() * std::f64::consts::TAU;
+        let omega = std::f64::consts::TAU / (cfg.diurnal_period_s * 1e9);
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exponential(mean_gap);
+            if t >= horizon_ns {
+                break;
+            }
+            let inst = rate * (1.0 + cfg.diurnal_depth * (omega * t + phase).sin());
+            if rng.next_f64() * peak < inst {
+                out.push((t as u64, func));
+            }
+        }
+    }
+
+    /// On/off bursts preserving the requested mean rate: Poisson at an
+    /// elevated in-burst rate during on-periods, silence during off-periods.
+    fn gen_bursty(
+        func: u32,
+        rate: f64,
+        horizon_ns: f64,
+        rng: &mut Rng,
+        out: &mut Vec<(u64, u32)>,
+    ) {
+        let on_mean_ns = 3.0e9;
+        let off_mean_ns = 27.0e9;
+        let duty = on_mean_ns / (on_mean_ns + off_mean_ns);
+        let burst_rate = rate / duty;
+        let mean_gap = 1e9 / burst_rate;
+        let mut t = 0.0f64;
+        loop {
+            let on_end = (t + rng.exponential(on_mean_ns)).min(horizon_ns);
+            let mut a = t;
+            loop {
+                a += rng.exponential(mean_gap);
+                if a >= on_end {
+                    break;
+                }
+                out.push((a as u64, func));
+            }
+            t = on_end + rng.exponential(off_mean_ns);
+            if t >= horizon_ns {
+                break;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Mean aggregate arrival rate over the trace span (req/s).
+    pub fn mean_rate_rps(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        let span = (self.arrivals.last().unwrap().0 - self.arrivals[0].0) as f64 / 1e9;
+        if span == 0.0 { 0.0 } else { (self.arrivals.len() - 1) as f64 / span }
+    }
+
+    /// Invocation count per function id.
+    pub fn per_function_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.functions as usize];
+        for &(_, f) in &self.arrivals {
+            counts[f as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TenantConfig {
+        TenantConfig {
+            functions: 200,
+            duration_s: 120.0,
+            total_rps: 60.0,
+            // Whole diurnal periods and no bursts: the thinning mean is
+            // phase-independent, so the rate check below is tight.
+            diurnal_period_s: 60.0,
+            bursty_fraction: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TenantTrace::generate(&small());
+        let b = TenantTrace::generate(&small());
+        assert_eq!(a.arrivals, b.arrivals);
+        let c = TenantTrace::generate(&TenantConfig { seed: 7, ..small() });
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+
+    #[test]
+    fn sorted_and_bounded() {
+        let t = TenantTrace::generate(&small());
+        assert!(t.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        let horizon = (small().duration_s * 1e9) as u64;
+        assert!(t.arrivals.iter().all(|&(at, f)| at < horizon && f < 200));
+    }
+
+    #[test]
+    fn aggregate_rate_near_target() {
+        let cfg = small();
+        let t = TenantTrace::generate(&cfg);
+        let want = cfg.total_rps * cfg.duration_s;
+        let got = t.len() as f64;
+        assert!(
+            (got / want - 1.0).abs() < 0.2,
+            "arrivals {got} vs expected {want}"
+        );
+    }
+
+    #[test]
+    fn zipf_mass_ordering() {
+        let t = TenantTrace::generate(&small());
+        let counts = t.per_function_counts();
+        // Head decile must far outweigh the tail half.
+        let head: u64 = counts[..20].iter().sum();
+        let tail: u64 = counts[100..].iter().sum();
+        assert!(head > 3 * tail.max(1), "head {head} vs tail {tail}");
+        // Rank-1 is the single most invoked function (statistically safe
+        // at this rate split: rank-1 carries ~18% of all traffic).
+        let max = *counts.iter().max().unwrap();
+        assert_eq!(counts[0], max, "rank-1 must dominate: {:?}", &counts[..5]);
+    }
+
+    #[test]
+    fn zipf_weights_normalized_and_decreasing() {
+        let w = zipf_weights(1000, 1.1);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(w.windows(2).all(|p| p[0] > p[1]));
+    }
+
+    #[test]
+    fn bursty_functions_have_long_gaps() {
+        let cfg = TenantConfig {
+            functions: 10,
+            duration_s: 300.0,
+            total_rps: 50.0,
+            bursty_fraction: 0.1, // exactly function 0
+            ..Default::default()
+        };
+        let t = TenantTrace::generate(&cfg);
+        let f0: Vec<u64> =
+            t.arrivals.iter().filter(|&&(_, f)| f == 0).map(|&(at, _)| at).collect();
+        assert!(f0.len() > 50, "head function must fire: {}", f0.len());
+        // Off-periods (mean 27 s) dwarf the in-burst gaps.
+        let max_gap = f0.windows(2).map(|w| w[1] - w[0]).max().unwrap();
+        assert!(max_gap > 5_000_000_000, "max gap {max_gap} ns");
+    }
+
+    #[test]
+    fn scales_to_production_function_counts() {
+        let cfg = TenantConfig {
+            functions: 2000,
+            duration_s: 60.0,
+            total_rps: 300.0,
+            ..Default::default()
+        };
+        let t = TenantTrace::generate(&cfg);
+        assert!(t.len() > 10_000);
+        let nonzero = t.per_function_counts().iter().filter(|&&c| c > 0).count();
+        assert!(nonzero > 200, "tail must be populated: {nonzero}");
+    }
+}

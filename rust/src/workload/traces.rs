@@ -119,5 +119,38 @@ mod tests {
             Trace::poisson(10.0, 5.0, 9).arrivals_ns,
             Trace::poisson(10.0, 5.0, 9).arrivals_ns
         );
+        assert_eq!(
+            Trace::bursty(50.0, 1.0, 4.0, 60.0, 9).arrivals_ns,
+            Trace::bursty(50.0, 1.0, 4.0, 60.0, 9).arrivals_ns
+        );
+        assert_ne!(
+            Trace::poisson(10.0, 5.0, 9).arrivals_ns,
+            Trace::poisson(10.0, 5.0, 10).arrivals_ns
+        );
+    }
+
+    #[test]
+    fn bursty_duty_cycle_mean_rate() {
+        // 100 rps in-burst, 2 s on / 8 s off => 20% duty => ~20 rps mean.
+        let t = Trace::bursty(100.0, 2.0, 8.0, 1200.0, 11);
+        let mean = t.len() as f64 / 1200.0;
+        assert!((mean / 20.0 - 1.0).abs() < 0.25, "duty-cycle mean rate {mean}");
+    }
+
+    #[test]
+    fn bursty_in_burst_rate_matches_burst_rps() {
+        // Gaps inside a burst follow the in-burst rate: the median
+        // inter-arrival must sit near 1/burst_rps, far below the mean
+        // implied by the duty cycle.
+        let t = Trace::bursty(200.0, 2.0, 20.0, 600.0, 12);
+        let mut gaps: Vec<u64> =
+            t.arrivals_ns.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        let median_gap = gaps[gaps.len() / 2] as f64;
+        let in_burst_gap = 1e9 / 200.0;
+        assert!(
+            median_gap < 3.0 * in_burst_gap,
+            "median gap {median_gap} ns vs in-burst {in_burst_gap} ns"
+        );
     }
 }

