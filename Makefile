@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies
+.PHONY: build test artifacts experiments policies fleet
 
 build:
 	cd rust && cargo build --release
@@ -19,3 +19,6 @@ experiments: build
 
 policies: build
 	./rust/target/release/coldfaas policies --quick
+
+fleet: build
+	./rust/target/release/coldfaas fleet --quick

@@ -1,0 +1,19 @@
+//! Bench E13: cluster-scale fleet sweep — lifecycle policy x placement
+//! scheduler x driver over a 1000-function Zipf tenant trace on an
+//! 8-node cluster, on the unified platform layer.
+//!
+//!     cargo bench --bench e13_fleet
+
+use coldfaas::experiments::{fleet, ExpConfig};
+
+fn main() {
+    println!("== bench e13_fleet: the policy lab at cluster scale ==\n");
+    let t0 = std::time::Instant::now();
+    let report = fleet(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE13 regeneration (32 cells x ~20k multi-tenant invocations, 8 nodes): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e13 regressions: {:#?}", report.failures());
+}

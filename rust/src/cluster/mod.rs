@@ -1,254 +1,15 @@
-//! Multi-node cluster manager (extension of §IV-C and the Wang et al.
-//! co-location observation the paper cites).
+//! Multi-node cluster substrate (S19) — now a façade over the unified
+//! [`crate::platform`] layer.
 //!
-//! The paper's single-host prototype leaves two cluster-level questions
-//! open, both of which it calls out: (1) function images must be
-//! distributed to every node that may receive a request, and (2) AWS
-//! *co-locates* a function's executors on one machine, which "influences
-//! startup times when sudden scale-out is required".  This module builds
-//! the cluster substrate: N nodes with per-node image caches and per-node
-//! contention, a pluggable placement policy, and the burst scale-out
-//! experiment (E11) comparing co-location against spreading — showing why
-//! the unikernel's 2.5 MB image makes spread placement affordable.
+//! The placement policies, per-node image caches, and the burst
+//! scale-out rig (E11) all live in `platform` since the three DES
+//! wirings were collapsed; this module re-exports the historical names
+//! so existing call sites and docs keep working.
 
-pub mod sim;
+/// Historical alias for the burst-rig wiring.
+pub mod sim {
+    pub use crate::platform::presets::{run_burst, BurstResult, ClusterConfig};
+}
 
+pub use crate::platform::sched::{PlacementOutcome, SchedPolicy as Policy, Scheduler};
 pub use sim::{run_burst, BurstResult, ClusterConfig};
-
-use crate::image::{Image, NodeCache};
-use crate::sim::Rng;
-
-/// Placement policy for new executor starts.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Policy {
-    /// Pack onto the node already running this function until its cores
-    /// saturate (AWS-like co-location per Wang et al.).
-    CoLocate,
-    /// Uniform random over all nodes.
-    Random,
-    /// Fewest in-flight starts first (power of all choices).
-    LeastLoaded,
-    /// Least-loaded among nodes that already cache the image; fall back
-    /// to least-loaded overall (pays a transfer) if none do.
-    Locality,
-}
-
-impl Policy {
-    pub const ALL: [Policy; 4] =
-        [Policy::CoLocate, Policy::Random, Policy::LeastLoaded, Policy::Locality];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Policy::CoLocate => "co-locate",
-            Policy::Random => "random",
-            Policy::LeastLoaded => "least-loaded",
-            Policy::Locality => "locality",
-        }
-    }
-}
-
-/// One cluster node's scheduler-visible state.
-pub struct Node {
-    pub id: usize,
-    pub cores: u32,
-    /// Executor slots bounded by *memory*, not cores — Wang et al.: AWS
-    /// co-locates a function's instances "roughly while they fit into the
-    /// physical memory", far past the core count.  That gap (mem_slots >>
-    /// cores) is exactly what makes co-located bursts queue on the CPU.
-    pub mem_slots: u32,
-    pub inflight: u32,
-    pub cache: NodeCache,
-}
-
-/// The cluster scheduler: placement decisions + image-distribution
-/// bookkeeping.  Pure logic; the DES wiring lives in [`sim`].
-pub struct Scheduler {
-    pub policy: Policy,
-    pub nodes: Vec<Node>,
-    pub transfers: u64,
-    pub transferred_bytes: u64,
-}
-
-/// Outcome of one placement: the chosen node and the bytes that must be
-/// pulled before the start can proceed (0 on cache hit).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct PlacementOutcome {
-    pub node: usize,
-    pub fetch_bytes: u64,
-}
-
-impl Scheduler {
-    pub fn new(policy: Policy, n_nodes: usize, cores_per_node: u32) -> Scheduler {
-        // Default memory headroom: 8 executors per core (128 MB functions
-        // on a host with a few GB per core).
-        Self::with_mem_slots(policy, n_nodes, cores_per_node, cores_per_node * 8)
-    }
-
-    pub fn with_mem_slots(
-        policy: Policy,
-        n_nodes: usize,
-        cores_per_node: u32,
-        mem_slots: u32,
-    ) -> Scheduler {
-        Scheduler {
-            policy,
-            nodes: (0..n_nodes)
-                .map(|id| Node {
-                    id,
-                    cores: cores_per_node,
-                    mem_slots,
-                    inflight: 0,
-                    cache: NodeCache::new(None),
-                })
-                .collect(),
-            transfers: 0,
-            transferred_bytes: 0,
-        }
-    }
-
-    /// Pre-seed the image on the first `n` nodes.
-    pub fn seed_image(&mut self, img: &Image, n: usize) {
-        for node in self.nodes.iter_mut().take(n) {
-            let _ = node.cache.fetch(img);
-        }
-    }
-
-    /// Total bytes resident across all node caches.
-    pub fn footprint_bytes(&self) -> u64 {
-        self.nodes.iter().map(|n| n.cache.used_bytes()).sum()
-    }
-
-    fn least_loaded<'a>(&self, candidates: impl Iterator<Item = &'a Node>) -> Option<usize> {
-        candidates.min_by_key(|n| (n.inflight, n.id)).map(|n| n.id)
-    }
-
-    /// Place one start for `img`; updates in-flight counts and caches.
-    pub fn place(&mut self, img: &Image, rng: &mut Rng) -> PlacementOutcome {
-        let id = match self.policy {
-            Policy::Random => rng.below(self.nodes.len() as u64) as usize,
-            Policy::LeastLoaded => self.least_loaded(self.nodes.iter()).unwrap(),
-            Policy::Locality => self
-                .least_loaded(self.nodes.iter().filter(|n| n.cache.contains(&img.name)))
-                .unwrap_or_else(|| self.least_loaded(self.nodes.iter()).unwrap()),
-            Policy::CoLocate => {
-                // Stay on the cached node while executors still *fit in
-                // memory* (Wang et al.), even far past the core count —
-                // then spill to the least-loaded node overall.
-                let home = self
-                    .nodes
-                    .iter()
-                    .filter(|n| n.cache.contains(&img.name) && n.inflight < n.mem_slots)
-                    .map(|n| n.id)
-                    .next();
-                home.unwrap_or_else(|| self.least_loaded(self.nodes.iter()).unwrap())
-            }
-        };
-        let node = &mut self.nodes[id];
-        node.inflight += 1;
-        let fetch_bytes = match node.cache.fetch(img) {
-            Ok(Some(bytes)) => {
-                self.transfers += 1;
-                self.transferred_bytes += bytes;
-                bytes
-            }
-            _ => 0,
-        };
-        PlacementOutcome { node: id, fetch_bytes }
-    }
-
-    pub fn complete(&mut self, node: usize) {
-        let n = &mut self.nodes[node];
-        debug_assert!(n.inflight > 0);
-        n.inflight -= 1;
-    }
-
-    /// How many distinct nodes ended up caching the image.
-    pub fn nodes_with_image(&self, name: &str) -> usize {
-        self.nodes.iter().filter(|n| n.cache.contains(name)).count()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::virt::Tech;
-
-    fn img() -> Image {
-        Image::for_function("f", Tech::IncludeOsHvt)
-    }
-
-    fn sched(policy: Policy) -> Scheduler {
-        let mut s = Scheduler::new(policy, 4, 2);
-        s.seed_image(&img(), 1); // image starts on node 0 only
-        s
-    }
-
-    #[test]
-    fn colocate_packs_past_core_count_until_memory() {
-        let mut s = sched(Policy::CoLocate); // 2 cores, 16 mem slots
-        let mut rng = Rng::new(1);
-        // Keeps packing node 0 well beyond its 2 cores (the Wang et al.
-        // behaviour that inflates scale-out startup latency)...
-        for _ in 0..16 {
-            assert_eq!(s.place(&img(), &mut rng).node, 0);
-        }
-        // ...and only spills once memory slots are exhausted.
-        let spill = s.place(&img(), &mut rng);
-        assert_ne!(spill.node, 0);
-        assert_eq!(spill.fetch_bytes, img().bytes);
-    }
-
-    #[test]
-    fn locality_prefers_cached_nodes() {
-        let mut s = sched(Policy::Locality);
-        let mut rng = Rng::new(2);
-        for _ in 0..5 {
-            // With only node 0 cached, locality keeps hitting node 0 even
-            // as load builds (that is its weakness under bursts).
-            assert_eq!(s.place(&img(), &mut rng).node, 0);
-        }
-        assert_eq!(s.transfers, 0);
-    }
-
-    #[test]
-    fn least_loaded_spreads_and_transfers() {
-        let mut s = sched(Policy::LeastLoaded);
-        let mut rng = Rng::new(3);
-        let nodes: Vec<usize> = (0..4).map(|_| s.place(&img(), &mut rng).node).collect();
-        let mut sorted = nodes.clone();
-        sorted.sort_unstable();
-        assert_eq!(sorted, vec![0, 1, 2, 3], "{nodes:?}");
-        assert_eq!(s.transfers, 3); // 3 cache misses
-        assert_eq!(s.nodes_with_image("f"), 4);
-    }
-
-    #[test]
-    fn complete_releases_load() {
-        let mut s = sched(Policy::LeastLoaded);
-        let mut rng = Rng::new(4);
-        let p = s.place(&img(), &mut rng);
-        s.complete(p.node);
-        assert_eq!(s.nodes[p.node].inflight, 0);
-    }
-
-    #[test]
-    fn footprint_counts_all_copies() {
-        let mut s = sched(Policy::LeastLoaded);
-        let mut rng = Rng::new(5);
-        for _ in 0..4 {
-            s.place(&img(), &mut rng);
-        }
-        assert_eq!(s.footprint_bytes(), 4 * img().bytes);
-    }
-
-    #[test]
-    fn random_is_deterministic_per_seed() {
-        let run = |seed| {
-            let mut s = sched(Policy::Random);
-            let mut rng = Rng::new(seed);
-            (0..10).map(|_| s.place(&img(), &mut rng).node).collect::<Vec<_>>()
-        };
-        assert_eq!(run(7), run(7));
-        assert_ne!(run(7), run(8));
-    }
-}

@@ -1,0 +1,417 @@
+//! E13: the fleet sweep — the policy lab taken cluster-scale on the
+//! unified platform layer.  The 1000-function Zipf tenant trace (S18) is
+//! replayed against an 8–32 node cluster for every lifecycle policy ×
+//! placement scheduler × driver combination, reporting the
+//! p50/p99-latency vs GB·s-idle-waste vs cross-node-image-transfer
+//! frontier — and asserting the paper's cold-only unikernel row stays
+//! Pareto-optimal when image distribution and placement enter the
+//! picture.
+
+use super::ExpConfig;
+use crate::fnplat::{DriverKind, DEFAULT_EXEC_MS};
+use crate::platform::presets::INCLUDEOS_PAUSED_BYTES;
+use crate::platform::{
+    run_platform, DriverProfile, ImageSeeding, PlatformConfig, PlatformLoad, RequestPath,
+    SchedPolicy,
+};
+use crate::policy::{
+    ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
+};
+use crate::report::Report;
+use crate::sim::Host;
+use crate::workload::tenants::{TenantConfig, TenantTrace};
+
+/// Full E13 configuration: the tenant trace plus the cluster shape.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub tenant: TenantConfig,
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    pub schedulers: Vec<SchedPolicy>,
+    pub host: Host,
+}
+
+/// Derive an E13 configuration from the shared experiment config: the
+/// trace is sized so total invocations scale with `cfg.requests`
+/// (default ~20k arrivals over 1000 functions per cell; `--quick` ~3k —
+/// the grid is 32 cells, so totals multiply).
+pub fn fleet_config(cfg: &ExpConfig) -> FleetConfig {
+    let duration_s = (cfg.requests as f64 / 25.0).clamp(60.0, 600.0);
+    let total_rps = (cfg.requests as f64 * 2.0) / duration_s;
+    FleetConfig {
+        tenant: TenantConfig {
+            functions: 1000,
+            duration_s,
+            total_rps,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        nodes: 8,
+        cores_per_node: 8,
+        schedulers: SchedPolicy::ALL.to_vec(),
+        host: cfg.host,
+    }
+}
+
+/// One (driver, policy, scheduler) cell of the fleet sweep.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    pub driver: DriverKind,
+    pub policy: String,
+    pub scheduler: SchedPolicy,
+    pub requests: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cold_fraction: f64,
+    pub idle_gb_seconds: f64,
+    pub monitor_events: u64,
+    pub prewarm_boots: u64,
+    pub transfers: u64,
+    pub transferred_mb: f64,
+    /// On the 3-way Pareto frontier of (p99, idle waste, bytes moved)?
+    pub on_frontier: bool,
+}
+
+impl FleetCell {
+    pub fn label(&self) -> String {
+        let d = match self.driver {
+            DriverKind::DockerWarm => "docker",
+            DriverKind::IncludeOsCold => "includeos",
+        };
+        format!("{d}+{}+{}", self.policy, self.scheduler.name())
+    }
+}
+
+fn fresh_policies(n_funcs: u32) -> Vec<Box<dyn LifecyclePolicy>> {
+    vec![
+        Box::new(ColdOnlyPolicy),
+        Box::new(FixedKeepAlive::default()),
+        Box::new(HistogramPrewarm::new(n_funcs)),
+        Box::new(EwmaPredictive::new(n_funcs)),
+    ]
+}
+
+/// Mark Pareto-optimal cells in the (p99, waste, bytes-moved) space: a
+/// cell is dominated if some other cell is no worse on all three axes and
+/// strictly better on at least one.
+fn mark_frontier(cells: &mut [FleetCell]) {
+    let snapshot: Vec<(f64, f64, f64)> = cells
+        .iter()
+        .map(|c| (c.p99_ms, c.idle_gb_seconds, c.transferred_mb))
+        .collect();
+    for (i, c) in cells.iter_mut().enumerate() {
+        let (p99, waste, moved) = snapshot[i];
+        c.on_frontier = !snapshot.iter().enumerate().any(|(j, &(op, ow, om))| {
+            j != i
+                && op <= p99
+                && ow <= waste
+                && om <= moved
+                && (op < p99 || ow < waste || om < moved)
+        });
+    }
+}
+
+fn cell_config(
+    cfg: &FleetConfig,
+    driver: DriverKind,
+    scheduler: SchedPolicy,
+    trace: &TenantTrace,
+) -> PlatformConfig {
+    PlatformConfig {
+        driver: DriverProfile::from_kind(driver),
+        nodes: cfg.nodes,
+        cores_per_node: cfg.cores_per_node,
+        mem_slots_per_node: cfg.cores_per_node.saturating_mul(8),
+        scheduler,
+        functions: cfg.tenant.functions,
+        exec_ms: DEFAULT_EXEC_MS,
+        mem_bytes_per_slot: match driver {
+            DriverKind::DockerWarm => driver.tech().warm_memory_bytes(),
+            DriverKind::IncludeOsCold => INCLUDEOS_PAUSED_BYTES,
+        },
+        seeding: ImageSeeding::RoundRobin,
+        fabric_gbps: 40.0,
+        path: RequestPath::Agent {
+            client: crate::net::Site::LabStockholm,
+            server: crate::net::Site::LabStockholm,
+            include_conn_setup: false,
+            placement: crate::fnplat::Placement::LocalLab,
+            db: crate::fnplat::DbBackend::Postgres,
+        },
+        load: PlatformLoad::Tenants(trace.clone()),
+        warmup_keep_ns: 30 * 1_000_000_000,
+        // Hot path stays O(1) memory per series: quantiles come from the
+        // streaming per-node histograms, not raw sample vectors.
+        exact_latencies: false,
+        seed: cfg.tenant.seed,
+    }
+}
+
+/// Run the full driver x policy x scheduler grid over one generated trace.
+pub fn fleet_cells(cfg: &FleetConfig) -> Vec<FleetCell> {
+    let trace = TenantTrace::generate(&cfg.tenant);
+    let mut cells = Vec::new();
+    for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
+        for &scheduler in &cfg.schedulers {
+            for mut policy in fresh_policies(cfg.tenant.functions) {
+                let pcfg = cell_config(cfg, driver, scheduler, &trace);
+                let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
+                cells.push(FleetCell {
+                    driver,
+                    policy: policy.name(),
+                    scheduler,
+                    requests: r.requests,
+                    p50_ms: r.quantile_ms(0.5),
+                    p99_ms: r.quantile_ms(0.99),
+                    cold_fraction: r.cold_fraction(),
+                    idle_gb_seconds: r.idle_gb_seconds,
+                    monitor_events: r.monitor_events,
+                    prewarm_boots: r.prewarm_boots,
+                    transfers: r.transfers,
+                    transferred_mb: r.transferred_bytes as f64 / 1e6,
+                    on_frontier: false,
+                });
+            }
+        }
+    }
+    mark_frontier(&mut cells);
+    cells
+}
+
+fn find<'a>(
+    cells: &'a [FleetCell],
+    driver: DriverKind,
+    policy: &str,
+    sched: SchedPolicy,
+) -> &'a FleetCell {
+    cells
+        .iter()
+        .find(|c| c.driver == driver && c.policy == policy && c.scheduler == sched)
+        .expect("cell present")
+}
+
+/// E13 report over an explicit configuration (the CLI subcommand path).
+pub fn fleet_with(cfg: &FleetConfig) -> Report {
+    let mut report = Report::new(&format!(
+        "E13: fleet sweep — policy x scheduler x driver over {} nodes \
+         ({} fns, Zipf {:.1}, {:.0} rps, {:.0} s)",
+        cfg.nodes,
+        cfg.tenant.functions,
+        cfg.tenant.zipf_exponent,
+        cfg.tenant.total_rps,
+        cfg.tenant.duration_s
+    ));
+    let cells = fleet_cells(cfg);
+
+    report.note(format!(
+        "{:<36} {:>8} {:>8} {:>10} {:>7} {:>11} {:>7} {:>9}  {}",
+        "driver+policy+scheduler",
+        "reqs",
+        "p50 ms",
+        "p99 ms",
+        "cold%",
+        "waste GB·s",
+        "pulls",
+        "moved MB",
+        "frontier"
+    ));
+    for c in &cells {
+        report.note(format!(
+            "{:<36} {:>8} {:>8.2} {:>10.1} {:>6.1}% {:>11.2} {:>7} {:>9.1}  {}",
+            c.label(),
+            c.requests,
+            c.p50_ms,
+            c.p99_ms,
+            c.cold_fraction * 100.0,
+            c.idle_gb_seconds,
+            c.transfers,
+            c.transferred_mb,
+            if c.on_frontier { "*" } else { "" }
+        ));
+    }
+
+    let ll = SchedPolicy::LeastLoaded;
+    let inc_cold_ll = find(&cells, DriverKind::IncludeOsCold, "cold-only", ll);
+    let doc_cold_ll = find(&cells, DriverKind::DockerWarm, "cold-only", ll);
+    let inc_cold_colo = find(&cells, DriverKind::IncludeOsCold, "cold-only", SchedPolicy::CoLocate);
+
+    // The paper's lifecycle is still free at cluster scale: no retention,
+    // no polling, on any scheduler.
+    let max_inc_cold_waste = cells
+        .iter()
+        .filter(|c| c.driver == DriverKind::IncludeOsCold && c.policy == "cold-only")
+        .map(|c| c.idle_gb_seconds)
+        .fold(0.0, f64::max);
+    report.band("includeos+cold-only idle waste (all scheds)", "GB·s", max_inc_cold_waste, 0.0, 0.0);
+    report.band(
+        "includeos+cold-only monitor events",
+        "events",
+        inc_cold_ll.monitor_events as f64,
+        0.0,
+        0.0,
+    );
+    // The headline: the zero-waste unikernel row stays Pareto-optimal on
+    // the cluster-scale (p99, waste, bytes-moved) frontier.
+    let inc_cold_on_frontier = cells.iter().any(|c| {
+        c.driver == DriverKind::IncludeOsCold && c.policy == "cold-only" && c.on_frontier
+    });
+    report.band(
+        "includeos+cold-only on (p99, waste, moved) frontier",
+        "bool",
+        if inc_cold_on_frontier { 1.0 } else { 0.0 },
+        1.0,
+        1.0,
+    );
+    // Docker's cold path still cannot sustain the open-loop tenant load
+    // even with 8 nodes' engines in parallel: cold-only stays viable only
+    // on the unikernel.
+    report.band(
+        "docker+cold-only p99 / includeos+cold-only p99",
+        "ratio",
+        doc_cold_ll.p99_ms / inc_cold_ll.p99_ms,
+        3.0,
+        f64::INFINITY,
+    );
+    // Placement economics: co-location minimizes image movement...
+    report.band(
+        "co-locate/least-loaded bytes moved (includeos cold)",
+        "ratio",
+        inc_cold_colo.transferred_mb / nonzero(inc_cold_ll.transferred_mb),
+        0.0,
+        0.5,
+    );
+    // ...and the smaller unikernel image is what makes ignoring locality
+    // cheaper: same scheduler, same trace, ~2.4x fewer bytes moved than
+    // the Docker driver's Alpine image (2.5 MB vs 6 MB per pull).
+    report.band(
+        "docker/includeos bytes moved (least-loaded, cold)",
+        "ratio",
+        doc_cold_ll.transferred_mb / nonzero(inc_cold_ll.transferred_mb),
+        1.3,
+        6.0,
+    );
+    // Every cell served the whole trace (no lost requests at any scale).
+    let reqs = cells[0].requests;
+    let all_equal = cells.iter().all(|c| c.requests == reqs);
+    report.band(
+        "all cells served the full trace",
+        "bool",
+        if all_equal { 1.0 } else { 0.0 },
+        1.0,
+        1.0,
+    );
+
+    report.note(
+        "reading: at cluster scale the warm policies still buy p99 with resident \
+         memory + monitoring, and placement adds an image-movement axis — the \
+         cold-only unikernel row stays on the frontier because its 2.5 MB image \
+         makes spread placement nearly free",
+    );
+    report
+}
+
+fn nonzero(v: f64) -> f64 {
+    v.max(1e-9)
+}
+
+/// E13 via the shared experiment config (the `experiment fleet` path).
+pub fn fleet(cfg: &ExpConfig) -> Report {
+    fleet_with(&fleet_config(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reduced load for the structural unit tests; the full `--quick`
+    /// grid (with its paper checks) runs once in `fleet_checks_pass_quick`.
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            tenant: TenantConfig {
+                functions: 1000,
+                duration_s: 30.0,
+                total_rps: 60.0,
+                seed: 0xE13,
+                ..Default::default()
+            },
+            nodes: 4,
+            cores_per_node: 8,
+            schedulers: vec![SchedPolicy::CoLocate, SchedPolicy::LeastLoaded],
+            host: Host::default(),
+        }
+    }
+
+    #[test]
+    fn fleet_checks_pass_quick() {
+        let r = fleet(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+
+    #[test]
+    fn grid_covers_policy_x_scheduler_x_driver() {
+        let cfg = small_cfg();
+        let cells = fleet_cells(&cfg);
+        assert_eq!(cells.len(), 2 * 2 * 4);
+        for name in ["cold-only", "fixed-600s", "histogram", "ewma"] {
+            for d in [DriverKind::DockerWarm, DriverKind::IncludeOsCold] {
+                for s in &cfg.schedulers {
+                    assert!(
+                        cells
+                            .iter()
+                            .any(|c| c.driver == d && c.policy == name && c.scheduler == *s),
+                        "missing cell {d:?}+{name}+{}",
+                        s.name()
+                    );
+                }
+            }
+        }
+        let n = cells[0].requests;
+        assert!(n > 500, "trace too small: {n}");
+        assert!(cells.iter().all(|c| c.requests == n));
+    }
+
+    #[test]
+    fn deterministic_report_per_seed() {
+        let a = fleet_with(&small_cfg()).render();
+        let b = fleet_with(&small_cfg()).render();
+        assert_eq!(a, b);
+        let mut other = small_cfg();
+        other.tenant.seed = 1;
+        let c = fleet_with(&other).render();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn cold_only_unikernel_stays_pareto_optimal_at_cluster_scale() {
+        let cells = fleet_cells(&small_cfg());
+        assert!(cells
+            .iter()
+            .filter(|c| c.driver == DriverKind::IncludeOsCold && c.policy == "cold-only")
+            .all(|c| c.idle_gb_seconds == 0.0 && c.monitor_events == 0));
+        assert!(
+            cells.iter().any(|c| c.driver == DriverKind::IncludeOsCold
+                && c.policy == "cold-only"
+                && c.on_frontier),
+            "zero-waste cold-only row must stay on the cluster frontier"
+        );
+    }
+
+    #[test]
+    fn colocation_moves_fewer_bytes_than_spreading() {
+        let cells = fleet_cells(&small_cfg());
+        let colo = find(
+            &cells,
+            DriverKind::IncludeOsCold,
+            "cold-only",
+            SchedPolicy::CoLocate,
+        );
+        let ll = find(
+            &cells,
+            DriverKind::IncludeOsCold,
+            "cold-only",
+            SchedPolicy::LeastLoaded,
+        );
+        assert!(ll.transfers > 0, "spreading must pull images");
+        assert!(colo.transferred_mb < ll.transferred_mb);
+    }
+}

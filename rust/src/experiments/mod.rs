@@ -1,10 +1,11 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E12).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E13).
 
 pub mod cloud;
 pub mod complexity;
 pub mod decompose;
+pub mod fleet;
 pub mod fnlocal;
 pub mod images;
 pub mod policies;
@@ -15,6 +16,7 @@ pub mod waste;
 pub use cloud::{distance_sweep, table1};
 pub use complexity::complexity;
 pub use decompose::decompose;
+pub use fleet::fleet;
 pub use fnlocal::fig4;
 pub use images::images;
 pub use policies::policies;
@@ -37,13 +39,14 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "distance" => distance_sweep(cfg),
         "scaleout" => scaleout(cfg),
         "policies" => policies(cfg),
+        "fleet" => fleet(cfg),
         _ => return None,
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
-    "distance", "scaleout", "policies",
+    "distance", "scaleout", "policies", "fleet",
 ];
 
 use crate::sim::Host;

@@ -14,10 +14,15 @@
 //!   lifecycle management at all.
 
 pub mod pool;
-pub mod sim;
+
+/// The DES wiring moved into the unified [`crate::platform`] layer; this
+/// alias keeps the historical `fnplat::sim` paths working.
+pub mod sim {
+    pub use crate::platform::presets::{run_scenario, Load, Scenario, ScenarioResult};
+}
 
 pub use pool::{ColdOnly, Dispatch, WarmPool};
-pub use sim::{run_scenario, FnDomain, Scenario, ScenarioResult};
+pub use sim::{run_scenario, Scenario, ScenarioResult};
 
 use crate::sim::{Dist, LockClass, Step};
 use crate::virt::Tech;

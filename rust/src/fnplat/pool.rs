@@ -161,6 +161,13 @@ impl WarmPool {
         self.idle.get(func).map_or(0, |q| q.len())
     }
 
+    /// Idle warm executors still live at `now` (expires stale slots first).
+    /// Used by the platform router to decide warm routing before claiming.
+    pub fn warm_available(&mut self, func: &str, now: u64) -> usize {
+        self.expire(func, now);
+        self.idle_count(func)
+    }
+
     pub fn alive_count(&self, func: &str) -> u64 {
         self.alive.get(func).copied().unwrap_or(0)
     }
@@ -382,6 +389,16 @@ mod tests {
         // Finalize after: charge up to the deadline, not the wall clock.
         p.finalize(500 * S);
         assert_eq!(p.idle_mem_byte_ns, (7 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn warm_available_expires_before_counting() {
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release_until("f", 0, 5 * S);
+        assert_eq!(p.warm_available("f", 3 * S), 1);
+        assert_eq!(p.warm_available("f", 6 * S), 0);
+        assert_eq!(p.expirations, 1);
     }
 
     #[test]

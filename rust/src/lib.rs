@@ -7,10 +7,12 @@
 //! The crate has two halves that share one set of substrate models:
 //!
 //! * a **discrete-event simulation** stack ([`sim`], [`virt`], [`net`],
-//!   [`workload`], [`fnplat`], [`lambda`], [`policy`]) that regenerates
-//!   every figure and table of the paper's evaluation in virtual time —
-//!   plus the keep-alive policy lab (E12) that quantifies the cold-only
-//!   thesis against the lifecycle policies real platforms run — and
+//!   [`workload`], [`fnplat`], [`lambda`], [`policy`], and the unified
+//!   [`platform`] layer every experiment is a configuration of) that
+//!   regenerates every figure and table of the paper's evaluation in
+//!   virtual time — plus the keep-alive policy lab (E12) and the
+//!   cluster-scale fleet sweep (E13) that quantify the cold-only thesis
+//!   against the lifecycle policies real platforms run — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
 //!   [`runtime`]) — a real HTTP control plane whose executors run
 //!   AOT-compiled JAX/Pallas functions through PJRT (python never on the
@@ -30,6 +32,7 @@ pub mod image;
 pub mod lambda;
 pub mod metrics;
 pub mod net;
+pub mod platform;
 pub mod policy;
 pub mod report;
 pub mod runtime;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   experiment <name>|all   regenerate a paper figure/table (DESIGN.md §5)
 //!   policies                keep-alive policy lab (E12): latency-vs-waste frontier
+//!   fleet                   cluster-scale fleet sweep (E13): policy x scheduler x driver
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
@@ -21,6 +22,7 @@ fn main() {
     let code = match args.subcommand.as_str() {
         "experiment" => cmd_experiment(&args),
         "policies" => cmd_policies(&args),
+        "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -43,12 +45,13 @@ coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
 
 USAGE: coldfaas <subcommand> [options]
 
-  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|all>
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|all>
       --requests N          requests per cell (default 10000; paper value)
       --parallelism LIST    e.g. 1,5,10,20,40 (default)
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
       --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report (BENCH_*.json)
 
   policies                  keep-alive policy lab (E12): every lifecycle
                             policy x driver over a multi-tenant Zipf trace
@@ -59,6 +62,21 @@ USAGE: coldfaas <subcommand> [options]
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
       --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  fleet                     cluster-scale fleet sweep (E13): lifecycle
+                            policy x placement scheduler x driver over a
+                            1000-function Zipf trace on an N-node cluster
+      --nodes N             cluster size, 1..=32 (default 8)
+      --cores N             cores per node (default 8)
+      --functions N         distinct functions (default 1000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default sized from --requests)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic seed
+      --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
 
   serve
       --bind ADDR           default 127.0.0.1:8080
@@ -93,6 +111,21 @@ fn append_out(args: &Args, rendered: &str) {
     }
 }
 
+/// Write the per-experiment JSON entries to the `--json` file, if
+/// requested (machine-readable mirror of the rendered reports, the format
+/// bench trajectory files record).
+fn write_json(args: &Args, entries: &[String], total_wall_s: f64) -> bool {
+    let Some(path) = args.get("json") else { return true };
+    let doc = coldfaas::report::json_document(entries, total_wall_s);
+    match std::fs::write(path, doc) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("write --json {path}: {e}");
+            false
+        }
+    }
+}
+
 fn cmd_experiment(args: &Args) -> i32 {
     let Some(name) = args.positional.first() else {
         eprintln!("usage: coldfaas experiment <name>|all");
@@ -106,14 +139,18 @@ fn cmd_experiment(args: &Args) -> i32 {
     };
     let mut all_pass = true;
     let mut rendered = String::new();
+    let mut json_entries = Vec::new();
+    let t_all = std::time::Instant::now();
     for n in names {
         let t0 = std::time::Instant::now();
         match experiments::by_name(n, &cfg) {
             Some(report) => {
+                let wall = t0.elapsed().as_secs_f64();
                 let txt = report.render();
                 print!("{txt}");
-                println!("  ({} in {:.1} s)", n, t0.elapsed().as_secs_f64());
+                println!("  ({n} in {wall:.1} s)");
                 rendered.push_str(&txt);
+                json_entries.push(report.to_json(n, wall));
                 all_pass &= report.all_pass();
             }
             None => {
@@ -123,6 +160,7 @@ fn cmd_experiment(args: &Args) -> i32 {
         }
     }
     append_out(args, &rendered);
+    all_pass &= write_json(args, &json_entries, t_all.elapsed().as_secs_f64());
     if all_pass {
         0
     } else {
@@ -130,10 +168,32 @@ fn cmd_experiment(args: &Args) -> i32 {
     }
 }
 
+/// Render, print, and persist one report produced by a dedicated
+/// subcommand; returns the process exit code.
+fn finish_report(args: &Args, id: &str, report: coldfaas::report::Report, wall_s: f64) -> i32 {
+    let txt = report.render();
+    print!("{txt}");
+    println!("  ({id} in {wall_s:.1} s)");
+    append_out(args, &txt);
+    let json_ok = write_json(args, &[report.to_json(id, wall_s)], wall_s);
+    if report.all_pass() && json_ok {
+        0
+    } else {
+        1
+    }
+}
+
+/// Narrow a u64 CLI option to u32; out-of-range values become 0 so the
+/// caller's positivity validation rejects them instead of silently
+/// wrapping.
+fn get_u32_opt(args: &Args, key: &str, default: u32) -> u32 {
+    u32::try_from(args.get_u64(key, default as u64)).unwrap_or(0)
+}
+
 fn cmd_policies(args: &Args) -> i32 {
     use coldfaas::experiments::policies::{e12_config, policies_with};
     let mut cfg = e12_config(&exp_config(args));
-    cfg.tenant.functions = args.get_u64("functions", cfg.tenant.functions as u64) as u32;
+    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
     cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
     cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
     cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
@@ -143,15 +203,33 @@ fn cmd_policies(args: &Args) -> i32 {
     }
     let t0 = std::time::Instant::now();
     let report = policies_with(&cfg);
-    let txt = report.render();
-    print!("{txt}");
-    println!("  (policies in {:.1} s)", t0.elapsed().as_secs_f64());
-    append_out(args, &txt);
-    if report.all_pass() {
-        0
-    } else {
-        1
+    finish_report(args, "policies", report, t0.elapsed().as_secs_f64())
+}
+
+fn cmd_fleet(args: &Args) -> i32 {
+    use coldfaas::experiments::fleet::{fleet_config, fleet_with};
+    let mut cfg = fleet_config(&exp_config(args));
+    cfg.nodes = args.get_u64("nodes", cfg.nodes as u64) as usize;
+    cfg.cores_per_node = get_u32_opt(args, "cores", cfg.cores_per_node);
+    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
+    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
+    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
+    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
+    if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+        eprintln!("fleet: --nodes must be in 1..={}", coldfaas::platform::MAX_NODES);
+        return 2;
     }
+    if cfg.cores_per_node == 0
+        || cfg.tenant.functions == 0
+        || cfg.tenant.total_rps <= 0.0
+        || cfg.tenant.duration_s <= 0.0
+    {
+        eprintln!("fleet: --cores, --functions, --rps and --duration must be positive");
+        return 2;
+    }
+    let t0 = std::time::Instant::now();
+    let report = fleet_with(&cfg);
+    finish_report(args, "fleet", report, t0.elapsed().as_secs_f64())
 }
 
 fn coord_config(args: &Args) -> Config {

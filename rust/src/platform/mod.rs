@@ -1,0 +1,190 @@
+//! Unified platform layer (S20): **one** DES wiring for every platform
+//! experiment.
+//!
+//! Before this module the repo carried three near-duplicate wirings — the
+//! Fn-platform scenario runner (`fnplat/sim.rs`, E4/E5/E9), the policy
+//! lab (`policy/sim.rs`, E12), and the cluster burst rig
+//! (`cluster/sim.rs`, E11) — which could not compose: the policy lab was
+//! single-node, the cluster had no warm pool, and none shared load
+//! generation.  `PlatformSim` subsumes all three: it owns N nodes (each
+//! with a bounded core pool, per-lock-class pools, an image cache, and its
+//! own per-slot-deadline [`WarmPool`](crate::fnplat::pool::WarmPool)), a
+//! pluggable [`Scheduler`] (co-locate / spread / least-loaded /
+//! pool-affinity), and a per-function
+//! [`LifecyclePolicy`](crate::policy::LifecyclePolicy) driving every
+//! node's pool.
+//!
+//! The historical experiment entrypoints survive as thin presets over
+//! [`PlatformConfig`] (see [`presets`]) — and the layer is what makes
+//! cluster-scale sweeps like E13 (`coldfaas fleet`) a configuration
+//! instead of a fourth copy of the pipeline.
+
+pub mod node;
+pub mod presets;
+pub mod sched;
+pub mod sim;
+
+pub use node::NodeState;
+pub use sched::{PlacementOutcome, SchedPolicy, Scheduler};
+pub use sim::{exact_quantile_ms, run_platform, PlatformResult, PlatformSim};
+
+use crate::fnplat::{DbBackend, DriverKind, Placement};
+use crate::net::{Frontend, Site};
+use crate::sim::Step;
+use crate::virt::Tech;
+use crate::workload::tenants::TenantTrace;
+use crate::workload::traces::Trace;
+
+/// Engine pool ids are `u8` and each node takes 7 pools (cores + one per
+/// lock class), so the node count is capped well below overflow.
+pub const MAX_NODES: usize = 32;
+
+/// An executor driver: the startup/warm-invoke pipelines the platform
+/// retargets onto whichever node a request lands on.
+#[derive(Clone, Debug)]
+pub struct DriverProfile {
+    pub name: &'static str,
+    pub tech: Tech,
+    /// Cold-start pipeline (technology phases, agent-side plumbing).
+    pub cold_steps: Vec<Step>,
+    /// Warm-invoke pipeline (empty for drivers with no warm path).
+    pub warm_steps: Vec<Step>,
+    /// Connection-termination style of this driver's frontend (Table I's
+    /// setup column); only consulted on network request paths.
+    pub frontend: Frontend,
+}
+
+impl DriverProfile {
+    /// The two Fn drivers the paper compares (§IV-A).
+    pub fn from_kind(kind: DriverKind) -> DriverProfile {
+        DriverProfile {
+            name: match kind {
+                DriverKind::DockerWarm => "fn-docker",
+                DriverKind::IncludeOsCold => "fn-includeos",
+            },
+            tech: kind.tech(),
+            cold_steps: kind.cold_start_steps(),
+            warm_steps: kind.warm_invoke_steps(),
+            frontend: match kind {
+                DriverKind::DockerWarm => Frontend::FN_DOCKER,
+                DriverKind::IncludeOsCold => Frontend::FN_INCLUDEOS,
+            },
+        }
+    }
+
+    /// A bare technology pipeline with no platform plumbing and no warm
+    /// path (the cluster burst rig's executors).
+    pub fn raw(tech: Tech) -> DriverProfile {
+        DriverProfile {
+            name: tech.name(),
+            tech,
+            cold_steps: tech.pipeline(),
+            warm_steps: Vec::new(),
+            frontend: Frontend::FN_DOCKER,
+        }
+    }
+}
+
+/// How function images are pre-seeded onto node caches before the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageSeeding {
+    /// Every function's image on the first `n` nodes (the burst rig's
+    /// "seeded nodes"; `FirstN(1)` is the single-node presets' default).
+    FirstN(usize),
+    /// Function `f` seeded on node `f % nodes` — each deployed function
+    /// lives *somewhere*, as a registry push would leave a fleet.
+    RoundRobin,
+}
+
+/// Request path in front of the dispatch decision.
+#[derive(Clone, Copy, Debug)]
+pub enum RequestPath {
+    /// Placement only — no network, no gateway (the burst rig).
+    Direct,
+    /// Full gateway/agent path: optional TCP/TLS setup, client/server
+    /// RTT, deployment taxes, HTTP parse + route + metadata-DB lookup.
+    Agent {
+        client: Site,
+        server: Site,
+        /// Include connection setup in the measured latency (Table I
+        /// reports it as a separate column, so table runs disable it).
+        include_conn_setup: bool,
+        placement: Placement,
+        db: DbBackend,
+    },
+}
+
+/// Offered load shape.
+#[derive(Clone, Debug)]
+pub enum PlatformLoad {
+    /// `hey`-style closed loop on function 0; `gap_ns` spaces successive
+    /// requests per slot (forces cold starts past keep-alive windows).
+    ClosedLoop { parallelism: u32, total: u64, prewarm: bool, gap_ns: u64 },
+    /// Open-loop arrivals for function 0 from a single-tenant trace (E9).
+    OpenTrace(Trace),
+    /// Multi-tenant open-loop arrivals, `(at_ns, func)` (E12/E13).
+    Tenants(TenantTrace),
+    /// `requests` arrivals spread uniformly over `burst_ms` (E11).
+    Burst { requests: u64, burst_ms: f64 },
+}
+
+/// Full configuration of one platform run.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub driver: DriverProfile,
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    /// Memory-bounded executor slots per node (co-location spills past
+    /// this, Wang et al.).
+    pub mem_slots_per_node: u32,
+    pub scheduler: SchedPolicy,
+    /// Distinct function ids the load may reference.
+    pub functions: u32,
+    /// Function-body execution cost (ms).
+    pub exec_ms: f64,
+    /// Resident bytes one retained executor holds while idle.
+    pub mem_bytes_per_slot: u64,
+    pub seeding: ImageSeeding,
+    /// Node-interconnect bandwidth for image pulls (Gbps).
+    pub fabric_gbps: f64,
+    pub path: RequestPath,
+    pub load: PlatformLoad,
+    /// Teardown deadline for measurement-warmup slots (and the default
+    /// pool timeout horizon).
+    pub warmup_keep_ns: u64,
+    /// Debug flag: also keep exact per-request samples (the hot path
+    /// records into streaming histograms only).
+    pub exact_latencies: bool,
+    pub seed: u64,
+}
+
+impl PlatformConfig {
+    /// A single-node lab deployment of `driver` — the shape E4/E5/E9/E12
+    /// presets start from.
+    pub fn single_node(driver: DriverProfile, cores: u32) -> PlatformConfig {
+        let mem = driver.tech.warm_memory_bytes();
+        PlatformConfig {
+            driver,
+            nodes: 1,
+            cores_per_node: cores,
+            mem_slots_per_node: cores.saturating_mul(8),
+            scheduler: SchedPolicy::LeastLoaded,
+            functions: 1,
+            exec_ms: crate::fnplat::DEFAULT_EXEC_MS,
+            mem_bytes_per_slot: mem,
+            seeding: ImageSeeding::FirstN(1),
+            fabric_gbps: 40.0,
+            path: RequestPath::Agent {
+                client: Site::LabStockholm,
+                server: Site::LabStockholm,
+                include_conn_setup: false,
+                placement: Placement::LocalLab,
+                db: DbBackend::Postgres,
+            },
+            load: PlatformLoad::ClosedLoop { parallelism: 1, total: 1, prewarm: false, gap_ns: 0 },
+            warmup_keep_ns: 30 * 1_000_000_000,
+            exact_latencies: false,
+            seed: 0xC01D,
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Per-node state of the unified platform: the scheduler-visible load
+//! counters plus the node-local resources every DES wiring used to carry
+//! separately — a bounded core pool, one serializing pool per kernel-lock
+//! class, the node's image cache, and its own per-slot-deadline
+//! [`WarmPool`].
+
+use crate::fnplat::pool::WarmPool;
+use crate::image::NodeCache;
+use crate::metrics::Histogram;
+use crate::sim::N_LOCKS;
+
+/// One cluster node.  The `cpu_pool` / `lock_pools` ids are engine pool
+/// handles assigned by [`super::sim::run_platform`] at engine setup; the
+/// placeholder value 0 is only valid in pure-logic unit tests that never
+/// touch the engine.
+pub struct NodeState {
+    pub id: usize,
+    pub cores: u32,
+    /// Executor slots bounded by *memory*, not cores — Wang et al.: AWS
+    /// co-locates a function's instances "roughly while they fit into the
+    /// physical memory", far past the core count.  That gap (mem_slots >>
+    /// cores) is exactly what makes co-located bursts queue on the CPU.
+    pub mem_slots: u32,
+    /// In-flight executors (warm-routed + cold-placed, decremented on
+    /// release) — the scheduler's load signal.
+    pub inflight: u32,
+    pub cache: NodeCache,
+    /// The node's warm-executor pool; lifecycle policies set per-slot
+    /// teardown deadlines on it.
+    pub pool: WarmPool,
+    /// Engine pool id for this node's cores.
+    pub cpu_pool: u8,
+    /// Engine pool ids (one single-slot pool per [`crate::sim::LockClass`])
+    /// so per-node kernel-lock contention serializes exactly like the
+    /// engine-global lock queues did on a single host.  The `Db` slot
+    /// aliases another pool: no startup pipeline holds the metadata-DB
+    /// lock (it lives on the non-retargeted agent path), and skipping it
+    /// keeps 32 nodes inside the engine's 255-pool id space.
+    pub lock_pools: [u8; N_LOCKS],
+    /// Engine pool id for this node's local disk (single-slot FIFO —
+    /// same serialization the engine's global disk gives one host).
+    pub disk_pool: u8,
+    /// Streaming latency histogram of requests served by this node
+    /// (merged across nodes at the end of a run).
+    pub hist: Histogram,
+}
+
+impl NodeState {
+    pub fn new(
+        id: usize,
+        cores: u32,
+        mem_slots: u32,
+        idle_timeout_ns: u64,
+        mem_bytes_per_slot: u64,
+    ) -> NodeState {
+        NodeState {
+            id,
+            cores,
+            mem_slots,
+            inflight: 0,
+            cache: NodeCache::new(None),
+            pool: WarmPool::new(idle_timeout_ns, mem_bytes_per_slot),
+            cpu_pool: 0,
+            lock_pools: [0; N_LOCKS],
+            disk_pool: 0,
+            hist: Histogram::new(),
+        }
+    }
+}

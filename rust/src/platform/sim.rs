@@ -1,0 +1,637 @@
+//! The one DES wiring every platform experiment runs on.
+//!
+//! A request flows: optional connection setup -> client/server RTT ->
+//! placement tax -> gateway/agent/DB -> **dispatch decision** (warm-route
+//! or cold-place) -> optional image pull -> startup pipeline retargeted
+//! onto the chosen node's core/lock pools -> execution -> **release
+//! decision** (the per-function [`LifecyclePolicy`] picks Retire / KeepFor
+//! / PrewarmAfter against that node's [`WarmPool`]).  Pre-warms are
+//! injected back into virtual time as zero-latency control requests whose
+//! only step is a pool effect at the scheduled boot time, on the node the
+//! retired executor lived on.
+//!
+//! Latencies stream into per-node log-bucket [`Histogram`]s (O(1) memory
+//! per series; `merge()`d at the end of the run), so million-request fleet
+//! sweeps do not allocate per request.  Exact raw samples stay available
+//! behind [`PlatformConfig::exact_latencies`] for the debug/compat paths.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::image::Image;
+use crate::metrics::Histogram;
+use crate::net::transfer_step;
+use crate::policy::{IdleAction, LifecyclePolicy};
+use crate::sim::{Dist, Domain, Engine, Host, ReqId, Rng, Spawn, Step, StepKind, N_LOCKS};
+
+use super::node::NodeState;
+use super::sched::{footprint_bytes, nodes_with_image, Scheduler};
+use super::{ImageSeeding, PlatformConfig, PlatformLoad, RequestPath};
+
+const TAG_DISPATCH: u32 = 1;
+const TAG_RELEASE: u32 = 2;
+const TAG_PREWARM: u32 = 3;
+
+/// High bit of the request class marks policy control requests (pre-warm
+/// boots) rather than user invocations.
+const CONTROL_BIT: u32 = 1 << 31;
+
+/// Where a placed request landed (kept until `done` for latency binning).
+#[derive(Clone, Copy)]
+struct Placed {
+    node: usize,
+    cold: bool,
+}
+
+/// One scheduled pre-warm boot: fires at the absolute time, on the node
+/// the retired executor lived on, retained for the keep window.
+#[derive(Clone, Copy)]
+struct PrewarmBoot {
+    fire_at_ns: u64,
+    node: usize,
+    keep_ns: u64,
+}
+
+/// Retarget a startup pipeline onto one node's resources: CPU phases use
+/// the node's core pool, each kernel-lock class its own per-node
+/// single-slot pool, and disk reads the node's local disk (a single-slot
+/// pool holding for bytes/bandwidth — the same FIFO serialization the
+/// engine's global disk gives one host, but per node, so spreading cold
+/// starts actually buys disk parallelism).  Pure delays stay as-is.
+fn retarget(steps: &[Step], node: &NodeState, disk_bw_bytes_per_s: f64) -> Vec<Step> {
+    steps
+        .iter()
+        .map(|s| match s.kind {
+            StepKind::Cpu => Step::pool(s.tag, node.cpu_pool, s.dur),
+            StepKind::Lock(class) => Step::pool(s.tag, node.lock_pools[class as usize], s.dur),
+            StepKind::Disk(bytes) => Step::pool(
+                s.tag,
+                node.disk_pool,
+                Dist::Const(bytes as f64 / disk_bw_bytes_per_s * 1e9),
+            ),
+            _ => *s,
+        })
+        .collect()
+}
+
+/// The unified platform as a simulation domain.
+pub struct PlatformSim<'a> {
+    cold_extra: Vec<Step>,
+    warm_steps: Vec<Step>,
+    cold_steps: Vec<Step>,
+    exec_ms: f64,
+    fabric_gbps: f64,
+    disk_bw_bytes_per_s: f64,
+    policy: &'a mut dyn LifecyclePolicy,
+    sched: Scheduler,
+    pub nodes: Vec<NodeState>,
+    func_names: Vec<String>,
+    images: Vec<Image>,
+    // --- closed-loop chaining ---
+    template: Vec<Step>,
+    remaining: u64,
+    gap_ns: u64,
+    // --- per-request bookkeeping ---
+    placed: HashMap<ReqId, Placed>,
+    /// Pre-warms decided during the current release effect, drained into
+    /// spawns when the request completes: (func, node, delay_ns, keep_ns).
+    pending_prewarms: Vec<(u32, usize, u64, u64)>,
+    /// Keep windows for in-flight pre-warm control requests, per function,
+    /// matched by absolute boot time (boots may fire out of schedule order
+    /// when forecast delays differ).
+    prewarm_keeps: Vec<VecDeque<PrewarmBoot>>,
+    prewarm_boots: u64,
+    // --- metrics ---
+    cold_hist: Histogram,
+    warm_hist: Histogram,
+    exact: bool,
+    latencies_ns: Vec<u64>,
+    cold_latencies_ns: Vec<u64>,
+    warm_latencies_ns: Vec<u64>,
+}
+
+impl PlatformSim<'_> {
+    fn dispatch_tail(&mut self, req: ReqId, func: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
+        self.policy.on_invoke(func, now);
+        let name = &self.func_names[func as usize];
+        let mut tail = Vec::new();
+        if let Some(node) = self.sched.route_warm(&mut self.nodes, name, now) {
+            let d = self.nodes[node].pool.dispatch(name, now);
+            debug_assert_eq!(d, crate::fnplat::Dispatch::Warm);
+            tail.extend(retarget(&self.warm_steps, &self.nodes[node], self.disk_bw_bytes_per_s));
+            tail.push(Step::pool(
+                "fn-exec",
+                self.nodes[node].cpu_pool,
+                Dist::ms(self.exec_ms, 0.15),
+            ));
+            tail.push(Step::effect("release", TAG_RELEASE));
+            self.placed.insert(req, Placed { node, cold: false });
+        } else {
+            let out = self.sched.place_cold(&mut self.nodes, &self.images[func as usize], rng);
+            let node = out.node;
+            let d = self.nodes[node].pool.dispatch(name, now);
+            debug_assert_eq!(d, crate::fnplat::Dispatch::Cold);
+            if out.fetch_bytes > 0 {
+                tail.push(transfer_step("image-pull", out.fetch_bytes, self.fabric_gbps));
+            }
+            tail.extend(self.cold_extra.iter().copied());
+            tail.extend(retarget(&self.cold_steps, &self.nodes[node], self.disk_bw_bytes_per_s));
+            tail.push(Step::pool(
+                "fn-exec",
+                self.nodes[node].cpu_pool,
+                Dist::ms(self.exec_ms, 0.15),
+            ));
+            tail.push(Step::effect("release", TAG_RELEASE));
+            self.placed.insert(req, Placed { node, cold: true });
+        }
+        tail
+    }
+}
+
+impl Domain for PlatformSim<'_> {
+    fn decide(&mut self, req: ReqId, class: u32, tag: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
+        debug_assert_eq!(tag, TAG_DISPATCH);
+        self.dispatch_tail(req, class & !CONTROL_BIT, now, rng)
+    }
+
+    fn effect(&mut self, req: ReqId, class: u32, tag: u32, now: u64) {
+        let func = class & !CONTROL_BIT;
+        match tag {
+            TAG_RELEASE => {
+                let p = *self.placed.get(&req).expect("released request was placed");
+                let name = &self.func_names[func as usize];
+                match self.policy.on_idle(func, now) {
+                    IdleAction::Retire => self.nodes[p.node].pool.retire(name),
+                    IdleAction::KeepFor { keep_ns } => self.nodes[p.node].pool.release_until(
+                        name,
+                        now,
+                        now.saturating_add(keep_ns),
+                    ),
+                    IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
+                        self.nodes[p.node].pool.retire(name);
+                        self.pending_prewarms.push((func, p.node, delay_ns, keep_ns));
+                    }
+                }
+                self.sched.complete(&mut self.nodes, p.node);
+            }
+            TAG_PREWARM => {
+                // Match this boot to its scheduled keep window by fire
+                // time: boots fire at exactly their scheduled instant.
+                let hit = {
+                    let q = &mut self.prewarm_keeps[func as usize];
+                    q.iter()
+                        .position(|b| b.fire_at_ns == now)
+                        .and_then(|i| q.remove(i))
+                };
+                if let Some(boot) = hit {
+                    let name = &self.func_names[func as usize];
+                    // Skip stale pre-warms: an arrival already repopulated
+                    // the pool, or the keep window degenerated.  Probe via
+                    // warm_available (not idle_count) so an expired-but-
+                    // unpurged slot doesn't mask a scheduled boot.
+                    if boot.keep_ns > 0
+                        && self.nodes[boot.node].pool.warm_available(name, now) == 0
+                    {
+                        self.prewarm_boots += 1;
+                        self.nodes[boot.node].pool.prewarm_until(
+                            name,
+                            1,
+                            now,
+                            now.saturating_add(boot.keep_ns),
+                        );
+                    }
+                }
+            }
+            other => debug_assert!(false, "unexpected effect tag {other}"),
+        }
+    }
+
+    fn done(&mut self, req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+        let mut spawns = Vec::new();
+        for (func, node, delay_ns, keep_ns) in self.pending_prewarms.drain(..) {
+            self.prewarm_keeps[func as usize].push_back(PrewarmBoot {
+                fire_at_ns: now.saturating_add(delay_ns),
+                node,
+                keep_ns,
+            });
+            spawns.push(Spawn {
+                delay_ns,
+                class: func | CONTROL_BIT,
+                steps: vec![Step::effect("prewarm-boot", TAG_PREWARM)],
+            });
+        }
+        if class & CONTROL_BIT == 0 {
+            let lat = now - start;
+            if let Some(p) = self.placed.remove(&req) {
+                self.nodes[p.node].hist.record_ns(lat);
+                if p.cold {
+                    self.cold_hist.record_ns(lat);
+                } else {
+                    self.warm_hist.record_ns(lat);
+                }
+                if self.exact {
+                    self.latencies_ns.push(lat);
+                    if p.cold {
+                        self.cold_latencies_ns.push(lat);
+                    } else {
+                        self.warm_latencies_ns.push(lat);
+                    }
+                }
+            }
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                spawns.push(Spawn {
+                    delay_ns: self.gap_ns,
+                    class,
+                    steps: self.template.clone(),
+                });
+            }
+        }
+        spawns
+    }
+}
+
+/// Aggregated outcome of one platform run.
+pub struct PlatformResult {
+    /// User requests served (excludes pre-warm control requests).
+    pub requests: u64,
+    pub elapsed_ns: u64,
+    /// All-request latency histogram (per-node histograms merged).
+    pub hist: Histogram,
+    pub cold_hist: Histogram,
+    pub warm_hist: Histogram,
+    /// Per-node latency histograms (the merge sources), node order.
+    pub node_hists: Vec<Histogram>,
+    /// Raw samples — populated only with `exact_latencies` (debug/compat).
+    pub latencies_ns: Vec<u64>,
+    pub cold_latencies_ns: Vec<u64>,
+    pub warm_latencies_ns: Vec<u64>,
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+    pub prewarm_boots: u64,
+    pub expirations: u64,
+    pub retirements: u64,
+    pub idle_gb_seconds: f64,
+    pub monitor_events: u64,
+    /// Cross-node image distribution economics.
+    pub transfers: u64,
+    pub transferred_bytes: u64,
+    pub footprint_bytes: u64,
+    /// Nodes caching function 0's image at the end of the run.
+    pub nodes_with_first_image: usize,
+    /// Median connection-setup cost for the driver's frontend (reported
+    /// separately, as in Table I); 0 when the run has no network path.
+    pub conn_setup_ms: f64,
+}
+
+impl PlatformResult {
+    pub fn cold_fraction(&self) -> f64 {
+        let total = self.cold_starts + self.warm_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / total as f64
+        }
+    }
+
+    /// Latency quantile in ms: exact (nearest rank) when raw samples were
+    /// kept, streaming-histogram approximation (<5% error) otherwise.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        quantile_of(&self.latencies_ns, &self.hist, q)
+    }
+
+    pub fn cold_quantile_ms(&self, q: f64) -> f64 {
+        quantile_of(&self.cold_latencies_ns, &self.cold_hist, q)
+    }
+
+    pub fn warm_quantile_ms(&self, q: f64) -> f64 {
+        quantile_of(&self.warm_latencies_ns, &self.warm_hist, q)
+    }
+}
+
+fn quantile_of(exact: &[u64], hist: &Histogram, q: f64) -> f64 {
+    if exact.is_empty() {
+        if hist.is_empty() {
+            return f64::NAN;
+        }
+        return hist.quantile_ms(q);
+    }
+    exact_quantile_ms(exact, q)
+}
+
+/// Exact nearest-rank quantile over raw nanosecond samples, in ms — the
+/// one implementation every preset reports through.
+pub fn exact_quantile_ms(samples: &[u64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = samples.to_vec();
+    s.sort_unstable();
+    let idx = ((q.clamp(0.0, 1.0) * s.len() as f64).ceil() as usize).saturating_sub(1);
+    s[idx.min(s.len() - 1)] as f64 / 1e6
+}
+
+/// Head-of-request steps up to (and including) the dispatch decision.
+///
+/// Gateway/agent CPU runs on the engine's own cores (the front-end box);
+/// everything after placement runs on the chosen node's pools.  On
+/// single-node presets this gives the front-end and the node separate
+/// core budgets where the old `fnplat` wiring shared one pool — the
+/// difference only shows as slightly less queuing past saturation
+/// (parallelism ≫ cores), well inside every calibrated band, and is the
+/// honest topology once the platform has more than one node.
+fn head_steps(cfg: &PlatformConfig) -> Vec<Step> {
+    match &cfg.path {
+        RequestPath::Direct => vec![Step::decision("dispatch", TAG_DISPATCH)],
+        RequestPath::Agent { client, server, include_conn_setup, placement, db } => {
+            let mut v = Vec::new();
+            if *include_conn_setup {
+                v.extend(cfg.driver.frontend.connect_steps(*client, *server));
+            }
+            v.push(crate::net::rtt_step("req-resp-rtt", *client, *server));
+            v.extend(placement.request_tax_steps());
+            v.extend(crate::fnplat::agent_steps(*db));
+            v.push(Step::decision("dispatch", TAG_DISPATCH));
+            v
+        }
+    }
+}
+
+/// Replay `cfg.load` through `policy` over the configured node set.
+pub fn run_platform(
+    cfg: &PlatformConfig,
+    policy: &mut dyn LifecyclePolicy,
+    host: Host,
+) -> PlatformResult {
+    assert!(cfg.nodes >= 1, "need at least one node");
+    assert!(cfg.nodes <= super::MAX_NODES, "at most {} nodes (engine pool ids)", super::MAX_NODES);
+    assert!(cfg.functions >= 1, "need at least one function");
+
+    let func_names: Vec<String> = (0..cfg.functions).map(|f| format!("f{f}")).collect();
+    let images: Vec<Image> = func_names
+        .iter()
+        .map(|n| Image::for_function(n, cfg.driver.tech))
+        .collect();
+
+    let (cold_extra, conn_setup_ms) = match &cfg.path {
+        RequestPath::Direct => (Vec::new(), 0.0),
+        RequestPath::Agent { client, server, placement, .. } => (
+            placement.cold_tax_steps(),
+            cfg.driver.frontend.nominal_setup_ms(*client, *server),
+        ),
+    };
+
+    let domain = PlatformSim {
+        cold_extra,
+        warm_steps: cfg.driver.warm_steps.clone(),
+        cold_steps: cfg.driver.cold_steps.clone(),
+        exec_ms: cfg.exec_ms,
+        fabric_gbps: cfg.fabric_gbps,
+        disk_bw_bytes_per_s: host.disk_bw_bytes_per_s,
+        policy,
+        sched: Scheduler::new(cfg.scheduler),
+        nodes: Vec::new(),
+        func_names,
+        images,
+        template: Vec::new(),
+        remaining: 0,
+        gap_ns: 0,
+        placed: HashMap::new(),
+        pending_prewarms: Vec::new(),
+        prewarm_keeps: (0..cfg.functions).map(|_| VecDeque::new()).collect(),
+        prewarm_boots: 0,
+        cold_hist: Histogram::new(),
+        warm_hist: Histogram::new(),
+        exact: cfg.exact_latencies,
+        latencies_ns: Vec::new(),
+        cold_latencies_ns: Vec::new(),
+        warm_latencies_ns: Vec::new(),
+    };
+
+    // The placement-only path leaves the engine's own cores unused
+    // (everything runs through node pools); size them out of the way.
+    let engine_host = match cfg.path {
+        RequestPath::Direct => Host { cores: u32::MAX, disk_bw_bytes_per_s: host.disk_bw_bytes_per_s },
+        RequestPath::Agent { .. } => host,
+    };
+    let mut e = Engine::new(domain, engine_host, cfg.seed);
+    for id in 0..cfg.nodes {
+        let mut node = NodeState::new(
+            id,
+            cfg.cores_per_node,
+            cfg.mem_slots_per_node,
+            cfg.warmup_keep_ns,
+            cfg.mem_bytes_per_slot,
+        );
+        node.cpu_pool = e.add_pool(cfg.cores_per_node);
+        let mut locks = [0u8; N_LOCKS];
+        for (class, slot) in locks.iter_mut().enumerate() {
+            // No startup pipeline holds the metadata-DB lock (it lives on
+            // the non-retargeted agent path); sharing its slot with the
+            // engine-serialization pool keeps 32 nodes x 7 pools inside
+            // the engine's u8 pool-id space while staying serializing if
+            // a future pipeline ever does hold it.
+            if class == crate::sim::LockClass::Db as usize {
+                continue;
+            }
+            *slot = e.add_pool(1);
+        }
+        locks[crate::sim::LockClass::Db as usize] =
+            locks[crate::sim::LockClass::DockerEngine as usize];
+        node.lock_pools = locks;
+        node.disk_pool = e.add_pool(1);
+        e.domain.nodes.push(node);
+    }
+    match cfg.seeding {
+        // FirstN(0) is honored: no pre-seeding, every first start pulls.
+        ImageSeeding::FirstN(n) => {
+            for img in &e.domain.images {
+                for node in e.domain.nodes.iter_mut().take(n) {
+                    let _ = node.cache.fetch(img);
+                }
+            }
+        }
+        ImageSeeding::RoundRobin => {
+            let n_nodes = e.domain.nodes.len();
+            for (f, img) in e.domain.images.iter().enumerate() {
+                let _ = e.domain.nodes[f % n_nodes].cache.fetch(img);
+            }
+        }
+    }
+
+    let head = head_steps(cfg);
+    match &cfg.load {
+        PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
+            assert!(*parallelism as u64 <= *total);
+            if *prewarm {
+                let name = e.domain.func_names[0].clone();
+                e.domain.nodes[0].pool.prewarm_until(
+                    &name,
+                    *parallelism as u64,
+                    0,
+                    cfg.warmup_keep_ns,
+                );
+            }
+            e.domain.template = head.clone();
+            e.domain.remaining = total - *parallelism as u64;
+            e.domain.gap_ns = *gap_ns;
+            for _ in 0..*parallelism {
+                e.spawn_at(0, 0, head.clone());
+            }
+            e.run(total.saturating_mul(192).max(1 << 20));
+        }
+        PlatformLoad::OpenTrace(trace) => {
+            for &t in &trace.arrivals_ns {
+                e.spawn_at(t, 0, head.clone());
+            }
+            e.run((trace.len() as u64).saturating_mul(192).max(1 << 20));
+        }
+        PlatformLoad::Tenants(tt) => {
+            for &(at, func) in &tt.arrivals {
+                e.spawn_at(at, func, head.clone());
+            }
+            e.run((tt.len() as u64).saturating_mul(192).max(1 << 20));
+        }
+        PlatformLoad::Burst { requests, burst_ms } => {
+            let mut arrivals = Rng::new(cfg.seed ^ 0xA5A5);
+            for _ in 0..*requests {
+                let at = (arrivals.next_f64() * burst_ms * 1e6) as u64;
+                e.spawn_at(at, 0, head.clone());
+            }
+            e.run(requests.saturating_mul(192).max(1 << 20));
+        }
+    }
+
+    let now = e.now();
+    let d = &mut e.domain;
+    let mut hist = Histogram::new();
+    let mut node_hists = Vec::with_capacity(d.nodes.len());
+    let mut idle_mem_byte_ns: u128 = 0;
+    let (mut warm_hits, mut cold_starts, mut expirations, mut retirements, mut monitor_events) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for n in &mut d.nodes {
+        n.pool.finalize(now);
+        hist.merge(&n.hist);
+        node_hists.push(n.hist.clone());
+        idle_mem_byte_ns += n.pool.idle_mem_byte_ns;
+        warm_hits += n.pool.warm_hits;
+        cold_starts += n.pool.cold_starts;
+        expirations += n.pool.expirations;
+        retirements += n.pool.retirements;
+        monitor_events += n.pool.monitor_events;
+    }
+    let nodes_with_first = nodes_with_image(&d.nodes, &d.func_names[0]);
+
+    PlatformResult {
+        requests: hist.len(),
+        elapsed_ns: now,
+        hist,
+        cold_hist: d.cold_hist.clone(),
+        warm_hist: d.warm_hist.clone(),
+        node_hists,
+        latencies_ns: std::mem::take(&mut d.latencies_ns),
+        cold_latencies_ns: std::mem::take(&mut d.cold_latencies_ns),
+        warm_latencies_ns: std::mem::take(&mut d.warm_latencies_ns),
+        warm_hits,
+        cold_starts,
+        prewarm_boots: d.prewarm_boots,
+        expirations,
+        retirements,
+        idle_gb_seconds: idle_mem_byte_ns as f64 / 1e9 / (1u64 << 30) as f64,
+        monitor_events,
+        transfers: d.sched.transfers,
+        transferred_bytes: d.sched.transferred_bytes,
+        footprint_bytes: footprint_bytes(&d.nodes),
+        nodes_with_first_image: nodes_with_first,
+        conn_setup_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fnplat::DriverKind;
+    use crate::policy::{ColdOnlyPolicy, FixedKeepAlive};
+    use crate::platform::DriverProfile;
+    use crate::workload::tenants::{TenantConfig, TenantTrace};
+
+    fn tenant_cfg(driver: DriverKind, nodes: usize) -> (PlatformConfig, TenantTrace) {
+        let trace = TenantTrace::generate(&TenantConfig {
+            functions: 50,
+            duration_s: 60.0,
+            total_rps: 40.0,
+            seed: 0x7E57,
+            ..Default::default()
+        });
+        let cfg = PlatformConfig {
+            load: PlatformLoad::Tenants(trace.clone()),
+            functions: 50,
+            nodes,
+            ..PlatformConfig::single_node(DriverProfile::from_kind(driver), 24)
+        };
+        (cfg, trace)
+    }
+
+    #[test]
+    fn cold_only_serves_everything_cold_with_zero_waste() {
+        let (cfg, trace) = tenant_cfg(DriverKind::IncludeOsCold, 1);
+        let r = run_platform(&cfg, &mut ColdOnlyPolicy, Host::default());
+        let n = trace.len() as u64;
+        assert_eq!(r.requests, n);
+        assert_eq!(r.warm_hits, 0);
+        assert_eq!(r.cold_starts, n);
+        assert_eq!(r.retirements, n);
+        assert_eq!(r.idle_gb_seconds, 0.0);
+        assert_eq!(r.monitor_events, 0);
+        assert_eq!(r.prewarm_boots, 0);
+    }
+
+    #[test]
+    fn fixed_keepalive_gets_warm_hits_and_pays_waste() {
+        let (cfg, _) = tenant_cfg(DriverKind::DockerWarm, 1);
+        let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        assert!(r.warm_hits > r.cold_starts, "head functions must reuse executors");
+        assert!(r.idle_gb_seconds > 0.0);
+        assert!(r.monitor_events > 0);
+    }
+
+    #[test]
+    fn multi_node_conserves_requests_and_routes_warm() {
+        for nodes in [2, 4, 8] {
+            let (cfg, trace) = tenant_cfg(DriverKind::DockerWarm, nodes);
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            assert_eq!(r.requests, trace.len() as u64, "{nodes} nodes");
+            assert_eq!(r.cold_starts + r.warm_hits, r.requests);
+            assert!(r.warm_hits > 0, "warm routing must find pooled executors");
+            // Per-node histograms merge to the total.
+            let per_node: u64 = r.node_hists.iter().map(|h| h.len()).sum();
+            assert_eq!(per_node, r.requests);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_across_node_counts() {
+        for nodes in [1, 4] {
+            let run = || {
+                let (cfg, _) = tenant_cfg(DriverKind::DockerWarm, nodes);
+                let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+                (r.hist.quantile_ms(0.99), r.idle_gb_seconds, r.cold_starts, r.elapsed_ns)
+            };
+            assert_eq!(run(), run());
+        }
+    }
+
+    #[test]
+    fn histograms_match_exact_quantiles_within_bucket_error() {
+        let (mut cfg, _) = tenant_cfg(DriverKind::IncludeOsCold, 2);
+        cfg.exact_latencies = true;
+        let r = run_platform(&cfg, &mut ColdOnlyPolicy, Host::default());
+        for q in [0.5, 0.99] {
+            let exact = r.quantile_ms(q); // exact path (raw samples kept)
+            let approx = r.hist.quantile_ms(q);
+            assert!(
+                (approx / exact - 1.0).abs() < 0.06,
+                "q{q}: hist {approx} vs exact {exact}"
+            );
+        }
+    }
+}

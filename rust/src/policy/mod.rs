@@ -27,7 +27,12 @@
 
 pub mod ewma;
 pub mod histogram;
-pub mod sim;
+
+/// The DES wiring moved into the unified [`crate::platform`] layer; this
+/// alias keeps the historical `policy::sim` paths working.
+pub mod sim {
+    pub use crate::platform::presets::{run_policy_scenario, PolicyResult, PolicyScenario};
+}
 
 pub use ewma::EwmaPredictive;
 pub use histogram::HistogramPrewarm;

@@ -112,6 +112,76 @@ impl Report {
             .collect()
     }
 
+    /// Machine-readable form of the report (hand-rolled JSON: the offline
+    /// registry has no serde).  `id` is the experiment name the CLI ran,
+    /// `wall_s` the wall-clock regeneration time — together with the rows
+    /// and checks this is what bench trajectory files (`BENCH_*.json`)
+    /// record.
+    pub fn to_json(&self, id: &str, wall_s: f64) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"id\":{},", json_str(id)));
+        out.push_str(&format!("\"title\":{},", json_str(&self.title)));
+        out.push_str(&format!("\"wall_s\":{},", json_num(wall_s)));
+        out.push_str(&format!("\"all_pass\":{},", self.all_pass()));
+        out.push_str("\"series\":[");
+        for (i, (label, s)) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"label\":{},\"n\":{},\"p1\":{},\"p25\":{},\"p50\":{},\"p75\":{},\"p99\":{},\"mean\":{},\"max\":{}}}",
+                json_str(label),
+                s.n,
+                json_num(s.p1),
+                json_num(s.p25),
+                json_num(s.p50),
+                json_num(s.p75),
+                json_num(s.p99),
+                json_num(s.mean),
+                json_num(s.max)
+            ));
+        }
+        out.push_str("],\"checks\":[");
+        for (i, c) in self.checks.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"label\":{},\"metric\":{},\"paper\":{},\"measured\":{},\"tol\":{},\"pass\":{}}}",
+                json_str(&c.label),
+                json_str(c.metric),
+                json_num(c.want),
+                json_num(c.got),
+                json_num(c.tol),
+                c.pass()
+            ));
+        }
+        out.push_str("],\"bands\":[");
+        for (i, b) in self.bands.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"label\":{},\"metric\":{},\"lo\":{},\"hi\":{},\"measured\":{},\"pass\":{}}}",
+                json_str(&b.label),
+                json_str(b.metric),
+                json_num(b.lo),
+                json_num(b.hi),
+                json_num(b.got),
+                b.pass()
+            ));
+        }
+        out.push_str("],\"notes\":[");
+        for (i, n) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&json_str(n));
+        }
+        out.push_str("]}");
+        out
+    }
+
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("\n=== {} ===\n", self.title));
@@ -139,6 +209,44 @@ impl Report {
     }
 }
 
+/// JSON string literal with the escapes the report text can contain.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: finite floats verbatim, non-finite as null (JSON has no
+/// NaN/Infinity literals).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Wrap per-experiment JSON reports into one machine-readable document.
+pub fn json_document(entries: &[String], total_wall_s: f64) -> String {
+    format!(
+        "{{\"generator\":\"coldfaas\",\"total_wall_s\":{},\"experiments\":[{}]}}\n",
+        json_num(total_wall_s),
+        entries.join(",")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +269,29 @@ mod tests {
         assert!(b.pass());
         let b2 = BandCheck { label: "x".into(), metric: "p50", got: 15.01, lo: 8.0, hi: 15.0 };
         assert!(!b2.pass());
+    }
+
+    #[test]
+    fn json_escapes_and_structure() {
+        let mut r = Report::new("t \"quoted\"\nline");
+        r.add_series("s", stats());
+        r.check("a", "p50", 100.0, 100.0, 0.1);
+        r.band("b", "ms", f64::NAN, 0.0, f64::INFINITY);
+        r.note("n1");
+        let j = r.to_json("fig1", 1.5);
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"id\":\"fig1\""));
+        assert!(j.contains("\\\"quoted\\\"\\nline"));
+        assert!(j.contains("\"measured\":null"), "non-finite must be null: {j}");
+        assert!(j.contains("\"hi\":null"));
+        assert!(j.contains("\"all_pass\":false"));
+        assert!(j.contains("\"p50\":3"));
+        // No raw control characters or bare NaN/inf tokens survive.
+        assert!(!j.contains('\n'));
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+        let doc = json_document(&[j.clone(), j], 3.0);
+        assert!(doc.contains("\"experiments\":[{"));
+        assert!(doc.contains("},{"));
     }
 
     #[test]

@@ -29,7 +29,9 @@ fn artifacts_ready() -> bool {
 fn help_lists_subcommands() {
     let (code, stdout, _) = run(&["help"]);
     assert_eq!(code, 0);
-    for sub in ["experiment", "policies", "serve", "invoke", "verify", "measure-exec", "list"] {
+    for sub in
+        ["experiment", "policies", "fleet", "serve", "invoke", "verify", "measure-exec", "list"]
+    {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -79,6 +81,46 @@ fn policies_rejects_bad_arguments() {
     let (code, _, stderr) = run(&["policies", "--functions", "0"]);
     assert_eq!(code, 2);
     assert!(stderr.contains("positive"));
+}
+
+#[test]
+fn fleet_small_sweep_passes_and_prints_frontier() {
+    // A deliberately tiny trace: the checks are structural, not
+    // statistical, and the grid is 32 cells.
+    let (code, stdout, stderr) =
+        run(&["fleet", "--quick", "--duration", "10", "--rps", "20", "--nodes", "8"]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("ALL CHECKS PASS"), "{stdout}");
+    assert!(stdout.contains("E13"));
+    for label in ["includeos+cold-only+least-loaded", "docker+fixed-600s+co-locate"] {
+        assert!(stdout.contains(label), "fleet output missing {label}");
+    }
+    assert!(stdout.contains("frontier"));
+}
+
+#[test]
+fn fleet_rejects_bad_node_counts() {
+    let (code, _, stderr) = run(&["fleet", "--nodes", "0"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--nodes"));
+    let (code, _, stderr) = run(&["fleet", "--nodes", "33"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--nodes"));
+}
+
+#[test]
+fn experiment_json_writes_machine_readable_report() {
+    let path = std::env::temp_dir().join(format!("coldfaas_bench_{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let (code, stdout, _) = run(&["experiment", "fig3", "--quick", "--json", path_s.as_str()]);
+    assert_eq!(code, 0, "{stdout}");
+    let doc = std::fs::read_to_string(&path).expect("json file written");
+    let _ = std::fs::remove_file(&path);
+    assert!(doc.starts_with("{\"generator\":\"coldfaas\""), "{doc}");
+    assert!(doc.contains("\"id\":\"fig3\""));
+    assert!(doc.contains("\"all_pass\":true"));
+    assert!(doc.contains("\"total_wall_s\":"));
+    assert!(doc.contains("\"checks\":["));
 }
 
 #[test]
