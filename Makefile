@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet
+.PHONY: build test artifacts experiments policies fleet chaos
 
 build:
 	cd rust && cargo build --release
@@ -22,3 +22,6 @@ policies: build
 
 fleet: build
 	./rust/target/release/coldfaas fleet --quick
+
+chaos: build
+	./rust/target/release/coldfaas chaos --quick

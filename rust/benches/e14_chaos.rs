@@ -1,0 +1,21 @@
+//! Bench E14: chaos sweep — the E13 fleet under a scripted fault
+//! schedule (staggered node crashes with cache flushes and straggler
+//! restarts, a fabric brown-out, client retries), every cell paired with
+//! a fault-free baseline over the same trace and windows.
+//!
+//!     cargo bench --bench e14_chaos
+
+use coldfaas::experiments::{chaos, ExpConfig};
+
+fn main() {
+    println!("== bench e14_chaos: the fleet under failure ==\n");
+    let t0 = std::time::Instant::now();
+    let report = chaos(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE14 regeneration (16 cells x 2 legs x ~20k multi-tenant invocations, 8 nodes): \
+         {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e14 regressions: {:#?}", report.failures());
+}

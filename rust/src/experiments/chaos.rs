@@ -1,0 +1,414 @@
+//! E14: the chaos sweep — the fleet under failure.  The 1000-function
+//! Zipf tenant trace is replayed against an 8–16 node cluster while a
+//! scripted [`FaultPlan`](crate::platform::FaultPlan) crashes nodes
+//! (flushing their image caches and
+//! straggling their first cold starts back), browns out the fabric, and
+//! forces killed requests through client retries — for every lifecycle
+//! policy x placement scheduler x driver cell, each paired with a
+//! fault-free baseline leg over the *same* trace, seed, and disruption
+//! windows.
+//!
+//! The paper-anchored claim (§I/§IV taken to its fleet conclusion): a
+//! cold-only unikernel platform has *no state to lose* — it degrades only
+//! by the capacity the crash took, shows zero post-restart cold-burst
+//! spike, and rebuilds nothing — while every keep-alive policy loses its
+//! warm pools at the crash and pays a cold-fraction spike (plus renewed
+//! GB·s of residency) to rebuild them.  And under every cell, request
+//! conservation holds: killed requests are retried or reported rejected,
+//! never silently lost.
+
+use super::fleet::cell_config;
+use super::ExpConfig;
+use crate::fnplat::DriverKind;
+use crate::platform::{chaos_plan, run_platform, SchedPolicy};
+use crate::policy::{
+    ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
+};
+use crate::report::Report;
+use crate::sim::Host;
+use crate::workload::tenants::{TenantConfig, TenantTrace};
+
+/// Full E14 configuration: the tenant trace plus the cluster shape (the
+/// fault schedule itself is derived from the trace horizon, so every
+/// cell faces the same disruption).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub tenant: TenantConfig,
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    pub schedulers: Vec<SchedPolicy>,
+    pub host: Host,
+}
+
+/// Derive an E14 configuration from the shared experiment config (same
+/// trace sizing as E13; the grid is 16 cells, each run twice).
+pub fn chaos_config(cfg: &ExpConfig) -> ChaosConfig {
+    let duration_s = (cfg.requests as f64 / 25.0).clamp(60.0, 600.0);
+    let total_rps = (cfg.requests as f64 * 2.0) / duration_s;
+    ChaosConfig {
+        tenant: TenantConfig {
+            functions: 1000,
+            duration_s,
+            total_rps,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        nodes: 8,
+        cores_per_node: 8,
+        schedulers: vec![SchedPolicy::LeastLoaded, SchedPolicy::CoLocate],
+        host: cfg.host,
+    }
+}
+
+/// One (driver, policy, scheduler) cell: the faulted run next to its
+/// fault-free baseline over identical trace, seed, and windows.
+#[derive(Clone, Debug)]
+pub struct ChaosCell {
+    pub driver: DriverKind,
+    pub policy: String,
+    pub scheduler: SchedPolicy,
+    pub injected: u64,
+    pub served: u64,
+    pub killed: u64,
+    pub retries: u64,
+    pub rejected: u64,
+    /// Idle warm executors destroyed when their node crashed.
+    pub warm_slots_lost: u64,
+    pub prewarm_boots: u64,
+    pub idle_gb_seconds: f64,
+    pub p99_ms: f64,
+    pub baseline_p99_ms: f64,
+    /// Cold fraction of dispatches inside disruption windows.
+    pub window_cold_fraction: f64,
+    pub baseline_window_cold_fraction: f64,
+    pub steady_cold_fraction: f64,
+    pub crashes: u64,
+    pub restarts: u64,
+}
+
+impl ChaosCell {
+    pub fn label(&self) -> String {
+        let d = match self.driver {
+            DriverKind::DockerWarm => "docker",
+            DriverKind::IncludeOsCold => "includeos",
+        };
+        format!("{d}+{}+{}", self.policy, self.scheduler.name())
+    }
+
+    /// Post-crash cold-burst spike: extra cold fraction inside the
+    /// disruption windows relative to the fault-free baseline.  Zero for
+    /// a platform with no warm state to rebuild.
+    pub fn cold_spike(&self) -> f64 {
+        self.window_cold_fraction - self.baseline_window_cold_fraction
+    }
+}
+
+fn make_policy(idx: usize, n_funcs: u32) -> Box<dyn LifecyclePolicy> {
+    match idx {
+        0 => Box::new(ColdOnlyPolicy),
+        1 => Box::new(FixedKeepAlive::default()),
+        2 => Box::new(HistogramPrewarm::new(n_funcs)),
+        _ => Box::new(EwmaPredictive::new(n_funcs)),
+    }
+}
+
+/// Run the driver x policy x scheduler grid, each cell as a (faulted,
+/// baseline) pair over one generated trace and one scripted fault plan.
+pub fn chaos_cells(cfg: &ChaosConfig) -> Vec<ChaosCell> {
+    cells_over(cfg, &TenantTrace::generate(&cfg.tenant))
+}
+
+/// The grid over an already-generated trace (cells are exactly E13 fleet
+/// cells — `fleet::cell_config` — under the scripted plan / its dry leg).
+fn cells_over(cfg: &ChaosConfig, trace: &TenantTrace) -> Vec<ChaosCell> {
+    let horizon_ns = (cfg.tenant.duration_s * 1e9) as u64;
+    let plan = chaos_plan(cfg.nodes, horizon_ns);
+    let cell = |driver, scheduler, faults| {
+        cell_config(cfg.nodes, cfg.cores_per_node, &cfg.tenant, driver, scheduler, trace, faults)
+    };
+    let mut cells = Vec::new();
+    for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
+        for &scheduler in &cfg.schedulers {
+            for idx in 0..4 {
+                let mut policy = make_policy(idx, cfg.tenant.functions);
+                let fcfg = cell(driver, scheduler, plan.clone());
+                let f = run_platform(&fcfg, policy.as_mut(), cfg.host);
+                // Baseline leg: same trace, seed, and disruption-window
+                // classification (dry plan), but nothing is injected.
+                let mut baseline = make_policy(idx, cfg.tenant.functions);
+                let bcfg = cell(driver, scheduler, plan.dry());
+                let b = run_platform(&bcfg, baseline.as_mut(), cfg.host);
+                cells.push(ChaosCell {
+                    driver,
+                    policy: policy.name(),
+                    scheduler,
+                    injected: f.injected,
+                    served: f.served,
+                    killed: f.killed,
+                    retries: f.retries,
+                    rejected: f.rejected,
+                    warm_slots_lost: f.warm_slots_lost,
+                    prewarm_boots: f.prewarm_boots,
+                    idle_gb_seconds: f.idle_gb_seconds,
+                    p99_ms: f.quantile_ms(0.99),
+                    baseline_p99_ms: b.quantile_ms(0.99),
+                    window_cold_fraction: f.window_cold_fraction(),
+                    baseline_window_cold_fraction: b.window_cold_fraction(),
+                    steady_cold_fraction: f.steady_cold_fraction(),
+                    crashes: f.crashes,
+                    restarts: f.restarts,
+                });
+            }
+        }
+    }
+    cells
+}
+
+fn cells_where<'a>(
+    cells: &'a [ChaosCell],
+    driver: DriverKind,
+    policy: &'a str,
+) -> impl Iterator<Item = &'a ChaosCell> {
+    cells.iter().filter(move |c| c.driver == driver && c.policy == policy)
+}
+
+/// E14 report over an explicit configuration (the CLI subcommand path).
+pub fn chaos_with(cfg: &ChaosConfig) -> Report {
+    let mut report = Report::new(&format!(
+        "E14: chaos sweep — node crashes + cache flushes + fabric brown-outs \
+         over {} nodes ({} fns, {:.0} rps, {:.0} s; 2 staggered outages, retries on)",
+        cfg.nodes, cfg.tenant.functions, cfg.tenant.total_rps, cfg.tenant.duration_s
+    ));
+    let trace = TenantTrace::generate(&cfg.tenant);
+    let n_trace = trace.len() as u64;
+    let cells = cells_over(cfg, &trace);
+
+    report.note(format!(
+        "{:<36} {:>7} {:>7} {:>5} {:>5} {:>4} {:>6} {:>10} {:>9} {:>9} {:>8}",
+        "driver+policy+scheduler",
+        "inj",
+        "served",
+        "kill",
+        "retry",
+        "rej",
+        "lost",
+        "waste GB·s",
+        "p99 ms",
+        "base p99",
+        "Δcold%"
+    ));
+    for c in &cells {
+        report.note(format!(
+            "{:<36} {:>7} {:>7} {:>5} {:>5} {:>4} {:>6} {:>10.2} {:>9.1} {:>9.1} {:>+7.1}%",
+            c.label(),
+            c.injected,
+            c.served,
+            c.killed,
+            c.retries,
+            c.rejected,
+            c.warm_slots_lost,
+            c.idle_gb_seconds,
+            c.p99_ms,
+            c.baseline_p99_ms,
+            c.cold_spike() * 100.0
+        ));
+    }
+
+    // Conservation, everywhere: nothing is silently lost under faults.
+    let worst_conservation = cells
+        .iter()
+        .map(|c| (c.injected as i64 - c.served as i64 - c.rejected as i64).unsigned_abs())
+        .max()
+        .unwrap_or(0);
+    report.band(
+        "served + rejected == injected (worst cell)",
+        "reqs",
+        worst_conservation as f64,
+        0.0,
+        0.0,
+    );
+    let worst_injection = cells
+        .iter()
+        .map(|c| (c.injected as i64 - n_trace as i64).unsigned_abs())
+        .max()
+        .unwrap_or(0);
+    report.band(
+        "every trace arrival injected (worst cell)",
+        "reqs",
+        worst_injection as f64,
+        0.0,
+        0.0,
+    );
+    // With node 0 never crashing and retries on, no chain is abandoned.
+    let max_rejected = cells.iter().map(|c| c.rejected).max().unwrap_or(0);
+    report.band("rejected chains (worst cell)", "reqs", max_rejected as f64, 0.0, 0.0);
+    // The crashes really do kill in-flight work somewhere in the grid.
+    let total_killed: u64 = cells.iter().map(|c| c.killed).sum();
+    report.band(
+        "killed attempts across the grid",
+        "reqs",
+        total_killed as f64,
+        1.0,
+        f64::INFINITY,
+    );
+
+    // The paper's row: nothing lost at the crash, nothing rebuilt after
+    // it, no cold-burst spike — the platform only lost capacity.
+    let inc_cold_rebuilt = cells_where(&cells, DriverKind::IncludeOsCold, "cold-only")
+        .map(|c| (c.warm_slots_lost + c.prewarm_boots) as f64 + c.idle_gb_seconds)
+        .fold(0.0, f64::max);
+    report.band(
+        "includeos+cold-only state lost/rebuilt",
+        "slots+GB·s",
+        inc_cold_rebuilt,
+        0.0,
+        0.0,
+    );
+    let inc_cold_spike = cells_where(&cells, DriverKind::IncludeOsCold, "cold-only")
+        .map(|c| c.cold_spike().abs())
+        .fold(0.0, f64::max);
+    report.band("includeos+cold-only cold-burst spike", "frac", inc_cold_spike, 0.0, 0.0);
+    let inc_cold_p99_ratio = cells_where(&cells, DriverKind::IncludeOsCold, "cold-only")
+        .map(|c| c.p99_ms / c.baseline_p99_ms)
+        .fold(0.0, f64::max);
+    report.band(
+        "includeos+cold-only p99 under faults / baseline",
+        "ratio",
+        inc_cold_p99_ratio,
+        0.5,
+        2.5,
+    );
+
+    // The keep-alive platform, by contrast, loses its pools at the crash
+    // and pays a post-restart cold burst (plus renewed GB·s) to rebuild.
+    let fixed_slots_lost = cells_where(&cells, DriverKind::DockerWarm, "fixed-600s")
+        .map(|c| c.warm_slots_lost)
+        .min()
+        .unwrap_or(0);
+    report.band(
+        "docker+fixed-600s warm slots lost at crashes",
+        "slots",
+        fixed_slots_lost as f64,
+        1.0,
+        f64::INFINITY,
+    );
+    let fixed_spike = cells_where(&cells, DriverKind::DockerWarm, "fixed-600s")
+        .map(|c| c.cold_spike())
+        .fold(f64::INFINITY, f64::min);
+    report.band(
+        "docker+fixed-600s post-crash cold-burst spike",
+        "frac",
+        fixed_spike,
+        0.005,
+        1.0,
+    );
+    let fixed_waste = cells_where(&cells, DriverKind::DockerWarm, "fixed-600s")
+        .map(|c| c.idle_gb_seconds)
+        .fold(f64::INFINITY, f64::min);
+    report.band(
+        "docker+fixed-600s re-warmed residency",
+        "GB·s",
+        fixed_waste,
+        1e-9,
+        f64::INFINITY,
+    );
+
+    report.note(
+        "reading: the cold-only unikernel fleet loses only the crashed capacity — \
+         zero warm state drained, zero rebuilt, no cold-burst spike, p99 within \
+         noise of the fault-free baseline — while keep-alive policies lose their \
+         pools at every crash and re-pay the cold starts (Δcold%) and resident \
+         GB·s to rebuild them; killed requests are retried onto surviving nodes \
+         (rej = 0), so conservation holds in every cell",
+    );
+    report
+}
+
+/// E14 via the shared experiment config (the `experiment chaos` path).
+pub fn chaos(cfg: &ExpConfig) -> Report {
+    chaos_with(&chaos_config(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reduced load for the structural unit tests; the full `--quick`
+    /// grid (with its paper checks) runs once in `chaos_checks_pass_quick`.
+    fn small_cfg() -> ChaosConfig {
+        ChaosConfig {
+            tenant: TenantConfig {
+                functions: 300,
+                duration_s: 40.0,
+                total_rps: 50.0,
+                seed: 0xE14,
+                ..Default::default()
+            },
+            nodes: 6,
+            cores_per_node: 8,
+            schedulers: vec![SchedPolicy::LeastLoaded],
+            host: Host::default(),
+        }
+    }
+
+    #[test]
+    fn chaos_checks_pass_quick() {
+        let r = chaos(&ExpConfig::quick());
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+    }
+
+    #[test]
+    fn grid_covers_policy_x_scheduler_x_driver_and_conserves() {
+        let cfg = small_cfg();
+        let cells = chaos_cells(&cfg);
+        assert_eq!(cells.len(), 2 * 4);
+        let n = cells[0].injected;
+        assert!(n > 500, "trace too small: {n}");
+        for name in ["cold-only", "fixed-600s", "histogram", "ewma"] {
+            for d in [DriverKind::DockerWarm, DriverKind::IncludeOsCold] {
+                assert!(
+                    cells.iter().any(|c| c.driver == d && c.policy == name),
+                    "missing cell {d:?}+{name}"
+                );
+            }
+        }
+        for c in &cells {
+            assert_eq!(c.injected, n, "{}", c.label());
+            assert_eq!(c.injected, c.served + c.rejected, "{}", c.label());
+            assert_eq!(c.rejected, 0, "{}", c.label());
+            assert_eq!((c.crashes, c.restarts), (2, 2), "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn cold_only_unikernel_is_immune_to_state_loss() {
+        let cells = chaos_cells(&small_cfg());
+        for c in cells_where(&cells, DriverKind::IncludeOsCold, "cold-only") {
+            assert_eq!(c.warm_slots_lost, 0);
+            assert_eq!(c.prewarm_boots, 0);
+            assert_eq!(c.idle_gb_seconds, 0.0);
+            assert_eq!(c.cold_spike(), 0.0, "all-cold cannot spike");
+        }
+    }
+
+    #[test]
+    fn keep_alive_loses_state_and_pays_a_cold_burst() {
+        let cells = chaos_cells(&small_cfg());
+        for c in cells_where(&cells, DriverKind::DockerWarm, "fixed-600s") {
+            assert!(c.warm_slots_lost > 0, "{}", c.label());
+            assert!(c.cold_spike() > 0.0, "{}: spike {}", c.label(), c.cold_spike());
+            assert!(c.idle_gb_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_report_per_seed() {
+        let a = chaos_with(&small_cfg()).render();
+        let b = chaos_with(&small_cfg()).render();
+        assert_eq!(a, b);
+        let mut other = small_cfg();
+        other.tenant.seed = 1;
+        let c = chaos_with(&other).render();
+        assert_ne!(a, c);
+    }
+}

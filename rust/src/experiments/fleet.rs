@@ -11,8 +11,8 @@ use super::ExpConfig;
 use crate::fnplat::{DriverKind, DEFAULT_EXEC_MS};
 use crate::platform::presets::INCLUDEOS_PAUSED_BYTES;
 use crate::platform::{
-    run_platform, DriverProfile, ImageSeeding, PlatformConfig, PlatformLoad, RequestPath,
-    SchedPolicy,
+    run_platform, DriverProfile, FaultPlan, ImageSeeding, PlatformConfig, PlatformLoad,
+    RequestPath, SchedPolicy,
 };
 use crate::policy::{
     ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
@@ -111,19 +111,25 @@ fn mark_frontier(cells: &mut [FleetCell]) {
     }
 }
 
-fn cell_config(
-    cfg: &FleetConfig,
+/// One platform cell of a fleet-shaped sweep.  Shared by E13 and E14
+/// (the chaos grid is exactly this grid under a fault plan), so the two
+/// experiments cannot drift apart on cluster shape or request path.
+pub(crate) fn cell_config(
+    nodes: usize,
+    cores_per_node: u32,
+    tenant: &TenantConfig,
     driver: DriverKind,
     scheduler: SchedPolicy,
     trace: &TenantTrace,
+    faults: FaultPlan,
 ) -> PlatformConfig {
     PlatformConfig {
         driver: DriverProfile::from_kind(driver),
-        nodes: cfg.nodes,
-        cores_per_node: cfg.cores_per_node,
-        mem_slots_per_node: cfg.cores_per_node.saturating_mul(8),
+        nodes,
+        cores_per_node,
+        mem_slots_per_node: cores_per_node.saturating_mul(8),
         scheduler,
-        functions: cfg.tenant.functions,
+        functions: tenant.functions,
         exec_ms: DEFAULT_EXEC_MS,
         mem_bytes_per_slot: match driver {
             DriverKind::DockerWarm => driver.tech().warm_memory_bytes(),
@@ -143,7 +149,8 @@ fn cell_config(
         // Hot path stays O(1) memory per series: quantiles come from the
         // streaming per-node histograms, not raw sample vectors.
         exact_latencies: false,
-        seed: cfg.tenant.seed,
+        faults,
+        seed: tenant.seed,
     }
 }
 
@@ -154,7 +161,15 @@ pub fn fleet_cells(cfg: &FleetConfig) -> Vec<FleetCell> {
     for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
         for &scheduler in &cfg.schedulers {
             for mut policy in fresh_policies(cfg.tenant.functions) {
-                let pcfg = cell_config(cfg, driver, scheduler, &trace);
+                let pcfg = cell_config(
+                    cfg.nodes,
+                    cfg.cores_per_node,
+                    &cfg.tenant,
+                    driver,
+                    scheduler,
+                    &trace,
+                    FaultPlan::default(),
+                );
                 let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
                 cells.push(FleetCell {
                     driver,

@@ -1,7 +1,8 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E13).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E14).
 
+pub mod chaos;
 pub mod cloud;
 pub mod complexity;
 pub mod decompose;
@@ -13,6 +14,7 @@ pub mod scaleout;
 pub mod startup;
 pub mod waste;
 
+pub use chaos::chaos;
 pub use cloud::{distance_sweep, table1};
 pub use complexity::complexity;
 pub use decompose::decompose;
@@ -40,13 +42,14 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "scaleout" => scaleout(cfg),
         "policies" => policies(cfg),
         "fleet" => fleet(cfg),
+        "chaos" => chaos(cfg),
         _ => return None,
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 13] = [
+pub const ALL_EXPERIMENTS: [&str; 14] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
-    "distance", "scaleout", "policies", "fleet",
+    "distance", "scaleout", "policies", "fleet", "chaos",
 ];
 
 use crate::sim::Host;

@@ -46,6 +46,8 @@ pub struct WarmPool {
     pub expirations: u64,
     /// Executors torn down immediately after serving (cold-only policies).
     pub retirements: u64,
+    /// Idle executors destroyed by node crashes (fault injection).
+    pub crash_drains: u64,
 }
 
 impl WarmPool {
@@ -62,6 +64,7 @@ impl WarmPool {
             cold_starts: 0,
             expirations: 0,
             retirements: 0,
+            crash_drains: 0,
         }
     }
 
@@ -206,6 +209,32 @@ impl WarmPool {
                 }
             }
         }
+    }
+
+    /// The node under this pool crashed at `now`: every idle executor
+    /// dies with it.  Idle time actually accrued up to the crash is still
+    /// charged (the memory *was* resident), the slots count as
+    /// crash-drained rather than expired, and the alive counts reset —
+    /// after a restart the platform has no warm state here to route to.
+    /// Returns the number of warm slots destroyed.
+    pub fn crash(&mut self, now: u64) -> u64 {
+        let funcs: Vec<String> = self.idle.keys().cloned().collect();
+        let mut dropped = 0u64;
+        for f in funcs {
+            if let Some(q) = self.idle.get_mut(&f) {
+                let slots: Vec<WarmSlot> = q.drain(..).collect();
+                dropped += slots.len() as u64;
+                for s in slots {
+                    let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
+                    self.account_idle(idle_ns);
+                }
+            }
+        }
+        // Busy executors die too (their in-flight requests are killed by
+        // the caller); nothing survives on the node.
+        self.alive.clear();
+        self.crash_drains += dropped;
+        dropped
     }
 
     /// Headline waste metric in gigabyte-seconds.
@@ -399,6 +428,23 @@ mod tests {
         assert_eq!(p.warm_available("f", 3 * S), 1);
         assert_eq!(p.warm_available("f", 6 * S), 0);
         assert_eq!(p.expirations, 1);
+    }
+
+    #[test]
+    fn crash_drains_idle_slots_and_charges_accrued_time() {
+        let mut p = pool();
+        p.prewarm("f", 2, 0);
+        p.dispatch("g", 0);
+        p.release("g", 0);
+        assert_eq!(p.crash(5 * S), 3);
+        assert_eq!(p.crash_drains, 3);
+        assert_eq!(p.idle_count("f") + p.idle_count("g"), 0);
+        assert_eq!(p.alive_count("f") + p.alive_count("g"), 0);
+        // Each slot idled 5 s before the crash; no expiration recorded.
+        assert_eq!(p.idle_mem_byte_ns, 3 * (5 * S) as u128 * (16 << 20) as u128);
+        assert_eq!(p.expirations, 0);
+        // Everything after the crash starts cold.
+        assert_eq!(p.dispatch("f", 6 * S), Dispatch::Cold);
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //!   [`workload`], [`fnplat`], [`lambda`], [`policy`], and the unified
 //!   [`platform`] layer every experiment is a configuration of) that
 //!   regenerates every figure and table of the paper's evaluation in
-//!   virtual time — plus the keep-alive policy lab (E12) and the
-//!   cluster-scale fleet sweep (E13) that quantify the cold-only thesis
-//!   against the lifecycle policies real platforms run — and
+//!   virtual time — plus the keep-alive policy lab (E12), the
+//!   cluster-scale fleet sweep (E13), and the fault-injection chaos
+//!   sweep (E14) that quantify the cold-only thesis against the
+//!   lifecycle policies real platforms run, in failure and in calm — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
 //!   [`runtime`]) — a real HTTP control plane whose executors run
 //!   AOT-compiled JAX/Pallas functions through PJRT (python never on the

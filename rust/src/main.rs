@@ -4,6 +4,7 @@
 //!   experiment <name>|all   regenerate a paper figure/table (DESIGN.md §5)
 //!   policies                keep-alive policy lab (E12): latency-vs-waste frontier
 //!   fleet                   cluster-scale fleet sweep (E13): policy x scheduler x driver
+//!   chaos                   fault-injection sweep (E14): the fleet under node crashes
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
@@ -23,6 +24,7 @@ fn main() {
         "experiment" => cmd_experiment(&args),
         "policies" => cmd_policies(&args),
         "fleet" => cmd_fleet(&args),
+        "chaos" => cmd_chaos(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -45,7 +47,7 @@ coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
 
 USAGE: coldfaas <subcommand> [options]
 
-  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|all>
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|chaos|all>
       --requests N          requests per cell (default 10000; paper value)
       --parallelism LIST    e.g. 1,5,10,20,40 (default)
       --seed N              deterministic seed
@@ -68,6 +70,24 @@ USAGE: coldfaas <subcommand> [options]
                             policy x placement scheduler x driver over a
                             1000-function Zipf trace on an N-node cluster
       --nodes N             cluster size, 1..=32 (default 8)
+      --cores N             cores per node (default 8)
+      --functions N         distinct functions (default 1000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default sized from --requests)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic seed
+      --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  chaos                     fault-injection sweep (E14): the E13 fleet under
+                            a scripted fault schedule — staggered node
+                            crashes (warm pools drained, in-flight requests
+                            killed and retried, image caches flushed on
+                            restart, 2x straggler starts) plus a fabric
+                            brown-out; every cell is paired with a
+                            fault-free baseline over the same trace
+      --nodes N             cluster size, 2..=32 (default 8)
       --cores N             cores per node (default 8)
       --functions N         distinct functions (default 1000)
       --rps F               aggregate offered load (default sized from --requests)
@@ -230,6 +250,35 @@ fn cmd_fleet(args: &Args) -> i32 {
     let t0 = std::time::Instant::now();
     let report = fleet_with(&cfg);
     finish_report(args, "fleet", report, t0.elapsed().as_secs_f64())
+}
+
+fn cmd_chaos(args: &Args) -> i32 {
+    use coldfaas::experiments::chaos::{chaos_config, chaos_with};
+    let mut cfg = chaos_config(&exp_config(args));
+    cfg.nodes = args.get_u64("nodes", cfg.nodes as u64) as usize;
+    cfg.cores_per_node = get_u32_opt(args, "cores", cfg.cores_per_node);
+    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
+    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
+    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
+    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
+    if cfg.nodes < 2 || cfg.nodes > coldfaas::platform::MAX_NODES {
+        eprintln!(
+            "chaos: --nodes must be in 2..={} (a node must survive the fault plan)",
+            coldfaas::platform::MAX_NODES
+        );
+        return 2;
+    }
+    if cfg.cores_per_node == 0
+        || cfg.tenant.functions == 0
+        || cfg.tenant.total_rps <= 0.0
+        || cfg.tenant.duration_s <= 0.0
+    {
+        eprintln!("chaos: --cores, --functions, --rps and --duration must be positive");
+        return 2;
+    }
+    let t0 = std::time::Instant::now();
+    let report = chaos_with(&cfg);
+    finish_report(args, "chaos", report, t0.elapsed().as_secs_f64())
 }
 
 fn coord_config(args: &Args) -> Config {

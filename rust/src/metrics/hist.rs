@@ -154,6 +154,36 @@ mod tests {
     }
 
     #[test]
+    fn merged_node_histograms_match_exact_quantiles() {
+        // E13/E14 fleet quantiles come from per-node histograms merged at
+        // the end of a run: the merge must not widen the one-bucket error
+        // bound (<5%) against the exact nearest-rank quantile over the
+        // same samples recorded round-robin across 8 "nodes".
+        let mut nodes: Vec<Histogram> = (0..8).map(|_| Histogram::new()).collect();
+        let mut samples: Vec<u64> = Vec::with_capacity(20_000);
+        let mut x = 0x9E3779B97F4A7C15u64;
+        for i in 0..20_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let ns = 200_000 + x % 400_000_000; // 0.2 .. 400 ms spread
+            samples.push(ns);
+            nodes[(i % 8) as usize].record_ns(ns);
+        }
+        let mut merged = Histogram::new();
+        for h in &nodes {
+            merged.merge(h);
+        }
+        assert_eq!(merged.len(), 20_000);
+        for q in [0.5, 0.9, 0.99] {
+            let exact = crate::platform::sim::exact_quantile_ms(&samples, q);
+            let approx = merged.quantile_ms(q);
+            assert!(
+                (approx / exact - 1.0).abs() < 0.05,
+                "q{q}: merged {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
     fn monotone_quantiles() {
         let mut h = Histogram::new();
         let mut x = 131u64;

@@ -1,0 +1,318 @@
+//! Fault injection for the unified platform (S21): a deterministic,
+//! seed-driven schedule of node crashes/restarts, image-cache flushes,
+//! fabric brown-outs, and post-restart straggler starts.
+//!
+//! The paper's wedge is that a fleet with *no* warm state has nothing to
+//! lose when nodes die: a cold-only unikernel platform degrades only by
+//! the capacity it lost, while keep-alive platforms must rebuild pools
+//! and prediction histories after every failure.  A [`FaultPlan`] makes
+//! that claim measurable: [`super::sim::run_platform`] weaves the plan
+//! into the event loop, so crashes kill in-flight requests, drain warm
+//! pools, and (optionally) invalidate per-node image caches, with warm
+//! routing and every scheduler routing around dead nodes.
+//!
+//! Plans are pure data.  They come from three places: hand-scripted
+//! (the E14 `chaos` experiment uses [`chaos_plan`] so every cell sees
+//! the same disruption), generated from MTTF/MTTR draws
+//! ([`FaultPlan::generate`], the property-test path), or empty (the
+//! default — every pre-existing preset runs byte-identically).
+
+use crate::sim::Rng;
+
+/// One node outage: the node crashes at `down_at_ns` (in-flight requests
+/// on it are killed, its warm pool is drained) and restarts at
+/// `up_at_ns` (`u64::MAX` = never comes back).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFault {
+    pub node: usize,
+    pub down_at_ns: u64,
+    pub up_at_ns: u64,
+    /// Restart with an empty image cache (node-local storage lost):
+    /// every image must be pulled again.
+    pub flush_cache: bool,
+    /// Cold starts on the restarted node run `straggler_mult` x slower
+    /// for `straggler_ns` after restart (cold page/dentry caches).
+    pub straggler_mult: f64,
+    pub straggler_ns: u64,
+}
+
+/// A fabric brown-out: image pulls in `[from_ns, until_ns)` see
+/// `fabric_gbps / slowdown`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricFault {
+    pub from_ns: u64,
+    pub until_ns: u64,
+    pub slowdown: f64,
+}
+
+/// A full fault schedule for one platform run.
+///
+/// The default plan is empty: no events are injected and every run is
+/// byte-identical to the pre-fault-layer platform.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub node_faults: Vec<NodeFault>,
+    pub fabric_faults: Vec<FabricFault>,
+    /// Client retries per killed request before the chain is reported
+    /// rejected (0 = killed requests are rejected immediately).
+    pub max_retries: u32,
+    /// Client back-off before each retry attempt.
+    pub retry_backoff_ns: u64,
+    /// Disruption-window classification: a dispatch counts as "in the
+    /// disruption window" from a node's crash until `spike_window_ns`
+    /// past its restart (used for the post-restart cold-fraction spike
+    /// metric; 0 disables the classification).
+    pub spike_window_ns: u64,
+    /// Observe-only plan: no crash/restart/fabric/straggler effects are
+    /// applied, but window classification still runs — the baseline leg
+    /// of a chaos comparison sees the exact same windows.
+    pub dry_run: bool,
+}
+
+/// Parameters for [`FaultPlan::generate`]: per-node exponential
+/// time-to-failure / time-to-repair draws over a fixed horizon.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    pub nodes: usize,
+    pub horizon_ns: u64,
+    /// Mean time to failure per node.
+    pub mttf_ns: u64,
+    /// Mean time to repair per outage.
+    pub mttr_ns: u64,
+    pub flush_cache: bool,
+    pub straggler_mult: f64,
+    pub straggler_ns: u64,
+    pub max_retries: u32,
+    pub retry_backoff_ns: u64,
+    pub spike_window_ns: u64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.node_faults.is_empty() && self.fabric_faults.is_empty()
+    }
+
+    /// The observe-only copy of this plan (same windows, no effects).
+    pub fn dry(&self) -> FaultPlan {
+        FaultPlan { dry_run: true, ..self.clone() }
+    }
+
+    /// Draw a plan from per-node exponential MTTF/MTTR streams.  Each
+    /// node forks its own RNG stream, so the plan is independent of node
+    /// count ordering and byte-stable per seed.
+    pub fn generate(cfg: &FaultConfig) -> FaultPlan {
+        assert!(cfg.nodes >= 1 && cfg.mttf_ns > 0 && cfg.mttr_ns > 0);
+        let mut root = Rng::new(cfg.seed);
+        let mut node_faults = Vec::new();
+        for node in 0..cfg.nodes {
+            let mut rng = root.fork(node as u64 + 1);
+            let mut t = 0u64;
+            loop {
+                t = t.saturating_add(rng.exponential(cfg.mttf_ns as f64) as u64);
+                if t >= cfg.horizon_ns {
+                    break;
+                }
+                let repair = (rng.exponential(cfg.mttr_ns as f64) as u64).max(1_000_000);
+                let up = t.saturating_add(repair).min(cfg.horizon_ns);
+                node_faults.push(NodeFault {
+                    node,
+                    down_at_ns: t,
+                    up_at_ns: up,
+                    flush_cache: cfg.flush_cache,
+                    straggler_mult: cfg.straggler_mult,
+                    straggler_ns: cfg.straggler_ns,
+                });
+                t = up;
+            }
+        }
+        FaultPlan {
+            node_faults,
+            fabric_faults: Vec::new(),
+            max_retries: cfg.max_retries,
+            retry_backoff_ns: cfg.retry_backoff_ns,
+            spike_window_ns: cfg.spike_window_ns,
+            dry_run: false,
+        }
+    }
+
+    /// Panic early on malformed plans (out-of-range nodes, inverted or
+    /// overlapping outages) instead of silently corrupting a run.
+    pub fn validate(&self, nodes: usize) {
+        // The attempt counter rides in bits 24..=30 of the request class.
+        assert!(self.max_retries < 127, "retry budget must fit the class attempt bits");
+        for f in &self.node_faults {
+            assert!(f.node < nodes, "fault targets node {} of {nodes}", f.node);
+            assert!(f.down_at_ns < f.up_at_ns, "outage must have positive length");
+            assert!(f.straggler_mult >= 1.0, "straggler multiplier must be >= 1");
+        }
+        for f in &self.fabric_faults {
+            assert!(f.from_ns < f.until_ns, "fabric window must have positive length");
+            assert!(f.slowdown >= 1.0, "fabric slowdown must be >= 1");
+        }
+        for a in 0..nodes {
+            let mut spans: Vec<(u64, u64)> = self
+                .node_faults
+                .iter()
+                .filter(|f| f.node == a)
+                .map(|f| (f.down_at_ns, f.up_at_ns))
+                .collect();
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(w[0].1 <= w[1].0, "node {a} outages overlap");
+            }
+        }
+    }
+
+    /// Fabric slowdown factor in effect at `now` (1.0 = nominal).
+    pub fn fabric_slowdown_at(&self, now: u64) -> f64 {
+        if self.dry_run {
+            return 1.0;
+        }
+        self.fabric_faults
+            .iter()
+            .filter(|f| now >= f.from_ns && now < f.until_ns)
+            .fold(1.0, |acc, f| acc.max(f.slowdown))
+    }
+
+    /// Is `now` inside any disruption window (crash .. restart +
+    /// spike window)?  Classification only — also answered by dry-run
+    /// plans, so a baseline leg bins its dispatches identically.
+    pub fn in_disruption_window(&self, now: u64) -> bool {
+        self.node_faults
+            .iter()
+            .any(|f| now >= f.down_at_ns && now < f.up_at_ns.saturating_add(self.spike_window_ns))
+    }
+
+    /// The plan entry whose restart fires on `node` at exactly `now`.
+    pub fn restart_fault(&self, node: usize, now: u64) -> Option<NodeFault> {
+        self.node_faults
+            .iter()
+            .copied()
+            .find(|f| f.node == node && f.up_at_ns == now)
+    }
+}
+
+const S: u64 = 1_000_000_000;
+
+/// The scripted E14 disruption: two staggered single-node outages (cache
+/// flushed, 2x straggler starts on the way back) plus one fabric
+/// brown-out, all at fixed fractions of the horizon so every
+/// driver x policy x scheduler cell faces the same failures.  Node 0
+/// never crashes, so the cluster always has capacity and killed requests
+/// can always be retried somewhere.
+pub fn chaos_plan(nodes: usize, horizon_ns: u64) -> FaultPlan {
+    assert!(nodes >= 2, "chaos plan needs a surviving node");
+    let h = horizon_ns as f64;
+    let outage = (((0.08 * h) as u64).max(5 * S)).min((0.15 * h) as u64);
+    let straggle = ((0.15 * h) as u64).min(20 * S);
+    let fault = |node: usize, at: f64| NodeFault {
+        node,
+        down_at_ns: (at * h) as u64,
+        up_at_ns: (at * h) as u64 + outage,
+        flush_cache: true,
+        straggler_mult: 2.0,
+        straggler_ns: straggle,
+    };
+    FaultPlan {
+        node_faults: vec![fault(1, 0.35), fault(nodes - 1, 0.55)],
+        fabric_faults: vec![FabricFault {
+            from_ns: (0.70 * h) as u64,
+            until_ns: (0.80 * h) as u64,
+            slowdown: 8.0,
+        }],
+        max_retries: 3,
+        retry_backoff_ns: 200 * 1_000_000,
+        spike_window_ns: straggle,
+        dry_run: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_default() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert_eq!(p.fabric_slowdown_at(5 * S), 1.0);
+        assert!(!p.in_disruption_window(5 * S));
+        p.validate(4);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_horizon() {
+        let cfg = FaultConfig {
+            nodes: 6,
+            horizon_ns: 300 * S,
+            mttf_ns: 120 * S,
+            mttr_ns: 10 * S,
+            flush_cache: true,
+            straggler_mult: 2.0,
+            straggler_ns: 10 * S,
+            max_retries: 3,
+            retry_backoff_ns: 100_000_000,
+            spike_window_ns: 10 * S,
+            seed: 0xFA17,
+        };
+        let a = FaultPlan::generate(&cfg);
+        let b = FaultPlan::generate(&cfg);
+        assert_eq!(a, b);
+        a.validate(6);
+        assert!(!a.is_empty(), "120 s MTTF over 6 nodes x 300 s should crash someone");
+        for f in &a.node_faults {
+            assert!(f.down_at_ns < 300 * S && f.up_at_ns <= 300 * S);
+        }
+        let c = FaultPlan::generate(&FaultConfig { seed: 0xFA18, ..cfg });
+        assert_ne!(a, c, "different seed must draw a different schedule");
+    }
+
+    #[test]
+    fn chaos_plan_is_valid_and_spares_node_zero() {
+        for nodes in [2, 8, 16] {
+            let p = chaos_plan(nodes, 120 * S);
+            p.validate(nodes);
+            assert_eq!(p.node_faults.len(), 2);
+            assert!(p.node_faults.iter().all(|f| f.node != 0));
+            assert!(p.max_retries > 0);
+        }
+    }
+
+    #[test]
+    fn windows_and_fabric_slowdown() {
+        let p = chaos_plan(8, 100 * S);
+        // First outage: down at 35 s for 8 s, spike window 15 s.
+        assert!(!p.in_disruption_window(34 * S));
+        assert!(p.in_disruption_window(36 * S));
+        assert!(p.in_disruption_window(50 * S)); // post-restart spike
+        assert!(!p.in_disruption_window(99 * S));
+        assert_eq!(p.fabric_slowdown_at(75 * S), 8.0);
+        assert_eq!(p.fabric_slowdown_at(50 * S), 1.0);
+    }
+
+    #[test]
+    fn dry_run_keeps_windows_but_drops_effects() {
+        let p = chaos_plan(8, 100 * S).dry();
+        assert!(p.dry_run);
+        assert!(p.in_disruption_window(36 * S), "classification must survive dry()");
+        assert_eq!(p.fabric_slowdown_at(75 * S), 1.0, "effects must not");
+    }
+
+    #[test]
+    fn restart_fault_matches_by_node_and_time() {
+        let p = chaos_plan(8, 100 * S);
+        let f = p.node_faults[0];
+        assert_eq!(p.restart_fault(f.node, f.up_at_ns), Some(f));
+        assert_eq!(p.restart_fault(0, f.up_at_ns), None);
+        assert_eq!(p.restart_fault(f.node, f.up_at_ns + 1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlapping_outages_rejected() {
+        let mut p = chaos_plan(4, 100 * S);
+        p.node_faults.push(NodeFault { down_at_ns: 0, up_at_ns: 90 * S, ..p.node_faults[0] });
+        p.validate(4);
+    }
+}

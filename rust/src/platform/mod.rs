@@ -19,11 +19,13 @@
 //! cluster-scale sweeps like E13 (`coldfaas fleet`) a configuration
 //! instead of a fourth copy of the pipeline.
 
+pub mod faults;
 pub mod node;
 pub mod presets;
 pub mod sched;
 pub mod sim;
 
+pub use faults::{chaos_plan, FabricFault, FaultConfig, FaultPlan, NodeFault};
 pub use node::NodeState;
 pub use sched::{PlacementOutcome, SchedPolicy, Scheduler};
 pub use sim::{exact_quantile_ms, run_platform, PlatformResult, PlatformSim};
@@ -155,6 +157,9 @@ pub struct PlatformConfig {
     /// Debug flag: also keep exact per-request samples (the hot path
     /// records into streaming histograms only).
     pub exact_latencies: bool,
+    /// Fault schedule woven into the run (S21).  The default empty plan
+    /// injects nothing and leaves the run byte-identical.
+    pub faults: FaultPlan,
     pub seed: u64,
 }
 
@@ -184,6 +189,7 @@ impl PlatformConfig {
             load: PlatformLoad::ClosedLoop { parallelism: 1, total: 1, prewarm: false, gap_ns: 0 },
             warmup_keep_ns: 30 * 1_000_000_000,
             exact_latencies: false,
+            faults: FaultPlan::default(),
             seed: 0xC01D,
         }
     }

@@ -24,6 +24,13 @@ pub struct NodeState {
     /// In-flight executors (warm-routed + cold-placed, decremented on
     /// release) — the scheduler's load signal.
     pub inflight: u32,
+    /// False while the node is crashed (fault injection): warm routing
+    /// and every cold-placement policy skip it until the restart fires.
+    pub up: bool,
+    /// Cold starts placed here before this instant run `straggle_mult` x
+    /// slower (post-restart cold page/dentry caches); 0 = no straggling.
+    pub straggle_until_ns: u64,
+    pub straggle_mult: f64,
     pub cache: NodeCache,
     /// The node's warm-executor pool; lifecycle policies set per-slot
     /// teardown deadlines on it.
@@ -58,6 +65,9 @@ impl NodeState {
             cores,
             mem_slots,
             inflight: 0,
+            up: true,
+            straggle_until_ns: 0,
+            straggle_mult: 1.0,
             cache: NodeCache::new(None),
             pool: WarmPool::new(idle_timeout_ns, mem_bytes_per_slot),
             cpu_pool: 0,

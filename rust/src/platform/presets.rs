@@ -350,6 +350,7 @@ pub fn run_burst(cfg: &ClusterConfig) -> BurstResult {
         load: PlatformLoad::Burst { requests: cfg.requests, burst_ms: cfg.burst_ms },
         warmup_keep_ns: 30 * 1_000_000_000,
         exact_latencies: true,
+        faults: super::FaultPlan::default(),
         seed: cfg.seed,
     };
     let r: PlatformResult =

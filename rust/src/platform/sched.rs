@@ -70,11 +70,13 @@ impl Scheduler {
     /// Route to a node holding a live warm executor for `func`, if any
     /// (least-loaded among them, node id as tie-break).  Claims an
     /// in-flight slot on the chosen node; every policy routes warm first —
-    /// that is the platform's router, not a placement choice.
+    /// that is the platform's router, not a placement choice.  Crashed
+    /// nodes are never candidates: their pools were drained at the crash
+    /// and a dead node cannot serve even a (buggy) leftover slot.
     pub fn route_warm(&self, nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
         let mut best: Option<(u32, usize)> = None;
         for n in nodes.iter_mut() {
-            if n.pool.warm_available(func, now) == 0 {
+            if !n.up || n.pool.warm_available(func, now) == 0 {
                 continue;
             }
             let better = match best {
@@ -91,14 +93,32 @@ impl Scheduler {
     }
 
     /// Place one cold start for `img` under the policy; claims an
-    /// in-flight slot and updates the chosen node's image cache.
-    pub fn place_cold(&mut self, nodes: &mut [NodeState], img: &Image, rng: &mut Rng) -> PlacementOutcome {
+    /// in-flight slot and updates the chosen node's image cache.  Only
+    /// live nodes are candidates; returns `None` when the whole cluster
+    /// is down (the caller rejects the request).
+    pub fn place_cold(
+        &mut self,
+        nodes: &mut [NodeState],
+        img: &Image,
+        rng: &mut Rng,
+    ) -> Option<PlacementOutcome> {
         let id = match self.policy {
-            SchedPolicy::Spread => rng.below(nodes.len() as u64) as usize,
-            SchedPolicy::LeastLoaded => least_loaded(nodes.iter()).expect("nodes non-empty"),
+            SchedPolicy::Spread => {
+                // With every node up this draws exactly the same value
+                // from the same RNG call as `below(nodes.len())` did
+                // before the fault layer existed (k-th alive == node k),
+                // and stays allocation-free on the per-request hot path.
+                let alive = nodes.iter().filter(|n| n.up).count() as u64;
+                if alive == 0 {
+                    return None;
+                }
+                let k = rng.below(alive) as usize;
+                nodes.iter().filter(|n| n.up).nth(k).map(|n| n.id).expect("k < alive")
+            }
+            SchedPolicy::LeastLoaded => least_loaded(nodes.iter().filter(|n| n.up))?,
             SchedPolicy::PoolAffinity => {
-                least_loaded(nodes.iter().filter(|n| n.cache.contains(&img.name)))
-                    .unwrap_or_else(|| least_loaded(nodes.iter()).expect("nodes non-empty"))
+                least_loaded(nodes.iter().filter(|n| n.up && n.cache.contains(&img.name)))
+                    .or_else(|| least_loaded(nodes.iter().filter(|n| n.up)))?
             }
             SchedPolicy::CoLocate => {
                 // Stay on a cached node while executors still *fit in
@@ -106,10 +126,13 @@ impl Scheduler {
                 // then spill to the least-loaded node overall.
                 let home = nodes
                     .iter()
-                    .filter(|n| n.cache.contains(&img.name) && n.inflight < n.mem_slots)
+                    .filter(|n| n.up && n.cache.contains(&img.name) && n.inflight < n.mem_slots)
                     .map(|n| n.id)
                     .next();
-                home.unwrap_or_else(|| least_loaded(nodes.iter()).expect("nodes non-empty"))
+                match home {
+                    Some(id) => id,
+                    None => least_loaded(nodes.iter().filter(|n| n.up))?,
+                }
             }
         };
         let node = &mut nodes[id];
@@ -122,7 +145,7 @@ impl Scheduler {
             }
             _ => 0,
         };
-        PlacementOutcome { node: id, fetch_bytes }
+        Some(PlacementOutcome { node: id, fetch_bytes })
     }
 
     /// An executor on `node` released its in-flight slot.
@@ -164,6 +187,10 @@ mod tests {
         (Scheduler::new(policy), ns)
     }
 
+    fn place(s: &mut Scheduler, ns: &mut [NodeState], rng: &mut Rng) -> PlacementOutcome {
+        s.place_cold(ns, &img(), rng).expect("a node is up")
+    }
+
     #[test]
     fn colocate_packs_past_core_count_until_memory() {
         let (mut s, mut ns) = seeded(SchedPolicy::CoLocate); // 2 cores, 16 mem slots
@@ -171,10 +198,10 @@ mod tests {
         // Keeps packing node 0 well beyond its 2 cores (the Wang et al.
         // behaviour that inflates scale-out startup latency)...
         for _ in 0..16 {
-            assert_eq!(s.place_cold(&mut ns, &img(), &mut rng).node, 0);
+            assert_eq!(place(&mut s, &mut ns, &mut rng).node, 0);
         }
         // ...and only spills once memory slots are exhausted.
-        let spill = s.place_cold(&mut ns, &img(), &mut rng);
+        let spill = place(&mut s, &mut ns, &mut rng);
         assert_ne!(spill.node, 0);
         assert_eq!(spill.fetch_bytes, img().bytes);
     }
@@ -186,7 +213,7 @@ mod tests {
         for _ in 0..5 {
             // With only node 0 cached, affinity keeps hitting node 0 even
             // as load builds (that is its weakness under bursts).
-            assert_eq!(s.place_cold(&mut ns, &img(), &mut rng).node, 0);
+            assert_eq!(place(&mut s, &mut ns, &mut rng).node, 0);
         }
         assert_eq!(s.transfers, 0);
     }
@@ -196,7 +223,7 @@ mod tests {
         let (mut s, mut ns) = seeded(SchedPolicy::LeastLoaded);
         let mut rng = Rng::new(3);
         let placed: Vec<usize> =
-            (0..4).map(|_| s.place_cold(&mut ns, &img(), &mut rng).node).collect();
+            (0..4).map(|_| place(&mut s, &mut ns, &mut rng).node).collect();
         let mut sorted = placed.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, vec![0, 1, 2, 3], "{placed:?}");
@@ -208,7 +235,7 @@ mod tests {
     fn complete_releases_load() {
         let (mut s, mut ns) = seeded(SchedPolicy::LeastLoaded);
         let mut rng = Rng::new(4);
-        let p = s.place_cold(&mut ns, &img(), &mut rng);
+        let p = place(&mut s, &mut ns, &mut rng);
         s.complete(&mut ns, p.node);
         assert_eq!(ns[p.node].inflight, 0);
     }
@@ -218,7 +245,7 @@ mod tests {
         let (mut s, mut ns) = seeded(SchedPolicy::LeastLoaded);
         let mut rng = Rng::new(5);
         for _ in 0..4 {
-            s.place_cold(&mut ns, &img(), &mut rng);
+            let _ = place(&mut s, &mut ns, &mut rng);
         }
         assert_eq!(footprint_bytes(&ns), 4 * img().bytes);
     }
@@ -228,7 +255,7 @@ mod tests {
         let run = |seed| {
             let (mut s, mut ns) = seeded(SchedPolicy::Spread);
             let mut rng = Rng::new(seed);
-            (0..10).map(|_| s.place_cold(&mut ns, &img(), &mut rng).node).collect::<Vec<_>>()
+            (0..10).map(|_| place(&mut s, &mut ns, &mut rng).node).collect::<Vec<_>>()
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
@@ -247,6 +274,45 @@ mod tests {
         // Past the deadline the slot is gone.
         ns2[2].pool.prewarm_until("f0", 1, 20 * S, 25 * S);
         assert_eq!(s.route_warm(&mut ns2, "f0", 30 * S), None);
+    }
+
+    #[test]
+    fn dead_nodes_are_never_placement_targets() {
+        for policy in SchedPolicy::ALL {
+            let (mut s, mut ns) = seeded(policy);
+            ns[0].up = false; // the only cached node dies
+            let mut rng = Rng::new(11);
+            for _ in 0..8 {
+                let p = place(&mut s, &mut ns, &mut rng);
+                assert_ne!(p.node, 0, "{policy:?} placed on a dead node");
+            }
+        }
+    }
+
+    #[test]
+    fn all_nodes_down_yields_no_placement() {
+        for policy in SchedPolicy::ALL {
+            let (mut s, mut ns) = seeded(policy);
+            for n in ns.iter_mut() {
+                n.up = false;
+            }
+            let mut rng = Rng::new(12);
+            assert_eq!(s.place_cold(&mut ns, &img(), &mut rng), None, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn warm_routing_skips_crashed_nodes() {
+        let s = Scheduler::new(SchedPolicy::LeastLoaded);
+        let mut ns = nodes(2, 2);
+        ns[0].pool.prewarm_until("f0", 1, 0, 100 * S);
+        ns[1].pool.prewarm_until("f0", 1, 0, 100 * S);
+        ns[0].up = false;
+        // Even with a (stale) slot still in node 0's pool, routing must
+        // pick the live node only.
+        assert_eq!(s.route_warm(&mut ns, "f0", S), Some(1));
+        ns[1].up = false;
+        assert_eq!(s.route_warm(&mut ns, "f0", 2 * S), None);
     }
 
     #[test]

@@ -14,15 +14,25 @@
 //! per series; `merge()`d at the end of the run), so million-request fleet
 //! sweeps do not allocate per request.  Exact raw samples stay available
 //! behind [`PlatformConfig::exact_latencies`] for the debug/compat paths.
+//!
+//! A [`FaultPlan`] (S21) weaves failures into the same event loop: crash
+//! effects mark a node down, drain its warm pool, and kill its in-flight
+//! requests (detected when their pipelines unwind; each killed attempt is
+//! retried after a client back-off, up to the plan's retry budget, or
+//! reported rejected — never silently lost); restart effects bring the
+//! node back, optionally with a flushed image cache and a straggler
+//! multiplier on its first cold starts.  An empty plan injects nothing
+//! and leaves every run byte-identical.
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::image::Image;
+use crate::image::{Image, NodeCache};
 use crate::metrics::Histogram;
 use crate::net::transfer_step;
 use crate::policy::{IdleAction, LifecyclePolicy};
 use crate::sim::{Dist, Domain, Engine, Host, ReqId, Rng, Spawn, Step, StepKind, N_LOCKS};
 
+use super::faults::FaultPlan;
 use super::node::NodeState;
 use super::sched::{footprint_bytes, nodes_with_image, Scheduler};
 use super::{ImageSeeding, PlatformConfig, PlatformLoad, RequestPath};
@@ -30,16 +40,31 @@ use super::{ImageSeeding, PlatformConfig, PlatformLoad, RequestPath};
 const TAG_DISPATCH: u32 = 1;
 const TAG_RELEASE: u32 = 2;
 const TAG_PREWARM: u32 = 3;
+const TAG_CRASH: u32 = 4;
+const TAG_RESTART: u32 = 5;
 
-/// High bit of the request class marks policy control requests (pre-warm
-/// boots) rather than user invocations.
+/// High bit of the request class marks control requests (pre-warm boots,
+/// crash/restart events) rather than user invocations.
 const CONTROL_BIT: u32 = 1 << 31;
+
+/// Bits 24..=30 of a user request's class carry its retry attempt number;
+/// the low 24 bits carry the function id.  Crash/restart control requests
+/// put the node id in the low bits instead.
+const ATTEMPT_SHIFT: u32 = 24;
+const FUNC_MASK: u32 = (1 << ATTEMPT_SHIFT) - 1;
+
+fn attempt_of(class: u32) -> u32 {
+    (class & !CONTROL_BIT) >> ATTEMPT_SHIFT
+}
 
 /// Where a placed request landed (kept until `done` for latency binning).
 #[derive(Clone, Copy)]
 struct Placed {
     node: usize,
     cold: bool,
+    /// Set when the node crashed under the request: the attempt is lost
+    /// and will be retried or rejected when its pipeline unwinds.
+    killed: bool,
 }
 
 /// One scheduled pre-warm boot: fires at the absolute time, on the node
@@ -57,18 +82,23 @@ struct PrewarmBoot {
 /// pool holding for bytes/bandwidth — the same FIFO serialization the
 /// engine's global disk gives one host, but per node, so spreading cold
 /// starts actually buys disk parallelism).  Pure delays stay as-is.
-fn retarget(steps: &[Step], node: &NodeState, disk_bw_bytes_per_s: f64) -> Vec<Step> {
+/// `mult` stretches every duration (post-restart straggler starts);
+/// 1.0 leaves the steps bit-identical to the pre-fault-layer path.
+fn retarget(steps: &[Step], node: &NodeState, disk_bw_bytes_per_s: f64, mult: f64) -> Vec<Step> {
     steps
         .iter()
-        .map(|s| match s.kind {
-            StepKind::Cpu => Step::pool(s.tag, node.cpu_pool, s.dur),
-            StepKind::Lock(class) => Step::pool(s.tag, node.lock_pools[class as usize], s.dur),
-            StepKind::Disk(bytes) => Step::pool(
-                s.tag,
-                node.disk_pool,
-                Dist::Const(bytes as f64 / disk_bw_bytes_per_s * 1e9),
-            ),
-            _ => *s,
+        .map(|s| {
+            let dur = if mult == 1.0 { s.dur } else { s.dur.scaled(mult) };
+            match s.kind {
+                StepKind::Cpu => Step::pool(s.tag, node.cpu_pool, dur),
+                StepKind::Lock(class) => Step::pool(s.tag, node.lock_pools[class as usize], dur),
+                StepKind::Disk(bytes) => Step::pool(
+                    s.tag,
+                    node.disk_pool,
+                    Dist::Const(bytes as f64 / disk_bw_bytes_per_s * 1e9 * mult),
+                ),
+                _ => Step { dur, ..*s },
+            }
         })
         .collect()
 }
@@ -86,6 +116,10 @@ pub struct PlatformSim<'a> {
     pub nodes: Vec<NodeState>,
     func_names: Vec<String>,
     images: Vec<Image>,
+    faults: FaultPlan,
+    /// Head-of-request steps, re-spawned for client retries of killed
+    /// attempts (whatever the load shape).
+    head: Vec<Step>,
     // --- closed-loop chaining ---
     template: Vec<Step>,
     remaining: u64,
@@ -100,6 +134,34 @@ pub struct PlatformSim<'a> {
     /// when forecast delays differ).
     prewarm_keeps: Vec<VecDeque<PrewarmBoot>>,
     prewarm_boots: u64,
+    /// Chain origins for in-flight retry attempts, keyed by the retry's
+    /// (class, spawn time): the original injection instant, so the
+    /// latency recorded when a chain finally completes spans every killed
+    /// attempt and back-off, not just the serving attempt.  (Engine event
+    /// order is deterministic, so the FIFO pairing of identical keys is
+    /// too.)
+    retry_origins: HashMap<(u32, u64), VecDeque<u64>>,
+    // --- fault accounting ---
+    /// User requests injected by the load (attempt 0 of every chain).
+    injected: u64,
+    /// Attempts that completed and returned a response.
+    served: u64,
+    /// Attempts killed by a node crash (each is retried or rejected).
+    killed: u64,
+    /// Retry attempts spawned for killed requests.
+    retries: u64,
+    /// Chains abandoned: retries exhausted, or no node alive at dispatch.
+    rejected: u64,
+    /// Idle warm executors destroyed by crashes, summed over nodes.
+    warm_slots_lost: u64,
+    crashes: u64,
+    restarts: u64,
+    /// Dispatch counts split by disruption-window classification (the
+    /// post-restart cold-fraction spike metric).
+    window_cold: u64,
+    window_total: u64,
+    steady_cold: u64,
+    steady_total: u64,
     // --- metrics ---
     cold_hist: Histogram,
     warm_hist: Histogram,
@@ -112,36 +174,68 @@ pub struct PlatformSim<'a> {
 impl PlatformSim<'_> {
     fn dispatch_tail(&mut self, req: ReqId, func: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
         self.policy.on_invoke(func, now);
+        let in_window = self.faults.in_disruption_window(now);
         let name = &self.func_names[func as usize];
         let mut tail = Vec::new();
         if let Some(node) = self.sched.route_warm(&mut self.nodes, name, now) {
             let d = self.nodes[node].pool.dispatch(name, now);
             debug_assert_eq!(d, crate::fnplat::Dispatch::Warm);
-            tail.extend(retarget(&self.warm_steps, &self.nodes[node], self.disk_bw_bytes_per_s));
+            tail.extend(
+                retarget(&self.warm_steps, &self.nodes[node], self.disk_bw_bytes_per_s, 1.0),
+            );
             tail.push(Step::pool(
                 "fn-exec",
                 self.nodes[node].cpu_pool,
                 Dist::ms(self.exec_ms, 0.15),
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
-            self.placed.insert(req, Placed { node, cold: false });
+            self.placed.insert(req, Placed { node, cold: false, killed: false });
+            if in_window {
+                self.window_total += 1;
+            } else {
+                self.steady_total += 1;
+            }
         } else {
-            let out = self.sched.place_cold(&mut self.nodes, &self.images[func as usize], rng);
+            let placement =
+                self.sched.place_cold(&mut self.nodes, &self.images[func as usize], rng);
+            let Some(out) = placement else {
+                // Whole cluster down: the gateway answers 503 and this
+                // chain ends here (no placement, no latency sample).
+                self.rejected += 1;
+                return tail;
+            };
             let node = out.node;
             let d = self.nodes[node].pool.dispatch(name, now);
             debug_assert_eq!(d, crate::fnplat::Dispatch::Cold);
             if out.fetch_bytes > 0 {
-                tail.push(transfer_step("image-pull", out.fetch_bytes, self.fabric_gbps));
+                let gbps = self.fabric_gbps / self.faults.fabric_slowdown_at(now);
+                tail.push(transfer_step("image-pull", out.fetch_bytes, gbps));
             }
             tail.extend(self.cold_extra.iter().copied());
-            tail.extend(retarget(&self.cold_steps, &self.nodes[node], self.disk_bw_bytes_per_s));
+            // Post-restart straggler starts: the node's first cold starts
+            // run slower until its caches re-warm.
+            let mult = if now < self.nodes[node].straggle_until_ns {
+                self.nodes[node].straggle_mult
+            } else {
+                1.0
+            };
+            tail.extend(
+                retarget(&self.cold_steps, &self.nodes[node], self.disk_bw_bytes_per_s, mult),
+            );
             tail.push(Step::pool(
                 "fn-exec",
                 self.nodes[node].cpu_pool,
                 Dist::ms(self.exec_ms, 0.15),
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
-            self.placed.insert(req, Placed { node, cold: true });
+            self.placed.insert(req, Placed { node, cold: true, killed: false });
+            if in_window {
+                self.window_total += 1;
+                self.window_cold += 1;
+            } else {
+                self.steady_total += 1;
+                self.steady_cold += 1;
+            }
         }
         tail
     }
@@ -150,14 +244,20 @@ impl PlatformSim<'_> {
 impl Domain for PlatformSim<'_> {
     fn decide(&mut self, req: ReqId, class: u32, tag: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
         debug_assert_eq!(tag, TAG_DISPATCH);
-        self.dispatch_tail(req, class & !CONTROL_BIT, now, rng)
+        self.dispatch_tail(req, class & FUNC_MASK, now, rng)
     }
 
     fn effect(&mut self, req: ReqId, class: u32, tag: u32, now: u64) {
-        let func = class & !CONTROL_BIT;
+        let func = class & FUNC_MASK;
         match tag {
             TAG_RELEASE => {
                 let p = *self.placed.get(&req).expect("released request was placed");
+                if p.killed {
+                    // The executor died with its node: nothing to release
+                    // into the pool, and the crash already reset the
+                    // node's in-flight counter.
+                    return;
+                }
                 let name = &self.func_names[func as usize];
                 match self.policy.on_idle(func, now) {
                     IdleAction::Retire => self.nodes[p.node].pool.retire(name),
@@ -185,10 +285,12 @@ impl Domain for PlatformSim<'_> {
                 if let Some(boot) = hit {
                     let name = &self.func_names[func as usize];
                     // Skip stale pre-warms: an arrival already repopulated
-                    // the pool, or the keep window degenerated.  Probe via
-                    // warm_available (not idle_count) so an expired-but-
-                    // unpurged slot doesn't mask a scheduled boot.
+                    // the pool, the keep window degenerated, or the target
+                    // node is down (nothing can boot on a dead node).
+                    // Probe via warm_available (not idle_count) so an
+                    // expired-but-unpurged slot doesn't mask a boot.
                     if boot.keep_ns > 0
+                        && self.nodes[boot.node].up
                         && self.nodes[boot.node].pool.warm_available(name, now) == 0
                     {
                         self.prewarm_boots += 1;
@@ -200,6 +302,40 @@ impl Domain for PlatformSim<'_> {
                         );
                     }
                 }
+            }
+            TAG_CRASH => {
+                // Node failure: down for routing, load counter reset, warm
+                // pool drained, every in-flight request on it killed (the
+                // kill is acted on when each pipeline unwinds — marking is
+                // order-independent, so iteration order does not matter).
+                let node = func as usize;
+                self.crashes += 1;
+                self.nodes[node].up = false;
+                self.nodes[node].inflight = 0;
+                let drained = self.nodes[node].pool.crash(now);
+                self.warm_slots_lost += drained;
+                for p in self.placed.values_mut() {
+                    if p.node == node {
+                        p.killed = true;
+                    }
+                }
+            }
+            TAG_RESTART => {
+                let node = func as usize;
+                let f = self
+                    .faults
+                    .restart_fault(node, now)
+                    .expect("restart matches a plan entry");
+                self.restarts += 1;
+                let n = &mut self.nodes[node];
+                n.up = true;
+                if f.flush_cache {
+                    // Node-local storage did not survive: every image
+                    // must be pulled again.
+                    n.cache = NodeCache::new(None);
+                }
+                n.straggle_until_ns = now.saturating_add(f.straggler_ns);
+                n.straggle_mult = f.straggler_mult;
             }
             other => debug_assert!(false, "unexpected effect tag {other}"),
         }
@@ -220,24 +356,78 @@ impl Domain for PlatformSim<'_> {
             });
         }
         if class & CONTROL_BIT == 0 {
-            let lat = now - start;
-            if let Some(p) = self.placed.remove(&req) {
-                self.nodes[p.node].hist.record_ns(lat);
-                if p.cold {
-                    self.cold_hist.record_ns(lat);
-                } else {
-                    self.warm_hist.record_ns(lat);
+            let attempt = attempt_of(class);
+            if attempt == 0 {
+                self.injected += 1;
+            }
+            // The chain's true start: attempt 0 starts the chain itself;
+            // a retry inherits the origin stashed when it was spawned.
+            let origin = if attempt == 0 {
+                start
+            } else {
+                let key = (class, start);
+                let popped = self
+                    .retry_origins
+                    .get_mut(&key)
+                    .and_then(|q| q.pop_front())
+                    .unwrap_or(start);
+                if self.retry_origins.get(&key).is_some_and(|q| q.is_empty()) {
+                    self.retry_origins.remove(&key);
                 }
-                if self.exact {
-                    self.latencies_ns.push(lat);
-                    if p.cold {
-                        self.cold_latencies_ns.push(lat);
+                popped
+            };
+            match self.placed.remove(&req) {
+                Some(p) if p.killed => {
+                    // The node died under this attempt.  The client saw
+                    // its connection drop: retry after a back-off (the
+                    // fresh attempt re-enters dispatch and lands on a
+                    // surviving node), or give up once the budget is
+                    // spent — either way the request is accounted for.
+                    self.killed += 1;
+                    if attempt < self.faults.max_retries {
+                        self.retries += 1;
+                        let mut steps = Vec::with_capacity(self.head.len() + 1);
+                        steps.push(Step::delay(
+                            "client-retry-backoff",
+                            Dist::Const(self.faults.retry_backoff_ns as f64),
+                        ));
+                        steps.extend(self.head.iter().copied());
+                        let retry_class =
+                            (class & FUNC_MASK) | ((attempt + 1) << ATTEMPT_SHIFT);
+                        // The retry spawns at `now` (its back-off is a
+                        // step, so it lands inside the chain's latency);
+                        // hand it the chain origin under its spawn key.
+                        self.retry_origins
+                            .entry((retry_class, now))
+                            .or_default()
+                            .push_back(origin);
+                        spawns.push(Spawn { delay_ns: 0, class: retry_class, steps });
                     } else {
-                        self.warm_latencies_ns.push(lat);
+                        self.rejected += 1;
                     }
                 }
+                Some(p) => {
+                    self.served += 1;
+                    let lat = now - origin;
+                    self.nodes[p.node].hist.record_ns(lat);
+                    if p.cold {
+                        self.cold_hist.record_ns(lat);
+                    } else {
+                        self.warm_hist.record_ns(lat);
+                    }
+                    if self.exact {
+                        self.latencies_ns.push(lat);
+                        if p.cold {
+                            self.cold_latencies_ns.push(lat);
+                        } else {
+                            self.warm_latencies_ns.push(lat);
+                        }
+                    }
+                }
+                // Rejected at dispatch (no node alive): counted there.
+                None => {}
             }
-            if self.remaining > 0 {
+            if attempt == 0 && self.remaining > 0 {
                 self.remaining -= 1;
                 spawns.push(Spawn {
                     delay_ns: self.gap_ns,
@@ -272,6 +462,28 @@ pub struct PlatformResult {
     pub retirements: u64,
     pub idle_gb_seconds: f64,
     pub monitor_events: u64,
+    // --- fault accounting (all zero when the fault plan is empty) ---
+    /// User requests injected by the load (attempt 0 of every chain);
+    /// always equals `served + rejected` — nothing is silently lost.
+    pub injected: u64,
+    /// Attempts that completed and returned a response.
+    pub served: u64,
+    /// Attempts killed by node crashes (each retried or rejected).
+    pub killed: u64,
+    /// Retry attempts spawned for killed requests.
+    pub retries: u64,
+    /// Chains abandoned (retries exhausted, or no node alive).
+    pub rejected: u64,
+    /// Idle warm executors destroyed by crashes.
+    pub warm_slots_lost: u64,
+    pub crashes: u64,
+    pub restarts: u64,
+    /// Dispatches (and the cold ones among them) inside disruption
+    /// windows (crash .. restart + spike window) vs. everywhere else.
+    pub window_cold: u64,
+    pub window_total: u64,
+    pub steady_cold: u64,
+    pub steady_total: u64,
     /// Cross-node image distribution economics.
     pub transfers: u64,
     pub transferred_bytes: u64,
@@ -283,14 +495,28 @@ pub struct PlatformResult {
     pub conn_setup_ms: f64,
 }
 
+fn fraction(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
 impl PlatformResult {
     pub fn cold_fraction(&self) -> f64 {
-        let total = self.cold_starts + self.warm_hits;
-        if total == 0 {
-            0.0
-        } else {
-            self.cold_starts as f64 / total as f64
-        }
+        fraction(self.cold_starts, self.cold_starts + self.warm_hits)
+    }
+
+    /// Cold fraction of dispatches inside disruption windows — the
+    /// post-restart cold-burst spike a warm platform pays to rebuild its
+    /// pools (compare against a dry-run baseline with the same windows).
+    pub fn window_cold_fraction(&self) -> f64 {
+        fraction(self.window_cold, self.window_total)
+    }
+
+    pub fn steady_cold_fraction(&self) -> f64 {
+        fraction(self.steady_cold, self.steady_total)
     }
 
     /// Latency quantile in ms: exact (nearest rank) when raw samples were
@@ -365,6 +591,8 @@ pub fn run_platform(
     assert!(cfg.nodes >= 1, "need at least one node");
     assert!(cfg.nodes <= super::MAX_NODES, "at most {} nodes (engine pool ids)", super::MAX_NODES);
     assert!(cfg.functions >= 1, "need at least one function");
+    assert!(cfg.functions <= FUNC_MASK, "function ids must fit the class low bits");
+    cfg.faults.validate(cfg.nodes);
 
     let func_names: Vec<String> = (0..cfg.functions).map(|f| format!("f{f}")).collect();
     let images: Vec<Image> = func_names
@@ -392,6 +620,8 @@ pub fn run_platform(
         nodes: Vec::new(),
         func_names,
         images,
+        faults: cfg.faults.clone(),
+        head: Vec::new(),
         template: Vec::new(),
         remaining: 0,
         gap_ns: 0,
@@ -399,6 +629,19 @@ pub fn run_platform(
         pending_prewarms: Vec::new(),
         prewarm_keeps: (0..cfg.functions).map(|_| VecDeque::new()).collect(),
         prewarm_boots: 0,
+        retry_origins: HashMap::new(),
+        injected: 0,
+        served: 0,
+        killed: 0,
+        retries: 0,
+        rejected: 0,
+        warm_slots_lost: 0,
+        crashes: 0,
+        restarts: 0,
+        window_cold: 0,
+        window_total: 0,
+        steady_cold: 0,
+        steady_total: 0,
         cold_hist: Histogram::new(),
         warm_hist: Histogram::new(),
         exact: cfg.exact_latencies,
@@ -459,6 +702,25 @@ pub fn run_platform(
     }
 
     let head = head_steps(cfg);
+    e.domain.head = head.clone();
+    // Weave the fault schedule into virtual time as zero-latency control
+    // requests (dry-run plans classify windows but inject nothing).
+    if !cfg.faults.dry_run {
+        for f in &cfg.faults.node_faults {
+            e.spawn_at(
+                f.down_at_ns,
+                f.node as u32 | CONTROL_BIT,
+                vec![Step::effect("node-crash", TAG_CRASH)],
+            );
+            if f.up_at_ns < u64::MAX {
+                e.spawn_at(
+                    f.up_at_ns,
+                    f.node as u32 | CONTROL_BIT,
+                    vec![Step::effect("node-restart", TAG_RESTART)],
+                );
+            }
+        }
+    }
     match &cfg.load {
         PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
             assert!(*parallelism as u64 <= *total);
@@ -538,6 +800,18 @@ pub fn run_platform(
         retirements,
         idle_gb_seconds: idle_mem_byte_ns as f64 / 1e9 / (1u64 << 30) as f64,
         monitor_events,
+        injected: d.injected,
+        served: d.served,
+        killed: d.killed,
+        retries: d.retries,
+        rejected: d.rejected,
+        warm_slots_lost: d.warm_slots_lost,
+        crashes: d.crashes,
+        restarts: d.restarts,
+        window_cold: d.window_cold,
+        window_total: d.window_total,
+        steady_cold: d.steady_cold,
+        steady_total: d.steady_total,
         transfers: d.sched.transfers,
         transferred_bytes: d.sched.transferred_bytes,
         footprint_bytes: footprint_bytes(&d.nodes),
@@ -550,9 +824,12 @@ pub fn run_platform(
 mod tests {
     use super::*;
     use crate::fnplat::DriverKind;
-    use crate::policy::{ColdOnlyPolicy, FixedKeepAlive};
+    use crate::platform::faults::{chaos_plan, NodeFault};
     use crate::platform::DriverProfile;
+    use crate::policy::{ColdOnlyPolicy, FixedKeepAlive};
     use crate::workload::tenants::{TenantConfig, TenantTrace};
+
+    const S: u64 = 1_000_000_000;
 
     fn tenant_cfg(driver: DriverKind, nodes: usize) -> (PlatformConfig, TenantTrace) {
         let trace = TenantTrace::generate(&TenantConfig {
@@ -618,6 +895,85 @@ mod tests {
             };
             assert_eq!(run(), run());
         }
+    }
+
+    #[test]
+    fn crash_kills_in_flight_and_retries_conserve_requests() {
+        let (mut cfg, trace) = tenant_cfg(DriverKind::DockerWarm, 2);
+        cfg.faults = chaos_plan(2, 60 * S);
+        let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        assert_eq!(r.injected, trace.len() as u64);
+        assert_eq!(r.injected, r.served + r.rejected, "no request silently lost");
+        assert_eq!(r.rejected, 0, "node 0 survives, so every retry must land");
+        assert_eq!(r.served, r.requests);
+        assert_eq!((r.crashes, r.restarts), (2, 2));
+        assert!(r.warm_slots_lost > 0, "fixed keep-alive had idle slots to lose");
+        assert_eq!(r.killed, r.retries, "every kill retried within budget");
+    }
+
+    #[test]
+    fn cold_only_has_no_state_to_lose() {
+        let (mut cfg, _) = tenant_cfg(DriverKind::IncludeOsCold, 2);
+        cfg.faults = chaos_plan(2, 60 * S);
+        let r = run_platform(&cfg, &mut ColdOnlyPolicy, Host::default());
+        assert_eq!(r.warm_slots_lost, 0);
+        assert_eq!(r.idle_gb_seconds, 0.0);
+        assert_eq!(r.injected, r.served + r.rejected);
+        assert_eq!(r.rejected, 0);
+        assert!(r.window_total > 0, "trace must hit the disruption windows");
+        // Already all-cold: crashes cannot spike the cold fraction.
+        assert_eq!(r.window_cold_fraction(), 1.0);
+        assert_eq!(r.steady_cold_fraction(), 1.0);
+    }
+
+    #[test]
+    fn whole_cluster_down_rejects_instead_of_losing_requests() {
+        let (mut cfg, trace) = tenant_cfg(DriverKind::IncludeOsCold, 1);
+        cfg.faults = FaultPlan {
+            node_faults: vec![NodeFault {
+                node: 0,
+                down_at_ns: 10 * S,
+                up_at_ns: u64::MAX, // never comes back
+                flush_cache: false,
+                straggler_mult: 1.0,
+                straggler_ns: 0,
+            }],
+            ..FaultPlan::default()
+        };
+        let r = run_platform(&cfg, &mut ColdOnlyPolicy, Host::default());
+        assert_eq!(r.injected, trace.len() as u64);
+        assert_eq!(r.injected, r.served + r.rejected);
+        assert!(r.rejected > 0 && r.served > 0);
+        assert_eq!(r.requests, r.served);
+    }
+
+    #[test]
+    fn dry_run_plan_is_observationally_pure() {
+        let run = |faults: FaultPlan| {
+            let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 4);
+            cfg.exact_latencies = true;
+            cfg.faults = faults;
+            run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default())
+        };
+        let clean = run(FaultPlan::default());
+        let dry = run(chaos_plan(4, 60 * S).dry());
+        assert_eq!(dry.latencies_ns, clean.latencies_ns);
+        assert_eq!(dry.cold_starts, clean.cold_starts);
+        assert_eq!(dry.idle_gb_seconds, clean.idle_gb_seconds);
+        assert_eq!((dry.crashes, dry.killed), (0, 0));
+        assert!(dry.window_total > 0, "windows must still classify");
+        assert_eq!(clean.window_total, 0, "empty plan has no windows");
+    }
+
+    #[test]
+    fn deterministic_under_faults() {
+        let run = || {
+            let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 4);
+            cfg.faults = chaos_plan(4, 60 * S);
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            (r.hist.quantile_ms(0.99), r.served, r.killed, r.retries, r.warm_slots_lost)
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

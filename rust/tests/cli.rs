@@ -29,9 +29,17 @@ fn artifacts_ready() -> bool {
 fn help_lists_subcommands() {
     let (code, stdout, _) = run(&["help"]);
     assert_eq!(code, 0);
-    for sub in
-        ["experiment", "policies", "fleet", "serve", "invoke", "verify", "measure-exec", "list"]
-    {
+    for sub in [
+        "experiment",
+        "policies",
+        "fleet",
+        "chaos",
+        "serve",
+        "invoke",
+        "verify",
+        "measure-exec",
+        "list",
+    ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -106,6 +114,75 @@ fn fleet_rejects_bad_node_counts() {
     let (code, _, stderr) = run(&["fleet", "--nodes", "33"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("--nodes"));
+}
+
+#[test]
+fn chaos_quick_passes_and_writes_json() {
+    let path = std::env::temp_dir().join(format!("coldfaas_chaos_{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let (code, stdout, stderr) = run(&["chaos", "--quick", "--json", path_s.as_str()]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("ALL CHECKS PASS"), "{stdout}");
+    assert!(stdout.contains("E14"));
+    for label in ["includeos+cold-only+least-loaded", "docker+fixed-600s+co-locate"] {
+        assert!(stdout.contains(label), "chaos output missing {label}");
+    }
+    let doc = std::fs::read_to_string(&path).expect("json file written");
+    let _ = std::fs::remove_file(&path);
+    assert!(doc.starts_with("{\"generator\":\"coldfaas\""), "{doc}");
+    assert!(doc.contains("\"id\":\"chaos\""));
+    assert!(doc.contains("\"all_pass\":true"));
+}
+
+#[test]
+fn chaos_rejects_bad_node_counts() {
+    // The scripted fault plan needs a surviving node: 1 is too few.
+    let (code, _, stderr) = run(&["chaos", "--nodes", "1"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--nodes"));
+    let (code, _, stderr) = run(&["chaos", "--nodes", "33"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--nodes"));
+}
+
+/// Every machine-readable report — `experiment`, `policies`, `fleet`,
+/// and `chaos` — shares the `report::json_document` shape: generator +
+/// wall time at the top, and per-experiment id/series/checks/wall time.
+#[test]
+fn json_documents_share_one_shape_across_subcommands() {
+    let invocations: [&[&str]; 4] = [
+        &["experiment", "fig3", "--quick"],
+        &["policies", "--quick"],
+        &["fleet", "--quick", "--duration", "10", "--rps", "20"],
+        &["chaos", "--quick"],
+    ];
+    for (i, argv) in invocations.iter().enumerate() {
+        let path = std::env::temp_dir()
+            .join(format!("coldfaas_shape_{}_{i}.json", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let mut args: Vec<&str> = argv.to_vec();
+        args.push("--json");
+        args.push(path_s.as_str());
+        let (code, stdout, stderr) = run(&args);
+        assert_eq!(code, 0, "{argv:?}: {stdout}{stderr}");
+        let doc = std::fs::read_to_string(&path).expect("json file written");
+        let _ = std::fs::remove_file(&path);
+        for key in [
+            "{\"generator\":\"coldfaas\"",
+            "\"total_wall_s\":",
+            "\"experiments\":[",
+            "\"id\":",
+            "\"title\":",
+            "\"wall_s\":",
+            "\"all_pass\":",
+            "\"series\":[",
+            "\"checks\":[",
+            "\"bands\":[",
+            "\"notes\":[",
+        ] {
+            assert!(doc.contains(key), "{argv:?}: json missing {key}: {doc}");
+        }
+    }
 }
 
 #[test]

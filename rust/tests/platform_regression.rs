@@ -1,12 +1,16 @@
 //! Regression tests for the unified platform layer: every migrated
-//! experiment (E4/E5/E9/E11/E12) plus the new E13 must (a) render
+//! experiment (E4/E5/E9/E11/E12) plus E13/E14 must (a) render
 //! byte-identical reports per seed — the determinism property the DES
-//! substrate guarantees — and (b) stay inside the pre-refactor tolerance
-//! bands its report encodes as paper-vs-measured checks.
+//! substrate guarantees, now including the fault-injection layer — and
+//! (b) stay inside the pre-refactor tolerance bands its report encodes
+//! as paper-vs-measured checks.
 
 use coldfaas::experiments::{self, ExpConfig};
 
 /// Every preset over the unified layer, one per migrated wiring + E13.
+/// These all run with faults disabled: the empty `FaultPlan` must leave
+/// them byte-identical across the fault-layer refactor (double-run pins
+/// below; the calibrated paper bands pin the absolute values).
 const MIGRATED: [&str; 6] = ["fig4", "table1", "waste", "scaleout", "policies", "fleet"];
 
 fn small() -> ExpConfig {
@@ -55,4 +59,63 @@ fn migrated_experiments_stay_inside_their_tolerance_bands() {
             report.failures().join("\n")
         );
     }
+}
+
+/// E14 determinism: the same seed drives the same trace *and* the same
+/// fault schedule, so the chaos report must be byte-identical per run —
+/// crashes, kills, retries and all.
+#[test]
+fn chaos_report_is_byte_identical_per_seed_and_plan() {
+    let cfg = small();
+    let a = experiments::by_name("chaos", &cfg).expect("known experiment").render();
+    let b = experiments::by_name("chaos", &cfg).expect("known experiment").render();
+    assert_eq!(a, b, "chaos: same seed + same fault plan must reproduce byte-identically");
+    let other = ExpConfig { seed: cfg.seed ^ 0x5EED, ..small() };
+    let c = experiments::by_name("chaos", &other).expect("known experiment").render();
+    assert_ne!(a, c, "chaos: a different seed must change the measurement");
+}
+
+/// Refactor guard for the fault layer itself: running a preset-shaped
+/// config through `run_platform` with an explicit empty/dry plan is
+/// byte-identical to the default config — the fault machinery must be
+/// observationally absent until a plan schedules real events.
+#[test]
+fn empty_and_dry_fault_plans_do_not_perturb_platform_runs() {
+    use coldfaas::fnplat::DriverKind;
+    use coldfaas::platform::{
+        chaos_plan, run_platform, DriverProfile, FaultPlan, PlatformConfig, PlatformLoad,
+    };
+    use coldfaas::policy::FixedKeepAlive;
+    use coldfaas::sim::Host;
+    use coldfaas::workload::tenants::{TenantConfig, TenantTrace};
+
+    let trace = TenantTrace::generate(&TenantConfig {
+        functions: 50,
+        duration_s: 30.0,
+        total_rps: 40.0,
+        seed: 0xD1FF,
+        ..Default::default()
+    });
+    let run = |faults: FaultPlan| {
+        let cfg = PlatformConfig {
+            load: PlatformLoad::Tenants(trace.clone()),
+            functions: 50,
+            nodes: 4,
+            exact_latencies: true,
+            faults,
+            ..PlatformConfig::single_node(
+                DriverProfile::from_kind(DriverKind::DockerWarm),
+                8,
+            )
+        };
+        run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default())
+    };
+    let default_plan = run(FaultPlan::default());
+    let dry = run(chaos_plan(4, 30 * 1_000_000_000).dry());
+    assert_eq!(default_plan.latencies_ns, dry.latencies_ns);
+    assert_eq!(default_plan.cold_starts, dry.cold_starts);
+    assert_eq!(default_plan.warm_hits, dry.warm_hits);
+    assert_eq!(default_plan.idle_gb_seconds, dry.idle_gb_seconds);
+    assert_eq!(default_plan.elapsed_ns, dry.elapsed_ns);
+    assert_eq!((dry.crashes, dry.killed, dry.retries), (0, 0, 0));
 }

@@ -4,7 +4,13 @@
 //! robustness on adversarial inputs.
 
 use coldfaas::fnplat::pool::{Dispatch, WarmPool};
+use coldfaas::fnplat::DriverKind;
 use coldfaas::metrics::Recorder;
+use coldfaas::platform::{
+    run_platform, DriverProfile, FaultConfig, FaultPlan, NodeState, PlatformConfig, PlatformLoad,
+    SchedPolicy, Scheduler,
+};
+use coldfaas::policy::{ColdOnlyPolicy, FixedKeepAlive, LifecyclePolicy};
 use coldfaas::runtime::Json;
 use coldfaas::sim::{Dist, Domain, Engine, Host, LockClass, ReqId, Rng, Spawn, Step};
 use coldfaas::testkit::{forall, forall_vec, gen};
@@ -363,6 +369,117 @@ fn prop_pool_policy_deadlines_accounting() {
         let (d100, w100) = run(100);
         d1 == d10 && d10 == d100 && w1 <= w10 && w10 <= w100
     });
+}
+
+/// Request conservation under random fault plans: for every lifecycle
+/// policy x scheduler draw, every injected request ends served or
+/// rejected (`served + rejected == injected`), every kill is either
+/// retried or rejected, and the platform never invents requests — even
+/// when the random plan takes the whole cluster down at once.
+#[test]
+fn prop_platform_conserves_requests_under_random_fault_plans() {
+    const S: u64 = 1_000_000_000;
+    forall(
+        0xFA17_7E57,
+        8,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 6) as usize,          // nodes
+                gen::u64_in(rng, 8, 40),                  // mttf_s
+                gen::u64_in(rng, 2, 10),                  // mttr_s
+                gen::u64_in(rng, 0, 3) as usize,          // scheduler
+                gen::u64_in(rng, 0, 1),                   // policy pick
+                rng.next_u64(),                           // seed
+            )
+        },
+        |&(nodes, mttf_s, mttr_s, sched, policy_pick, seed)| {
+            let trace = TenantTrace::generate(&TenantConfig {
+                functions: 40,
+                duration_s: 30.0,
+                total_rps: 30.0,
+                seed,
+                ..Default::default()
+            });
+            let plan = FaultPlan::generate(&FaultConfig {
+                nodes,
+                horizon_ns: 30 * S,
+                mttf_ns: mttf_s * S,
+                mttr_ns: mttr_s * S,
+                flush_cache: true,
+                straggler_mult: 2.0,
+                straggler_ns: 5 * S,
+                max_retries: 3,
+                retry_backoff_ns: 100_000_000,
+                spike_window_ns: 5 * S,
+                seed: seed ^ 0xFA17,
+            });
+            let driver = if policy_pick == 0 {
+                DriverKind::IncludeOsCold
+            } else {
+                DriverKind::DockerWarm
+            };
+            let cfg = PlatformConfig {
+                load: PlatformLoad::Tenants(trace.clone()),
+                functions: 40,
+                nodes,
+                scheduler: SchedPolicy::ALL[sched],
+                faults: plan,
+                ..PlatformConfig::single_node(DriverProfile::from_kind(driver), 8)
+            };
+            let mut cold = ColdOnlyPolicy;
+            let mut keep = FixedKeepAlive::default();
+            let policy: &mut dyn LifecyclePolicy =
+                if policy_pick == 0 { &mut cold } else { &mut keep };
+            let r = run_platform(&cfg, policy, Host::default());
+            r.injected == trace.len() as u64
+                && r.injected == r.served + r.rejected
+                && r.served == r.requests
+                && r.retries <= r.killed
+                && r.killed <= r.retries + r.rejected
+        },
+    );
+}
+
+/// A crashed node never yields a warm slot: routing skips down nodes
+/// outright (even if a buggy pool still held slots), and the crash drain
+/// leaves nothing warm behind for when the node returns.
+#[test]
+fn prop_warm_pool_never_yields_slot_on_crashed_node() {
+    const S: u64 = 1_000_000_000;
+    forall(
+        0xDEAD_0DE,
+        40,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 6) as usize, // nodes
+                gen::u64_in(rng, 1, 5),          // warm slots per node
+                rng.next_u64(),                  // which node crashes
+            )
+        },
+        |&(n_nodes, slots, pick)| {
+            let sched = Scheduler::new(SchedPolicy::LeastLoaded);
+            let mut nodes: Vec<NodeState> = (0..n_nodes)
+                .map(|id| NodeState::new(id, 4, 32, 30 * S, 1 << 20))
+                .collect();
+            for n in nodes.iter_mut() {
+                n.pool.prewarm_until("f0", slots, 0, 100 * S);
+            }
+            let down = (pick % n_nodes as u64) as usize;
+            nodes[down].up = false;
+            let drained = nodes[down].pool.crash(S);
+            let routed_ok = (0..2 * n_nodes).all(|_| {
+                // Repeated routing claims slots but must never pick the
+                // crashed node, with or without slots left in its pool.
+                match sched.route_warm(&mut nodes, "f0", 2 * S) {
+                    Some(id) => id != down,
+                    None => true,
+                }
+            });
+            drained == slots
+                && nodes[down].pool.warm_available("f0", 2 * S) == 0
+                && routed_ok
+        },
+    );
 }
 
 /// Engine determinism under arbitrary workload shapes: same seed, same
