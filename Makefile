@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet chaos
+.PHONY: build test artifacts experiments policies fleet chaos planet
 
 build:
 	cd rust && cargo build --release
@@ -25,3 +25,6 @@ fleet: build
 
 chaos: build
 	./rust/target/release/coldfaas chaos --quick
+
+planet: build
+	./rust/target/release/coldfaas planet --quick

@@ -1,0 +1,21 @@
+//! Bench E15: planet sweep — 256 nodes x 10 000 functions, a ≥1M-request
+//! streamed Zipf trace per cell (includeos cold-only vs the Docker
+//! driver under every lifecycle policy), reporting simulator throughput
+//! (engine events per wall-clock second) alongside the frontier checks.
+//!
+//!     cargo bench --bench e15_planet
+
+use coldfaas::experiments::{planet, ExpConfig};
+
+fn main() {
+    println!("== bench e15_planet: the cold-only claim at planet scale ==\n");
+    let t0 = std::time::Instant::now();
+    let report = planet(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE15 regeneration (5 cells x ~1M streamed requests, 256 nodes, 10k fns): \
+         {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e15 regressions: {:#?}", report.failures());
+}

@@ -44,23 +44,56 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Strict u64 option: absent → default, malformed → `Err` (the CLI
+    /// rejects it instead of silently running with the default, which is
+    /// how `--requests 10k` used to quietly mean 10 000 *paper-default*
+    /// requests).
+    pub fn try_get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| format!("--{key} {v}: not a valid non-negative integer"))
+            }
+        }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Strict u32 option: also rejects values that fit a u64 but not a
+    /// u32 (`--cores 5000000000` used to truncate to a zero-core
+    /// cluster).
+    pub fn try_get_u32(&self, key: &str, default: u32) -> Result<u32, String> {
+        let v = self.try_get_u64(key, default as u64)?;
+        u32::try_from(v).map_err(|_| format!("--{key} {v}: out of range (max {})", u32::MAX))
+    }
+
+    /// Strict f64 option: absent → default, malformed or non-finite →
+    /// `Err`.
+    pub fn try_get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => Ok(x),
+                _ => Err(format!("--{key} {v}: not a valid finite number")),
+            },
+        }
     }
 
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
-    /// Comma-separated u32 list option.
-    pub fn get_u32_list(&self, key: &str, default: &[u32]) -> Vec<u32> {
+    /// Strict comma-separated u32 list: any malformed element rejects the
+    /// whole option (a lenient variant that silently dropped bad elements
+    /// is exactly the footgun the strict getters exist to remove).
+    pub fn try_get_u32_list(&self, key: &str, default: &[u32]) -> Result<Vec<u32>, String> {
         match self.get(key) {
-            Some(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    let t = t.trim();
+                    t.parse::<u32>().map_err(|_| format!("--{key} '{t}': not a valid u32"))
+                })
+                .collect(),
         }
     }
 }
@@ -98,26 +131,47 @@ mod tests {
     fn flag_before_option() {
         let a = parse(&["x", "--verbose", "--n", "5"]);
         assert!(a.has_flag("verbose"));
-        assert_eq!(a.get_u64("n", 0), 5);
+        assert_eq!(a.try_get_u64("n", 0), Ok(5));
     }
 
     #[test]
     fn numeric_defaults() {
         let a = parse(&["x"]);
-        assert_eq!(a.get_f64("scale", 1.5), 1.5);
-        assert_eq!(a.get_u64("n", 7), 7);
-    }
-
-    #[test]
-    fn u32_list() {
-        let a = parse(&["x", "--parallelism", "1,5, 10"]);
-        assert_eq!(a.get_u32_list("parallelism", &[2]), vec![1, 5, 10]);
-        assert_eq!(a.get_u32_list("other", &[2]), vec![2]);
+        assert_eq!(a.try_get_f64("scale", 1.5), Ok(1.5));
+        assert_eq!(a.try_get_u64("n", 7), Ok(7));
     }
 
     #[test]
     fn empty_argv_gives_help() {
         let a = Args::parse(&[]);
         assert_eq!(a.subcommand, "help");
+    }
+
+    #[test]
+    fn strict_numeric_getters_reject_malformed_values() {
+        let a = parse(&["x", "--n", "12", "--bad", "12k", "--f", "1.5", "--nan", "NaN"]);
+        assert_eq!(a.try_get_u64("n", 7), Ok(12));
+        assert_eq!(a.try_get_u64("missing", 7), Ok(7));
+        assert!(a.try_get_u64("bad", 7).unwrap_err().contains("--bad"));
+        assert_eq!(a.try_get_f64("f", 0.0), Ok(1.5));
+        assert!(a.try_get_f64("nan", 0.0).is_err(), "non-finite must be rejected");
+        assert!(a.try_get_f64("bad", 0.0).is_err());
+    }
+
+    #[test]
+    fn strict_u32_rejects_out_of_range_instead_of_truncating() {
+        let a = parse(&["x", "--cores", "5000000000", "--ok", "8"]);
+        let err = a.try_get_u32("cores", 1).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert_eq!(a.try_get_u32("ok", 1), Ok(8));
+        assert_eq!(a.try_get_u32("missing", 3), Ok(3));
+    }
+
+    #[test]
+    fn strict_u32_list_rejects_any_bad_element() {
+        let a = parse(&["x", "--parallelism", "1,5, 10", "--broken", "1,x,3"]);
+        assert_eq!(a.try_get_u32_list("parallelism", &[2]), Ok(vec![1, 5, 10]));
+        assert_eq!(a.try_get_u32_list("missing", &[2]), Ok(vec![2]));
+        assert!(a.try_get_u32_list("broken", &[2]).is_err());
     }
 }

@@ -18,12 +18,9 @@
 //! never silently lost.
 
 use super::fleet::cell_config;
-use super::ExpConfig;
+use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
 use crate::platform::{chaos_plan, run_platform, SchedPolicy};
-use crate::policy::{
-    ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
-};
 use crate::report::Report;
 use crate::sim::Host;
 use crate::workload::tenants::{TenantConfig, TenantTrace};
@@ -103,15 +100,6 @@ impl ChaosCell {
     }
 }
 
-fn make_policy(idx: usize, n_funcs: u32) -> Box<dyn LifecyclePolicy> {
-    match idx {
-        0 => Box::new(ColdOnlyPolicy),
-        1 => Box::new(FixedKeepAlive::default()),
-        2 => Box::new(HistogramPrewarm::new(n_funcs)),
-        _ => Box::new(EwmaPredictive::new(n_funcs)),
-    }
-}
-
 /// Run the driver x policy x scheduler grid, each cell as a (faulted,
 /// baseline) pair over one generated trace and one scripted fault plan.
 pub fn chaos_cells(cfg: &ChaosConfig) -> Vec<ChaosCell> {
@@ -120,48 +108,60 @@ pub fn chaos_cells(cfg: &ChaosConfig) -> Vec<ChaosCell> {
 
 /// The grid over an already-generated trace (cells are exactly E13 fleet
 /// cells — `fleet::cell_config` — under the scripted plan / its dry leg).
+/// Both legs of a cell run in the same sweep-runner slot, so the pairing
+/// is preserved and the collected order matches the serial grid.
 fn cells_over(cfg: &ChaosConfig, trace: &TenantTrace) -> Vec<ChaosCell> {
     let horizon_ns = (cfg.tenant.duration_s * 1e9) as u64;
     let plan = chaos_plan(cfg.nodes, horizon_ns);
-    let cell = |driver, scheduler, faults| {
-        cell_config(cfg.nodes, cfg.cores_per_node, &cfg.tenant, driver, scheduler, trace, faults)
-    };
-    let mut cells = Vec::new();
+    let mut specs: Vec<(DriverKind, SchedPolicy, usize)> = Vec::new();
     for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
         for &scheduler in &cfg.schedulers {
-            for idx in 0..4 {
-                let mut policy = make_policy(idx, cfg.tenant.functions);
-                let fcfg = cell(driver, scheduler, plan.clone());
-                let f = run_platform(&fcfg, policy.as_mut(), cfg.host);
-                // Baseline leg: same trace, seed, and disruption-window
-                // classification (dry plan), but nothing is injected.
-                let mut baseline = make_policy(idx, cfg.tenant.functions);
-                let bcfg = cell(driver, scheduler, plan.dry());
-                let b = run_platform(&bcfg, baseline.as_mut(), cfg.host);
-                cells.push(ChaosCell {
-                    driver,
-                    policy: policy.name(),
-                    scheduler,
-                    injected: f.injected,
-                    served: f.served,
-                    killed: f.killed,
-                    retries: f.retries,
-                    rejected: f.rejected,
-                    warm_slots_lost: f.warm_slots_lost,
-                    prewarm_boots: f.prewarm_boots,
-                    idle_gb_seconds: f.idle_gb_seconds,
-                    p99_ms: f.quantile_ms(0.99),
-                    baseline_p99_ms: b.quantile_ms(0.99),
-                    window_cold_fraction: f.window_cold_fraction(),
-                    baseline_window_cold_fraction: b.window_cold_fraction(),
-                    steady_cold_fraction: f.steady_cold_fraction(),
-                    crashes: f.crashes,
-                    restarts: f.restarts,
-                });
+            for idx in 0..POLICY_COUNT {
+                specs.push((driver, scheduler, idx));
             }
         }
     }
-    cells
+    sweep::run_cells(&specs, |_, &(driver, scheduler, idx)| {
+        let cell = |faults| {
+            cell_config(
+                cfg.nodes,
+                cfg.cores_per_node,
+                &cfg.tenant,
+                driver,
+                scheduler,
+                trace,
+                faults,
+            )
+        };
+        let mut policy = make_policy(idx, cfg.tenant.functions);
+        let fcfg = cell(plan.clone());
+        let f = run_platform(&fcfg, policy.as_mut(), cfg.host);
+        // Baseline leg: same trace, seed, and disruption-window
+        // classification (dry plan), but nothing is injected.
+        let mut baseline = make_policy(idx, cfg.tenant.functions);
+        let bcfg = cell(plan.dry());
+        let b = run_platform(&bcfg, baseline.as_mut(), cfg.host);
+        ChaosCell {
+            driver,
+            policy: policy.name(),
+            scheduler,
+            injected: f.injected,
+            served: f.served,
+            killed: f.killed,
+            retries: f.retries,
+            rejected: f.rejected,
+            warm_slots_lost: f.warm_slots_lost,
+            prewarm_boots: f.prewarm_boots,
+            idle_gb_seconds: f.idle_gb_seconds,
+            p99_ms: f.quantile_ms(0.99),
+            baseline_p99_ms: b.quantile_ms(0.99),
+            window_cold_fraction: f.window_cold_fraction(),
+            baseline_window_cold_fraction: b.window_cold_fraction(),
+            steady_cold_fraction: f.steady_cold_fraction(),
+            crashes: f.crashes,
+            restarts: f.restarts,
+        }
+    })
 }
 
 fn cells_where<'a>(

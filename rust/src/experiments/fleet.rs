@@ -7,15 +7,12 @@
 //! Pareto-optimal when image distribution and placement enter the
 //! picture.
 
-use super::ExpConfig;
+use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::{DriverKind, DEFAULT_EXEC_MS};
 use crate::platform::presets::INCLUDEOS_PAUSED_BYTES;
 use crate::platform::{
     run_platform, DriverProfile, FaultPlan, ImageSeeding, PlatformConfig, PlatformLoad,
     RequestPath, SchedPolicy,
-};
-use crate::policy::{
-    ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
 };
 use crate::report::Report;
 use crate::sim::Host;
@@ -82,15 +79,6 @@ impl FleetCell {
     }
 }
 
-fn fresh_policies(n_funcs: u32) -> Vec<Box<dyn LifecyclePolicy>> {
-    vec![
-        Box::new(ColdOnlyPolicy),
-        Box::new(FixedKeepAlive::default()),
-        Box::new(HistogramPrewarm::new(n_funcs)),
-        Box::new(EwmaPredictive::new(n_funcs)),
-    ]
-}
-
 /// Mark Pareto-optimal cells in the (p99, waste, bytes-moved) space: a
 /// cell is dominated if some other cell is no worse on all three axes and
 /// strictly better on at least one.
@@ -154,41 +142,54 @@ pub(crate) fn cell_config(
     }
 }
 
-/// Run the full driver x policy x scheduler grid over one generated trace.
+/// Run the full driver x policy x scheduler grid over one generated
+/// trace.  Cells are independent and run on the shared parallel sweep
+/// runner; results collect in grid order, so the report is byte-identical
+/// to serial execution.
 pub fn fleet_cells(cfg: &FleetConfig) -> Vec<FleetCell> {
+    fleet_cells_with(cfg, sweep::sweep_threads(2 * cfg.schedulers.len() * POLICY_COUNT))
+}
+
+/// The grid on an explicit worker-thread count (1 = serial); the
+/// regression suite asserts both produce identical cells.
+pub fn fleet_cells_with(cfg: &FleetConfig, threads: usize) -> Vec<FleetCell> {
     let trace = TenantTrace::generate(&cfg.tenant);
-    let mut cells = Vec::new();
+    let mut specs: Vec<(DriverKind, SchedPolicy, usize)> = Vec::new();
     for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
         for &scheduler in &cfg.schedulers {
-            for mut policy in fresh_policies(cfg.tenant.functions) {
-                let pcfg = cell_config(
-                    cfg.nodes,
-                    cfg.cores_per_node,
-                    &cfg.tenant,
-                    driver,
-                    scheduler,
-                    &trace,
-                    FaultPlan::default(),
-                );
-                let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
-                cells.push(FleetCell {
-                    driver,
-                    policy: policy.name(),
-                    scheduler,
-                    requests: r.requests,
-                    p50_ms: r.quantile_ms(0.5),
-                    p99_ms: r.quantile_ms(0.99),
-                    cold_fraction: r.cold_fraction(),
-                    idle_gb_seconds: r.idle_gb_seconds,
-                    monitor_events: r.monitor_events,
-                    prewarm_boots: r.prewarm_boots,
-                    transfers: r.transfers,
-                    transferred_mb: r.transferred_bytes as f64 / 1e6,
-                    on_frontier: false,
-                });
+            for policy_idx in 0..POLICY_COUNT {
+                specs.push((driver, scheduler, policy_idx));
             }
         }
     }
+    let mut cells = sweep::run_cells_with(threads, &specs, |_, &(driver, scheduler, pidx)| {
+        let mut policy = make_policy(pidx, cfg.tenant.functions);
+        let pcfg = cell_config(
+            cfg.nodes,
+            cfg.cores_per_node,
+            &cfg.tenant,
+            driver,
+            scheduler,
+            &trace,
+            FaultPlan::default(),
+        );
+        let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
+        FleetCell {
+            driver,
+            policy: policy.name(),
+            scheduler,
+            requests: r.requests,
+            p50_ms: r.quantile_ms(0.5),
+            p99_ms: r.quantile_ms(0.99),
+            cold_fraction: r.cold_fraction(),
+            idle_gb_seconds: r.idle_gb_seconds,
+            monitor_events: r.monitor_events,
+            prewarm_boots: r.prewarm_boots,
+            transfers: r.transfers,
+            transferred_mb: r.transferred_bytes as f64 / 1e6,
+            on_frontier: false,
+        }
+    });
     mark_frontier(&mut cells);
     cells
 }
@@ -394,6 +395,24 @@ mod tests {
         other.tenant.seed = 1;
         let c = fleet_with(&other).render();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_serial() {
+        let cfg = small_cfg();
+        let serial = fleet_cells_with(&cfg, 1);
+        let parallel = fleet_cells_with(&cfg, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.label(), p.label());
+            assert_eq!(
+                (s.requests, s.p99_ms.to_bits(), s.idle_gb_seconds.to_bits(), s.transfers),
+                (p.requests, p.p99_ms.to_bits(), p.idle_gb_seconds.to_bits(), p.transfers),
+                "{} diverged across thread counts",
+                s.label()
+            );
+            assert_eq!(s.on_frontier, p.on_frontier);
+        }
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E14).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E15).
+//!
+//! The grid experiments (E12–E15) run their cells through the shared
+//! [`sweep`] runner: cells are self-contained, so they execute on worker
+//! threads and collect in cell order — reports stay byte-identical to
+//! serial execution.
 
 pub mod chaos;
 pub mod cloud;
@@ -9,9 +14,11 @@ pub mod decompose;
 pub mod fleet;
 pub mod fnlocal;
 pub mod images;
+pub mod planet;
 pub mod policies;
 pub mod scaleout;
 pub mod startup;
+pub mod sweep;
 pub mod waste;
 
 pub use chaos::chaos;
@@ -21,10 +28,50 @@ pub use decompose::decompose;
 pub use fleet::fleet;
 pub use fnlocal::fig4;
 pub use images::images;
+pub use planet::planet;
 pub use policies::policies;
 pub use scaleout::scaleout;
 pub use startup::{fig1, fig2, fig3};
 pub use waste::waste;
+
+use crate::policy::{
+    ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm, LifecyclePolicy,
+};
+
+/// Lifecycle policies every grid experiment sweeps, in report order.
+pub(crate) const POLICY_COUNT: usize = 4;
+
+/// Fresh policy instance by grid index (cells build their own so sweeps
+/// can run cells concurrently): 0 cold-only, 1 fixed keep-alive,
+/// 2 hybrid histogram, 3 EWMA forecast.
+pub(crate) fn make_policy(idx: usize, n_funcs: u32) -> Box<dyn LifecyclePolicy> {
+    match idx {
+        0 => Box::new(ColdOnlyPolicy),
+        1 => Box::new(FixedKeepAlive::default()),
+        2 => Box::new(HistogramPrewarm::new(n_funcs)),
+        _ => Box::new(EwmaPredictive::new(n_funcs)),
+    }
+}
+
+/// Mark Pareto-optimal cells in a 2-D minimize/minimize plane: a cell is
+/// dominated if some other cell is no worse on both axes and strictly
+/// better on at least one.  Shared by the (p99, waste) frontiers of E12
+/// and E15; E13 keeps its own 3-D variant.
+pub(crate) fn mark_pareto2<T>(
+    cells: &mut [T],
+    key: impl Fn(&T) -> (f64, f64),
+    set: impl Fn(&mut T, bool),
+) {
+    let snapshot: Vec<(f64, f64)> = cells.iter().map(&key).collect();
+    for (i, c) in cells.iter_mut().enumerate() {
+        let (a, b) = snapshot[i];
+        let dominated = snapshot
+            .iter()
+            .enumerate()
+            .any(|(j, &(oa, ob))| j != i && oa <= a && ob <= b && (oa < a || ob < b));
+        set(c, !dominated);
+    }
+}
 
 /// All experiment names accepted by the CLI, with the report generator.
 pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
@@ -43,10 +90,16 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "policies" => policies(cfg),
         "fleet" => fleet(cfg),
         "chaos" => chaos(cfg),
+        "planet" => planet(cfg),
         _ => return None,
     })
 }
 
+/// Experiments `experiment all` sweeps.  E15 `planet` is deliberately
+/// absent: it is by far the heaviest grid and has its own subcommand and
+/// CI smoke step (`coldfaas planet`), so including it here would run it
+/// twice per CI pass for no added coverage — `by_name` still accepts
+/// `"planet"` for explicit `experiment planet` runs.
 pub const ALL_EXPERIMENTS: [&str; 14] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
     "distance", "scaleout", "policies", "fleet", "chaos",

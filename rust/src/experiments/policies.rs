@@ -5,12 +5,9 @@
 //! GB·s-idle-waste frontier, quantifying §IV's qualitative claim that the
 //! cold-only unikernel platform can delete the warm-pool machinery.
 
-use super::ExpConfig;
+use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
-use crate::policy::{
-    run_policy_scenario, ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive, HistogramPrewarm,
-    LifecyclePolicy, PolicyScenario,
-};
+use crate::policy::{run_policy_scenario, PolicyScenario};
 use crate::report::Report;
 use crate::sim::Host;
 use crate::workload::tenants::{TenantConfig, TenantTrace};
@@ -66,54 +63,43 @@ impl PolicyCell {
     }
 }
 
-fn fresh_policies(n_funcs: u32) -> Vec<Box<dyn LifecyclePolicy>> {
-    vec![
-        Box::new(ColdOnlyPolicy),
-        Box::new(FixedKeepAlive::default()),
-        Box::new(HistogramPrewarm::new(n_funcs)),
-        Box::new(EwmaPredictive::new(n_funcs)),
-    ]
-}
-
-/// Mark Pareto-optimal cells in the (p99, waste) plane: a cell is
-/// dominated if some other cell is no worse on both axes and strictly
-/// better on at least one.
+/// Mark Pareto-optimal cells in the (p99, waste) plane.
 fn mark_frontier(cells: &mut [PolicyCell]) {
-    let snapshot: Vec<(f64, f64)> =
-        cells.iter().map(|c| (c.p99_ms, c.idle_gb_seconds)).collect();
-    for (i, c) in cells.iter_mut().enumerate() {
-        let (p99, waste) = snapshot[i];
-        c.on_frontier = !snapshot.iter().enumerate().any(|(j, &(op99, owaste))| {
-            j != i
-                && op99 <= p99
-                && owaste <= waste
-                && (op99 < p99 || owaste < waste)
-        });
-    }
+    super::mark_pareto2(
+        cells,
+        |c| (c.p99_ms, c.idle_gb_seconds),
+        |c, on| c.on_frontier = on,
+    );
 }
 
-/// Run the full policy x driver grid over one generated trace.
+/// Run the full policy x driver grid over one generated trace.  Cells
+/// run on the shared parallel sweep runner and collect in grid order, so
+/// the report is byte-identical to serial execution.
 pub fn policy_cells(cfg: &E12Config) -> Vec<PolicyCell> {
     let trace = TenantTrace::generate(&cfg.tenant);
-    let mut cells = Vec::new();
+    let mut specs: Vec<(DriverKind, usize)> = Vec::new();
     for driver in [DriverKind::IncludeOsCold, DriverKind::DockerWarm] {
-        for mut policy in fresh_policies(cfg.tenant.functions) {
-            let sc = PolicyScenario::new(driver, trace.clone(), cfg.tenant.seed);
-            let r = run_policy_scenario(&sc, policy.as_mut(), cfg.host);
-            cells.push(PolicyCell {
-                driver,
-                policy: policy.name(),
-                requests: r.requests(),
-                p50_ms: r.quantile_ms(0.5),
-                p99_ms: r.quantile_ms(0.99),
-                cold_fraction: r.cold_fraction(),
-                idle_gb_seconds: r.idle_gb_seconds,
-                monitor_events: r.monitor_events,
-                prewarm_boots: r.prewarm_boots,
-                on_frontier: false,
-            });
+        for policy_idx in 0..POLICY_COUNT {
+            specs.push((driver, policy_idx));
         }
     }
+    let mut cells = sweep::run_cells(&specs, |_, &(driver, policy_idx)| {
+        let mut policy = make_policy(policy_idx, cfg.tenant.functions);
+        let sc = PolicyScenario::new(driver, trace.clone(), cfg.tenant.seed);
+        let r = run_policy_scenario(&sc, policy.as_mut(), cfg.host);
+        PolicyCell {
+            driver,
+            policy: policy.name(),
+            requests: r.requests(),
+            p50_ms: r.quantile_ms(0.5),
+            p99_ms: r.quantile_ms(0.99),
+            cold_fraction: r.cold_fraction(),
+            idle_gb_seconds: r.idle_gb_seconds,
+            monitor_events: r.monitor_events,
+            prewarm_boots: r.prewarm_boots,
+            on_frontier: false,
+        }
+    });
     mark_frontier(&mut cells);
     cells
 }

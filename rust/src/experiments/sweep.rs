@@ -1,0 +1,110 @@
+//! Parallel sweep runner (std-only) shared by the grid experiments
+//! (E12 policies, E13 fleet, E14 chaos; E15 planet uses it pinned to
+//! one thread so its events/s headline times uncontended cells).
+//!
+//! Every grid cell is self-contained — it builds its own config, policy,
+//! and RNG from its own seed, and `run_platform` touches no shared state
+//! — so cells can run on worker threads with no coordination beyond a
+//! work-stealing cursor.  Results land in their cell's slot, so the
+//! output order (and therefore every rendered report) is byte-identical
+//! to serial execution; only wall-clock time changes.
+//!
+//! Thread count comes from `COLDFAAS_SWEEP_THREADS` when set (`1` forces
+//! serial execution), else from `std::thread::available_parallelism`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker threads a sweep may use: the env override, else the machine's
+/// available parallelism, never more than one per cell.
+pub fn sweep_threads(cells: usize) -> usize {
+    let configured = std::env::var("COLDFAAS_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |p| p.get()));
+    configured.min(cells.max(1))
+}
+
+/// Run `run` over every cell on up to `threads` scoped worker threads,
+/// collecting results in cell order.  `threads <= 1` degenerates to the
+/// plain serial loop.  A panicking cell propagates after the scope joins
+/// (a failed paper check inside a cell still fails the sweep).
+pub fn run_cells_with<C: Sync, R: Send>(
+    threads: usize,
+    cells: &[C],
+    run: impl Fn(usize, &C) -> R + Sync,
+) -> Vec<R> {
+    if threads <= 1 || cells.len() <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| run(i, c)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..cells.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(cells.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run(i, &cells[i]);
+                out.lock().expect("no poisoned sweep slot")[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .expect("sweep scope joined")
+        .into_iter()
+        .map(|r| r.expect("every cell ran"))
+        .collect()
+}
+
+/// Run `run` over every cell with the default thread count, results in
+/// cell order (byte-identical to a serial loop).
+pub fn run_cells<C: Sync, R: Send>(cells: &[C], run: impl Fn(usize, &C) -> R + Sync) -> Vec<R> {
+    run_cells_with(sweep_threads(cells.len()), cells, run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_cell_order() {
+        let cells: Vec<u64> = (0..100).collect();
+        let got = run_cells_with(8, &cells, |i, &c| {
+            assert_eq!(i as u64, c);
+            c * 3
+        });
+        assert_eq!(got, (0..100).map(|c| c * 3).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        // A cell computation with per-cell deterministic "randomness":
+        // the parallel schedule must not leak into the results.
+        let cells: Vec<u64> = (0..37).collect();
+        let work = |_: usize, &seed: &u64| {
+            let mut rng = crate::sim::Rng::new(seed);
+            (0..100).map(|_| rng.next_u64()).fold(0u64, u64::wrapping_add)
+        };
+        let serial = run_cells_with(1, &cells, work);
+        for threads in [2, 4, 16] {
+            assert_eq!(run_cells_with(threads, &cells, work), serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn single_cell_and_empty_sweeps_work() {
+        assert_eq!(run_cells_with(4, &[7u64], |_, &c| c + 1), vec![8]);
+        let empty: Vec<u64> = Vec::new();
+        assert_eq!(run_cells_with(4, &empty, |_, &c| c), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn thread_count_respects_env_floor_and_cells() {
+        // Never more threads than cells, never fewer than one.
+        assert_eq!(sweep_threads(1), 1);
+        assert!(sweep_threads(64) >= 1);
+    }
+}

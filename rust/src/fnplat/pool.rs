@@ -6,8 +6,20 @@
 //! executors, their idle-timeout expiry, and the headline waste metric —
 //! **idle memory-seconds** — plus the monitoring-event count that stands
 //! for the per-function load-tracking complexity of warm platforms.
+//!
+//! Slots are kept in two orders at once: a LIFO claim order (dispatch
+//! takes the most recently idled executor, matching Fn) and a
+//! deadline-ordered min-heap for expiry — so `warm_available`/`dispatch`
+//! do O(log n) amortized work instead of the remove-in-place scan the
+//! pool used to run over the whole queue on every call.  A claimed slot
+//! leaves a stale heap entry behind; expiry skips those lazily.  The
+//! observable accounting (which slot expires, when it is charged, every
+//! counter) is identical to the scan implementation: charges depend only
+//! on each slot's `(idle_since, expires_at)` pair, never on when the
+//! purge happens to run.
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 #[derive(Clone, Copy, Debug)]
 struct WarmSlot {
@@ -16,6 +28,28 @@ struct WarmSlot {
     /// `idle_since + idle_timeout`; lifecycle policies ([`crate::policy`])
     /// pick a per-release deadline instead.
     expires_at_ns: u64,
+}
+
+/// Idle slots of one function: live slots by serial, claim order (LIFO,
+/// newest serial at the back), and deadline order for expiry.  Entries in
+/// `lifo`/`by_deadline` whose serial is no longer in `slots` are stale
+/// (claimed or expired) and skipped lazily.
+#[derive(Clone, Debug, Default)]
+struct FuncSlots {
+    slots: HashMap<u64, WarmSlot>,
+    lifo: Vec<u64>,
+    by_deadline: BinaryHeap<Reverse<(u64, u64)>>,
+}
+
+impl FuncSlots {
+    /// Drop stale lifo entries once they dominate the vector, so a
+    /// long-lived function cannot accumulate unbounded tombstones.
+    fn compact(&mut self) {
+        if self.lifo.len() > 4 * self.slots.len() + 16 {
+            let slots = &self.slots;
+            self.lifo.retain(|s| slots.contains_key(s));
+        }
+    }
 }
 
 /// Outcome of a dispatch attempt.
@@ -35,7 +69,9 @@ pub struct WarmPool {
     pub mem_bytes_per_slot: u64,
     /// Liveness-poll period for idle executors (monitoring complexity).
     pub poll_period_ns: u64,
-    idle: HashMap<String, VecDeque<WarmSlot>>,
+    idle: HashMap<String, FuncSlots>,
+    /// Monotone slot id: release order, shared across functions.
+    next_serial: u64,
     /// Total executors alive (idle + busy) per function.
     alive: HashMap<String, u64>,
     // --- accounting ---
@@ -57,6 +93,7 @@ impl WarmPool {
             mem_bytes_per_slot,
             poll_period_ns: 1_000_000_000, // 1 s liveness poll
             idle: HashMap::new(),
+            next_serial: 0,
             alive: HashMap::new(),
             idle_mem_byte_ns: 0,
             monitor_events: 0,
@@ -73,22 +110,32 @@ impl WarmPool {
         self.monitor_events += idle_ns / self.poll_period_ns;
     }
 
-    /// Drop idle slots whose deadline has passed by `now`.  Deadlines are
-    /// per-slot (policies may vary them release to release), so this scans
-    /// the whole queue rather than popping an ordered front.
+    fn insert_slot(&mut self, func: &str, slot: WarmSlot) {
+        let serial = self.next_serial;
+        self.next_serial += 1;
+        let fs = self.idle.entry(func.to_string()).or_default();
+        fs.slots.insert(serial, slot);
+        fs.lifo.push(serial);
+        fs.by_deadline.push(Reverse((slot.expires_at_ns, serial)));
+    }
+
+    /// Drop idle slots whose deadline has passed by `now`: pop the
+    /// deadline heap until its head is still live, skipping entries whose
+    /// slot was already claimed.
     fn expire(&mut self, func: &str, now: u64) {
-        let Some(q) = self.idle.get_mut(func) else { return };
+        let Some(fs) = self.idle.get_mut(func) else { return };
         let mut charges: Vec<u64> = Vec::new();
-        let mut i = 0;
-        while i < q.len() {
-            if q[i].expires_at_ns <= now {
-                let s = q.remove(i).expect("index in range");
+        while let Some(&Reverse((expires_at_ns, serial))) = fs.by_deadline.peek() {
+            if expires_at_ns > now {
+                break;
+            }
+            fs.by_deadline.pop();
+            if let Some(s) = fs.slots.remove(&serial) {
                 charges.push(s.expires_at_ns.saturating_sub(s.idle_since_ns));
-            } else {
-                i += 1;
             }
         }
         if !charges.is_empty() {
+            fs.compact();
             self.expirations += charges.len() as u64;
             let a = self.alive.get_mut(func).expect("alive entry");
             *a -= (charges.len() as u64).min(*a);
@@ -101,11 +148,19 @@ impl WarmPool {
     /// Try to claim a warm executor for `func` at `now`.
     pub fn dispatch(&mut self, func: &str, now: u64) -> Dispatch {
         self.expire(func, now);
-        let slot = self.idle.get_mut(func).and_then(|q| q.pop_back());
+        // LIFO claim (most recently idle): matches Fn's behaviour and
+        // maximizes expiry of the cold tail.  Pops stale serials as it
+        // walks down.
+        let slot = self.idle.get_mut(func).and_then(|fs| {
+            while let Some(serial) = fs.lifo.pop() {
+                if let Some(s) = fs.slots.remove(&serial) {
+                    return Some(s);
+                }
+            }
+            None
+        });
         match slot {
             Some(s) => {
-                // LIFO claim (most recently idle): matches Fn's behaviour
-                // and maximizes expiry of the cold tail.
                 self.account_idle(now - s.idle_since_ns);
                 self.warm_hits += 1;
                 Dispatch::Warm
@@ -126,21 +181,28 @@ impl WarmPool {
     }
 
     /// Return an executor to the idle pool with an explicit teardown
-    /// deadline (lifecycle-policy path: the deadline is per release).
+    /// deadline (lifecycle-policy path: the deadline is per release).  A
+    /// deadline at or before `now` means the slot is dead on arrival:
+    /// retire the executor immediately instead of enqueuing a slot that
+    /// would count a spurious expiration with zero idle charge.
     pub fn release_until(&mut self, func: &str, now: u64, expires_at_ns: u64) {
-        self.idle
-            .entry(func.to_string())
-            .or_default()
-            .push_back(WarmSlot { idle_since_ns: now, expires_at_ns });
+        if expires_at_ns <= now {
+            self.retire(func);
+            return;
+        }
+        self.insert_slot(func, WarmSlot { idle_since_ns: now, expires_at_ns });
     }
 
     /// Tear an executor down immediately after it served (the cold-only
-    /// lifecycle): nothing idles, nothing is charged.
+    /// lifecycle): nothing idles, nothing is charged.  Only a real
+    /// teardown counts: with no live executor there is nothing to retire.
     pub fn retire(&mut self, func: &str) {
-        if let Some(a) = self.alive.get_mut(func) {
-            *a = a.saturating_sub(1);
+        let alive = self.alive.get_mut(func).filter(|a| **a > 0);
+        debug_assert!(alive.is_some(), "retire('{func}') without a live executor");
+        if let Some(a) = alive {
+            *a -= 1;
+            self.retirements += 1;
         }
-        self.retirements += 1;
     }
 
     /// Pre-create `n` warm executors (measurement warmup), retained until
@@ -154,14 +216,13 @@ impl WarmPool {
     /// (predictive-prewarm policies).
     pub fn prewarm_until(&mut self, func: &str, n: u64, now: u64, expires_at_ns: u64) {
         *self.alive.entry(func.to_string()).or_insert(0) += n;
-        let q = self.idle.entry(func.to_string()).or_default();
         for _ in 0..n {
-            q.push_back(WarmSlot { idle_since_ns: now, expires_at_ns });
+            self.insert_slot(func, WarmSlot { idle_since_ns: now, expires_at_ns });
         }
     }
 
     pub fn idle_count(&self, func: &str) -> usize {
-        self.idle.get(func).map_or(0, |q| q.len())
+        self.idle.get(func).map_or(0, |fs| fs.slots.len())
     }
 
     /// Idle warm executors still live at `now` (expires stale slots first).
@@ -169,6 +230,13 @@ impl WarmPool {
     pub fn warm_available(&mut self, func: &str, now: u64) -> usize {
         self.expire(func, now);
         self.idle_count(func)
+    }
+
+    /// Functions that may still hold idle slots (a superset: keys survive
+    /// until the map entry is dropped).  Lets the platform's warm index
+    /// seed its candidate sets from a pre-populated pool.
+    pub fn warm_funcs(&self) -> impl Iterator<Item = &str> {
+        self.idle.iter().filter(|(_, fs)| !fs.slots.is_empty()).map(|(k, _)| k.as_str())
     }
 
     pub fn alive_count(&self, func: &str) -> u64 {
@@ -180,8 +248,10 @@ impl WarmPool {
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
             self.expire(&f, now);
-            if let Some(q) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = q.drain(..).collect();
+            if let Some(fs) = self.idle.get_mut(&f) {
+                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
+                fs.lifo.clear();
+                fs.by_deadline.clear();
                 for s in slots {
                     let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
                     self.account_idle(idle_ns);
@@ -197,8 +267,10 @@ impl WarmPool {
     pub fn finalize_expiring(&mut self) {
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
-            if let Some(q) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = q.drain(..).collect();
+            if let Some(fs) = self.idle.get_mut(&f) {
+                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
+                fs.lifo.clear();
+                fs.by_deadline.clear();
                 let n = slots.len() as u64;
                 self.expirations += n;
                 if let Some(a) = self.alive.get_mut(&f) {
@@ -221,8 +293,10 @@ impl WarmPool {
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         let mut dropped = 0u64;
         for f in funcs {
-            if let Some(q) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = q.drain(..).collect();
+            if let Some(fs) = self.idle.get_mut(&f) {
+                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
+                fs.lifo.clear();
+                fs.by_deadline.clear();
                 dropped += slots.len() as u64;
                 for s in slots {
                     let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
@@ -372,8 +446,8 @@ mod tests {
         let mut p = pool();
         p.dispatch("f", 0);
         p.dispatch("f", 0);
-        // Older release has the *longer* deadline: the scan must still
-        // expire the younger slot first.
+        // Older release has the *longer* deadline: expiry is deadline-
+        // ordered, so the younger slot still goes first.
         p.release_until("f", 0, 100 * S);
         p.release_until("f", 1 * S, 5 * S);
         p.expire("f", 6 * S);
@@ -393,6 +467,54 @@ mod tests {
         assert_eq!(p.retirements, 1);
         assert_eq!(p.idle_mem_byte_ns, 0);
         assert_eq!(p.dispatch("f", 5 * S), Dispatch::Cold);
+    }
+
+    #[test]
+    fn retire_without_alive_executor_is_not_a_teardown() {
+        // Retiring a function that has no live executor is a caller bug:
+        // debug builds flag it, release builds refuse to count it (the
+        // old code bumped `retirements` and masked the alive underflow
+        // with saturating_sub).
+        let mut p = pool();
+        if cfg!(debug_assertions) {
+            let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                p.retire("ghost");
+            }));
+            assert!(boom.is_err(), "debug builds must flag the phantom retire");
+        } else {
+            p.retire("ghost");
+            assert_eq!(p.retirements, 0, "no executor existed, nothing was torn down");
+            assert_eq!(p.alive_count("ghost"), 0);
+        }
+    }
+
+    #[test]
+    fn retire_counts_only_real_teardowns() {
+        let mut p = pool();
+        p.dispatch("f", 0); // alive = 1
+        p.retire("f"); // real teardown
+        assert_eq!((p.retirements, p.alive_count("f")), (1, 0));
+    }
+
+    #[test]
+    fn release_at_or_past_deadline_retires_immediately() {
+        // A keep window that already closed (expires <= now) must not
+        // enqueue a dead slot: the old code later counted it as a
+        // spurious expiration with zero idle charge.
+        let mut p = pool();
+        p.dispatch("f", 10 * S); // alive = 1
+        p.release_until("f", 10 * S, 10 * S); // degenerate window
+        assert_eq!(p.idle_count("f"), 0);
+        assert_eq!(p.retirements, 1, "dead-on-arrival slot is a retirement");
+        assert_eq!(p.alive_count("f"), 0);
+        p.finalize(100 * S);
+        assert_eq!(p.expirations, 0, "nothing was ever idle, nothing expires");
+        assert_eq!(p.idle_mem_byte_ns, 0);
+
+        let mut q = pool();
+        q.dispatch("f", 10 * S);
+        q.release_until("f", 10 * S, 5 * S); // deadline in the past
+        assert_eq!((q.idle_count("f"), q.retirements, q.expirations), (0, 1, 0));
     }
 
     #[test]
@@ -445,6 +567,35 @@ mod tests {
         assert_eq!(p.expirations, 0);
         // Everything after the crash starts cold.
         assert_eq!(p.dispatch("f", 6 * S), Dispatch::Cold);
+    }
+
+    #[test]
+    fn heavy_churn_stays_consistent_and_bounded() {
+        // Many release/expire/claim rounds: the lazy heap + LIFO stay in
+        // agreement with the counters, and stale lifo entries are
+        // compacted instead of accumulating forever.
+        let mut p = pool();
+        let mut now = 0u64;
+        for round in 0..2_000u64 {
+            p.dispatch("f", now); // cold or warm, either way alive >= 1
+            // Short deadline every other round so half the slots expire.
+            let keep = if round % 2 == 0 { S / 2 } else { 20 * S };
+            p.release_until("f", now, now + keep);
+            now += S;
+        }
+        {
+            let fs = p.idle.get("f").expect("func entry");
+            assert!(
+                fs.lifo.len() <= 4 * fs.slots.len() + 64,
+                "tombstones must be compacted: {} stale-ish entries over {} live slots",
+                fs.lifo.len(),
+                fs.slots.len()
+            );
+        }
+        p.finalize(now + 100 * S);
+        assert_eq!(p.warm_hits + p.cold_starts, 2_000);
+        let fs = p.idle.get("f").expect("func entry");
+        assert!(fs.slots.is_empty(), "finalize drains all live slots");
     }
 
     #[test]

@@ -66,6 +66,12 @@ impl NodeCache {
         self.images.contains_key(name)
     }
 
+    /// Names of every resident image (the cluster scheduler's replica
+    /// index seeds itself from this at attach time).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.images.keys().map(String::as_str)
+    }
+
     /// Look up an image; on miss, returns the bytes that must be fetched
     /// and inserts it (evicting nothing — capacity overflow is an error the
     /// cluster scheduler must avoid, mirroring the paper's "extreme setting

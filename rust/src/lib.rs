@@ -11,9 +11,10 @@
 //!   [`platform`] layer every experiment is a configuration of) that
 //!   regenerates every figure and table of the paper's evaluation in
 //!   virtual time — plus the keep-alive policy lab (E12), the
-//!   cluster-scale fleet sweep (E13), and the fault-injection chaos
-//!   sweep (E14) that quantify the cold-only thesis against the
-//!   lifecycle policies real platforms run, in failure and in calm — and
+//!   cluster-scale fleet sweep (E13), the fault-injection chaos sweep
+//!   (E14), and the 256-node planet sweep (E15) that quantify the
+//!   cold-only thesis against the lifecycle policies real platforms run,
+//!   in failure, in calm, and at fleet scale — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
 //!   [`runtime`]) — a real HTTP control plane whose executors run
 //!   AOT-compiled JAX/Pallas functions through PJRT (python never on the

@@ -5,6 +5,7 @@
 //!   policies                keep-alive policy lab (E12): latency-vs-waste frontier
 //!   fleet                   cluster-scale fleet sweep (E13): policy x scheduler x driver
 //!   chaos                   fault-injection sweep (E14): the fleet under node crashes
+//!   planet                  planet sweep (E15): 256 nodes, 10k fns, millions of requests
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
@@ -25,6 +26,7 @@ fn main() {
         "policies" => cmd_policies(&args),
         "fleet" => cmd_fleet(&args),
         "chaos" => cmd_chaos(&args),
+        "planet" => cmd_planet(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -47,7 +49,7 @@ coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
 
 USAGE: coldfaas <subcommand> [options]
 
-  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|chaos|all>
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|chaos|planet|all>
       --requests N          requests per cell (default 10000; paper value)
       --parallelism LIST    e.g. 1,5,10,20,40 (default)
       --seed N              deterministic seed
@@ -69,7 +71,7 @@ USAGE: coldfaas <subcommand> [options]
   fleet                     cluster-scale fleet sweep (E13): lifecycle
                             policy x placement scheduler x driver over a
                             1000-function Zipf trace on an N-node cluster
-      --nodes N             cluster size, 1..=32 (default 8)
+      --nodes N             cluster size, 1..=1024 (default 8)
       --cores N             cores per node (default 8)
       --functions N         distinct functions (default 1000)
       --rps F               aggregate offered load (default sized from --requests)
@@ -87,7 +89,7 @@ USAGE: coldfaas <subcommand> [options]
                             restart, 2x straggler starts) plus a fabric
                             brown-out; every cell is paired with a
                             fault-free baseline over the same trace
-      --nodes N             cluster size, 2..=32 (default 8)
+      --nodes N             cluster size, 2..=1024 (default 8)
       --cores N             cores per node (default 8)
       --functions N         distinct functions (default 1000)
       --rps F               aggregate offered load (default sized from --requests)
@@ -95,6 +97,22 @@ USAGE: coldfaas <subcommand> [options]
       --zipf S              popularity exponent (default 1.1)
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  planet                    planet sweep (E15): the cold-only frontier
+                            claim at fleet scale — 256 nodes, 10 000
+                            functions, a multi-million-request streamed
+                            Zipf trace per cell, plus simulator
+                            events/s (the DES hot-path metric)
+      --nodes N             cluster size, 1..=1024 (default 256)
+      --cores N             cores per node (default 8)
+      --functions N         distinct functions (default 10000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default 300)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic seed
+      --quick               reduced trace (same 256-node cluster)
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -112,14 +130,20 @@ USAGE: coldfaas <subcommand> [options]
   list
 ";
 
-fn exp_config(args: &Args) -> ExpConfig {
+/// Strict shared experiment config: malformed numeric flags are a hard
+/// CLI error (exit 2), never a silent fall-back to the default.
+fn exp_config(args: &Args) -> Result<ExpConfig, String> {
     let mut cfg = if args.has_flag("quick") { ExpConfig::quick() } else { ExpConfig::default() };
-    if let Some(r) = args.get("requests") {
-        cfg.requests = r.parse().unwrap_or(cfg.requests);
-    }
-    cfg.parallelisms = args.get_u32_list("parallelism", &cfg.parallelisms);
-    cfg.seed = args.get_u64("seed", cfg.seed);
-    cfg
+    cfg.requests = args.try_get_u64("requests", cfg.requests)?;
+    cfg.parallelisms = args.try_get_u32_list("parallelism", &cfg.parallelisms)?;
+    cfg.seed = args.try_get_u64("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+/// Print a usage error and return the CLI's usage exit code.
+fn usage_error(subcommand: &str, e: &str) -> i32 {
+    eprintln!("{subcommand}: {e}");
+    2
 }
 
 /// Append rendered report text to the `--out` file, if requested.
@@ -151,7 +175,10 @@ fn cmd_experiment(args: &Args) -> i32 {
         eprintln!("usage: coldfaas experiment <name>|all");
         return 2;
     };
-    let cfg = exp_config(args);
+    let cfg = match exp_config(args) {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("experiment", &e),
+    };
     let names: Vec<&str> = if name == "all" {
         experiments::ALL_EXPERIMENTS.to_vec()
     } else {
@@ -203,24 +230,33 @@ fn finish_report(args: &Args, id: &str, report: coldfaas::report::Report, wall_s
     }
 }
 
-/// Narrow a u64 CLI option to u32; out-of-range values become 0 so the
-/// caller's positivity validation rejects them instead of silently
-/// wrapping.
-fn get_u32_opt(args: &Args, key: &str, default: u32) -> u32 {
-    u32::try_from(args.get_u64(key, default as u64)).unwrap_or(0)
+/// Apply the shared tenant-shape flags (`--functions/--rps/--duration/
+/// --zipf`) strictly, then validate positivity.
+fn tenant_flags(
+    args: &Args,
+    tenant: &mut coldfaas::workload::tenants::TenantConfig,
+) -> Result<(), String> {
+    tenant.functions = args.try_get_u32("functions", tenant.functions)?;
+    tenant.total_rps = args.try_get_f64("rps", tenant.total_rps)?;
+    tenant.duration_s = args.try_get_f64("duration", tenant.duration_s)?;
+    tenant.zipf_exponent = args.try_get_f64("zipf", tenant.zipf_exponent)?;
+    if tenant.functions == 0 || tenant.total_rps <= 0.0 || tenant.duration_s <= 0.0 {
+        return Err("--functions, --rps and --duration must be positive".to_string());
+    }
+    Ok(())
 }
 
 fn cmd_policies(args: &Args) -> i32 {
     use coldfaas::experiments::policies::{e12_config, policies_with};
-    let mut cfg = e12_config(&exp_config(args));
-    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
-    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
-    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
-    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
-    if cfg.tenant.functions == 0 || cfg.tenant.total_rps <= 0.0 || cfg.tenant.duration_s <= 0.0 {
-        eprintln!("policies: --functions, --rps and --duration must be positive");
-        return 2;
-    }
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = e12_config(&base);
+        tenant_flags(args, &mut cfg.tenant)?;
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("policies", &e),
+    };
     let t0 = std::time::Instant::now();
     let report = policies_with(&cfg);
     finish_report(args, "policies", report, t0.elapsed().as_secs_f64())
@@ -228,25 +264,23 @@ fn cmd_policies(args: &Args) -> i32 {
 
 fn cmd_fleet(args: &Args) -> i32 {
     use coldfaas::experiments::fleet::{fleet_config, fleet_with};
-    let mut cfg = fleet_config(&exp_config(args));
-    cfg.nodes = args.get_u64("nodes", cfg.nodes as u64) as usize;
-    cfg.cores_per_node = get_u32_opt(args, "cores", cfg.cores_per_node);
-    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
-    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
-    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
-    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
-    if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
-        eprintln!("fleet: --nodes must be in 1..={}", coldfaas::platform::MAX_NODES);
-        return 2;
-    }
-    if cfg.cores_per_node == 0
-        || cfg.tenant.functions == 0
-        || cfg.tenant.total_rps <= 0.0
-        || cfg.tenant.duration_s <= 0.0
-    {
-        eprintln!("fleet: --cores, --functions, --rps and --duration must be positive");
-        return 2;
-    }
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = fleet_config(&base);
+        cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+        cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        tenant_flags(args, &mut cfg.tenant)?;
+        if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+            return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
+        }
+        if cfg.cores_per_node == 0 {
+            return Err("--cores must be positive".to_string());
+        }
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("fleet", &e),
+    };
     let t0 = std::time::Instant::now();
     let report = fleet_with(&cfg);
     finish_report(args, "fleet", report, t0.elapsed().as_secs_f64())
@@ -254,44 +288,66 @@ fn cmd_fleet(args: &Args) -> i32 {
 
 fn cmd_chaos(args: &Args) -> i32 {
     use coldfaas::experiments::chaos::{chaos_config, chaos_with};
-    let mut cfg = chaos_config(&exp_config(args));
-    cfg.nodes = args.get_u64("nodes", cfg.nodes as u64) as usize;
-    cfg.cores_per_node = get_u32_opt(args, "cores", cfg.cores_per_node);
-    cfg.tenant.functions = get_u32_opt(args, "functions", cfg.tenant.functions);
-    cfg.tenant.total_rps = args.get_f64("rps", cfg.tenant.total_rps);
-    cfg.tenant.duration_s = args.get_f64("duration", cfg.tenant.duration_s);
-    cfg.tenant.zipf_exponent = args.get_f64("zipf", cfg.tenant.zipf_exponent);
-    if cfg.nodes < 2 || cfg.nodes > coldfaas::platform::MAX_NODES {
-        eprintln!(
-            "chaos: --nodes must be in 2..={} (a node must survive the fault plan)",
-            coldfaas::platform::MAX_NODES
-        );
-        return 2;
-    }
-    if cfg.cores_per_node == 0
-        || cfg.tenant.functions == 0
-        || cfg.tenant.total_rps <= 0.0
-        || cfg.tenant.duration_s <= 0.0
-    {
-        eprintln!("chaos: --cores, --functions, --rps and --duration must be positive");
-        return 2;
-    }
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = chaos_config(&base);
+        cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+        cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        tenant_flags(args, &mut cfg.tenant)?;
+        if cfg.nodes < 2 || cfg.nodes > coldfaas::platform::MAX_NODES {
+            return Err(format!(
+                "--nodes must be in 2..={} (a node must survive the fault plan)",
+                coldfaas::platform::MAX_NODES
+            ));
+        }
+        if cfg.cores_per_node == 0 {
+            return Err("--cores must be positive".to_string());
+        }
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("chaos", &e),
+    };
     let t0 = std::time::Instant::now();
     let report = chaos_with(&cfg);
     finish_report(args, "chaos", report, t0.elapsed().as_secs_f64())
 }
 
-fn coord_config(args: &Args) -> Config {
+fn cmd_planet(args: &Args) -> i32 {
+    use coldfaas::experiments::planet::{planet_config, planet_with};
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = planet_config(&base);
+        cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+        cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        tenant_flags(args, &mut cfg.tenant)?;
+        if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+            return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
+        }
+        if cfg.cores_per_node == 0 {
+            return Err("--cores must be positive".to_string());
+        }
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("planet", &e),
+    };
+    let t0 = std::time::Instant::now();
+    let report = planet_with(&cfg);
+    finish_report(args, "planet", report, t0.elapsed().as_secs_f64())
+}
+
+fn coord_config(args: &Args) -> Result<Config, String> {
     let mode = match args.get_or("mode", "cold").as_str() {
         "warm" => SchedMode::WarmPool,
         _ => SchedMode::ColdOnly,
     };
-    Config {
+    Ok(Config {
         mode,
-        time_scale: args.get_f64("time-scale", 1.0),
-        idle_timeout_s: args.get_f64("idle-timeout", 30.0),
-        engine_threads: args.get_u64("engines", 1) as usize,
-        gateway_workers: args.get_u64("workers", 20) as usize,
+        time_scale: args.try_get_f64("time-scale", 1.0)?,
+        idle_timeout_s: args.try_get_f64("idle-timeout", 30.0)?,
+        engine_threads: args.try_get_u64("engines", 1)? as usize,
+        gateway_workers: args.try_get_u64("workers", 20)? as usize,
         artifacts_dir: args
             .get("artifacts")
             .map(Into::into)
@@ -300,11 +356,14 @@ fn coord_config(args: &Args) -> Config {
             .get("functions")
             .map(|s| s.split(',').map(str::to_string).collect())
             .unwrap_or_default(),
-    }
+    })
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let cfg = coord_config(args);
+    let cfg = match coord_config(args) {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("serve", &e),
+    };
     let bind = args.get_or("bind", "127.0.0.1:8080");
     let coord = match Coordinator::start(cfg) {
         Ok(c) => c,
@@ -338,7 +397,10 @@ fn cmd_invoke(args: &Args) -> i32 {
         eprintln!("usage: coldfaas invoke <fn> [--payload '1,2,...']");
         return 2;
     };
-    let mut cfg = coord_config(args);
+    let mut cfg = match coord_config(args) {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("invoke", &e),
+    };
     cfg.functions = vec![name.clone()];
     let coord = match Coordinator::start(cfg) {
         Ok(c) => c,
@@ -408,7 +470,10 @@ fn cmd_verify(args: &Args) -> i32 {
 }
 
 fn cmd_measure_exec(args: &Args) -> i32 {
-    let iters = args.get_u64("iters", 50) as usize;
+    let iters = match args.try_get_u64("iters", 50) {
+        Ok(n) => n as usize,
+        Err(e) => return usage_error("measure-exec", &e),
+    };
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)

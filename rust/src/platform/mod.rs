@@ -37,9 +37,11 @@ use crate::virt::Tech;
 use crate::workload::tenants::TenantTrace;
 use crate::workload::traces::Trace;
 
-/// Engine pool ids are `u8` and each node takes 7 pools (cores + one per
-/// lock class), so the node count is capped well below overflow.
-pub const MAX_NODES: usize = 32;
+/// Engine pool ids are `u16` and each node takes 7 pools (cores + one
+/// per lock class + disk), so the hard ceiling is ~9 000 nodes; the cap
+/// is held lower to keep obviously-misconfigured runs from allocating a
+/// pool army by accident.  E15 "planet" runs at 256.
+pub const MAX_NODES: usize = 1024;
 
 /// An executor driver: the startup/warm-invoke pipelines the platform
 /// retargets onto whichever node a request lands on.
@@ -124,8 +126,17 @@ pub enum PlatformLoad {
     ClosedLoop { parallelism: u32, total: u64, prewarm: bool, gap_ns: u64 },
     /// Open-loop arrivals for function 0 from a single-tenant trace (E9).
     OpenTrace(Trace),
-    /// Multi-tenant open-loop arrivals, `(at_ns, func)` (E12/E13).
+    /// Multi-tenant open-loop arrivals, `(at_ns, func)` (E12/E13).  Every
+    /// arrival is spawned into the engine up front — simple, but the
+    /// event heap and request table scale with the *whole trace*.
     Tenants(TenantTrace),
+    /// The same arrivals, fed into the engine in chunks by a zero-cost
+    /// control request as virtual time reaches them, so live engine state
+    /// scales with in-flight requests instead of trace length (E15 replays
+    /// millions of arrivals this way).  Chunk boundaries can reorder
+    /// same-nanosecond ties differently than `Tenants`, so pinned presets
+    /// keep the up-front variant.
+    TenantsStreamed(TenantTrace),
     /// `requests` arrivals spread uniformly over `burst_ms` (E11).
     Burst { requests: u64, burst_ms: f64 },
 }

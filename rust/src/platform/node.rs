@@ -36,17 +36,18 @@ pub struct NodeState {
     /// teardown deadlines on it.
     pub pool: WarmPool,
     /// Engine pool id for this node's cores.
-    pub cpu_pool: u8,
+    pub cpu_pool: u16,
     /// Engine pool ids (one single-slot pool per [`crate::sim::LockClass`])
     /// so per-node kernel-lock contention serializes exactly like the
     /// engine-global lock queues did on a single host.  The `Db` slot
     /// aliases another pool: no startup pipeline holds the metadata-DB
     /// lock (it lives on the non-retargeted agent path), and skipping it
-    /// keeps 32 nodes inside the engine's 255-pool id space.
-    pub lock_pools: [u8; N_LOCKS],
+    /// keeps the per-node pool count at 7 — 256-node fleets fit easily in
+    /// the engine's `u16` pool-id space.
+    pub lock_pools: [u16; N_LOCKS],
     /// Engine pool id for this node's local disk (single-slot FIFO —
     /// same serialization the engine's global disk gives one host).
-    pub disk_pool: u8,
+    pub disk_pool: u16,
     /// Streaming latency histogram of requests served by this node
     /// (merged across nodes at the end of a run).
     pub hist: Histogram,
@@ -71,7 +72,7 @@ impl NodeState {
             cache: NodeCache::new(None),
             pool: WarmPool::new(idle_timeout_ns, mem_bytes_per_slot),
             cpu_pool: 0,
-            lock_pools: [0; N_LOCKS],
+            lock_pools: [0u16; N_LOCKS],
             disk_pool: 0,
             hist: Histogram::new(),
         }

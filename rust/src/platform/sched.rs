@@ -4,6 +4,36 @@
 //! AWS-style co-location (Wang et al.), random spread, least-loaded, and
 //! image/pool affinity.  Pure logic; the DES wiring lives in
 //! [`super::sim`].
+//!
+//! ## The hot-path indexes
+//!
+//! At fleet scale (E15: 256 nodes, 10k functions, millions of requests)
+//! the per-request linear scans dominated the simulator, so the scheduler
+//! keeps three indexes:
+//!
+//! * `warm_nodes`: function → candidate nodes that *may* hold a live warm
+//!   slot.  Maintained as a **verified superset**: every release/pre-warm
+//!   inserts, nothing is required to delete eagerly, and `route_warm`
+//!   checks each candidate against the node's pool (which is itself
+//!   deadline-indexed) and prunes the ones that come up empty.  Routing
+//!   touches only nodes that ever went warm for the function instead of
+//!   scanning the whole cluster.
+//! * `by_load`: the exact `(inflight, node_id)` set of all *up* nodes —
+//!   `LeastLoaded` (and every least-loaded fallback) is an O(log N)
+//!   `first()` instead of a scan.  Every in-flight change flows through
+//!   [`Scheduler::claim`]/[`Scheduler::complete`]; crashes/restarts
+//!   through [`Scheduler::node_down`]/[`Scheduler::node_up`].
+//! * `image_nodes`: image → candidate nodes caching it (verified superset
+//!   again, pruned lazily) — `PoolAffinity` and `CoLocate` walk only the
+//!   replica set.
+//!
+//! Tie-breaking is bit-for-bit the pre-index behaviour — candidates are
+//! walked in node-id order and compared on `(inflight, id)` — and debug
+//! builds re-run the original linear scans on every decision and assert
+//! the indexed pick matches (see `route_warm_scan`/`place_cold_scan`),
+//! which is what keeps the E12–E14 byte-identical report pins honest.
+
+use std::collections::{BTreeSet, HashMap};
 
 use crate::image::Image;
 use crate::sim::Rng;
@@ -52,10 +82,30 @@ pub struct PlacementOutcome {
 }
 
 /// Placement decisions + image-distribution bookkeeping over a node set.
+///
+/// The indexes must see every state change: build them with
+/// [`Scheduler::attach`] (or [`Scheduler::for_nodes`]) once the node set
+/// is seeded, then report warm releases via [`Scheduler::warm_added`],
+/// crashes via [`Scheduler::node_down`], and restarts via
+/// [`Scheduler::node_up`].  In-flight counters are owned here: claim and
+/// release go through [`Scheduler::complete`] and the routing methods.
 pub struct Scheduler {
     pub policy: SchedPolicy,
     pub transfers: u64,
     pub transferred_bytes: u64,
+    /// Exact `(inflight, node_id)` of every up node.
+    by_load: BTreeSet<(u32, usize)>,
+    /// func → nodes that may hold live warm slots (verified superset).
+    warm_nodes: HashMap<String, BTreeSet<usize>>,
+    /// image → nodes that may cache it (verified superset).
+    image_nodes: HashMap<String, BTreeSet<usize>>,
+    /// Debug-only decision counter driving parity-check sampling: on
+    /// clusters past 64 nodes the O(N) reference scan runs on every
+    /// 64th decision instead of all of them, so E15-sized debug runs
+    /// stay affordable while every pinned preset (≤32 nodes) and the
+    /// property suite keep full per-decision verification.
+    #[cfg(debug_assertions)]
+    parity_tick: u64,
 }
 
 fn least_loaded<'a>(candidates: impl Iterator<Item = &'a NodeState>) -> Option<usize> {
@@ -64,7 +114,115 @@ fn least_loaded<'a>(candidates: impl Iterator<Item = &'a NodeState>) -> Option<u
 
 impl Scheduler {
     pub fn new(policy: SchedPolicy) -> Scheduler {
-        Scheduler { policy, transfers: 0, transferred_bytes: 0 }
+        Scheduler {
+            policy,
+            transfers: 0,
+            transferred_bytes: 0,
+            by_load: BTreeSet::new(),
+            warm_nodes: HashMap::new(),
+            image_nodes: HashMap::new(),
+            #[cfg(debug_assertions)]
+            parity_tick: 0,
+        }
+    }
+
+    /// Debug builds re-run the pre-index linear scans and assert parity;
+    /// sampled down on large clusters (see `parity_tick`).
+    #[cfg(debug_assertions)]
+    fn parity_check_due(&mut self, n_nodes: usize) -> bool {
+        self.parity_tick = self.parity_tick.wrapping_add(1);
+        n_nodes <= 64 || self.parity_tick % 64 == 0
+    }
+
+    /// A scheduler with its indexes already attached to `nodes`.
+    pub fn for_nodes(policy: SchedPolicy, nodes: &[NodeState]) -> Scheduler {
+        let mut s = Scheduler::new(policy);
+        s.attach(nodes);
+        s
+    }
+
+    /// (Re)build the indexes from the current node state: load order over
+    /// up nodes, image replica sets from the caches, and warm candidates
+    /// from whatever the pools already hold (pre-run seeding/warmup).
+    pub fn attach(&mut self, nodes: &[NodeState]) {
+        self.by_load.clear();
+        self.warm_nodes.clear();
+        self.image_nodes.clear();
+        for n in nodes {
+            if n.up {
+                self.by_load.insert((n.inflight, n.id));
+            }
+            for img in n.cache.names() {
+                self.image_nodes.entry(img.to_string()).or_default().insert(n.id);
+            }
+            for func in n.pool.warm_funcs() {
+                self.warm_nodes.entry(func.to_string()).or_default().insert(n.id);
+            }
+        }
+    }
+
+    /// `node` may now hold a live warm slot for `func` (an executor was
+    /// released into or pre-warmed in its pool).
+    pub fn warm_added(&mut self, func: &str, node: usize) {
+        match self.warm_nodes.get_mut(func) {
+            Some(set) => {
+                set.insert(node);
+            }
+            None => {
+                self.warm_nodes.insert(func.to_string(), BTreeSet::from([node]));
+            }
+        }
+    }
+
+    fn image_added(&mut self, image: &str, node: usize) {
+        match self.image_nodes.get_mut(image) {
+            Some(set) => {
+                set.insert(node);
+            }
+            None => {
+                self.image_nodes.insert(image.to_string(), BTreeSet::from([node]));
+            }
+        }
+    }
+
+    /// `node` crashed: drop it from the load order.  Call *before*
+    /// flipping `up`/resetting `inflight` (the index key must match).
+    /// Warm/image candidates stay behind as stale entries; routing
+    /// verifies against the drained pool/flushed cache and prunes them.
+    pub fn node_down(&mut self, node: &NodeState) {
+        self.by_load.remove(&(node.inflight, node.id));
+    }
+
+    /// `node` restarted: re-enter the load order.  Call *after* flipping
+    /// `up` (with the in-flight counter already reset).
+    pub fn node_up(&mut self, node: &NodeState) {
+        debug_assert!(node.up);
+        self.by_load.insert((node.inflight, node.id));
+    }
+
+    /// Claim an in-flight slot on `id`, keeping the load order exact.
+    fn claim(&mut self, nodes: &mut [NodeState], id: usize) {
+        let n = &mut nodes[id];
+        if n.up {
+            self.by_load.remove(&(n.inflight, n.id));
+        }
+        n.inflight += 1;
+        if n.up {
+            self.by_load.insert((n.inflight, n.id));
+        }
+    }
+
+    /// An executor on `node` released its in-flight slot.
+    pub fn complete(&mut self, nodes: &mut [NodeState], node: usize) {
+        let n = &mut nodes[node];
+        debug_assert!(n.inflight > 0);
+        if n.up {
+            self.by_load.remove(&(n.inflight, n.id));
+        }
+        n.inflight = n.inflight.saturating_sub(1);
+        if n.up {
+            self.by_load.insert((n.inflight, n.id));
+        }
     }
 
     /// Route to a node holding a live warm executor for `func`, if any
@@ -73,7 +231,66 @@ impl Scheduler {
     /// that is the platform's router, not a placement choice.  Crashed
     /// nodes are never candidates: their pools were drained at the crash
     /// and a dead node cannot serve even a (buggy) leftover slot.
-    pub fn route_warm(&self, nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
+    ///
+    /// Only the function's candidate set is consulted; candidates whose
+    /// pool comes up empty are pruned, so the set tracks the nodes
+    /// actually warm for the function.
+    pub fn route_warm(&mut self, nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
+        #[cfg(debug_assertions)]
+        let want: Option<Option<usize>> = if self.parity_check_due(nodes.len()) {
+            Some(Self::route_warm_scan(nodes, func, now))
+        } else {
+            None
+        };
+        let mut best: Option<(u32, usize)> = None;
+        let mut stale: Vec<usize> = Vec::new();
+        if let Some(set) = self.warm_nodes.get_mut(func) {
+            for &id in set.iter() {
+                let n = &mut nodes[id];
+                if !n.up {
+                    // Down nodes are skipped without probing (and without
+                    // pruning): the pre-index scan never touched their
+                    // pools either, and a post-restart probe cleans up.
+                    continue;
+                }
+                if n.pool.warm_available(func, now) == 0 {
+                    stale.push(id);
+                    continue;
+                }
+                let key = (n.inflight, n.id);
+                let better = match best {
+                    None => true,
+                    Some(b) => key < b,
+                };
+                if better {
+                    best = Some(key);
+                }
+            }
+            for id in &stale {
+                set.remove(id);
+            }
+            if set.is_empty() {
+                self.warm_nodes.remove(func);
+            }
+        }
+        #[cfg(debug_assertions)]
+        if let Some(want) = want {
+            debug_assert_eq!(
+                best.map(|(_, id)| id),
+                want,
+                "warm index diverged from the linear scan for '{func}'"
+            );
+        }
+        let id = best.map(|(_, id)| id)?;
+        self.claim(nodes, id);
+        Some(id)
+    }
+
+    /// The pre-index warm router: full scan over every node and pool.
+    /// Kept as the behavioural reference — debug builds assert
+    /// [`Scheduler::route_warm`] picks the same node, and the property
+    /// suite replays random traces against it.  Does not claim.
+    pub fn route_warm_scan(nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
         let mut best: Option<(u32, usize)> = None;
         for n in nodes.iter_mut() {
             if !n.up || n.pool.warm_available(func, now) == 0 {
@@ -87,9 +304,69 @@ impl Scheduler {
                 best = Some((n.inflight, n.id));
             }
         }
-        let id = best.map(|(_, id)| id)?;
-        nodes[id].inflight += 1;
-        Some(id)
+        best.map(|(_, id)| id)
+    }
+
+    /// Least-loaded among the (verified) nodes caching `image`; prunes
+    /// candidates whose cache no longer holds it (post-restart flush).
+    fn affinity_pick(&mut self, nodes: &[NodeState], image: &str) -> Option<usize> {
+        let set = self.image_nodes.get_mut(image)?;
+        let mut stale: Vec<usize> = Vec::new();
+        let mut best: Option<(u32, usize)> = None;
+        for &id in set.iter() {
+            let n = &nodes[id];
+            if !n.cache.contains(image) {
+                stale.push(id);
+                continue;
+            }
+            if !n.up {
+                continue;
+            }
+            let key = (n.inflight, id);
+            let better = match best {
+                None => true,
+                Some(b) => key < b,
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        for id in &stale {
+            set.remove(id);
+        }
+        if set.is_empty() {
+            self.image_nodes.remove(image);
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// First node in id order still caching `image` with free memory
+    /// slots (the Wang et al. co-location home), pruning stale replicas.
+    fn colocate_pick(&mut self, nodes: &[NodeState], image: &str) -> Option<usize> {
+        let set = self.image_nodes.get_mut(image)?;
+        let mut stale: Vec<usize> = Vec::new();
+        let mut home: Option<usize> = None;
+        for &id in set.iter() {
+            let n = &nodes[id];
+            if !n.cache.contains(image) {
+                stale.push(id);
+                continue;
+            }
+            if home.is_none() && n.up && n.inflight < n.mem_slots {
+                home = Some(id);
+            }
+        }
+        for id in &stale {
+            set.remove(id);
+        }
+        if set.is_empty() {
+            self.image_nodes.remove(image);
+        }
+        home
+    }
+
+    fn least_loaded_indexed(&self) -> Option<usize> {
+        self.by_load.iter().next().map(|&(_, id)| id)
     }
 
     /// Place one cold start for `img` under the policy; claims an
@@ -102,6 +379,13 @@ impl Scheduler {
         img: &Image,
         rng: &mut Rng,
     ) -> Option<PlacementOutcome> {
+        #[cfg(debug_assertions)]
+        let want: Option<Option<usize>> = if self.parity_check_due(nodes.len()) {
+            let mut probe = rng.clone();
+            Some(Self::place_cold_scan(self.policy, nodes, img, &mut probe))
+        } else {
+            None
+        };
         let id = match self.policy {
             SchedPolicy::Spread => {
                 // With every node up this draws exactly the same value
@@ -110,33 +394,34 @@ impl Scheduler {
                 // and stays allocation-free on the per-request hot path.
                 let alive = nodes.iter().filter(|n| n.up).count() as u64;
                 if alive == 0 {
-                    return None;
+                    None
+                } else {
+                    let k = rng.below(alive) as usize;
+                    Some(nodes.iter().filter(|n| n.up).nth(k).map(|n| n.id).expect("k < alive"))
                 }
-                let k = rng.below(alive) as usize;
-                nodes.iter().filter(|n| n.up).nth(k).map(|n| n.id).expect("k < alive")
             }
-            SchedPolicy::LeastLoaded => least_loaded(nodes.iter().filter(|n| n.up))?,
+            SchedPolicy::LeastLoaded => self.least_loaded_indexed(),
             SchedPolicy::PoolAffinity => {
-                least_loaded(nodes.iter().filter(|n| n.up && n.cache.contains(&img.name)))
-                    .or_else(|| least_loaded(nodes.iter().filter(|n| n.up)))?
+                self.affinity_pick(nodes, &img.name).or_else(|| self.least_loaded_indexed())
             }
             SchedPolicy::CoLocate => {
                 // Stay on a cached node while executors still *fit in
                 // memory* (Wang et al.), even far past the core count —
                 // then spill to the least-loaded node overall.
-                let home = nodes
-                    .iter()
-                    .filter(|n| n.up && n.cache.contains(&img.name) && n.inflight < n.mem_slots)
-                    .map(|n| n.id)
-                    .next();
-                match home {
-                    Some(id) => id,
-                    None => least_loaded(nodes.iter().filter(|n| n.up))?,
-                }
+                self.colocate_pick(nodes, &img.name).or_else(|| self.least_loaded_indexed())
             }
         };
+        #[cfg(debug_assertions)]
+        if let Some(want) = want {
+            debug_assert_eq!(
+                id, want,
+                "cold-placement index diverged from the linear scan ({:?})",
+                self.policy
+            );
+        }
+        let id = id?;
+        self.claim(nodes, id);
         let node = &mut nodes[id];
-        node.inflight += 1;
         let fetch_bytes = match node.cache.fetch(img) {
             Ok(Some(bytes)) => {
                 self.transfers += 1;
@@ -145,14 +430,43 @@ impl Scheduler {
             }
             _ => 0,
         };
+        self.image_added(&img.name, id);
         Some(PlacementOutcome { node: id, fetch_bytes })
     }
 
-    /// An executor on `node` released its in-flight slot.
-    pub fn complete(&self, nodes: &mut [NodeState], node: usize) {
-        let n = &mut nodes[node];
-        debug_assert!(n.inflight > 0);
-        n.inflight = n.inflight.saturating_sub(1);
+    /// The pre-index cold placement: the original linear scans, kept as
+    /// the behavioural reference for debug parity asserts and the
+    /// property suite.  Picks only (no claim, no cache update); `rng`
+    /// must be a clone when run next to the real placement.
+    pub fn place_cold_scan(
+        policy: SchedPolicy,
+        nodes: &[NodeState],
+        img: &Image,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        match policy {
+            SchedPolicy::Spread => {
+                let alive = nodes.iter().filter(|n| n.up).count() as u64;
+                if alive == 0 {
+                    return None;
+                }
+                let k = rng.below(alive) as usize;
+                Some(nodes.iter().filter(|n| n.up).nth(k).map(|n| n.id).expect("k < alive"))
+            }
+            SchedPolicy::LeastLoaded => least_loaded(nodes.iter().filter(|n| n.up)),
+            SchedPolicy::PoolAffinity => {
+                least_loaded(nodes.iter().filter(|n| n.up && n.cache.contains(&img.name)))
+                    .or_else(|| least_loaded(nodes.iter().filter(|n| n.up)))
+            }
+            SchedPolicy::CoLocate => {
+                let home = nodes
+                    .iter()
+                    .filter(|n| n.up && n.cache.contains(&img.name) && n.inflight < n.mem_slots)
+                    .map(|n| n.id)
+                    .next();
+                home.or_else(|| least_loaded(nodes.iter().filter(|n| n.up)))
+            }
+        }
     }
 }
 
@@ -184,7 +498,7 @@ mod tests {
     fn seeded(policy: SchedPolicy) -> (Scheduler, Vec<NodeState>) {
         let mut ns = nodes(4, 2);
         let _ = ns[0].cache.fetch(&img()); // image starts on node 0 only
-        (Scheduler::new(policy), ns)
+        (Scheduler::for_nodes(policy, &ns), ns)
     }
 
     fn place(s: &mut Scheduler, ns: &mut [NodeState], rng: &mut Rng) -> PlacementOutcome {
@@ -263,23 +577,36 @@ mod tests {
 
     #[test]
     fn warm_routing_finds_live_slots_and_skips_expired() {
-        let s = Scheduler::new(SchedPolicy::LeastLoaded);
         let mut ns = nodes(3, 2);
+        let mut s = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &ns);
         assert_eq!(s.route_warm(&mut ns, "f0", 0), None);
         // Node 2 holds a warm slot until t=10 s.
         ns[2].pool.prewarm_until("f0", 1, 0, 10 * S);
+        s.warm_added("f0", 2);
         let mut ns2 = ns;
         assert_eq!(s.route_warm(&mut ns2, "f0", 5 * S), Some(2));
         assert_eq!(ns2[2].inflight, 1);
         // Past the deadline the slot is gone.
         ns2[2].pool.prewarm_until("f0", 1, 20 * S, 25 * S);
+        s.warm_added("f0", 2);
         assert_eq!(s.route_warm(&mut ns2, "f0", 30 * S), None);
+    }
+
+    #[test]
+    fn attach_seeds_warm_candidates_from_pools() {
+        // Pools pre-warmed before the scheduler exists (measurement
+        // warmup): attach must pick the candidates up.
+        let mut ns = nodes(2, 2);
+        ns[1].pool.prewarm_until("f0", 1, 0, 50 * S);
+        let mut s = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &ns);
+        assert_eq!(s.route_warm(&mut ns, "f0", S), Some(1));
     }
 
     #[test]
     fn dead_nodes_are_never_placement_targets() {
         for policy in SchedPolicy::ALL {
             let (mut s, mut ns) = seeded(policy);
+            s.node_down(&ns[0]);
             ns[0].up = false; // the only cached node dies
             let mut rng = Rng::new(11);
             for _ in 0..8 {
@@ -294,6 +621,7 @@ mod tests {
         for policy in SchedPolicy::ALL {
             let (mut s, mut ns) = seeded(policy);
             for n in ns.iter_mut() {
+                s.node_down(n);
                 n.up = false;
             }
             let mut rng = Rng::new(12);
@@ -303,25 +631,64 @@ mod tests {
 
     #[test]
     fn warm_routing_skips_crashed_nodes() {
-        let s = Scheduler::new(SchedPolicy::LeastLoaded);
         let mut ns = nodes(2, 2);
         ns[0].pool.prewarm_until("f0", 1, 0, 100 * S);
         ns[1].pool.prewarm_until("f0", 1, 0, 100 * S);
+        let mut s = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &ns);
+        s.node_down(&ns[0]);
         ns[0].up = false;
         // Even with a (stale) slot still in node 0's pool, routing must
         // pick the live node only.
         assert_eq!(s.route_warm(&mut ns, "f0", S), Some(1));
+        s.node_down(&ns[1]);
         ns[1].up = false;
         assert_eq!(s.route_warm(&mut ns, "f0", 2 * S), None);
     }
 
     #[test]
     fn warm_routing_prefers_least_loaded_node() {
-        let s = Scheduler::new(SchedPolicy::LeastLoaded);
         let mut ns = nodes(2, 2);
         ns[0].pool.prewarm_until("f0", 1, 0, 100 * S);
         ns[1].pool.prewarm_until("f0", 1, 0, 100 * S);
         ns[0].inflight = 3;
+        let mut s = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &ns);
         assert_eq!(s.route_warm(&mut ns, "f0", S), Some(1));
+    }
+
+    #[test]
+    fn restart_rejoins_the_load_order() {
+        let (mut s, mut ns) = seeded(SchedPolicy::LeastLoaded);
+        let mut rng = Rng::new(21);
+        // Crash node 0, place a few starts elsewhere, restart it: the
+        // empty node must be the least-loaded pick again.
+        s.node_down(&ns[0]);
+        ns[0].up = false;
+        ns[0].inflight = 0;
+        for _ in 0..3 {
+            assert_ne!(place(&mut s, &mut ns, &mut rng).node, 0);
+        }
+        ns[0].up = true;
+        s.node_up(&ns[0]);
+        assert_eq!(place(&mut s, &mut ns, &mut rng).node, 0);
+    }
+
+    #[test]
+    fn indexed_placement_tracks_claims_and_completions() {
+        // Interleave placements and completions and check the index keeps
+        // matching the reference scan pick-for-pick (the debug_assert
+        // inside place_cold also fires on any divergence).
+        let (mut s, mut ns) = seeded(SchedPolicy::LeastLoaded);
+        let mut rng = Rng::new(31);
+        let mut placed: Vec<usize> = Vec::new();
+        for round in 0..50 {
+            let pick = Scheduler::place_cold_scan(s.policy, &ns, &img(), &mut rng.clone());
+            let got = place(&mut s, &mut ns, &mut rng);
+            assert_eq!(Some(got.node), pick, "round {round}");
+            placed.push(got.node);
+            if round % 3 == 0 {
+                let n = placed.remove(0);
+                s.complete(&mut ns, n);
+            }
+        }
     }
 }

@@ -15,6 +15,17 @@
 //! sweeps do not allocate per request.  Exact raw samples stay available
 //! behind [`PlatformConfig::exact_latencies`] for the debug/compat paths.
 //!
+//! The dispatch decision runs against the scheduler's indexes (S22):
+//! warm routing consults only the function's candidate node set, and the
+//! cold schedulers their load/replica orders — every pool release,
+//! pre-warm boot, crash, and restart notifies [`Scheduler`] so the
+//! indexes stay exact (debug builds re-run the pre-index linear scans on
+//! every decision and assert the same pick).  Open-loop tenant traces can
+//! also be *streamed* ([`PlatformLoad::TenantsStreamed`]): a zero-cost
+//! feeder control request injects arrivals chunk by chunk, keeping live
+//! engine state proportional to in-flight work — that is what lets E15
+//! replay millions of requests over 256 nodes.
+//!
 //! A [`FaultPlan`] (S21) weaves failures into the same event loop: crash
 //! effects mark a node down, drain its warm pool, and kill its in-flight
 //! requests (detected when their pipelines unwind; each killed attempt is
@@ -31,6 +42,7 @@ use crate::metrics::Histogram;
 use crate::net::transfer_step;
 use crate::policy::{IdleAction, LifecyclePolicy};
 use crate::sim::{Dist, Domain, Engine, Host, ReqId, Rng, Spawn, Step, StepKind, N_LOCKS};
+use crate::workload::tenants::TenantTrace;
 
 use super::faults::FaultPlan;
 use super::node::NodeState;
@@ -44,7 +56,7 @@ const TAG_CRASH: u32 = 4;
 const TAG_RESTART: u32 = 5;
 
 /// High bit of the request class marks control requests (pre-warm boots,
-/// crash/restart events) rather than user invocations.
+/// crash/restart events, arrival feeders) rather than user invocations.
 const CONTROL_BIT: u32 = 1 << 31;
 
 /// Bits 24..=30 of a user request's class carry its retry attempt number;
@@ -52,6 +64,15 @@ const CONTROL_BIT: u32 = 1 << 31;
 /// put the node id in the low bits instead.
 const ATTEMPT_SHIFT: u32 = 24;
 const FUNC_MASK: u32 = (1 << ATTEMPT_SHIFT) - 1;
+
+/// Class of the arrival-feeder control request for streamed tenant loads
+/// (all function bits set — user function ids are strictly below
+/// `FUNC_MASK`, and crash/restart controls carry node ids, far smaller).
+const FEED_CLASS: u32 = CONTROL_BIT | FUNC_MASK;
+
+/// Arrivals injected per feeder firing: bounds live engine state to the
+/// chunk plus whatever is actually in flight, instead of the whole trace.
+const STREAM_CHUNK: usize = 4096;
 
 fn attempt_of(class: u32) -> u32 {
     (class & !CONTROL_BIT) >> ATTEMPT_SHIFT
@@ -120,6 +141,12 @@ pub struct PlatformSim<'a> {
     /// Head-of-request steps, re-spawned for client retries of killed
     /// attempts (whatever the load shape).
     head: Vec<Step>,
+    // --- streamed open-loop arrivals (E15-scale traces) ---
+    /// The trace a feeder control request injects chunk by chunk
+    /// (borrowed from the config — a multi-million-entry trace is never
+    /// copied into the domain), plus the cursor of the next arrival.
+    stream: Option<&'a TenantTrace>,
+    stream_next: usize,
     // --- closed-loop chaining ---
     template: Vec<Step>,
     remaining: u64,
@@ -261,11 +288,19 @@ impl Domain for PlatformSim<'_> {
                 let name = &self.func_names[func as usize];
                 match self.policy.on_idle(func, now) {
                     IdleAction::Retire => self.nodes[p.node].pool.retire(name),
-                    IdleAction::KeepFor { keep_ns } => self.nodes[p.node].pool.release_until(
-                        name,
-                        now,
-                        now.saturating_add(keep_ns),
-                    ),
+                    IdleAction::KeepFor { keep_ns } => {
+                        self.nodes[p.node].pool.release_until(
+                            name,
+                            now,
+                            now.saturating_add(keep_ns),
+                        );
+                        // A degenerate window retired the executor
+                        // instead; only a real release makes the node a
+                        // warm-routing candidate.
+                        if keep_ns > 0 {
+                            self.sched.warm_added(name, p.node);
+                        }
+                    }
                     IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
                         self.nodes[p.node].pool.retire(name);
                         self.pending_prewarms.push((func, p.node, delay_ns, keep_ns));
@@ -300,6 +335,7 @@ impl Domain for PlatformSim<'_> {
                             now,
                             now.saturating_add(boot.keep_ns),
                         );
+                        self.sched.warm_added(name, boot.node);
                     }
                 }
             }
@@ -310,6 +346,7 @@ impl Domain for PlatformSim<'_> {
                 // order-independent, so iteration order does not matter).
                 let node = func as usize;
                 self.crashes += 1;
+                self.sched.node_down(&self.nodes[node]);
                 self.nodes[node].up = false;
                 self.nodes[node].inflight = 0;
                 let drained = self.nodes[node].pool.crash(now);
@@ -336,6 +373,7 @@ impl Domain for PlatformSim<'_> {
                 }
                 n.straggle_until_ns = now.saturating_add(f.straggler_ns);
                 n.straggle_mult = f.straggler_mult;
+                self.sched.node_up(&self.nodes[node]);
             }
             other => debug_assert!(false, "unexpected effect tag {other}"),
         }
@@ -354,6 +392,32 @@ impl Domain for PlatformSim<'_> {
                 class: func | CONTROL_BIT,
                 steps: vec![Step::effect("prewarm-boot", TAG_PREWARM)],
             });
+        }
+        if class == FEED_CLASS {
+            // Arrival feeder (streamed tenant loads): spawn the next
+            // chunk of open-loop arrivals, then re-arm at the last
+            // arrival just injected so the chunk after it is in the heap
+            // before virtual time reaches it.  Live engine state stays
+            // O(chunk + in-flight) instead of O(trace).
+            let trace = self.stream.expect("feeder requires a streamed load");
+            let start = self.stream_next;
+            let end = (start + STREAM_CHUNK).min(trace.arrivals.len());
+            for &(at, func) in &trace.arrivals[start..end] {
+                spawns.push(Spawn {
+                    delay_ns: at.saturating_sub(now),
+                    class: func,
+                    steps: self.head.clone(),
+                });
+            }
+            if end > start && end < trace.arrivals.len() {
+                spawns.push(Spawn {
+                    delay_ns: trace.arrivals[end - 1].0.saturating_sub(now),
+                    class: FEED_CLASS,
+                    steps: Vec::new(),
+                });
+            }
+            self.stream_next = end;
+            return spawns;
         }
         if class & CONTROL_BIT == 0 {
             let attempt = attempt_of(class);
@@ -445,6 +509,9 @@ pub struct PlatformResult {
     /// User requests served (excludes pre-warm control requests).
     pub requests: u64,
     pub elapsed_ns: u64,
+    /// Engine events processed over the whole run — divide by wall time
+    /// for the simulator-throughput metric E15 reports.
+    pub events: u64,
     /// All-request latency histogram (per-node histograms merged).
     pub hist: Histogram,
     pub cold_hist: Histogram,
@@ -622,6 +689,8 @@ pub fn run_platform(
         images,
         faults: cfg.faults.clone(),
         head: Vec::new(),
+        stream: None,
+        stream_next: 0,
         template: Vec::new(),
         remaining: 0,
         gap_ns: 0,
@@ -666,13 +735,13 @@ pub fn run_platform(
             cfg.mem_bytes_per_slot,
         );
         node.cpu_pool = e.add_pool(cfg.cores_per_node);
-        let mut locks = [0u8; N_LOCKS];
+        let mut locks = [0u16; N_LOCKS];
         for (class, slot) in locks.iter_mut().enumerate() {
             // No startup pipeline holds the metadata-DB lock (it lives on
             // the non-retargeted agent path); sharing its slot with the
-            // engine-serialization pool keeps 32 nodes x 7 pools inside
-            // the engine's u8 pool-id space while staying serializing if
-            // a future pipeline ever does hold it.
+            // engine-serialization pool keeps the per-node pool count at
+            // 7 while staying serializing if a future pipeline ever does
+            // hold it.
             if class == crate::sim::LockClass::Db as usize {
                 continue;
             }
@@ -700,6 +769,10 @@ pub fn run_platform(
             }
         }
     }
+    // Seeding is done: build the scheduler's load/replica/warm indexes.
+    // Everything after this point keeps them current through the
+    // claim/complete/warm_added/node_down/node_up notifications.
+    e.domain.sched.attach(&e.domain.nodes);
 
     let head = head_steps(cfg);
     e.domain.head = head.clone();
@@ -732,6 +805,7 @@ pub fn run_platform(
                     0,
                     cfg.warmup_keep_ns,
                 );
+                e.domain.sched.warm_added(&name, 0);
             }
             e.domain.template = head.clone();
             e.domain.remaining = total - *parallelism as u64;
@@ -753,6 +827,11 @@ pub fn run_platform(
             }
             e.run((tt.len() as u64).saturating_mul(192).max(1 << 20));
         }
+        PlatformLoad::TenantsStreamed(tt) => {
+            e.domain.stream = Some(tt);
+            e.spawn_at(0, FEED_CLASS, Vec::new());
+            e.run((tt.len() as u64).saturating_mul(192).max(1 << 20));
+        }
         PlatformLoad::Burst { requests, burst_ms } => {
             let mut arrivals = Rng::new(cfg.seed ^ 0xA5A5);
             for _ in 0..*requests {
@@ -764,6 +843,7 @@ pub fn run_platform(
     }
 
     let now = e.now();
+    let events = e.events_processed();
     let d = &mut e.domain;
     let mut hist = Histogram::new();
     let mut node_hists = Vec::with_capacity(d.nodes.len());
@@ -786,6 +866,7 @@ pub fn run_platform(
     PlatformResult {
         requests: hist.len(),
         elapsed_ns: now,
+        events,
         hist,
         cold_hist: d.cold_hist.clone(),
         warm_hist: d.warm_hist.clone(),
@@ -974,6 +1055,36 @@ mod tests {
             (r.hist.quantile_ms(0.99), r.served, r.killed, r.retries, r.warm_slots_lost)
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn streamed_tenant_load_conserves_and_is_deterministic() {
+        let run = || {
+            let (mut cfg, trace) = tenant_cfg(DriverKind::DockerWarm, 4);
+            cfg.load = PlatformLoad::TenantsStreamed(trace.clone());
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            assert_eq!(r.requests, trace.len() as u64, "every streamed arrival served");
+            assert_eq!(r.cold_starts + r.warm_hits, r.requests);
+            assert!(r.warm_hits > 0);
+            (r.hist.quantile_ms(0.99), r.idle_gb_seconds, r.cold_starts, r.elapsed_ns)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn streamed_and_bulk_loads_agree_on_aggregates() {
+        // Streaming changes only *when* arrivals enter the engine heap,
+        // never which arrivals exist: request counts and pool accounting
+        // identities match the up-front spawn exactly.
+        let (cfg_bulk, trace) = tenant_cfg(DriverKind::IncludeOsCold, 2);
+        let bulk = run_platform(&cfg_bulk, &mut ColdOnlyPolicy, Host::default());
+        let (mut cfg_stream, _) = tenant_cfg(DriverKind::IncludeOsCold, 2);
+        cfg_stream.load = PlatformLoad::TenantsStreamed(trace.clone());
+        let stream = run_platform(&cfg_stream, &mut ColdOnlyPolicy, Host::default());
+        assert_eq!(stream.requests, bulk.requests);
+        assert_eq!(stream.cold_starts, bulk.cold_starts);
+        assert_eq!(stream.retirements, bulk.retirements);
+        assert_eq!(stream.idle_gb_seconds, 0.0);
     }
 
     #[test]

@@ -52,7 +52,9 @@ pub enum StepKind {
     Disk(u64),
     /// Occupy one slot of a bounded worker pool (see [`Engine::add_pool`])
     /// for the sampled duration — e.g. the gateway's worker threads.
-    Pool(u8),
+    /// Ids are `u16`: a 256-node platform takes 7 pools per node, which
+    /// overflowed the old `u8` id space at 37 nodes.
+    Pool(u16),
     /// Zero-time synchronous callback into the domain.
     Effect(u32),
     /// Zero-time callback; the returned steps replace this one.
@@ -81,7 +83,7 @@ impl Step {
     pub const fn disk(tag: &'static str, bytes: u64) -> Step {
         Step { kind: StepKind::Disk(bytes), dur: Dist::Const(0.0), tag }
     }
-    pub const fn pool(tag: &'static str, pool: u8, dur: Dist) -> Step {
+    pub const fn pool(tag: &'static str, pool: u16, dur: Dist) -> Step {
         Step { kind: StepKind::Pool(pool), dur, tag }
     }
     pub const fn effect(tag: &'static str, id: u32) -> Step {
@@ -236,10 +238,10 @@ impl<D: Domain> Engine<D> {
     }
 
     /// Register a bounded worker pool; returns the id for [`Step::pool`].
-    pub fn add_pool(&mut self, slots: u32) -> u8 {
-        assert!(self.pools.len() < u8::MAX as usize);
+    pub fn add_pool(&mut self, slots: u32) -> u16 {
+        assert!(self.pools.len() < u16::MAX as usize);
         self.pools.push(PoolState { free: slots, queue: VecDeque::new() });
-        (self.pools.len() - 1) as u8
+        (self.pools.len() - 1) as u16
     }
 
     fn push(&mut self, t: u64, ev: Ev) {

@@ -34,6 +34,7 @@ fn help_lists_subcommands() {
         "policies",
         "fleet",
         "chaos",
+        "planet",
         "serve",
         "invoke",
         "verify",
@@ -111,9 +112,59 @@ fn fleet_rejects_bad_node_counts() {
     let (code, _, stderr) = run(&["fleet", "--nodes", "0"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("--nodes"));
-    let (code, _, stderr) = run(&["fleet", "--nodes", "33"]);
+    let (code, _, stderr) = run(&["fleet", "--nodes", "1025"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("--nodes"));
+}
+
+#[test]
+fn malformed_numeric_flags_are_hard_errors() {
+    // The old getters fell back to defaults on parse failure, so a typo
+    // like `--requests 10k` silently ran the paper-default load.
+    for argv in [
+        &["experiment", "fig3", "--requests", "10k"][..],
+        &["experiment", "fig3", "--seed", "0xNOPE"][..],
+        &["experiment", "fig3", "--parallelism", "1,x,3"][..],
+        &["policies", "--rps", "fast"][..],
+        &["fleet", "--nodes", "many"][..],
+        &["chaos", "--duration", "1m"][..],
+        &["planet", "--functions", "10_000"][..],
+        &["measure-exec", "--iters", "ten"][..],
+    ] {
+        let (code, _, stderr) = run(argv);
+        assert_eq!(code, 2, "{argv:?} must be rejected: {stderr}");
+        assert!(stderr.contains("not a valid"), "{argv:?}: {stderr}");
+    }
+}
+
+#[test]
+fn out_of_range_cores_is_an_error_not_a_zero_core_cluster() {
+    // u32::try_from(...).unwrap_or(0) used to turn this into --cores 0.
+    let (code, _, stderr) = run(&["fleet", "--cores", "5000000000"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("out of range"), "{stderr}");
+}
+
+#[test]
+fn planet_quick_passes_and_reports_throughput() {
+    let path = std::env::temp_dir().join(format!("coldfaas_planet_{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    // A deliberately small trace: CI's release smoke runs the full
+    // --quick load; this test only checks the report plumbing.
+    let (code, stdout, stderr) = run(&[
+        "planet", "--rps", "400", "--duration", "30", "--functions", "2000", "--json",
+        path_s.as_str(),
+    ]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("ALL CHECKS PASS"), "{stdout}");
+    assert!(stdout.contains("E15"));
+    assert!(stdout.contains("includeos+cold-only"));
+    assert!(stdout.contains("Mevents/s"));
+    let doc = std::fs::read_to_string(&path).expect("json file written");
+    let _ = std::fs::remove_file(&path);
+    assert!(doc.starts_with("{\"generator\":\"coldfaas\""), "{doc}");
+    assert!(doc.contains("\"id\":\"planet\""));
+    assert!(doc.contains("\"all_pass\":true"));
 }
 
 #[test]
@@ -140,7 +191,7 @@ fn chaos_rejects_bad_node_counts() {
     let (code, _, stderr) = run(&["chaos", "--nodes", "1"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("--nodes"));
-    let (code, _, stderr) = run(&["chaos", "--nodes", "33"]);
+    let (code, _, stderr) = run(&["chaos", "--nodes", "1025"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("--nodes"));
 }

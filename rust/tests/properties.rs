@@ -457,14 +457,15 @@ fn prop_warm_pool_never_yields_slot_on_crashed_node() {
             )
         },
         |&(n_nodes, slots, pick)| {
-            let sched = Scheduler::new(SchedPolicy::LeastLoaded);
             let mut nodes: Vec<NodeState> = (0..n_nodes)
                 .map(|id| NodeState::new(id, 4, 32, 30 * S, 1 << 20))
                 .collect();
             for n in nodes.iter_mut() {
                 n.pool.prewarm_until("f0", slots, 0, 100 * S);
             }
+            let mut sched = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &nodes);
             let down = (pick % n_nodes as u64) as usize;
+            sched.node_down(&nodes[down]);
             nodes[down].up = false;
             let drained = nodes[down].pool.crash(S);
             let routed_ok = (0..2 * n_nodes).all(|_| {
@@ -478,6 +479,170 @@ fn prop_warm_pool_never_yields_slot_on_crashed_node() {
             drained == slots
                 && nodes[down].pool.warm_available("f0", 2 * S) == 0
                 && routed_ok
+        },
+    );
+}
+
+/// The scheduler's warm/load/replica indexes must pick the *identical*
+/// node the pre-index linear scans picked, op for op, under random
+/// prewarm/claim/complete/crash/restart histories for every policy.
+/// (`route_warm_scan`/`place_cold_scan` are the original O(nodes)
+/// implementations, kept as the behavioural reference.)
+#[test]
+fn prop_indexed_scheduler_matches_linear_scan() {
+    const S: u64 = 1_000_000_000;
+    forall(
+        0x1DE7_5CA9,
+        40,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 10) as usize,  // nodes
+                gen::u64_in(rng, 0, 3) as usize,   // scheduler policy
+                gen::u64_in(rng, 40, 120),         // ops
+                rng.next_u64(),                    // seed
+            )
+        },
+        |&(n_nodes, policy_idx, ops, seed)| {
+            let img =
+                coldfaas::image::Image::for_function("f0", coldfaas::virt::Tech::IncludeOsHvt);
+            let mut nodes: Vec<NodeState> = (0..n_nodes)
+                .map(|id| NodeState::new(id, 4, 8, 30 * S, 1 << 20))
+                .collect();
+            let _ = nodes[0].cache.fetch(&img);
+            let mut sched = Scheduler::for_nodes(SchedPolicy::ALL[policy_idx], &nodes);
+            let mut rng = coldfaas::sim::Rng::new(seed);
+            let mut claimed: Vec<usize> = Vec::new();
+            let mut now = 0u64;
+            for _ in 0..ops {
+                match rng.below(10) {
+                    // Release a warm slot somewhere (random deadline).
+                    0 | 1 => {
+                        let id = rng.below(n_nodes as u64) as usize;
+                        let keep = (1 + rng.below(40)) * S;
+                        nodes[id].pool.prewarm_until("f0", 1, now, now + keep);
+                        sched.warm_added("f0", id);
+                    }
+                    // Warm-route: indexed pick must equal the scan pick.
+                    2 | 3 | 4 => {
+                        let want = Scheduler::route_warm_scan(&mut nodes, "f0", now);
+                        let got = sched.route_warm(&mut nodes, "f0", now);
+                        if got != want {
+                            return false;
+                        }
+                        if let Some(id) = got {
+                            claimed.push(id);
+                        }
+                    }
+                    // Cold-place: same comparison (clone the RNG so the
+                    // reference consumes the same draw).
+                    5 | 6 | 7 => {
+                        let want = Scheduler::place_cold_scan(
+                            sched.policy,
+                            &nodes,
+                            &img,
+                            &mut rng.clone(),
+                        );
+                        let got = sched.place_cold(&mut nodes, &img, &mut rng);
+                        if got.map(|p| p.node) != want {
+                            return false;
+                        }
+                        if let Some(p) = got {
+                            claimed.push(p.node);
+                        }
+                    }
+                    // Finish an in-flight executor.
+                    8 => {
+                        if !claimed.is_empty() {
+                            let i = rng.below(claimed.len() as u64) as usize;
+                            let id = claimed.swap_remove(i);
+                            if nodes[id].up {
+                                sched.complete(&mut nodes, id);
+                            }
+                        }
+                    }
+                    // Crash or restart a random node.
+                    _ => {
+                        let id = rng.below(n_nodes as u64) as usize;
+                        if nodes[id].up {
+                            sched.node_down(&nodes[id]);
+                            nodes[id].up = false;
+                            nodes[id].inflight = 0;
+                            nodes[id].pool.crash(now);
+                            claimed.retain(|&c| c != id);
+                        } else {
+                            nodes[id].up = true;
+                            sched.node_up(&nodes[id]);
+                        }
+                    }
+                }
+                now += rng.below(5 * S) + 1;
+            }
+            true
+        },
+    );
+}
+
+/// End-to-end index parity under random traces and fault plans: debug
+/// builds re-run the pre-index linear scans inside `route_warm`/
+/// `place_cold` on every single dispatch and assert the identical pick,
+/// so replaying random multi-tenant traces through random chaos plans
+/// across every scheduler exercises the equivalence millions of times —
+/// any divergence panics the run.  Release builds still verify the
+/// observable outcome (full service, conservation).
+#[test]
+fn prop_indexed_routing_matches_scan_under_random_traces_and_faults() {
+    const S: u64 = 1_000_000_000;
+    forall(
+        0x5CA0_F417,
+        6,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 8) as usize,  // nodes
+                gen::u64_in(rng, 0, 3) as usize,  // scheduler
+                gen::u64_in(rng, 0, 1),           // policy pick
+                rng.next_u64(),                   // seed
+            )
+        },
+        |&(nodes, sched, policy_pick, seed)| {
+            let trace = TenantTrace::generate(&TenantConfig {
+                functions: 60,
+                duration_s: 25.0,
+                total_rps: 40.0,
+                seed,
+                ..Default::default()
+            });
+            let plan = FaultPlan::generate(&FaultConfig {
+                nodes,
+                horizon_ns: 25 * S,
+                mttf_ns: 12 * S,
+                mttr_ns: 4 * S,
+                flush_cache: true,
+                straggler_mult: 2.0,
+                straggler_ns: 3 * S,
+                max_retries: 3,
+                retry_backoff_ns: 100_000_000,
+                spike_window_ns: 5 * S,
+                seed: seed ^ 0x1DE7,
+            });
+            let driver = if policy_pick == 0 {
+                DriverKind::IncludeOsCold
+            } else {
+                DriverKind::DockerWarm
+            };
+            let cfg = PlatformConfig {
+                load: PlatformLoad::Tenants(trace.clone()),
+                functions: 60,
+                nodes,
+                scheduler: SchedPolicy::ALL[sched],
+                faults: plan,
+                ..PlatformConfig::single_node(DriverProfile::from_kind(driver), 8)
+            };
+            let mut cold = ColdOnlyPolicy;
+            let mut keep = FixedKeepAlive::default();
+            let policy: &mut dyn LifecyclePolicy =
+                if policy_pick == 0 { &mut cold } else { &mut keep };
+            let r = run_platform(&cfg, policy, Host::default());
+            r.injected == trace.len() as u64 && r.injected == r.served + r.rejected
         },
     );
 }
