@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet chaos planet
+.PHONY: build test artifacts experiments policies fleet chaos planet sharing baselines
 
 build:
 	cd rust && cargo build --release
@@ -28,3 +28,14 @@ chaos: build
 
 planet: build
 	./rust/target/release/coldfaas planet --quick
+
+sharing: build
+	./rust/target/release/coldfaas sharing --quick
+
+# Regenerate the CI bench-regression baselines (rust/baselines/) and
+# commit the result; the DES is deterministic per seed, so these are
+# machine-independent except for the informational wall-clock fields.
+baselines: build
+	./rust/target/release/coldfaas experiment all --quick --json rust/baselines/BENCH_quick.json
+	./rust/target/release/coldfaas chaos --quick --json rust/baselines/BENCH_chaos_quick.json
+	./rust/target/release/coldfaas planet --quick --json rust/baselines/BENCH_planet_quick.json

@@ -1,0 +1,21 @@
+//! Bench E16: universal-worker sharing sweep — the E13 fleet against
+//! runtime-keyed shared warm pools (UniversalPool) across sharing mode x
+//! specialization cost, plus the break-even readout vs cold-only
+//! IncludeOS.
+//!
+//!     cargo bench --bench e16_sharing
+
+use coldfaas::experiments::{sharing, ExpConfig};
+
+fn main() {
+    println!("== bench e16_sharing: universal workers vs cold-only ==\n");
+    let t0 = std::time::Instant::now();
+    let report = sharing(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE16 regeneration (8 exclusive + 8 universal cells x ~20k multi-tenant \
+         invocations, 8 nodes): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e16 regressions: {:#?}", report.failures());
+}

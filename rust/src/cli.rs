@@ -96,6 +96,24 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Strict comma-separated f64 list: any malformed or non-finite
+    /// element rejects the whole option.
+    pub fn try_get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    let t = t.trim();
+                    match t.parse::<f64>() {
+                        Ok(x) if x.is_finite() => Ok(x),
+                        _ => Err(format!("--{key} '{t}': not a valid finite number")),
+                    }
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +191,14 @@ mod tests {
         assert_eq!(a.try_get_u32_list("parallelism", &[2]), Ok(vec![1, 5, 10]));
         assert_eq!(a.try_get_u32_list("missing", &[2]), Ok(vec![2]));
         assert!(a.try_get_u32_list("broken", &[2]).is_err());
+    }
+
+    #[test]
+    fn strict_f64_list_rejects_bad_and_non_finite_elements() {
+        let a = parse(&["x", "--spec-costs", "0.5, 4,64", "--broken", "1,NaN", "--bad", "1,x"]);
+        assert_eq!(a.try_get_f64_list("spec-costs", &[2.0]), Ok(vec![0.5, 4.0, 64.0]));
+        assert_eq!(a.try_get_f64_list("missing", &[2.0]), Ok(vec![2.0]));
+        assert!(a.try_get_f64_list("broken", &[2.0]).is_err(), "non-finite must be rejected");
+        assert!(a.try_get_f64_list("bad", &[2.0]).is_err());
     }
 }

@@ -12,7 +12,7 @@ use crate::fnplat::{DriverKind, DEFAULT_EXEC_MS};
 use crate::platform::presets::INCLUDEOS_PAUSED_BYTES;
 use crate::platform::{
     run_platform, DriverProfile, FaultPlan, ImageSeeding, PlatformConfig, PlatformLoad,
-    RequestPath, SchedPolicy,
+    RequestPath, SchedPolicy, SharingMode,
 };
 use crate::report::Report;
 use crate::sim::Host;
@@ -133,6 +133,8 @@ pub(crate) fn cell_config(
             db: crate::fnplat::DbBackend::Postgres,
         },
         load: PlatformLoad::Tenants(trace.clone()),
+        sharing: SharingMode::Exclusive,
+        universal_prewarm: 0,
         warmup_keep_ns: 30 * 1_000_000_000,
         // Hot path stays O(1) memory per series: quantiles come from the
         // streaming per-node histograms, not raw sample vectors.

@@ -1,8 +1,8 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E15).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E16).
 //!
-//! The grid experiments (E12–E15) run their cells through the shared
+//! The grid experiments (E12–E16) run their cells through the shared
 //! [`sweep`] runner: cells are self-contained, so they execute on worker
 //! threads and collect in cell order — reports stay byte-identical to
 //! serial execution.
@@ -17,6 +17,7 @@ pub mod images;
 pub mod planet;
 pub mod policies;
 pub mod scaleout;
+pub mod sharing;
 pub mod startup;
 pub mod sweep;
 pub mod waste;
@@ -31,6 +32,7 @@ pub use images::images;
 pub use planet::planet;
 pub use policies::policies;
 pub use scaleout::scaleout;
+pub use sharing::sharing;
 pub use startup::{fig1, fig2, fig3};
 pub use waste::waste;
 
@@ -91,18 +93,20 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "fleet" => fleet(cfg),
         "chaos" => chaos(cfg),
         "planet" => planet(cfg),
+        "sharing" => sharing(cfg),
         _ => return None,
     })
 }
 
-/// Experiments `experiment all` sweeps.  E15 `planet` is deliberately
-/// absent: it is by far the heaviest grid and has its own subcommand and
-/// CI smoke step (`coldfaas planet`), so including it here would run it
-/// twice per CI pass for no added coverage — `by_name` still accepts
-/// `"planet"` for explicit `experiment planet` runs.
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+/// Experiments `experiment all` sweeps — E16 `sharing` included (its
+/// quick grid is fleet-sized).  E15 `planet` is deliberately absent: it
+/// is by far the heaviest grid and has its own subcommand and CI smoke
+/// step (`coldfaas planet`), so including it here would run it twice per
+/// CI pass for no added coverage — `by_name` still accepts `"planet"`
+/// for explicit `experiment planet` runs.
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
-    "distance", "scaleout", "policies", "fleet", "chaos",
+    "distance", "scaleout", "policies", "fleet", "chaos", "sharing",
 ];
 
 use crate::sim::Host;

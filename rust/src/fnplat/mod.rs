@@ -21,7 +21,7 @@ pub mod sim {
     pub use crate::platform::presets::{run_scenario, Load, Scenario, ScenarioResult};
 }
 
-pub use pool::{ColdOnly, Dispatch, WarmPool};
+pub use pool::{ColdOnly, Dispatch, WarmPool, NO_OWNER};
 pub use sim::{run_scenario, Scenario, ScenarioResult};
 
 use crate::sim::{Dist, LockClass, Step};
@@ -115,6 +115,28 @@ impl DriverKind {
         }
     }
 
+    /// Specialization pipeline (S23): claim a runtime-warm *universal*
+    /// executor that lacks this function's state and install it — the
+    /// function-level tail of the cold pipeline, without the engine/
+    /// sandbox boot the warm claim already skipped.  Runs after the warm
+    /// steps, before execution; a new latency component strictly between
+    /// warm and cold.
+    pub fn specialize_steps(&self) -> Vec<Step> {
+        match self {
+            // Spawn the function process inside the already-running
+            // container and redo the FDK handshake (same phases as the
+            // cold pipeline's tail).
+            DriverKind::DockerWarm => vec![
+                Step::cpu("exec-init", Dist::ms(28.0, 0.12)),
+                Step::cpu("fdk-boot", Dist::ms(12.0, 0.12)),
+            ],
+            // The shipped unikernel exits on completion, so sharing is a
+            // lab what-if (like the E12 paused-unikernel rows): claiming
+            // a hypothetically paused image re-attaches stdio.
+            DriverKind::IncludeOsCold => vec![Step::cpu("stdio-attach", Dist::ms(0.8, 0.2))],
+        }
+    }
+
     pub fn nominal_cold_ms(&self) -> f64 {
         self.cold_start_steps().iter().map(|s| s.dur.median_ns() / 1e6).sum()
     }
@@ -190,6 +212,19 @@ mod tests {
     fn includeos_has_no_warm_path() {
         assert!(DriverKind::IncludeOsCold.warm_invoke_steps().is_empty());
         assert!(!DriverKind::DockerWarm.warm_invoke_steps().is_empty());
+    }
+
+    #[test]
+    fn specialization_cost_sits_between_warm_and_cold() {
+        let sum_ms =
+            |steps: Vec<Step>| -> f64 { steps.iter().map(|s| s.dur.median_ns() / 1e6).sum() };
+        for d in [DriverKind::DockerWarm, DriverKind::IncludeOsCold] {
+            let warm = sum_ms(d.warm_invoke_steps());
+            let spec = sum_ms(d.specialize_steps());
+            let cold = d.nominal_cold_ms();
+            assert!(spec > 0.0, "{d:?} must price specialization");
+            assert!(warm + spec < cold, "{d:?}: warm {warm} + spec {spec} !< cold {cold}");
+        }
     }
 
     #[test]

@@ -2,10 +2,21 @@
 //! cold-only platform can delete (§I, §IV).
 //!
 //! Pure logic (no simulator dependency): used by both the DES experiments
-//! and the live coordinator.  Tracks, per function, the idle warm
+//! and the live coordinator.  Tracks, per **sharing key**, the idle warm
 //! executors, their idle-timeout expiry, and the headline waste metric —
 //! **idle memory-seconds** — plus the monitoring-event count that stands
 //! for the per-function load-tracking complexity of warm platforms.
+//!
+//! A sharing key (S23) is the string slots are pooled and claimed under.
+//! The classic per-function pool uses the function name itself — that is
+//! what every legacy wrapper ([`WarmPool::dispatch`],
+//! [`WarmPool::release_until`], …) does — while the universal-worker
+//! modes pool slots under a runtime key any compatible function may
+//! claim.  Each slot remembers the *owner* function that released it:
+//! claiming a slot whose owner matches is a plain warm hit, claiming one
+//! released by a different function is a [`Dispatch::Specialized`] claim
+//! (runtime warm, function state cold — the caller pays the driver's
+//! specialization pipeline).  A claim never crosses sharing keys.
 //!
 //! Slots are kept in two orders at once: a LIFO claim order (dispatch
 //! takes the most recently idled executor, matching Fn) and a
@@ -21,6 +32,13 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+/// Owner tag for slots that belong to no particular function: everything
+/// released through the legacy per-function wrappers (whose bucket *is*
+/// the function, so every claim matches trivially) and runtime-level
+/// universal pre-warms (no function state installed yet — any keyed
+/// claim of such a slot is a specialization).
+pub const NO_OWNER: u32 = u32::MAX;
+
 #[derive(Clone, Copy, Debug)]
 struct WarmSlot {
     idle_since_ns: u64,
@@ -28,6 +46,9 @@ struct WarmSlot {
     /// `idle_since + idle_timeout`; lifecycle policies ([`crate::policy`])
     /// pick a per-release deadline instead.
     expires_at_ns: u64,
+    /// Function whose state the idle executor holds ([`NO_OWNER`] when
+    /// none): decides warm-vs-specialized at claim time.
+    owner: u32,
 }
 
 /// Idle slots of one function: live slots by serial, claim order (LIFO,
@@ -55,8 +76,14 @@ impl FuncSlots {
 /// Outcome of a dispatch attempt.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dispatch {
-    /// A warm executor was claimed (unpause + reuse path).
+    /// A warm executor holding this function's state was claimed
+    /// (unpause + reuse path).
     Warm,
+    /// A runtime-compatible warm executor was claimed, but it belongs to
+    /// a different function (or to none): the runtime is warm, the
+    /// function state is cold — the caller pays the specialization
+    /// pipeline, between warm and cold (S23).
+    Specialized,
     /// No warm executor: a cold start is required.
     Cold,
 }
@@ -69,15 +96,21 @@ pub struct WarmPool {
     pub mem_bytes_per_slot: u64,
     /// Liveness-poll period for idle executors (monitoring complexity).
     pub poll_period_ns: u64,
+    /// Idle slots per sharing key (the function name in the classic
+    /// exclusive pool).
     idle: HashMap<String, FuncSlots>,
-    /// Monotone slot id: release order, shared across functions.
+    /// Monotone slot id: release order, shared across keys.
     next_serial: u64,
-    /// Total executors alive (idle + busy) per function.
+    /// Total executors alive (idle + busy) per sharing key.
     alive: HashMap<String, u64>,
     // --- accounting ---
     pub idle_mem_byte_ns: u128,
     pub monitor_events: u64,
     pub warm_hits: u64,
+    /// Claims of a runtime-warm slot owned by a different function
+    /// (universal-worker sharing): `warm_hits + specializations +
+    /// cold_starts` equals the number of dispatches.
+    pub specializations: u64,
     pub cold_starts: u64,
     pub expirations: u64,
     /// Executors torn down immediately after serving (cold-only policies).
@@ -98,6 +131,7 @@ impl WarmPool {
             idle_mem_byte_ns: 0,
             monitor_events: 0,
             warm_hits: 0,
+            specializations: 0,
             cold_starts: 0,
             expirations: 0,
             retirements: 0,
@@ -145,29 +179,81 @@ impl WarmPool {
         }
     }
 
-    /// Try to claim a warm executor for `func` at `now`.
+    /// Try to claim a warm executor for `func` at `now` (the classic
+    /// exclusive pool: the sharing key *is* the function, so a claim is
+    /// always a plain warm hit).
     pub fn dispatch(&mut self, func: &str, now: u64) -> Dispatch {
-        self.expire(func, now);
+        self.dispatch_shared(func, NO_OWNER, now)
+    }
+
+    /// Try to claim a warm executor from the `key` bucket on behalf of
+    /// function `owner` at `now`.  A claim whose slot owner matches is a
+    /// warm hit; a mismatch is a [`Dispatch::Specialized`] claim (the
+    /// runtime is warm, the function state is not).  The bucket is
+    /// searched **owner-first**: a slot already holding this function's
+    /// state is claimed (newest first) before any foreign slot — a real
+    /// universal-worker runtime never pays specialization while a free
+    /// matching worker idles — and only then does the newest foreign
+    /// slot get claimed and specialized.  Claims never cross sharing
+    /// keys: an empty bucket is a cold start no matter how warm the
+    /// other buckets are.
+    pub fn dispatch_shared(&mut self, key: &str, owner: u32, now: u64) -> Dispatch {
+        self.expire(key, now);
         // LIFO claim (most recently idle): matches Fn's behaviour and
         // maximizes expiry of the cold tail.  Pops stale serials as it
         // walks down.
-        let slot = self.idle.get_mut(func).and_then(|fs| {
-            while let Some(serial) = fs.lifo.pop() {
-                if let Some(s) = fs.slots.remove(&serial) {
-                    return Some(s);
+        let slot = self.idle.get_mut(key).and_then(|fs| {
+            // Drop stale tombstones off the top of the claim stack.
+            while let Some(&top) = fs.lifo.last() {
+                if fs.slots.contains_key(&top) {
+                    break;
+                }
+                fs.lifo.pop();
+            }
+            let &top = fs.lifo.last()?;
+            // In the exclusive pool every slot matches the claimant, so
+            // this is the plain LIFO pop, bit for bit.
+            if fs.slots[&top].owner == owner {
+                fs.lifo.pop();
+                return fs.slots.remove(&top);
+            }
+            let own = fs
+                .lifo
+                .iter()
+                .rev()
+                .find(|&&s| fs.slots.get(&s).is_some_and(|sl| sl.owner == owner))
+                .copied();
+            match own {
+                // Mid-stack same-owner claim: the lifo entry stays
+                // behind as a lazy tombstone (compacted like every other
+                // stale entry).
+                Some(s) => {
+                    let claimed = fs.slots.remove(&s);
+                    fs.compact();
+                    claimed
+                }
+                // No slot holds this function's state: claim the newest
+                // runtime-warm worker and pay specialization.
+                None => {
+                    fs.lifo.pop();
+                    fs.slots.remove(&top)
                 }
             }
-            None
         });
         match slot {
             Some(s) => {
                 self.account_idle(now - s.idle_since_ns);
-                self.warm_hits += 1;
-                Dispatch::Warm
+                if s.owner == owner {
+                    self.warm_hits += 1;
+                    Dispatch::Warm
+                } else {
+                    self.specializations += 1;
+                    Dispatch::Specialized
+                }
             }
             None => {
                 self.cold_starts += 1;
-                *self.alive.entry(func.to_string()).or_insert(0) += 1;
+                *self.alive.entry(key.to_string()).or_insert(0) += 1;
                 Dispatch::Cold
             }
         }
@@ -186,16 +272,25 @@ impl WarmPool {
     /// retire the executor immediately instead of enqueuing a slot that
     /// would count a spurious expiration with zero idle charge.
     pub fn release_until(&mut self, func: &str, now: u64, expires_at_ns: u64) {
+        self.release_shared_until(func, NO_OWNER, now, expires_at_ns);
+    }
+
+    /// Return function `owner`'s executor to the `key` bucket with an
+    /// explicit teardown deadline: the slot keeps `owner`'s state, so a
+    /// later same-owner claim is warm while any other claim specializes.
+    pub fn release_shared_until(&mut self, key: &str, owner: u32, now: u64, expires_at_ns: u64) {
         if expires_at_ns <= now {
-            self.retire(func);
+            self.retire(key);
             return;
         }
-        self.insert_slot(func, WarmSlot { idle_since_ns: now, expires_at_ns });
+        self.insert_slot(key, WarmSlot { idle_since_ns: now, expires_at_ns, owner });
     }
 
     /// Tear an executor down immediately after it served (the cold-only
     /// lifecycle): nothing idles, nothing is charged.  Only a real
     /// teardown counts: with no live executor there is nothing to retire.
+    /// Keyed like everything else: the exclusive pool passes the function
+    /// name, the sharing modes their runtime key.
     pub fn retire(&mut self, func: &str) {
         let alive = self.alive.get_mut(func).filter(|a| **a > 0);
         debug_assert!(alive.is_some(), "retire('{func}') without a live executor");
@@ -215,9 +310,23 @@ impl WarmPool {
     /// Pre-create `n` warm executors with an explicit teardown deadline
     /// (predictive-prewarm policies).
     pub fn prewarm_until(&mut self, func: &str, n: u64, now: u64, expires_at_ns: u64) {
-        *self.alive.entry(func.to_string()).or_insert(0) += n;
+        self.prewarm_shared_until(func, NO_OWNER, n, now, expires_at_ns);
+    }
+
+    /// Pre-create `n` warm executors in the `key` bucket holding
+    /// `owner`'s function state ([`NO_OWNER`] for runtime-level universal
+    /// workers that any function must specialize before use).
+    pub fn prewarm_shared_until(
+        &mut self,
+        key: &str,
+        owner: u32,
+        n: u64,
+        now: u64,
+        expires_at_ns: u64,
+    ) {
+        *self.alive.entry(key.to_string()).or_insert(0) += n;
         for _ in 0..n {
-            self.insert_slot(func, WarmSlot { idle_since_ns: now, expires_at_ns });
+            self.insert_slot(key, WarmSlot { idle_since_ns: now, expires_at_ns, owner });
         }
     }
 
@@ -232,9 +341,10 @@ impl WarmPool {
         self.idle_count(func)
     }
 
-    /// Functions that may still hold idle slots (a superset: keys survive
-    /// until the map entry is dropped).  Lets the platform's warm index
-    /// seed its candidate sets from a pre-populated pool.
+    /// Sharing keys (function names in the exclusive pool) that may still
+    /// hold idle slots (a superset: keys survive until the map entry is
+    /// dropped).  Lets the platform's warm index seed its candidate sets
+    /// from a pre-populated pool.
     pub fn warm_funcs(&self) -> impl Iterator<Item = &str> {
         self.idle.iter().filter(|(_, fs)| !fs.slots.is_empty()).map(|(k, _)| k.as_str())
     }
@@ -596,6 +706,93 @@ mod tests {
         assert_eq!(p.warm_hits + p.cold_starts, 2_000);
         let fs = p.idle.get("f").expect("func entry");
         assert!(fs.slots.is_empty(), "finalize drains all live slots");
+    }
+
+    #[test]
+    fn shared_claim_by_owner_is_warm_by_other_is_specialized() {
+        let mut p = pool();
+        // f7 releases into the runtime bucket; f7 reclaims warm, f9 pays
+        // a specialization, an empty bucket is cold.
+        assert_eq!(p.dispatch_shared("rt0", 7, 0), Dispatch::Cold);
+        p.release_shared_until("rt0", 7, S, 20 * S);
+        assert_eq!(p.dispatch_shared("rt0", 7, 2 * S), Dispatch::Warm);
+        p.release_shared_until("rt0", 7, 3 * S, 20 * S);
+        assert_eq!(p.dispatch_shared("rt0", 9, 4 * S), Dispatch::Specialized);
+        assert_eq!((p.warm_hits, p.specializations, p.cold_starts), (1, 1, 1));
+        // Idle time is charged on specialized claims exactly like warm ones.
+        assert_eq!(p.idle_mem_byte_ns, (2 * S) as u128 * (16 << 20) as u128);
+    }
+
+    #[test]
+    fn shared_claims_never_cross_sharing_keys() {
+        let mut p = pool();
+        p.prewarm_shared_until("rt0", NO_OWNER, 3, 0, 100 * S);
+        // rt1 is empty: every claim there is cold, however warm rt0 is.
+        assert_eq!(p.dispatch_shared("rt1", 1, S), Dispatch::Cold);
+        assert_eq!(p.idle_count("rt0"), 3);
+        assert_eq!(p.idle_count("rt1"), 0);
+        // And the rt0 workers are claimable only via rt0.
+        assert_eq!(p.dispatch_shared("rt0", 1, S), Dispatch::Specialized);
+    }
+
+    #[test]
+    fn shared_claim_prefers_own_slot_over_newer_foreign_one() {
+        let mut p = pool();
+        p.dispatch_shared("rt0", 4, 0); // cold
+        p.dispatch_shared("rt0", 8, 0); // cold
+        p.release_shared_until("rt0", 4, S, 50 * S); // older slot: f4's state
+        p.release_shared_until("rt0", 8, 2 * S, 50 * S); // newest: f8's state
+        // f4 claims its own (older) slot instead of specializing on f8's.
+        assert_eq!(p.dispatch_shared("rt0", 4, 3 * S), Dispatch::Warm);
+        // The claimed slot idled 1 s..3 s: 2 s charged.
+        assert_eq!(p.idle_mem_byte_ns, (2 * S) as u128 * (16 << 20) as u128);
+        // f8's newer slot survived for f8's own warm hit.
+        assert_eq!(p.dispatch_shared("rt0", 8, 4 * S), Dispatch::Warm);
+        assert_eq!((p.warm_hits, p.specializations, p.cold_starts), (2, 0, 2));
+    }
+
+    #[test]
+    fn universal_prewarm_claims_are_specializations() {
+        let mut p = pool();
+        p.prewarm_shared_until("rt0", NO_OWNER, 1, 0, 50 * S);
+        // A universal worker has no function state: first claim pays.
+        assert_eq!(p.dispatch_shared("rt0", 3, S), Dispatch::Specialized);
+        // Once f3 releases it back, f3's next claim is a plain warm hit.
+        p.release_shared_until("rt0", 3, 2 * S, 50 * S);
+        assert_eq!(p.dispatch_shared("rt0", 3, 3 * S), Dispatch::Warm);
+        assert_eq!((p.warm_hits, p.specializations, p.cold_starts), (1, 1, 0));
+    }
+
+    #[test]
+    fn shared_dispatch_accounting_identity_holds() {
+        let mut p = pool();
+        let mut dispatches = 0u64;
+        let mut now = 0;
+        for i in 0..200u32 {
+            let d = p.dispatch_shared("rt0", i % 5, now);
+            dispatches += 1;
+            if d == Dispatch::Cold && i % 3 == 0 {
+                p.retire("rt0");
+            } else {
+                p.release_shared_until("rt0", i % 5, now, now + 2 * S);
+            }
+            now += S / 2;
+        }
+        assert_eq!(p.warm_hits + p.specializations + p.cold_starts, dispatches);
+    }
+
+    #[test]
+    fn legacy_wrappers_stay_exclusive_and_warm() {
+        // The per-function wrappers pool under the function name with no
+        // owner: claims always match, so nothing ever specializes — the
+        // pre-sharing pool behaviour, bit for bit.
+        let mut p = pool();
+        p.dispatch("f", 0);
+        p.release("f", S);
+        assert_eq!(p.dispatch("f", 2 * S), Dispatch::Warm);
+        p.prewarm("f", 1, 3 * S);
+        assert_eq!(p.dispatch("f", 4 * S), Dispatch::Warm);
+        assert_eq!(p.specializations, 0);
     }
 
     #[test]

@@ -107,11 +107,13 @@ impl Domain for LambdaDomain {
         debug_assert_eq!(tag, TAG_DISPATCH);
         let mut tail = Vec::new();
         match self.pool.dispatch(FUNC, now) {
-            Dispatch::Warm => tail.extend(warm_invoke_steps()),
             Dispatch::Cold => {
                 tail.extend(cold_start_steps());
                 self.cold_inflight.insert(req);
             }
+            // The single-function wrapper never specializes: any claim
+            // is a plain warm hit.
+            Dispatch::Warm | Dispatch::Specialized => tail.extend(warm_invoke_steps()),
         }
         tail.extend(exec_steps());
         tail.push(Step::effect("release", TAG_RELEASE));

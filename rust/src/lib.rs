@@ -14,7 +14,10 @@
 //!   cluster-scale fleet sweep (E13), the fault-injection chaos sweep
 //!   (E14), and the 256-node planet sweep (E15) that quantify the
 //!   cold-only thesis against the lifecycle policies real platforms run,
-//!   in failure, in calm, and at fleet scale — and
+//!   in failure, in calm, and at fleet scale — plus the universal-worker
+//!   sharing sweep (E16) that prices the strongest keep-alive
+//!   counter-proposal, runtime-keyed shared warm pools, against going
+//!   cold-only — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
 //!   [`runtime`]) — a real HTTP control plane whose executors run
 //!   AOT-compiled JAX/Pallas functions through PJRT (python never on the

@@ -6,6 +6,8 @@
 //!   fleet                   cluster-scale fleet sweep (E13): policy x scheduler x driver
 //!   chaos                   fault-injection sweep (E14): the fleet under node crashes
 //!   planet                  planet sweep (E15): 256 nodes, 10k fns, millions of requests
+//!   sharing                 universal-worker sharing sweep (E16): shared warm pools
+//!   compare                 bench-regression gate: diff two BENCH_*.json reports
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
@@ -27,6 +29,8 @@ fn main() {
         "fleet" => cmd_fleet(&args),
         "chaos" => cmd_chaos(&args),
         "planet" => cmd_planet(&args),
+        "sharing" => cmd_sharing(&args),
+        "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -115,6 +119,34 @@ USAGE: coldfaas <subcommand> [options]
       --quick               reduced trace (same 256-node cluster)
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
+
+  sharing                   universal-worker sharing sweep (E16): the E13
+                            fleet against runtime-keyed shared warm pools
+                            (UniversalPool policy) across sharing mode x
+                            specialization cost, reporting the break-even
+                            specialization cost vs cold-only IncludeOS
+      --nodes N             cluster size, 1..=1024 (default 8)
+      --cores N             cores per node (default 8)
+      --runtimes N          runtime families functions hash onto (default 4)
+      --target N            universal workers targeted per bucket (default 8)
+      --spec-costs LIST     specialization costs in ms, e.g. 1,4,16,64
+                            (default; checks assume a cheap-to-dear sweep)
+      --functions N         distinct functions (default 1000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default sized from --requests)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic seed
+      --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  compare <run.json> <baseline.json>
+                            bench-regression gate over two machine-readable
+                            reports: paper-check booleans must match exactly,
+                            latency/waste metrics within --tol, wall-clock and
+                            events/s informational only; exit 1 on drift
+      --tol F               relative tolerance for metrics (default 0.10)
+      --out FILE            also append the diff to FILE
 
   serve
       --bind ADDR           default 127.0.0.1:8080
@@ -335,6 +367,74 @@ fn cmd_planet(args: &Args) -> i32 {
     let t0 = std::time::Instant::now();
     let report = planet_with(&cfg);
     finish_report(args, "planet", report, t0.elapsed().as_secs_f64())
+}
+
+fn cmd_sharing(args: &Args) -> i32 {
+    use coldfaas::experiments::sharing::{sharing_config, sharing_with};
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = sharing_config(&base);
+        cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+        cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        cfg.runtimes = args.try_get_u32("runtimes", cfg.runtimes)?;
+        cfg.target_per_key = args.try_get_u32("target", cfg.target_per_key)?;
+        cfg.spec_costs_ms = args.try_get_f64_list("spec-costs", &cfg.spec_costs_ms)?;
+        tenant_flags(args, &mut cfg.tenant)?;
+        if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+            return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
+        }
+        if cfg.cores_per_node == 0 || cfg.runtimes == 0 || cfg.target_per_key == 0 {
+            return Err("--cores, --runtimes and --target must be positive".to_string());
+        }
+        if cfg.spec_costs_ms.is_empty() || cfg.spec_costs_ms.iter().any(|&c| c < 0.0) {
+            return Err("--spec-costs needs at least one non-negative cost".to_string());
+        }
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("sharing", &e),
+    };
+    let t0 = std::time::Instant::now();
+    let report = sharing_with(&cfg);
+    finish_report(args, "sharing", report, t0.elapsed().as_secs_f64())
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    use coldfaas::report::compare::{compare_documents, DEFAULT_TOL};
+    let (Some(run_path), Some(base_path)) = (args.positional.first(), args.positional.get(1))
+    else {
+        eprintln!("usage: coldfaas compare <run.json> <baseline.json> [--tol 0.10]");
+        return 2;
+    };
+    let tol = match args.try_get_f64("tol", DEFAULT_TOL) {
+        Ok(t) if t >= 0.0 => t,
+        Ok(t) => return usage_error("compare", &format!("--tol {t}: must be non-negative")),
+        Err(e) => return usage_error("compare", &e),
+    };
+    let read = |path: &str| {
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))
+    };
+    let docs = read(run_path).and_then(|r| read(base_path).map(|b| (r, b)));
+    let (run_doc, base_doc) = match docs {
+        Ok(d) => d,
+        Err(e) => return usage_error("compare", &e),
+    };
+    match compare_documents(&run_doc, &base_doc, tol) {
+        Ok(cmp) => {
+            let txt = format!(
+                "\n=== compare {run_path} vs {base_path} ===\n{}",
+                cmp.render(tol)
+            );
+            print!("{txt}");
+            append_out(args, &txt);
+            if cmp.ok() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => usage_error("compare", &e),
+    }
 }
 
 fn coord_config(args: &Args) -> Result<Config, String> {

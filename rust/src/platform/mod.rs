@@ -53,6 +53,11 @@ pub struct DriverProfile {
     pub cold_steps: Vec<Step>,
     /// Warm-invoke pipeline (empty for drivers with no warm path).
     pub warm_steps: Vec<Step>,
+    /// Specialization pipeline (S23): runs after the warm steps when a
+    /// claimed slot belongs to a different function — runtime warm,
+    /// function state cold.  Only consulted under a shared
+    /// [`SharingMode`]; E16 sweeps it as an explicit cost.
+    pub specialize_steps: Vec<Step>,
     /// Connection-termination style of this driver's frontend (Table I's
     /// setup column); only consulted on network request paths.
     pub frontend: Frontend,
@@ -69,6 +74,7 @@ impl DriverProfile {
             tech: kind.tech(),
             cold_steps: kind.cold_start_steps(),
             warm_steps: kind.warm_invoke_steps(),
+            specialize_steps: kind.specialize_steps(),
             frontend: match kind {
                 DriverKind::DockerWarm => Frontend::FN_DOCKER,
                 DriverKind::IncludeOsCold => Frontend::FN_INCLUDEOS,
@@ -84,7 +90,56 @@ impl DriverProfile {
             tech,
             cold_steps: tech.pipeline(),
             warm_steps: Vec::new(),
+            specialize_steps: Vec::new(),
             frontend: Frontend::FN_DOCKER,
+        }
+    }
+}
+
+/// How warm slots are keyed for claiming (S23) — the platform dimension
+/// behind "universal workers": runtime-keyed executors any compatible
+/// function may claim, amortizing keep-alive waste across tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharingMode {
+    /// One owner function per slot — the classic FaaS pool and the
+    /// default.  Byte-identical to the pre-sharing platform.
+    Exclusive,
+    /// Slots pooled per language-runtime family; function `f` belongs to
+    /// runtime `f % runtimes` (the same mapping
+    /// [`crate::policy::UniversalPool`] sizes its targets by).
+    PerRuntime { runtimes: u32 },
+    /// One global bucket: any function can claim any warm slot.
+    Promiscuous,
+}
+
+impl SharingMode {
+    pub fn name(&self) -> String {
+        match self {
+            SharingMode::Exclusive => "exclusive".to_string(),
+            SharingMode::PerRuntime { runtimes } => format!("runtime-{runtimes}"),
+            SharingMode::Promiscuous => "promiscuous".to_string(),
+        }
+    }
+
+    /// The sharing key function `func` routes, claims, and releases
+    /// under (`func_name` is the function's own name, the exclusive key).
+    pub fn key_for(&self, func: u32, func_name: &str) -> String {
+        match self {
+            SharingMode::Exclusive => func_name.to_string(),
+            SharingMode::PerRuntime { runtimes } => format!("rt{}", func % (*runtimes).max(1)),
+            SharingMode::Promiscuous => "shared".to_string(),
+        }
+    }
+
+    /// The distinct shared bucket keys this mode pools under (empty for
+    /// the exclusive mode — there is nothing to pre-seed universally).
+    pub fn shared_keys(&self, functions: u32) -> Vec<String> {
+        match self {
+            SharingMode::Exclusive => Vec::new(),
+            SharingMode::PerRuntime { runtimes } => {
+                (0..(*runtimes).max(1).min(functions.max(1))).map(|r| format!("rt{r}")).collect()
+            }
+            SharingMode::Promiscuous => vec!["shared".to_string()],
         }
     }
 }
@@ -162,6 +217,15 @@ pub struct PlatformConfig {
     pub fabric_gbps: f64,
     pub path: RequestPath,
     pub load: PlatformLoad,
+    /// How warm slots are keyed for routing and claiming (S23): the
+    /// default [`SharingMode::Exclusive`] is the classic per-function
+    /// pool; the shared modes implement runtime-keyed universal workers
+    /// whose cross-function claims pay the driver's specialization steps.
+    pub sharing: SharingMode,
+    /// Universal workers pre-seeded per shared bucket at t=0 (round-robin
+    /// over nodes, retained until `warmup_keep_ns`, owned by no function).
+    /// Ignored under the exclusive mode; 0 seeds nothing.
+    pub universal_prewarm: u32,
     /// Teardown deadline for measurement-warmup slots (and the default
     /// pool timeout horizon).
     pub warmup_keep_ns: u64,
@@ -198,6 +262,8 @@ impl PlatformConfig {
                 db: DbBackend::Postgres,
             },
             load: PlatformLoad::ClosedLoop { parallelism: 1, total: 1, prewarm: false, gap_ns: 0 },
+            sharing: SharingMode::Exclusive,
+            universal_prewarm: 0,
             warmup_keep_ns: 30 * 1_000_000_000,
             exact_latencies: false,
             faults: FaultPlan::default(),

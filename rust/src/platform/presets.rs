@@ -348,6 +348,8 @@ pub fn run_burst(cfg: &ClusterConfig) -> BurstResult {
         fabric_gbps: 40.0,
         path: RequestPath::Direct,
         load: PlatformLoad::Burst { requests: cfg.requests, burst_ms: cfg.burst_ms },
+        sharing: super::SharingMode::Exclusive,
+        universal_prewarm: 0,
         warmup_keep_ns: 30 * 1_000_000_000,
         exact_latencies: true,
         faults: super::FaultPlan::default(),

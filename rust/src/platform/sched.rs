@@ -11,12 +11,17 @@
 //! the per-request linear scans dominated the simulator, so the scheduler
 //! keeps three indexes:
 //!
-//! * `warm_nodes`: function → candidate nodes that *may* hold a live warm
-//!   slot.  Maintained as a **verified superset**: every release/pre-warm
+//! * `warm_nodes`: **sharing key** → candidate nodes that *may* hold a
+//!   live warm slot.  The key is the function name under the exclusive
+//!   pool and the runtime bucket under universal-worker sharing (S23) —
+//!   the index is agnostic: it routes whatever key dispatch and release
+//!   agree on, so shared slots are found exactly like per-function ones
+//!   and a request can never be routed to a mismatched bucket.
+//!   Maintained as a **verified superset**: every release/pre-warm
 //!   inserts, nothing is required to delete eagerly, and `route_warm`
 //!   checks each candidate against the node's pool (which is itself
 //!   deadline-indexed) and prunes the ones that come up empty.  Routing
-//!   touches only nodes that ever went warm for the function instead of
+//!   touches only nodes that ever went warm for the key instead of
 //!   scanning the whole cluster.
 //! * `by_load`: the exact `(inflight, node_id)` set of all *up* nodes —
 //!   `LeastLoaded` (and every least-loaded fallback) is an O(log N)
@@ -95,7 +100,8 @@ pub struct Scheduler {
     pub transferred_bytes: u64,
     /// Exact `(inflight, node_id)` of every up node.
     by_load: BTreeSet<(u32, usize)>,
-    /// func → nodes that may hold live warm slots (verified superset).
+    /// Sharing key (function name, or runtime bucket under S23 sharing)
+    /// → nodes that may hold live warm slots (verified superset).
     warm_nodes: HashMap<String, BTreeSet<usize>>,
     /// image → nodes that may cache it (verified superset).
     image_nodes: HashMap<String, BTreeSet<usize>>,
@@ -161,15 +167,15 @@ impl Scheduler {
         }
     }
 
-    /// `node` may now hold a live warm slot for `func` (an executor was
-    /// released into or pre-warmed in its pool).
-    pub fn warm_added(&mut self, func: &str, node: usize) {
-        match self.warm_nodes.get_mut(func) {
+    /// `node` may now hold a live warm slot under sharing key `key` (an
+    /// executor was released into or pre-warmed in its pool).
+    pub fn warm_added(&mut self, key: &str, node: usize) {
+        match self.warm_nodes.get_mut(key) {
             Some(set) => {
                 set.insert(node);
             }
             None => {
-                self.warm_nodes.insert(func.to_string(), BTreeSet::from([node]));
+                self.warm_nodes.insert(key.to_string(), BTreeSet::from([node]));
             }
         }
     }
@@ -225,26 +231,28 @@ impl Scheduler {
         }
     }
 
-    /// Route to a node holding a live warm executor for `func`, if any
-    /// (least-loaded among them, node id as tie-break).  Claims an
-    /// in-flight slot on the chosen node; every policy routes warm first —
-    /// that is the platform's router, not a placement choice.  Crashed
-    /// nodes are never candidates: their pools were drained at the crash
-    /// and a dead node cannot serve even a (buggy) leftover slot.
+    /// Route to a node holding a live warm executor under sharing key
+    /// `key` — the function name in the exclusive pool, the runtime
+    /// bucket under universal sharing — if any (least-loaded among them,
+    /// node id as tie-break).  Claims an in-flight slot on the chosen
+    /// node; every policy routes warm first — that is the platform's
+    /// router, not a placement choice.  Crashed nodes are never
+    /// candidates: their pools were drained at the crash and a dead node
+    /// cannot serve even a (buggy) leftover slot.
     ///
-    /// Only the function's candidate set is consulted; candidates whose
-    /// pool comes up empty are pruned, so the set tracks the nodes
-    /// actually warm for the function.
-    pub fn route_warm(&mut self, nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
+    /// Only the key's candidate set is consulted; candidates whose pool
+    /// comes up empty are pruned, so the set tracks the nodes actually
+    /// warm for the key.
+    pub fn route_warm(&mut self, nodes: &mut [NodeState], key: &str, now: u64) -> Option<usize> {
         #[cfg(debug_assertions)]
         let want: Option<Option<usize>> = if self.parity_check_due(nodes.len()) {
-            Some(Self::route_warm_scan(nodes, func, now))
+            Some(Self::route_warm_scan(nodes, key, now))
         } else {
             None
         };
         let mut best: Option<(u32, usize)> = None;
         let mut stale: Vec<usize> = Vec::new();
-        if let Some(set) = self.warm_nodes.get_mut(func) {
+        if let Some(set) = self.warm_nodes.get_mut(key) {
             for &id in set.iter() {
                 let n = &mut nodes[id];
                 if !n.up {
@@ -253,24 +261,24 @@ impl Scheduler {
                     // pools either, and a post-restart probe cleans up.
                     continue;
                 }
-                if n.pool.warm_available(func, now) == 0 {
+                if n.pool.warm_available(key, now) == 0 {
                     stale.push(id);
                     continue;
                 }
-                let key = (n.inflight, n.id);
+                let load_key = (n.inflight, n.id);
                 let better = match best {
                     None => true,
-                    Some(b) => key < b,
+                    Some(b) => load_key < b,
                 };
                 if better {
-                    best = Some(key);
+                    best = Some(load_key);
                 }
             }
             for id in &stale {
                 set.remove(id);
             }
             if set.is_empty() {
-                self.warm_nodes.remove(func);
+                self.warm_nodes.remove(key);
             }
         }
         #[cfg(debug_assertions)]
@@ -278,7 +286,7 @@ impl Scheduler {
             debug_assert_eq!(
                 best.map(|(_, id)| id),
                 want,
-                "warm index diverged from the linear scan for '{func}'"
+                "warm index diverged from the linear scan for '{key}'"
             );
         }
         let id = best.map(|(_, id)| id)?;
@@ -286,14 +294,15 @@ impl Scheduler {
         Some(id)
     }
 
-    /// The pre-index warm router: full scan over every node and pool.
-    /// Kept as the behavioural reference — debug builds assert
-    /// [`Scheduler::route_warm`] picks the same node, and the property
+    /// The pre-index warm router: full scan over every node and pool,
+    /// keyed exactly like [`Scheduler::route_warm`].  Kept as the
+    /// behavioural reference — debug builds assert the indexed router
+    /// picks the same node (sharing keys included), and the property
     /// suite replays random traces against it.  Does not claim.
-    pub fn route_warm_scan(nodes: &mut [NodeState], func: &str, now: u64) -> Option<usize> {
+    pub fn route_warm_scan(nodes: &mut [NodeState], key: &str, now: u64) -> Option<usize> {
         let mut best: Option<(u32, usize)> = None;
         for n in nodes.iter_mut() {
-            if !n.up || n.pool.warm_available(func, now) == 0 {
+            if !n.up || n.pool.warm_available(key, now) == 0 {
                 continue;
             }
             let better = match best {
@@ -590,6 +599,27 @@ mod tests {
         ns2[2].pool.prewarm_until("f0", 1, 20 * S, 25 * S);
         s.warm_added("f0", 2);
         assert_eq!(s.route_warm(&mut ns2, "f0", 30 * S), None);
+    }
+
+    #[test]
+    fn warm_routing_on_sharing_keys_matches_scan_and_never_crosses() {
+        use crate::fnplat::NO_OWNER;
+        // Universal workers pooled under a runtime key (S23) route exactly
+        // like per-function slots: the index and the reference scan agree
+        // pick-for-pick, and a different key never sees them.
+        let mut ns = nodes(3, 2);
+        ns[1].pool.prewarm_shared_until("rt0", NO_OWNER, 1, 0, 50 * S);
+        ns[2].pool.prewarm_shared_until("rt0", NO_OWNER, 1, 0, 50 * S);
+        ns[2].inflight = 3;
+        let mut s = Scheduler::for_nodes(SchedPolicy::LeastLoaded, &ns);
+        assert_eq!(s.route_warm(&mut ns, "rt1", S), None, "keys must not cross");
+        let want = Scheduler::route_warm_scan(&mut ns, "rt0", S);
+        assert_eq!(want, Some(1), "least-loaded candidate under the key");
+        assert_eq!(s.route_warm(&mut ns, "rt0", S), want);
+        // Released-back shared slots re-enter the index under their key.
+        ns[0].pool.release_shared_until("rt0", 7, 2 * S, 40 * S);
+        s.warm_added("rt0", 0);
+        assert_eq!(s.route_warm(&mut ns, "rt0", 3 * S), Some(0));
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! behind [`PlatformConfig::exact_latencies`] for the debug/compat paths.
 //!
 //! The dispatch decision runs against the scheduler's indexes (S22):
-//! warm routing consults only the function's candidate node set, and the
-//! cold schedulers their load/replica orders — every pool release,
+//! warm routing consults only the request's **sharing-key** candidate
+//! node set (S23: the function name under the exclusive mode, the
+//! runtime key under universal-worker sharing — a claimed slot owned by
+//! a different function pays the driver's specialization pipeline), and
+//! the cold schedulers their load/replica orders — every pool release,
 //! pre-warm boot, crash, and restart notifies [`Scheduler`] so the
 //! indexes stay exact (debug builds re-run the pre-index linear scans on
 //! every decision and assert the same pick).  Open-loop tenant traces can
@@ -78,11 +81,20 @@ fn attempt_of(class: u32) -> u32 {
     (class & !CONTROL_BIT) >> ATTEMPT_SHIFT
 }
 
+/// How warm the dispatch found its executor (latency-binning class).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Heat {
+    Warm,
+    /// Runtime-warm slot owned by another function: paid specialization.
+    Specialized,
+    Cold,
+}
+
 /// Where a placed request landed (kept until `done` for latency binning).
 #[derive(Clone, Copy)]
 struct Placed {
     node: usize,
-    cold: bool,
+    heat: Heat,
     /// Set when the node crashed under the request: the attempt is lost
     /// and will be retried or rejected when its pipeline unwinds.
     killed: bool,
@@ -129,6 +141,9 @@ pub struct PlatformSim<'a> {
     cold_extra: Vec<Step>,
     warm_steps: Vec<Step>,
     cold_steps: Vec<Step>,
+    /// Specialization pipeline appended after the warm steps when a
+    /// shared claim lands on another function's slot (S23).
+    spec_steps: Vec<Step>,
     exec_ms: f64,
     fabric_gbps: f64,
     disk_bw_bytes_per_s: f64,
@@ -136,6 +151,11 @@ pub struct PlatformSim<'a> {
     sched: Scheduler,
     pub nodes: Vec<NodeState>,
     func_names: Vec<String>,
+    /// Per-function sharing key (S23): equals `func_names` under the
+    /// exclusive mode, the runtime bucket under universal sharing.  Every
+    /// pool claim/release and every warm-index notification uses this
+    /// key, so routing can never hand a request a mismatched slot.
+    route_keys: Vec<String>,
     images: Vec<Image>,
     faults: FaultPlan,
     /// Head-of-request steps, re-spawned for client retries of killed
@@ -192,31 +212,45 @@ pub struct PlatformSim<'a> {
     // --- metrics ---
     cold_hist: Histogram,
     warm_hist: Histogram,
+    spec_hist: Histogram,
     exact: bool,
     latencies_ns: Vec<u64>,
     cold_latencies_ns: Vec<u64>,
     warm_latencies_ns: Vec<u64>,
+    spec_latencies_ns: Vec<u64>,
 }
 
 impl PlatformSim<'_> {
     fn dispatch_tail(&mut self, req: ReqId, func: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
         self.policy.on_invoke(func, now);
         let in_window = self.faults.in_disruption_window(now);
-        let name = &self.func_names[func as usize];
+        let key = &self.route_keys[func as usize];
         let mut tail = Vec::new();
-        if let Some(node) = self.sched.route_warm(&mut self.nodes, name, now) {
-            let d = self.nodes[node].pool.dispatch(name, now);
-            debug_assert_eq!(d, crate::fnplat::Dispatch::Warm);
+        if let Some(node) = self.sched.route_warm(&mut self.nodes, key, now) {
+            let d = self.nodes[node].pool.dispatch_shared(key, func, now);
+            debug_assert_ne!(d, crate::fnplat::Dispatch::Cold);
             tail.extend(
                 retarget(&self.warm_steps, &self.nodes[node], self.disk_bw_bytes_per_s, 1.0),
             );
+            let heat = if d == crate::fnplat::Dispatch::Specialized {
+                // Runtime warm, function state cold: install it (S23).
+                tail.extend(retarget(
+                    &self.spec_steps,
+                    &self.nodes[node],
+                    self.disk_bw_bytes_per_s,
+                    1.0,
+                ));
+                Heat::Specialized
+            } else {
+                Heat::Warm
+            };
             tail.push(Step::pool(
                 "fn-exec",
                 self.nodes[node].cpu_pool,
                 Dist::ms(self.exec_ms, 0.15),
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
-            self.placed.insert(req, Placed { node, cold: false, killed: false });
+            self.placed.insert(req, Placed { node, heat, killed: false });
             if in_window {
                 self.window_total += 1;
             } else {
@@ -232,7 +266,7 @@ impl PlatformSim<'_> {
                 return tail;
             };
             let node = out.node;
-            let d = self.nodes[node].pool.dispatch(name, now);
+            let d = self.nodes[node].pool.dispatch_shared(key, func, now);
             debug_assert_eq!(d, crate::fnplat::Dispatch::Cold);
             if out.fetch_bytes > 0 {
                 let gbps = self.fabric_gbps / self.faults.fabric_slowdown_at(now);
@@ -255,7 +289,7 @@ impl PlatformSim<'_> {
                 Dist::ms(self.exec_ms, 0.15),
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
-            self.placed.insert(req, Placed { node, cold: true, killed: false });
+            self.placed.insert(req, Placed { node, heat: Heat::Cold, killed: false });
             if in_window {
                 self.window_total += 1;
                 self.window_cold += 1;
@@ -285,12 +319,13 @@ impl Domain for PlatformSim<'_> {
                     // node's in-flight counter.
                     return;
                 }
-                let name = &self.func_names[func as usize];
+                let key = &self.route_keys[func as usize];
                 match self.policy.on_idle(func, now) {
-                    IdleAction::Retire => self.nodes[p.node].pool.retire(name),
+                    IdleAction::Retire => self.nodes[p.node].pool.retire(key),
                     IdleAction::KeepFor { keep_ns } => {
-                        self.nodes[p.node].pool.release_until(
-                            name,
+                        self.nodes[p.node].pool.release_shared_until(
+                            key,
+                            func,
                             now,
                             now.saturating_add(keep_ns),
                         );
@@ -298,11 +333,11 @@ impl Domain for PlatformSim<'_> {
                         // instead; only a real release makes the node a
                         // warm-routing candidate.
                         if keep_ns > 0 {
-                            self.sched.warm_added(name, p.node);
+                            self.sched.warm_added(key, p.node);
                         }
                     }
                     IdleAction::PrewarmAfter { delay_ns, keep_ns } => {
-                        self.nodes[p.node].pool.retire(name);
+                        self.nodes[p.node].pool.retire(key);
                         self.pending_prewarms.push((func, p.node, delay_ns, keep_ns));
                     }
                 }
@@ -318,7 +353,7 @@ impl Domain for PlatformSim<'_> {
                         .and_then(|i| q.remove(i))
                 };
                 if let Some(boot) = hit {
-                    let name = &self.func_names[func as usize];
+                    let key = &self.route_keys[func as usize];
                     // Skip stale pre-warms: an arrival already repopulated
                     // the pool, the keep window degenerated, or the target
                     // node is down (nothing can boot on a dead node).
@@ -326,16 +361,17 @@ impl Domain for PlatformSim<'_> {
                     // expired-but-unpurged slot doesn't mask a boot.
                     if boot.keep_ns > 0
                         && self.nodes[boot.node].up
-                        && self.nodes[boot.node].pool.warm_available(name, now) == 0
+                        && self.nodes[boot.node].pool.warm_available(key, now) == 0
                     {
                         self.prewarm_boots += 1;
-                        self.nodes[boot.node].pool.prewarm_until(
-                            name,
+                        self.nodes[boot.node].pool.prewarm_shared_until(
+                            key,
+                            func,
                             1,
                             now,
                             now.saturating_add(boot.keep_ns),
                         );
-                        self.sched.warm_added(name, boot.node);
+                        self.sched.warm_added(key, boot.node);
                     }
                 }
             }
@@ -474,17 +510,17 @@ impl Domain for PlatformSim<'_> {
                     self.served += 1;
                     let lat = now - origin;
                     self.nodes[p.node].hist.record_ns(lat);
-                    if p.cold {
-                        self.cold_hist.record_ns(lat);
-                    } else {
-                        self.warm_hist.record_ns(lat);
+                    match p.heat {
+                        Heat::Cold => self.cold_hist.record_ns(lat),
+                        Heat::Specialized => self.spec_hist.record_ns(lat),
+                        Heat::Warm => self.warm_hist.record_ns(lat),
                     }
                     if self.exact {
                         self.latencies_ns.push(lat);
-                        if p.cold {
-                            self.cold_latencies_ns.push(lat);
-                        } else {
-                            self.warm_latencies_ns.push(lat);
+                        match p.heat {
+                            Heat::Cold => self.cold_latencies_ns.push(lat),
+                            Heat::Specialized => self.spec_latencies_ns.push(lat),
+                            Heat::Warm => self.warm_latencies_ns.push(lat),
                         }
                     }
                 }
@@ -516,13 +552,21 @@ pub struct PlatformResult {
     pub hist: Histogram,
     pub cold_hist: Histogram,
     pub warm_hist: Histogram,
+    /// Latencies of specialized claims (S23: runtime-warm slot, function
+    /// state installed on claim).  Empty under the exclusive mode.
+    pub spec_hist: Histogram,
     /// Per-node latency histograms (the merge sources), node order.
     pub node_hists: Vec<Histogram>,
     /// Raw samples — populated only with `exact_latencies` (debug/compat).
     pub latencies_ns: Vec<u64>,
     pub cold_latencies_ns: Vec<u64>,
     pub warm_latencies_ns: Vec<u64>,
+    pub spec_latencies_ns: Vec<u64>,
     pub warm_hits: u64,
+    /// Cross-function claims of shared warm slots; `warm_hits +
+    /// specializations + cold_starts` covers every dispatch that reached
+    /// a pool (`served + killed`).
+    pub specializations: u64,
     pub cold_starts: u64,
     pub prewarm_boots: u64,
     pub expirations: u64,
@@ -571,8 +615,10 @@ fn fraction(num: u64, den: u64) -> f64 {
 }
 
 impl PlatformResult {
+    /// Fraction of dispatches that paid a full cold start (specialized
+    /// claims count as non-cold: the runtime was already resident).
     pub fn cold_fraction(&self) -> f64 {
-        fraction(self.cold_starts, self.cold_starts + self.warm_hits)
+        fraction(self.cold_starts, self.cold_starts + self.warm_hits + self.specializations)
     }
 
     /// Cold fraction of dispatches inside disruption windows — the
@@ -598,6 +644,10 @@ impl PlatformResult {
 
     pub fn warm_quantile_ms(&self, q: f64) -> f64 {
         quantile_of(&self.warm_latencies_ns, &self.warm_hist, q)
+    }
+
+    pub fn spec_quantile_ms(&self, q: f64) -> f64 {
+        quantile_of(&self.spec_latencies_ns, &self.spec_hist, q)
     }
 }
 
@@ -659,9 +709,17 @@ pub fn run_platform(
     assert!(cfg.nodes <= super::MAX_NODES, "at most {} nodes (engine pool ids)", super::MAX_NODES);
     assert!(cfg.functions >= 1, "need at least one function");
     assert!(cfg.functions <= FUNC_MASK, "function ids must fit the class low bits");
+    if let super::SharingMode::PerRuntime { runtimes } = cfg.sharing {
+        assert!(runtimes >= 1, "per-runtime sharing needs at least one runtime family");
+    }
     cfg.faults.validate(cfg.nodes);
 
     let func_names: Vec<String> = (0..cfg.functions).map(|f| format!("f{f}")).collect();
+    let route_keys: Vec<String> = func_names
+        .iter()
+        .enumerate()
+        .map(|(f, name)| cfg.sharing.key_for(f as u32, name))
+        .collect();
     let images: Vec<Image> = func_names
         .iter()
         .map(|n| Image::for_function(n, cfg.driver.tech))
@@ -679,6 +737,7 @@ pub fn run_platform(
         cold_extra,
         warm_steps: cfg.driver.warm_steps.clone(),
         cold_steps: cfg.driver.cold_steps.clone(),
+        spec_steps: cfg.driver.specialize_steps.clone(),
         exec_ms: cfg.exec_ms,
         fabric_gbps: cfg.fabric_gbps,
         disk_bw_bytes_per_s: host.disk_bw_bytes_per_s,
@@ -686,6 +745,7 @@ pub fn run_platform(
         sched: Scheduler::new(cfg.scheduler),
         nodes: Vec::new(),
         func_names,
+        route_keys,
         images,
         faults: cfg.faults.clone(),
         head: Vec::new(),
@@ -713,10 +773,12 @@ pub fn run_platform(
         steady_total: 0,
         cold_hist: Histogram::new(),
         warm_hist: Histogram::new(),
+        spec_hist: Histogram::new(),
         exact: cfg.exact_latencies,
         latencies_ns: Vec::new(),
         cold_latencies_ns: Vec::new(),
         warm_latencies_ns: Vec::new(),
+        spec_latencies_ns: Vec::new(),
     };
 
     // The placement-only path leaves the engine's own cores unused
@@ -774,6 +836,30 @@ pub fn run_platform(
     // claim/complete/warm_added/node_down/node_up notifications.
     e.domain.sched.attach(&e.domain.nodes);
 
+    // Pre-seed shared "universal" workers (S23): `universal_prewarm`
+    // runtime-warm executors per shared bucket, spread round-robin over
+    // nodes, owned by no function — every first claim pays the
+    // specialization pipeline.  The exclusive mode has no shared buckets,
+    // so this is a no-op there regardless of the configured count.
+    if cfg.universal_prewarm > 0 {
+        let keys = cfg.sharing.shared_keys(cfg.functions);
+        let mut slot = 0usize;
+        for key in &keys {
+            for _ in 0..cfg.universal_prewarm {
+                let node = slot % cfg.nodes;
+                slot += 1;
+                e.domain.nodes[node].pool.prewarm_shared_until(
+                    key,
+                    crate::fnplat::NO_OWNER,
+                    1,
+                    0,
+                    cfg.warmup_keep_ns,
+                );
+                e.domain.sched.warm_added(key, node);
+            }
+        }
+    }
+
     let head = head_steps(cfg);
     e.domain.head = head.clone();
     // Weave the fault schedule into virtual time as zero-latency control
@@ -798,14 +884,17 @@ pub fn run_platform(
         PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
             assert!(*parallelism as u64 <= *total);
             if *prewarm {
-                let name = e.domain.func_names[0].clone();
-                e.domain.nodes[0].pool.prewarm_until(
-                    &name,
+                // Measurement warmup holds function 0's state: claims by
+                // function 0 are plain warm hits under every mode.
+                let key = e.domain.route_keys[0].clone();
+                e.domain.nodes[0].pool.prewarm_shared_until(
+                    &key,
+                    0,
                     *parallelism as u64,
                     0,
                     cfg.warmup_keep_ns,
                 );
-                e.domain.sched.warm_added(&name, 0);
+                e.domain.sched.warm_added(&key, 0);
             }
             e.domain.template = head.clone();
             e.domain.remaining = total - *parallelism as u64;
@@ -850,12 +939,14 @@ pub fn run_platform(
     let mut idle_mem_byte_ns: u128 = 0;
     let (mut warm_hits, mut cold_starts, mut expirations, mut retirements, mut monitor_events) =
         (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut specializations = 0u64;
     for n in &mut d.nodes {
         n.pool.finalize(now);
         hist.merge(&n.hist);
         node_hists.push(n.hist.clone());
         idle_mem_byte_ns += n.pool.idle_mem_byte_ns;
         warm_hits += n.pool.warm_hits;
+        specializations += n.pool.specializations;
         cold_starts += n.pool.cold_starts;
         expirations += n.pool.expirations;
         retirements += n.pool.retirements;
@@ -870,11 +961,14 @@ pub fn run_platform(
         hist,
         cold_hist: d.cold_hist.clone(),
         warm_hist: d.warm_hist.clone(),
+        spec_hist: d.spec_hist.clone(),
         node_hists,
         latencies_ns: std::mem::take(&mut d.latencies_ns),
         cold_latencies_ns: std::mem::take(&mut d.cold_latencies_ns),
         warm_latencies_ns: std::mem::take(&mut d.warm_latencies_ns),
+        spec_latencies_ns: std::mem::take(&mut d.spec_latencies_ns),
         warm_hits,
+        specializations,
         cold_starts,
         prewarm_boots: d.prewarm_boots,
         expirations,
@@ -1085,6 +1179,95 @@ mod tests {
         assert_eq!(stream.cold_starts, bulk.cold_starts);
         assert_eq!(stream.retirements, bulk.retirements);
         assert_eq!(stream.idle_gb_seconds, 0.0);
+    }
+
+    #[test]
+    fn exclusive_runs_never_specialize() {
+        let (cfg, _) = tenant_cfg(DriverKind::DockerWarm, 2);
+        let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        assert_eq!(r.specializations, 0);
+        assert!(r.spec_hist.is_empty());
+        assert_eq!(r.warm_hits + r.cold_starts, r.requests);
+    }
+
+    #[test]
+    fn universal_sharing_specializes_and_conserves() {
+        use crate::platform::SharingMode;
+        for mode in [SharingMode::PerRuntime { runtimes: 2 }, SharingMode::Promiscuous] {
+            let (mut cfg, trace) = tenant_cfg(DriverKind::DockerWarm, 2);
+            cfg.sharing = mode;
+            cfg.universal_prewarm = 4;
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            assert_eq!(r.requests, trace.len() as u64, "{mode:?}");
+            assert_eq!(
+                r.warm_hits + r.specializations + r.cold_starts,
+                r.requests,
+                "{mode:?}: every dispatch is warm, specialized, or cold"
+            );
+            assert!(r.specializations > 0, "{mode:?}: cross-function claims must happen");
+        }
+    }
+
+    #[test]
+    fn sharing_runs_are_deterministic_per_seed() {
+        let run = || {
+            let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 4);
+            cfg.sharing = crate::platform::SharingMode::PerRuntime { runtimes: 3 };
+            cfg.universal_prewarm = 2;
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            (r.hist.quantile_ms(0.99), r.specializations, r.cold_starts, r.idle_gb_seconds)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn specialization_costs_more_than_warm_less_than_cold() {
+        // Two functions alternating on one promiscuous bucket: after the
+        // single cold boot, every claim lands on the *other* function's
+        // slot and pays the specialization pipeline — a latency class
+        // strictly between the warm hit and the full cold start.
+        let arrivals: Vec<(u64, u32)> =
+            (1..200u64).map(|i| (i * S / 2, (i % 2) as u32)).collect();
+        let trace = TenantTrace { functions: 2, arrivals };
+        let mut cfg = PlatformConfig {
+            load: PlatformLoad::Tenants(trace),
+            functions: 2,
+            ..PlatformConfig::single_node(
+                crate::platform::DriverProfile::from_kind(DriverKind::DockerWarm),
+                8,
+            )
+        };
+        cfg.sharing = crate::platform::SharingMode::Promiscuous;
+        cfg.exact_latencies = true;
+        let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        assert!(
+            r.specializations > 100,
+            "alternating claims must specialize: {}",
+            r.specializations
+        );
+        let spec = r.spec_quantile_ms(0.5);
+        let cold = r.cold_quantile_ms(0.5);
+        assert!(spec > 4.0, "specialization must cost more than a warm hit: {spec}");
+        assert!(spec < cold, "specialization must stay below a cold start: {spec} vs {cold}");
+    }
+
+    #[test]
+    fn universal_prewarm_seeds_claimable_runtime_workers() {
+        use crate::platform::SharingMode;
+        let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 2);
+        cfg.sharing = SharingMode::Promiscuous;
+        cfg.universal_prewarm = 16;
+        let seeded = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        let (mut bare, _) = tenant_cfg(DriverKind::DockerWarm, 2);
+        bare.sharing = SharingMode::Promiscuous;
+        let unseeded = run_platform(&bare, &mut FixedKeepAlive::default(), Host::default());
+        // Seeded universal workers absorb the ramp cold starts.
+        assert!(
+            seeded.cold_starts < unseeded.cold_starts,
+            "seeded {} vs unseeded {}",
+            seeded.cold_starts,
+            unseeded.cold_starts
+        );
     }
 
     #[test]

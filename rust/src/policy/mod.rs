@@ -19,6 +19,11 @@
 //!   weighted moving average + variance, standing in for learned
 //!   predictors (transformer/LSTM cold-start forecasters).
 //!
+//! A fifth family, [`UniversalPool`] (S23), drives *shared* runtime-keyed
+//! pools — universal workers any function of the runtime may claim — and
+//! only makes sense together with a shared
+//! [`SharingMode`](crate::platform::SharingMode); experiment E16 sweeps it.
+//!
 //! Policies are pure observers/deciders: the pool mechanics stay in
 //! [`crate::fnplat::pool::WarmPool`] (per-slot deadlines), and the DES
 //! wiring that replays a multi-tenant trace through a policy lives in
@@ -27,6 +32,7 @@
 
 pub mod ewma;
 pub mod histogram;
+pub mod universal;
 
 /// The DES wiring moved into the unified [`crate::platform`] layer; this
 /// alias keeps the historical `policy::sim` paths working.
@@ -37,6 +43,7 @@ pub mod sim {
 pub use ewma::EwmaPredictive;
 pub use histogram::HistogramPrewarm;
 pub use sim::{run_policy_scenario, PolicyResult, PolicyScenario};
+pub use universal::UniversalPool;
 
 /// What to do with an executor that just went idle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,152 @@
+//! Universal-pool lifecycle policy (S23): size a *shared* runtime-keyed
+//! warm pool instead of per-function keep-alive windows.
+//!
+//! The strongest keep-alive counter-proposal to the paper's cold-only
+//! platform is not a smarter per-function window but *sharing*: pool
+//! warm executors per language runtime ("universal workers") so one idle
+//! worker serves any function of that runtime, amortizing keep-alive
+//! waste across the whole tenant population.  This policy drives such a
+//! pool: it tracks a per-runtime EWMA of the arrival rate and keeps each
+//! idle worker just long enough that, at the observed rate, about
+//! `target_per_runtime` workers sit warm per runtime bucket —
+//! Little's-law sizing with EWMA resizing, instead of the fixed
+//! 10-minute-per-function window of [`super::FixedKeepAlive`].
+//!
+//! Functions hash onto runtimes as `func % runtimes` — the same mapping
+//! [`crate::platform::SharingMode::PerRuntime`] keys slots by, so the
+//! policy's sizing and the platform's routing agree on which bucket a
+//! worker amortizes over.  With `runtimes == 1` the policy sizes one
+//! global bucket (the promiscuous mode).
+
+use super::{IdleAction, LifecyclePolicy};
+
+/// Per-runtime target-size keep-alive with EWMA rate tracking.
+#[derive(Clone, Debug)]
+pub struct UniversalPool {
+    runtimes: u32,
+    /// Idle universal workers to aim for per runtime bucket.
+    pub target_per_runtime: f64,
+    /// Keep-window clamp: the floor keeps quiet ramps from thrashing,
+    /// the ceiling bounds waste for near-dead runtimes.
+    pub min_keep_ns: u64,
+    pub max_keep_ns: u64,
+    /// EWMA smoothing factor for the inter-arrival gap estimate.
+    pub alpha: f64,
+    /// Last arrival per runtime (`u64::MAX` = none seen yet).
+    last_arrival_ns: Vec<u64>,
+    /// EWMA inter-arrival gap per runtime (0 = no estimate yet).
+    ewma_gap_ns: Vec<f64>,
+}
+
+const S: u64 = 1_000_000_000;
+
+impl UniversalPool {
+    /// Defaults: 60 s..600 s keep clamp, alpha 0.2.
+    pub fn new(runtimes: u32, target_per_runtime: f64) -> UniversalPool {
+        let r = runtimes.max(1);
+        UniversalPool {
+            runtimes: r,
+            target_per_runtime: target_per_runtime.max(1.0),
+            min_keep_ns: 60 * S,
+            max_keep_ns: 600 * S,
+            alpha: 0.2,
+            last_arrival_ns: vec![u64::MAX; r as usize],
+            ewma_gap_ns: vec![0.0; r as usize],
+        }
+    }
+
+    fn runtime_of(&self, func: u32) -> usize {
+        (func % self.runtimes) as usize
+    }
+
+    /// Current keep window for one runtime: `target x mean gap`, so the
+    /// expected idle population sits near the target (each idle worker
+    /// survives ~`target` arrivals' worth of time before expiring).
+    fn keep_ns(&self, rt: usize) -> u64 {
+        let gap = self.ewma_gap_ns[rt];
+        if gap <= 0.0 {
+            // No rate estimate yet: hold the floor window.
+            return self.min_keep_ns;
+        }
+        let keep = self.target_per_runtime * gap;
+        (keep as u64).clamp(self.min_keep_ns, self.max_keep_ns)
+    }
+}
+
+impl LifecyclePolicy for UniversalPool {
+    fn name(&self) -> String {
+        format!("universal-t{:.0}", self.target_per_runtime)
+    }
+
+    fn on_invoke(&mut self, func: u32, now_ns: u64) {
+        let rt = self.runtime_of(func);
+        let last = self.last_arrival_ns[rt];
+        if last != u64::MAX && now_ns > last {
+            let gap = (now_ns - last) as f64;
+            let prev = self.ewma_gap_ns[rt];
+            self.ewma_gap_ns[rt] =
+                if prev <= 0.0 { gap } else { self.alpha * gap + (1.0 - self.alpha) * prev };
+        }
+        self.last_arrival_ns[rt] = now_ns;
+    }
+
+    fn on_idle(&mut self, func: u32, _now_ns: u64) -> IdleAction {
+        let rt = self.runtime_of(func);
+        IdleAction::KeepFor { keep_ns: self.keep_ns(rt) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_floor_window_before_any_rate_estimate() {
+        let mut p = UniversalPool::new(4, 8.0);
+        assert_eq!(p.on_idle(3, 0), IdleAction::KeepFor { keep_ns: 60 * S });
+        assert_eq!(p.name(), "universal-t8");
+    }
+
+    #[test]
+    fn ewma_rate_shrinks_the_window_under_load() {
+        let mut p = UniversalPool::new(1, 8.0);
+        p.min_keep_ns = 0; // expose the raw sizing
+        // 10 arrivals/s: gap 100 ms, keep = 8 x 100 ms = 800 ms.
+        for i in 1..50u64 {
+            p.on_invoke(0, i * S / 10);
+        }
+        let IdleAction::KeepFor { keep_ns } = p.on_idle(0, 5 * S) else {
+            panic!("universal pool always retains")
+        };
+        assert!(
+            (keep_ns as f64 - 0.8e9).abs() < 0.2e9,
+            "keep {} vs expected ~0.8 s",
+            keep_ns
+        );
+    }
+
+    #[test]
+    fn quiet_runtimes_are_clamped_at_the_ceiling() {
+        let mut p = UniversalPool::new(2, 8.0);
+        // One arrival every 1000 s on runtime 0: 8 x 1000 s >> ceiling.
+        p.on_invoke(0, 0);
+        p.on_invoke(0, 1000 * S);
+        assert_eq!(p.on_idle(0, 1000 * S), IdleAction::KeepFor { keep_ns: 600 * S });
+        // Runtime 1 never saw an arrival: still on the floor.
+        assert_eq!(p.on_idle(1, 1000 * S), IdleAction::KeepFor { keep_ns: 60 * S });
+    }
+
+    #[test]
+    fn functions_hash_onto_runtime_buckets() {
+        let mut p = UniversalPool::new(4, 8.0);
+        p.min_keep_ns = 0;
+        // Functions 1 and 5 share runtime 1: their arrivals feed one EWMA.
+        p.on_invoke(1, 0);
+        p.on_invoke(5, S);
+        let IdleAction::KeepFor { keep_ns } = p.on_idle(9, S) else {
+            panic!("universal pool always retains")
+        };
+        // 1 s gap x target 8 = 8 s for every function of runtime 1.
+        assert!((keep_ns as f64 - 8e9).abs() < 1e6, "keep {keep_ns}");
+    }
+}

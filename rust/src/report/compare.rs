@@ -1,0 +1,410 @@
+//! Bench-regression gate (S24): compare a freshly generated
+//! `BENCH_*.json` report against a committed baseline, tolerance-aware.
+//!
+//! CI has always uploaded machine-readable reports; this module is what
+//! finally *reads* them.  The rules:
+//!
+//! * **paper-check booleans are exact** — a `pass` flag or `all_pass`
+//!   verdict that differs from the baseline is drift in either
+//!   direction (a newly-passing check means the baseline is stale);
+//! * **latency/waste metrics are banded** — every `measured` value and
+//!   series quantile must sit within a configurable relative tolerance
+//!   of the baseline (exact-zero baselines must stay zero: the
+//!   zero-waste claims are identities, not measurements);
+//! * **wall-clock numbers are informational** — `wall_s`,
+//!   `total_wall_s`, and any metric naming `events/s` (simulator
+//!   throughput) depend on the machine, so they are reported but never
+//!   gate.
+//!
+//! A baseline whose top level carries `"bootstrap": true` is a committed
+//! placeholder (no toolchain was available to generate real numbers):
+//! the gate passes with a notice telling the operator to regenerate via
+//! `make baselines` and commit the result.  The DES itself is
+//! deterministic per seed in virtual time, so once a real baseline is
+//! committed the gate is tight: any measured drift is a code change.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Json;
+
+/// Default relative tolerance for banded metrics (±10 %).
+pub const DEFAULT_TOL: f64 = 0.10;
+
+/// Outcome of one document comparison.
+pub struct Comparison {
+    /// Gate-failing findings (empty == pass).
+    pub drifts: Vec<String>,
+    /// Informational notes (wall-clock deltas, bootstrap notice, …).
+    pub infos: Vec<String>,
+    /// The baseline was a bootstrap placeholder: nothing was compared.
+    pub bootstrap: bool,
+}
+
+impl Comparison {
+    pub fn ok(&self) -> bool {
+        self.drifts.is_empty()
+    }
+
+    pub fn render(&self, tol: f64) -> String {
+        let mut out = String::new();
+        for d in &self.drifts {
+            out.push_str(&format!("  drift: {d}\n"));
+        }
+        for i in &self.infos {
+            out.push_str(&format!("  info:  {i}\n"));
+        }
+        let verdict = if self.bootstrap {
+            "BOOTSTRAP BASELINE (gate not armed)".to_string()
+        } else if self.ok() {
+            format!("BASELINE MATCH (metrics within ±{:.0}%)", tol * 100.0)
+        } else {
+            format!("BENCH DRIFT ({} finding(s))", self.drifts.len())
+        };
+        out.push_str(&format!("  -> {verdict}\n"));
+        out
+    }
+}
+
+fn as_bool(v: &Json) -> Option<bool> {
+    match v {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }
+}
+
+fn field_str<'a>(obj: &'a Json, key: &str) -> &'a str {
+    obj.get(key).and_then(Json::as_str).unwrap_or("")
+}
+
+/// Numeric field; `None` for absent or `null` (the JSON writer emits
+/// `null` for non-finite values).
+fn field_num(obj: &Json, key: &str) -> Option<f64> {
+    obj.get(key).and_then(Json::as_f64)
+}
+
+/// Wall-clock-dependent metrics never gate (simulator throughput).
+fn informational(metric: &str) -> bool {
+    metric.contains("events/s")
+}
+
+/// A report sub-array (`checks` / `bands` / `series`), empty if absent.
+fn arr<'a>(exp: &'a Json, key: &str) -> &'a [Json] {
+    exp.get(key).and_then(Json::as_arr).unwrap_or(&[])
+}
+
+/// One banded numeric comparison; pushes a drift line on violation.
+fn compare_num(
+    drifts: &mut Vec<String>,
+    ctx: &str,
+    field: &str,
+    run: Option<f64>,
+    base: Option<f64>,
+    tol: f64,
+) {
+    match (run, base) {
+        (None, None) => {}
+        (Some(r), Some(b)) => {
+            let within = if b == 0.0 { r.abs() <= 1e-9 } else { (r / b - 1.0).abs() <= tol };
+            if !within {
+                drifts.push(format!(
+                    "{ctx}: {field} {r} vs baseline {b} ({:+.1}%, tol ±{:.0}%)",
+                    if b == 0.0 { f64::INFINITY } else { (r / b - 1.0) * 100.0 },
+                    tol * 100.0
+                ));
+            }
+        }
+        (r, b) => {
+            drifts.push(format!("{ctx}: {field} {r:?} vs baseline {b:?} (null-ness differs)"));
+        }
+    }
+}
+
+/// Exact boolean comparison; a flip in either direction is drift.
+fn compare_pass(drifts: &mut Vec<String>, ctx: &str, run: Option<bool>, base: Option<bool>) {
+    if run != base {
+        drifts.push(format!("{ctx}: pass {run:?} vs baseline {base:?} (must match exactly)"));
+    }
+}
+
+/// Index an array of labelled objects by `(label, metric)`.
+fn by_label<'a>(items: &'a [Json], metric_key: &str) -> BTreeMap<(String, String), &'a Json> {
+    items
+        .iter()
+        .map(|it| {
+            ((field_str(it, "label").to_string(), field_str(it, metric_key).to_string()), it)
+        })
+        .collect()
+}
+
+fn compare_labelled(
+    drifts: &mut Vec<String>,
+    id: &str,
+    kind: &str,
+    run_items: &[Json],
+    base_items: &[Json],
+    fields: &[&str],
+    tol: f64,
+) {
+    let metric_key = if kind == "series" { "" } else { "metric" };
+    let run_map = by_label(run_items, metric_key);
+    let base_map = by_label(base_items, metric_key);
+    // Duplicate (label, metric) entries would shadow each other in the
+    // maps and hide drift behind the survivor: refuse to gate them.
+    if run_map.len() != run_items.len() || base_map.len() != base_items.len() {
+        drifts.push(format!(
+            "{id}/{kind}: duplicate (label, metric) entries (run {}/{}, baseline {}/{}) — \
+             shadowed entries cannot be gated",
+            run_map.len(),
+            run_items.len(),
+            base_map.len(),
+            base_items.len()
+        ));
+    }
+    for (key, base_it) in &base_map {
+        let ctx = format!("{id}/{kind} '{}'", key.0);
+        let Some(run_it) = run_map.get(key) else {
+            drifts.push(format!("{ctx}: missing from run"));
+            continue;
+        };
+        if kind != "series" {
+            compare_pass(
+                drifts,
+                &ctx,
+                run_it.get("pass").and_then(as_bool),
+                base_it.get("pass").and_then(as_bool),
+            );
+            if informational(&key.1) {
+                continue;
+            }
+        }
+        for f in fields {
+            compare_num(drifts, &ctx, f, field_num(run_it, f), field_num(base_it, f), tol);
+        }
+    }
+    for key in run_map.keys() {
+        if !base_map.contains_key(key) {
+            drifts.push(format!(
+                "{id}/{kind} '{}': not in baseline (refresh baselines)",
+                key.0
+            ));
+        }
+    }
+}
+
+/// Compare two `BENCH_*.json` documents (run vs committed baseline).
+/// `Err` means a document could not be parsed at all; a parsed-but-
+/// drifting run comes back as `Ok` with findings.
+pub fn compare_documents(run: &str, baseline: &str, tol: f64) -> Result<Comparison, String> {
+    let run = Json::parse(run).map_err(|e| format!("run report: {e}"))?;
+    let base = Json::parse(baseline).map_err(|e| format!("baseline report: {e}"))?;
+    let mut cmp = Comparison { drifts: Vec::new(), infos: Vec::new(), bootstrap: false };
+
+    if base.get("bootstrap").and_then(as_bool) == Some(true) {
+        cmp.bootstrap = true;
+        cmp.infos.push(
+            "baseline is a bootstrap placeholder — regenerate with `make baselines` \
+             and commit rust/baselines/ to arm the gate"
+                .to_string(),
+        );
+        return Ok(cmp);
+    }
+
+    if field_str(&run, "generator") != field_str(&base, "generator") {
+        cmp.drifts.push(format!(
+            "generator '{}' vs baseline '{}'",
+            field_str(&run, "generator"),
+            field_str(&base, "generator")
+        ));
+    }
+    if let (Some(r), Some(b)) = (field_num(&run, "total_wall_s"), field_num(&base, "total_wall_s"))
+    {
+        cmp.infos.push(format!("total_wall_s {r:.1} vs baseline {b:.1} (informational)"));
+    }
+
+    let run_exps: &[Json] = run.get("experiments").and_then(Json::as_arr).unwrap_or_default();
+    let base_exps = base
+        .get("experiments")
+        .and_then(Json::as_arr)
+        .ok_or("baseline report: missing 'experiments' array")?;
+
+    let run_by_id: BTreeMap<&str, &Json> =
+        run_exps.iter().map(|e| (field_str(e, "id"), e)).collect();
+    for base_exp in base_exps {
+        let id = field_str(base_exp, "id");
+        let Some(run_exp) = run_by_id.get(id) else {
+            cmp.drifts.push(format!("experiment '{id}': missing from run"));
+            continue;
+        };
+        compare_pass(
+            &mut cmp.drifts,
+            &format!("{id}/all_pass"),
+            run_exp.get("all_pass").and_then(as_bool),
+            base_exp.get("all_pass").and_then(as_bool),
+        );
+        compare_labelled(
+            &mut cmp.drifts,
+            id,
+            "checks",
+            arr(run_exp, "checks"),
+            arr(base_exp, "checks"),
+            &["paper", "measured", "tol"],
+            tol,
+        );
+        compare_labelled(
+            &mut cmp.drifts,
+            id,
+            "bands",
+            arr(run_exp, "bands"),
+            arr(base_exp, "bands"),
+            &["lo", "hi", "measured"],
+            tol,
+        );
+        compare_labelled(
+            &mut cmp.drifts,
+            id,
+            "series",
+            arr(run_exp, "series"),
+            arr(base_exp, "series"),
+            &["n", "p1", "p25", "p50", "p75", "p99", "mean", "max"],
+            tol,
+        );
+    }
+    let base_ids: Vec<&str> = base_exps.iter().map(|e| field_str(e, "id")).collect();
+    for e in run_exps {
+        let id = field_str(e, "id");
+        if !base_ids.contains(&id) {
+            cmp.drifts.push(format!("experiment '{id}': not in baseline (refresh baselines)"));
+        }
+    }
+    Ok(cmp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(measured: f64, pass: bool, p99: f64) -> String {
+        format!(
+            "{{\"generator\":\"coldfaas\",\"total_wall_s\":1.5,\"experiments\":[\
+             {{\"id\":\"fig9\",\"title\":\"t\",\"wall_s\":0.5,\"all_pass\":{pass},\
+             \"series\":[{{\"label\":\"s\",\"n\":10,\"p1\":1,\"p25\":2,\"p50\":3,\
+             \"p75\":4,\"p99\":{p99},\"mean\":3,\"max\":6}}],\
+             \"checks\":[{{\"label\":\"a\",\"metric\":\"p50\",\"paper\":10,\
+             \"measured\":{measured},\"tol\":0.25,\"pass\":{pass}}}],\
+             \"bands\":[{{\"label\":\"tp\",\"metric\":\"events/s\",\"lo\":1,\
+             \"hi\":null,\"measured\":12345,\"pass\":true}}],\"notes\":[\"n\"]}}]}}"
+        )
+    }
+
+    #[test]
+    fn identical_documents_match() {
+        let a = doc(10.0, true, 5.0);
+        let cmp = compare_documents(&a, &a, DEFAULT_TOL).unwrap();
+        assert!(cmp.ok(), "{:?}", cmp.drifts);
+        assert!(!cmp.bootstrap);
+        assert!(cmp.render(DEFAULT_TOL).contains("BASELINE MATCH"));
+    }
+
+    #[test]
+    fn metrics_gate_within_tolerance_only() {
+        let base = doc(10.0, true, 5.0);
+        // +5% on a checked metric: inside the ±10% band.
+        let near = doc(10.5, true, 5.0);
+        assert!(compare_documents(&near, &base, DEFAULT_TOL).unwrap().ok());
+        // +50%: drift.
+        let far = doc(15.0, true, 5.0);
+        let cmp = compare_documents(&far, &base, DEFAULT_TOL).unwrap();
+        assert!(!cmp.ok());
+        assert!(cmp.drifts[0].contains("fig9/checks 'a'"), "{:?}", cmp.drifts);
+        // Series quantiles gate the same way.
+        let p99 = doc(10.0, true, 9.0);
+        assert!(!compare_documents(&p99, &base, DEFAULT_TOL).unwrap().ok());
+    }
+
+    #[test]
+    fn pass_booleans_are_exact_in_both_directions() {
+        let base = doc(10.0, true, 5.0);
+        let fail = doc(10.0, false, 5.0);
+        assert!(!compare_documents(&fail, &base, DEFAULT_TOL).unwrap().ok());
+        // A newly-passing check is drift too: the baseline is stale.
+        assert!(!compare_documents(&base, &fail, DEFAULT_TOL).unwrap().ok());
+    }
+
+    #[test]
+    fn events_per_second_is_informational_only() {
+        let base = doc(10.0, true, 5.0);
+        // The events/s band's measured value differs wildly but its pass
+        // boolean matches: no drift.
+        let fast = base.replace("\"measured\":12345", "\"measured\":99999999");
+        assert!(compare_documents(&fast, &base, DEFAULT_TOL).unwrap().ok());
+    }
+
+    #[test]
+    fn wall_times_never_gate() {
+        let base = doc(10.0, true, 5.0);
+        let slow = base.replace("\"total_wall_s\":1.5", "\"total_wall_s\":900");
+        let cmp = compare_documents(&slow, &base, DEFAULT_TOL).unwrap();
+        assert!(cmp.ok(), "{:?}", cmp.drifts);
+        assert!(cmp.infos.iter().any(|i| i.contains("total_wall_s")));
+    }
+
+    #[test]
+    fn missing_and_extra_experiments_are_drift() {
+        let base = doc(10.0, true, 5.0);
+        let none = "{\"generator\":\"coldfaas\",\"total_wall_s\":1,\"experiments\":[]}";
+        let cmp = compare_documents(none, &base, DEFAULT_TOL).unwrap();
+        assert!(cmp.drifts.iter().any(|d| d.contains("missing from run")), "{:?}", cmp.drifts);
+        let cmp = compare_documents(&base, none, DEFAULT_TOL).unwrap();
+        assert!(cmp.drifts.iter().any(|d| d.contains("not in baseline")), "{:?}", cmp.drifts);
+    }
+
+    #[test]
+    fn zero_baselines_must_stay_zero() {
+        let base = doc(0.0, true, 5.0);
+        let drifted = doc(0.001, true, 5.0);
+        assert!(compare_documents(&base, &base, DEFAULT_TOL).unwrap().ok());
+        assert!(!compare_documents(&drifted, &base, DEFAULT_TOL).unwrap().ok());
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_with_notice() {
+        let run = doc(10.0, true, 5.0);
+        let boot = "{\"generator\":\"coldfaas\",\"bootstrap\":true,\"experiments\":[]}";
+        let cmp = compare_documents(&run, boot, DEFAULT_TOL).unwrap();
+        assert!(cmp.ok() && cmp.bootstrap);
+        assert!(cmp.render(DEFAULT_TOL).contains("BOOTSTRAP"));
+    }
+
+    #[test]
+    fn unparseable_documents_are_hard_errors() {
+        assert!(compare_documents("nope", &doc(1.0, true, 5.0), DEFAULT_TOL).is_err());
+        assert!(compare_documents(&doc(1.0, true, 5.0), "{", DEFAULT_TOL).is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_are_refused_not_shadowed() {
+        // Two checks sharing (label, metric) would shadow each other in
+        // the comparison maps; the gate must flag them instead of
+        // silently comparing only the survivor.
+        let base = doc(10.0, true, 5.0);
+        let dup = base.replace(
+            "\"checks\":[{\"label\":\"a\"",
+            "\"checks\":[{\"label\":\"a\",\"metric\":\"p50\",\"paper\":1,\
+             \"measured\":99,\"tol\":0.1,\"pass\":true},{\"label\":\"a\"",
+        );
+        let cmp = compare_documents(&dup, &base, DEFAULT_TOL).unwrap();
+        assert!(
+            cmp.drifts.iter().any(|d| d.contains("duplicate (label, metric)")),
+            "{:?}",
+            cmp.drifts
+        );
+    }
+
+    #[test]
+    fn null_measured_values_compare_by_nullness() {
+        let base = doc(10.0, true, 5.0);
+        let nulled = base.replace("\"measured\":10,", "\"measured\":null,");
+        assert!(!compare_documents(&nulled, &base, DEFAULT_TOL).unwrap().ok());
+        assert!(compare_documents(&nulled, &nulled, DEFAULT_TOL).unwrap().ok());
+    }
+}

@@ -1,5 +1,9 @@
 //! Report rendering (S15): ASCII tables/series for every regenerated
-//! figure, plus paper-vs-measured tolerance checks.
+//! figure, plus paper-vs-measured tolerance checks.  The [`compare`]
+//! submodule (S24) is the bench-regression gate that diffs two
+//! machine-readable reports.
+
+pub mod compare;
 
 use crate::metrics::BoxStats;
 

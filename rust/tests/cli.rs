@@ -35,6 +35,8 @@ fn help_lists_subcommands() {
         "fleet",
         "chaos",
         "planet",
+        "sharing",
+        "compare",
         "serve",
         "invoke",
         "verify",
@@ -186,6 +188,118 @@ fn chaos_quick_passes_and_writes_json() {
 }
 
 #[test]
+fn sharing_small_sweep_passes_and_reports_break_even() {
+    // A deliberately small trace and a two-point cost sweep: the checks
+    // are structural; the full --quick grid runs in the library tests.
+    let (code, stdout, stderr) = run(&[
+        "sharing",
+        "--duration",
+        "20",
+        "--rps",
+        "40",
+        "--spec-costs",
+        "1,64",
+    ]);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("ALL CHECKS PASS"), "{stdout}");
+    assert!(stdout.contains("E16"));
+    for label in [
+        "includeos+cold-only+exclusive",
+        "docker+fixed-600s+exclusive",
+        "docker+universal-t8+runtime-4+spec1ms",
+        "docker+universal-t8+promiscuous+spec64ms",
+    ] {
+        assert!(stdout.contains(label), "sharing output missing {label}: {stdout}");
+    }
+    assert!(stdout.contains("break-even"), "{stdout}");
+}
+
+#[test]
+fn sharing_rejects_bad_arguments() {
+    let (code, _, stderr) = run(&["sharing", "--runtimes", "0"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("positive"), "{stderr}");
+    let (code, _, stderr) = run(&["sharing", "--spec-costs", "1,x"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("not a valid"), "{stderr}");
+    let (code, _, stderr) = run(&["sharing", "--spec-costs", "-5"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("non-negative"), "{stderr}");
+}
+
+#[test]
+fn compare_gate_round_trips_matches_drifts_and_bootstraps() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let write = |name: &str, body: &str| {
+        let p = dir.join(format!("coldfaas_cmp_{pid}_{name}"));
+        std::fs::write(&p, body).expect("write compare fixture");
+        p.to_str().unwrap().to_string()
+    };
+    let base = "{\"generator\":\"coldfaas\",\"total_wall_s\":1,\"experiments\":[\
+                {\"id\":\"fig9\",\"title\":\"t\",\"wall_s\":0.5,\"all_pass\":true,\
+                \"series\":[],\"checks\":[{\"label\":\"a\",\"metric\":\"p50\",\
+                \"paper\":10,\"measured\":10,\"tol\":0.25,\"pass\":true}],\
+                \"bands\":[],\"notes\":[]}]}";
+    let run_path = write("run.json", base);
+    let base_path = write("base.json", base);
+    let drift_doc = base.replace("\"measured\":10", "\"measured\":20");
+    let drift_path = write("drift.json", &drift_doc);
+    let flipped = base.replace("\"all_pass\":true", "\"all_pass\":false");
+    let flip_path = write("flip.json", &flipped);
+    let boot_path = write(
+        "boot.json",
+        "{\"generator\":\"coldfaas\",\"bootstrap\":true,\"experiments\":[]}",
+    );
+
+    // Identical documents: exit 0 and a MATCH verdict.
+    let (code, stdout, _) = run(&["compare", &run_path, &base_path]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("BASELINE MATCH"), "{stdout}");
+    // Metric drift beyond tolerance: exit 1 with the offending check named.
+    let (code, stdout, _) = run(&["compare", &drift_path, &base_path]);
+    assert_eq!(code, 1, "{stdout}");
+    assert!(stdout.contains("BENCH DRIFT") && stdout.contains("fig9"), "{stdout}");
+    // ...but a wide --tol waves the same delta through.
+    let (code, stdout, _) = run(&["compare", &drift_path, &base_path, "--tol", "2.0"]);
+    assert_eq!(code, 0, "{stdout}");
+    // Paper-check booleans are exact regardless of tolerance.
+    let (code, stdout, _) = run(&["compare", &flip_path, &base_path, "--tol", "2.0"]);
+    assert_eq!(code, 1, "{stdout}");
+    // A bootstrap baseline passes with the refresh notice.
+    let (code, stdout, _) = run(&["compare", &run_path, &boot_path]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(stdout.contains("BOOTSTRAP"), "{stdout}");
+    // Usage errors: missing args, unreadable file, bad tolerance.
+    let (code, _, stderr) = run(&["compare", &run_path]);
+    assert_eq!(code, 2, "{stderr}");
+    let (code, _, stderr) = run(&["compare", &run_path, "/nonexistent/base.json"]);
+    assert_eq!(code, 2, "{stderr}");
+    let (code, _, stderr) = run(&["compare", &run_path, &base_path, "--tol", "-1"]);
+    assert_eq!(code, 2, "{stderr}");
+
+    for p in [run_path, base_path, drift_path, flip_path, boot_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn compare_gate_accepts_a_real_experiment_report_against_itself() {
+    // The gate must round-trip the real BENCH format: a fresh quick run
+    // compared against its own bytes is a MATCH (and the committed
+    // bootstrap baselines pass with a notice until refreshed).
+    let dir = std::env::temp_dir();
+    let a = dir.join(format!("coldfaas_gate_{}.json", std::process::id()));
+    let a_s = a.to_str().unwrap().to_string();
+    let (code, _, stderr) = run(&["experiment", "fig3", "--quick", "--json", &a_s]);
+    assert_eq!(code, 0, "{stderr}");
+    let (code, stdout, stderr) = run(&["compare", &a_s, &a_s]);
+    let _ = std::fs::remove_file(&a);
+    assert_eq!(code, 0, "{stdout}{stderr}");
+    assert!(stdout.contains("BASELINE MATCH"), "{stdout}");
+}
+
+#[test]
 fn chaos_rejects_bad_node_counts() {
     // The scripted fault plan needs a surviving node: 1 is too few.
     let (code, _, stderr) = run(&["chaos", "--nodes", "1"]);
@@ -197,15 +311,17 @@ fn chaos_rejects_bad_node_counts() {
 }
 
 /// Every machine-readable report — `experiment`, `policies`, `fleet`,
-/// and `chaos` — shares the `report::json_document` shape: generator +
-/// wall time at the top, and per-experiment id/series/checks/wall time.
+/// `chaos`, and `sharing` — shares the `report::json_document` shape:
+/// generator + wall time at the top, and per-experiment
+/// id/series/checks/wall time.
 #[test]
 fn json_documents_share_one_shape_across_subcommands() {
-    let invocations: [&[&str]; 4] = [
+    let invocations: [&[&str]; 5] = [
         &["experiment", "fig3", "--quick"],
         &["policies", "--quick"],
         &["fleet", "--quick", "--duration", "10", "--rps", "20"],
         &["chaos", "--quick"],
+        &["sharing", "--duration", "20", "--rps", "40", "--spec-costs", "1,64"],
     ];
     for (i, argv) in invocations.iter().enumerate() {
         let path = std::env::temp_dir()

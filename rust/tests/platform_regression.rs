@@ -61,6 +61,51 @@ fn migrated_experiments_stay_inside_their_tolerance_bands() {
     }
 }
 
+/// E16 determinism: the sharing grid (exclusive rows + universal-worker
+/// rows across mode x specialization cost) must render byte-identically
+/// per seed — specializations, break-even readout and all — and a
+/// different seed must actually move the measurement.
+#[test]
+fn sharing_report_is_byte_identical_per_seed() {
+    let cfg = small();
+    let a = experiments::by_name("sharing", &cfg).expect("known experiment").render();
+    let b = experiments::by_name("sharing", &cfg).expect("known experiment").render();
+    assert_eq!(a, b, "sharing: same seed must reproduce byte-identically");
+    let other = ExpConfig { seed: cfg.seed ^ 0x5EED, ..small() };
+    let c = experiments::by_name("sharing", &other).expect("known experiment").render();
+    assert_ne!(a, c, "sharing: a different seed must change the measurement");
+}
+
+/// Sharing is opt-in: every pre-E16 preset runs under the exclusive mode
+/// and must never record a specialized claim (the refactor guard that
+/// keeps the E4–E15 byte-identical pins honest after the pool grew
+/// owner-tagged slots).
+#[test]
+fn exclusive_presets_never_specialize() {
+    use coldfaas::fnplat::DriverKind;
+    use coldfaas::platform::{run_platform, DriverProfile, PlatformConfig, PlatformLoad};
+    use coldfaas::policy::FixedKeepAlive;
+    use coldfaas::sim::Host;
+    use coldfaas::workload::tenants::{TenantConfig, TenantTrace};
+
+    let trace = TenantTrace::generate(&TenantConfig {
+        functions: 50,
+        duration_s: 30.0,
+        total_rps: 40.0,
+        seed: 0xE16,
+        ..Default::default()
+    });
+    let cfg = PlatformConfig {
+        load: PlatformLoad::Tenants(trace.clone()),
+        functions: 50,
+        nodes: 4,
+        ..PlatformConfig::single_node(DriverProfile::from_kind(DriverKind::DockerWarm), 8)
+    };
+    let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+    assert_eq!(r.specializations, 0);
+    assert_eq!(r.warm_hits + r.cold_starts, trace.len() as u64);
+}
+
 /// E14 determinism: the same seed drives the same trace *and* the same
 /// fault schedule, so the chaos report must be byte-identical per run —
 /// crashes, kills, retries and all.

@@ -8,9 +8,9 @@ use coldfaas::fnplat::DriverKind;
 use coldfaas::metrics::Recorder;
 use coldfaas::platform::{
     run_platform, DriverProfile, FaultConfig, FaultPlan, NodeState, PlatformConfig, PlatformLoad,
-    SchedPolicy, Scheduler,
+    SchedPolicy, Scheduler, SharingMode,
 };
-use coldfaas::policy::{ColdOnlyPolicy, FixedKeepAlive, LifecyclePolicy};
+use coldfaas::policy::{ColdOnlyPolicy, FixedKeepAlive, LifecyclePolicy, UniversalPool};
 use coldfaas::runtime::Json;
 use coldfaas::sim::{Dist, Domain, Engine, Host, LockClass, ReqId, Rng, Spawn, Step};
 use coldfaas::testkit::{forall, forall_vec, gen};
@@ -369,6 +369,129 @@ fn prop_pool_policy_deadlines_accounting() {
         let (d100, w100) = run(100);
         d1 == d10 && d10 == d100 && w1 <= w10 && w10 <= w100
     });
+}
+
+/// Universal-pool sharing never serves a request from a mismatched
+/// sharing key (S23): per-key claims never exceed per-key releases (a
+/// claim cannot cross buckets however warm the others are), an owner
+/// that never released under a key is never handed a same-owner Warm
+/// hit there (a mismatched claim is always Specialized), and the
+/// dispatch-class identity `warm + specialized + cold == dispatches`
+/// holds over arbitrary op interleavings.
+#[test]
+fn prop_shared_pool_never_serves_mismatched_sharing_key() {
+    const S: u64 = 1_000_000_000;
+    const KEYS: [&str; 3] = ["rt0", "rt1", "rt2"];
+    forall_vec(0x5AE_16, 60, 80, 9, |ops| {
+        let mut pool = WarmPool::new(30 * S, 1 << 20);
+        let mut now = 0u64;
+        let mut dispatches = 0u64;
+        let mut released = [0u64; 3];
+        let mut claimed = [0u64; 3];
+        for (i, &op) in ops.iter().enumerate() {
+            let k = (op % 3) as usize;
+            // Owners are partitioned per key: key k's native owners are
+            // 100k..100k+3; owner 999 is foreign to every key.
+            let native = 100 * k as u32 + (i as u32 % 3);
+            match op / 3 {
+                0 => {
+                    pool.prewarm_shared_until(KEYS[k], native, 1, now, now + 20 * S);
+                    released[k] += 1;
+                }
+                1 => {
+                    let owner = if i % 5 == 0 { 999 } else { native };
+                    let d = pool.dispatch_shared(KEYS[k], owner, now);
+                    dispatches += 1;
+                    if d != Dispatch::Cold {
+                        claimed[k] += 1;
+                        if claimed[k] > released[k] {
+                            return false; // claim crossed a bucket
+                        }
+                    }
+                    if owner == 999 && d == Dispatch::Warm {
+                        return false; // foreign owner got a warm hit
+                    }
+                    if d == Dispatch::Cold {
+                        // Keep alive accounting sane for later expiry.
+                        pool.retire(KEYS[k]);
+                    }
+                }
+                _ => now += S / 2,
+            }
+        }
+        pool.warm_hits + pool.specializations + pool.cold_starts == dispatches
+    });
+}
+
+/// Universal sharing at the platform level conserves everything under
+/// random traces, sharing modes, and fault plans: every arrival is
+/// served or rejected, and every pool dispatch (served + killed
+/// attempts) is exactly one of warm / specialized / cold.  Debug builds
+/// additionally re-run the linear-scan router on every decision, so this
+/// also pins sharing-aware indexed routing to the scan reference.
+#[test]
+fn prop_universal_sharing_conserves_under_random_traces_and_faults() {
+    const S: u64 = 1_000_000_000;
+    forall(
+        0x5AE_FA17,
+        6,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 6) as usize,  // nodes
+                gen::u64_in(rng, 0, 1),           // mode pick
+                gen::u64_in(rng, 1, 5) as u32,    // runtimes
+                gen::u64_in(rng, 0, 1),           // policy pick
+                rng.next_u64(),                   // seed
+            )
+        },
+        |&(nodes, mode_pick, runtimes, policy_pick, seed)| {
+            let trace = TenantTrace::generate(&TenantConfig {
+                functions: 40,
+                duration_s: 25.0,
+                total_rps: 30.0,
+                seed,
+                ..Default::default()
+            });
+            let plan = FaultPlan::generate(&FaultConfig {
+                nodes,
+                horizon_ns: 25 * S,
+                mttf_ns: 12 * S,
+                mttr_ns: 4 * S,
+                flush_cache: true,
+                straggler_mult: 2.0,
+                straggler_ns: 3 * S,
+                max_retries: 3,
+                retry_backoff_ns: 100_000_000,
+                spike_window_ns: 5 * S,
+                seed: seed ^ 0x5AE,
+            });
+            let mode = if mode_pick == 0 {
+                SharingMode::PerRuntime { runtimes }
+            } else {
+                SharingMode::Promiscuous
+            };
+            let mut cfg = PlatformConfig {
+                load: PlatformLoad::Tenants(trace.clone()),
+                functions: 40,
+                nodes,
+                faults: plan,
+                ..PlatformConfig::single_node(
+                    DriverProfile::from_kind(DriverKind::DockerWarm),
+                    8,
+                )
+            };
+            cfg.sharing = mode;
+            cfg.universal_prewarm = 3;
+            let mut universal = UniversalPool::new(runtimes, 4.0);
+            let mut keep = FixedKeepAlive::default();
+            let policy: &mut dyn LifecyclePolicy =
+                if policy_pick == 0 { &mut universal } else { &mut keep };
+            let r = run_platform(&cfg, policy, Host::default());
+            r.injected == trace.len() as u64
+                && r.injected == r.served + r.rejected
+                && r.warm_hits + r.specializations + r.cold_starts == r.served + r.killed
+        },
+    );
 }
 
 /// Request conservation under random fault plans: for every lifecycle
