@@ -20,6 +20,7 @@
 use super::fleet::cell_config;
 use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
+use crate::obs::{ObsConfig, TelemetrySeries};
 use crate::platform::{chaos_plan, run_platform, SchedPolicy};
 use crate::report::Report;
 use crate::sim::Host;
@@ -35,6 +36,12 @@ pub struct ChaosConfig {
     pub cores_per_node: u32,
     pub schedulers: Vec<SchedPolicy>,
     pub host: Host,
+    /// Collect interval time-series (S25) on the two focus cells — the
+    /// keep-alive flagship (`docker+fixed-600s+least-loaded`) and the
+    /// paper's row (`includeos+cold-only+least-loaded`) — and publish
+    /// them in the report.  Sampling is virtual-time pure, so every
+    /// metric (and the rest of the report) stays byte-identical.
+    pub timeseries: bool,
 }
 
 /// Derive an E14 configuration from the shared experiment config (same
@@ -54,6 +61,7 @@ pub fn chaos_config(cfg: &ExpConfig) -> ChaosConfig {
         cores_per_node: 8,
         schedulers: vec![SchedPolicy::LeastLoaded, SchedPolicy::CoLocate],
         host: cfg.host,
+        timeseries: false,
     }
 }
 
@@ -81,6 +89,12 @@ pub struct ChaosCell {
     pub steady_cold_fraction: f64,
     pub crashes: u64,
     pub restarts: u64,
+    /// Engine events across both legs — deterministic per seed.
+    pub events: u64,
+    /// Wall-clock seconds across both legs (not deterministic).
+    pub wall_s: f64,
+    /// Faulted-leg interval time-series; `None` off the focus cells.
+    pub telemetry: Option<TelemetrySeries>,
 }
 
 impl ChaosCell {
@@ -121,8 +135,10 @@ fn cells_over(cfg: &ChaosConfig, trace: &TenantTrace) -> Vec<ChaosCell> {
             }
         }
     }
+    // ~96 samples per run regardless of horizon (sparkline-width-ish).
+    let interval_ns = ((cfg.tenant.duration_s * 1e9) / 96.0).ceil().max(1.0) as u64;
     sweep::run_cells(&specs, |_, &(driver, scheduler, idx)| {
-        let cell = |faults| {
+        let cell = |faults, obs| {
             cell_config(
                 cfg.nodes,
                 cfg.cores_per_node,
@@ -131,15 +147,29 @@ fn cells_over(cfg: &ChaosConfig, trace: &TenantTrace) -> Vec<ChaosCell> {
                 scheduler,
                 trace,
                 faults,
+                obs,
             )
         };
+        // Telemetry rides only the faulted leg of the two focus cells:
+        // the keep-alive flagship and the paper's cold-only row.
+        let focus = cfg.timeseries
+            && scheduler == SchedPolicy::LeastLoaded
+            && matches!(
+                (driver, idx),
+                (DriverKind::DockerWarm, 1) | (DriverKind::IncludeOsCold, 0)
+            );
+        let obs = if focus {
+            ObsConfig { telemetry_interval_ns: interval_ns, ..ObsConfig::default() }
+        } else {
+            ObsConfig::default()
+        };
         let mut policy = make_policy(idx, cfg.tenant.functions);
-        let fcfg = cell(plan.clone());
+        let fcfg = cell(plan.clone(), obs);
         let f = run_platform(&fcfg, policy.as_mut(), cfg.host);
         // Baseline leg: same trace, seed, and disruption-window
         // classification (dry plan), but nothing is injected.
         let mut baseline = make_policy(idx, cfg.tenant.functions);
-        let bcfg = cell(plan.dry());
+        let bcfg = cell(plan.dry(), ObsConfig::default());
         let b = run_platform(&bcfg, baseline.as_mut(), cfg.host);
         ChaosCell {
             driver,
@@ -160,6 +190,9 @@ fn cells_over(cfg: &ChaosConfig, trace: &TenantTrace) -> Vec<ChaosCell> {
             steady_cold_fraction: f.steady_cold_fraction(),
             crashes: f.crashes,
             restarts: f.restarts,
+            events: f.profile.engine_events + b.profile.engine_events,
+            wall_s: (f.profile.wall_ns + b.profile.wall_ns) as f64 / 1e9,
+            telemetry: f.telemetry,
         }
     })
 }
@@ -182,6 +215,30 @@ pub fn chaos_with(cfg: &ChaosConfig) -> Report {
     let trace = TenantTrace::generate(&cfg.tenant);
     let n_trace = trace.len() as u64;
     let cells = cells_over(cfg, &trace);
+
+    // S25 self-profile: grid-total engine events are deterministic per
+    // seed (gated strictly by the bench compare); events/s is wall-clock
+    // and stays JSON-only informational.
+    let total_events: u64 = cells.iter().map(|c| c.events).sum();
+    let total_wall: f64 = cells.iter().map(|c| c.wall_s).sum();
+    let eps = if total_wall > 0.0 { total_events as f64 / total_wall } else { 0.0 };
+    report.set_profile(total_events, eps);
+    for c in &cells {
+        if let Some(t) = &c.telemetry {
+            for (name, points) in t.rows() {
+                report.add_timeseries(&format!("{} {name}", c.label()), t.interval_s(), points);
+            }
+        }
+    }
+    if cfg.timeseries {
+        report.band(
+            "focus cells sampled interval telemetry",
+            "series",
+            report.timeseries.iter().filter(|t| !t.points.is_empty()).count() as f64,
+            1.0,
+            f64::INFINITY,
+        );
+    }
 
     report.note(format!(
         "{:<36} {:>7} {:>7} {:>5} {:>5} {:>4} {:>6} {:>10} {:>9} {:>9} {:>8}",
@@ -348,6 +405,7 @@ mod tests {
             cores_per_node: 8,
             schedulers: vec![SchedPolicy::LeastLoaded],
             host: Host::default(),
+            timeseries: false,
         }
     }
 
@@ -399,6 +457,36 @@ mod tests {
             assert!(c.cold_spike() > 0.0, "{}: spike {}", c.label(), c.cold_spike());
             assert!(c.idle_gb_seconds > 0.0);
         }
+    }
+
+    #[test]
+    fn timeseries_leg_publishes_focus_cell_series() {
+        let mut cfg = small_cfg();
+        cfg.timeseries = true;
+        let r = chaos_with(&cfg);
+        assert!(r.all_pass(), "failures: {:#?}", r.failures());
+        // The acceptance floor: cold fraction and pool occupancy series
+        // for both focus cells, every point vector non-empty.
+        for cell in ["docker+fixed-600s", "includeos+cold-only"] {
+            for col in ["cold fraction", "pool slots"] {
+                assert!(
+                    r.timeseries
+                        .iter()
+                        .any(|t| t.label.starts_with(cell) && t.label.ends_with(col)),
+                    "missing series {cell} {col}"
+                );
+            }
+        }
+        assert!(r.timeseries.iter().all(|t| !t.points.is_empty()));
+        let j = r.to_json("e14", 0.0);
+        assert!(j.contains("\"timeseries\":[{"), "report JSON must carry the series");
+        // Sampling is pure observation: the rest of the report (every
+        // metric row and band) matches the telemetry-off run exactly.
+        let off = chaos_with(&small_cfg());
+        assert_eq!(off.notes, r.notes);
+        assert_eq!(off.events, r.events);
+        // Deterministic: same seed, same sparklines, byte for byte.
+        assert_eq!(r.render(), chaos_with(&cfg).render());
     }
 
     #[test]

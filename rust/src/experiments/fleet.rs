@@ -9,6 +9,7 @@
 
 use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::{DriverKind, DEFAULT_EXEC_MS};
+use crate::obs::ObsConfig;
 use crate::platform::presets::INCLUDEOS_PAUSED_BYTES;
 use crate::platform::{
     run_platform, DriverProfile, FaultPlan, ImageSeeding, PlatformConfig, PlatformLoad,
@@ -110,6 +111,7 @@ pub(crate) fn cell_config(
     scheduler: SchedPolicy,
     trace: &TenantTrace,
     faults: FaultPlan,
+    obs: ObsConfig,
 ) -> PlatformConfig {
     PlatformConfig {
         driver: DriverProfile::from_kind(driver),
@@ -140,6 +142,7 @@ pub(crate) fn cell_config(
         // streaming per-node histograms, not raw sample vectors.
         exact_latencies: false,
         faults,
+        obs,
         seed: tenant.seed,
     }
 }
@@ -174,6 +177,7 @@ pub fn fleet_cells_with(cfg: &FleetConfig, threads: usize) -> Vec<FleetCell> {
             scheduler,
             &trace,
             FaultPlan::default(),
+            ObsConfig::default(),
         );
         let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
         FleetCell {

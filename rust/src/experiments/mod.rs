@@ -16,6 +16,7 @@ pub mod fnlocal;
 pub mod images;
 pub mod planet;
 pub mod policies;
+pub mod replay;
 pub mod scaleout;
 pub mod sharing;
 pub mod startup;

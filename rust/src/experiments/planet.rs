@@ -22,6 +22,7 @@
 use super::fleet::cell_config;
 use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
+use crate::obs::{ObsConfig, TelemetrySeries};
 use crate::platform::{
     run_platform, FaultPlan, PlatformConfig, PlatformLoad, RequestPath, SchedPolicy,
 };
@@ -36,6 +37,10 @@ pub struct PlanetConfig {
     pub nodes: usize,
     pub cores_per_node: u32,
     pub host: Host,
+    /// Observability (S25) applied to every cell.  Time-series sampling
+    /// is virtual-time pure, so enabling it leaves every metric
+    /// untouched; tracing at planet scale wants `trace_window_only`.
+    pub obs: ObsConfig,
 }
 
 /// Derive an E15 configuration from the shared experiment config.  The
@@ -57,6 +62,7 @@ pub fn planet_config(cfg: &ExpConfig) -> PlanetConfig {
         nodes: 256,
         cores_per_node: 8,
         host: cfg.host,
+        obs: ObsConfig::default(),
     }
 }
 
@@ -75,6 +81,8 @@ pub struct PlanetCell {
     pub events: u64,
     /// Wall-clock seconds the cell's run took (not deterministic).
     pub wall_s: f64,
+    /// Interval time-series (S25); `None` unless telemetry was enabled.
+    pub telemetry: Option<TelemetrySeries>,
     /// On the Pareto frontier of (p99 latency, idle waste)?
     pub on_frontier: bool,
 }
@@ -104,7 +112,7 @@ impl PlanetCell {
 /// routing and pool machinery, not a shared single-frontend gateway
 /// that would serialize a 256-node fleet behind one box — and the
 /// streamed load.
-fn cell_platform_config(
+pub(crate) fn cell_platform_config(
     cfg: &PlanetConfig,
     driver: DriverKind,
     trace: &TenantTrace,
@@ -120,6 +128,7 @@ fn cell_platform_config(
             SchedPolicy::LeastLoaded,
             trace,
             FaultPlan::default(),
+            cfg.obs.clone(),
         )
     }
 }
@@ -161,6 +170,7 @@ pub fn planet_cells(cfg: &PlanetConfig) -> Vec<PlanetCell> {
             monitor_events: r.monitor_events,
             events: r.events,
             wall_s: t0.elapsed().as_secs_f64(),
+            telemetry: r.telemetry,
             on_frontier: false,
         }
     });
@@ -181,6 +191,21 @@ pub fn planet_with(cfg: &PlanetConfig) -> Report {
         cfg.tenant.duration_s
     ));
     let cells = planet_cells(cfg);
+
+    // S25 self-profile: total engine events are deterministic per seed
+    // (gated strictly); the throughput quotient is wall-clock and stays
+    // JSON-only informational.
+    let total_events: u64 = cells.iter().map(|c| c.events).sum();
+    let total_wall: f64 = cells.iter().map(|c| c.wall_s).sum();
+    let eps = if total_wall > 0.0 { total_events as f64 / total_wall } else { 0.0 };
+    report.set_profile(total_events, eps);
+    for c in &cells {
+        if let Some(t) = &c.telemetry {
+            for (name, points) in t.rows() {
+                report.add_timeseries(&format!("{} {name}", c.label()), t.interval_s(), points);
+            }
+        }
+    }
 
     report.note(format!(
         "{:<22} {:>9} {:>8} {:>9} {:>7} {:>12} {:>10} {:>11}  {}",
@@ -289,6 +314,7 @@ mod tests {
             nodes: 64,
             cores_per_node: 4,
             host: Host::default(),
+            obs: ObsConfig::default(),
         }
     }
 
@@ -344,6 +370,23 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn telemetry_leg_is_metric_pure() {
+        let off = planet_cells(&tiny_cfg());
+        let mut cfg = tiny_cfg();
+        cfg.obs.telemetry_interval_ns = 5_000_000_000;
+        let on = planet_cells(&cfg);
+        for (a, b) in off.iter().zip(&on) {
+            assert_eq!(a.label(), b.label());
+            assert!(a.telemetry.is_none());
+            assert!(b.telemetry.as_ref().is_some_and(|t| !t.is_empty()), "{}", b.label());
+            // Sampling is pure observation: every metric stays bit-equal.
+            assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits(), "{}", a.label());
+            assert_eq!(a.idle_gb_seconds.to_bits(), b.idle_gb_seconds.to_bits());
+            assert_eq!(a.events, b.events, "telemetry must not add engine events");
+        }
     }
 
     #[test]

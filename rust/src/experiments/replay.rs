@@ -1,0 +1,257 @@
+//! `coldfaas trace` (S25): replay one experiment cell with the
+//! observability layer armed — lifecycle spans streamed into a Chrome
+//! `trace_event` file, optional interval telemetry — without touching
+//! the experiment's own pinned reports.
+//!
+//! The replayed grid is exactly E14's (fleet-shaped cells under the
+//! scripted chaos plan or its dry baseline leg), so a captured trace
+//! lines up one-to-one with a chaos report row: same tenant trace, same
+//! seed, same disruption windows.  Because every sink is a pure observer
+//! and all timestamps are virtual time, the trace file itself is
+//! byte-identical per seed — a property the regression suite pins.
+
+use super::chaos::ChaosConfig;
+use super::fleet::cell_config;
+use super::planet::{cell_platform_config, PlanetConfig};
+use super::{make_policy, POLICY_COUNT};
+use crate::fnplat::DriverKind;
+use crate::obs::ObsConfig;
+use crate::platform::{chaos_plan, run_platform, PlatformResult, SchedPolicy};
+use crate::report::Report;
+use crate::workload::tenants::TenantTrace;
+
+/// The cell a `coldfaas trace` run replays unless told otherwise: the
+/// keep-alive flagship row of the chaos grid (the busiest lifecycle —
+/// warm claims, crash-drained pools, retries — all on one timeline).
+pub const DEFAULT_CELL: &str = "docker+fixed-600s+least-loaded";
+
+/// Parse an E14 cell label (`driver+policy+scheduler`, e.g.
+/// `includeos+cold-only+least-loaded`) into its grid coordinates.
+pub fn parse_cell(label: &str, functions: u32) -> Result<(DriverKind, usize, SchedPolicy), String> {
+    let mut parts = label.splitn(3, '+');
+    let (Some(d), Some(p), Some(s)) = (parts.next(), parts.next(), parts.next()) else {
+        return Err(format!("cell '{label}': expected driver+policy+scheduler"));
+    };
+    let driver = match d {
+        "docker" => DriverKind::DockerWarm,
+        "includeos" => DriverKind::IncludeOsCold,
+        other => return Err(format!("cell '{label}': unknown driver '{other}'")),
+    };
+    let policy_idx = (0..POLICY_COUNT)
+        .find(|&i| make_policy(i, functions).name() == p)
+        .ok_or_else(|| format!("cell '{label}': unknown policy '{p}'"))?;
+    let scheduler = SchedPolicy::ALL
+        .into_iter()
+        .find(|sp| sp.name() == s)
+        .ok_or_else(|| format!("cell '{label}': unknown scheduler '{s}'"))?;
+    Ok((driver, policy_idx, scheduler))
+}
+
+/// Outcome of one traced replay; the Chrome trace JSON (if tracing was
+/// on) rides on `result.trace_json`.
+pub struct ReplayOutcome {
+    pub label: String,
+    /// Which leg/grid ran, for the report title (e.g. "faulted leg").
+    pub leg: &'static str,
+    /// The grid the cell came from (nodes, seed — for the report title).
+    pub grid: String,
+    pub result: PlatformResult,
+}
+
+/// Replay one chaos-grid cell under `obs`.  `faulted` picks the leg:
+/// the scripted plan or its dry twin (same windows, nothing injected).
+pub fn replay_chaos_cell(
+    cfg: &ChaosConfig,
+    cell: &str,
+    obs: &ObsConfig,
+    faulted: bool,
+) -> Result<ReplayOutcome, String> {
+    let (driver, policy_idx, scheduler) = parse_cell(cell, cfg.tenant.functions)?;
+    let trace = TenantTrace::generate(&cfg.tenant);
+    let horizon_ns = (cfg.tenant.duration_s * 1e9) as u64;
+    let plan = chaos_plan(cfg.nodes, horizon_ns);
+    let plan = if faulted { plan } else { plan.dry() };
+    let pcfg = cell_config(
+        cfg.nodes,
+        cfg.cores_per_node,
+        &cfg.tenant,
+        driver,
+        scheduler,
+        &trace,
+        plan,
+        obs.clone(),
+    );
+    let mut policy = make_policy(policy_idx, cfg.tenant.functions);
+    let result = run_platform(&pcfg, policy.as_mut(), cfg.host);
+    Ok(ReplayOutcome {
+        label: cell.to_string(),
+        leg: if faulted { "faulted leg" } else { "dry baseline leg" },
+        grid: format!("E14 chaos grid, {} nodes, seed {:#x}", cfg.nodes, cfg.tenant.seed),
+        result,
+    })
+}
+
+/// Replay one planet-grid cell (`driver+policy`, e.g. `docker+ewma`)
+/// under `obs`.  Planet-scale captures want `trace_window_only` off (the
+/// plan is fault-free, so windows are empty) and a `trace_capacity` cap.
+pub fn replay_planet_cell(
+    cfg: &PlanetConfig,
+    cell: &str,
+    obs: &ObsConfig,
+) -> Result<ReplayOutcome, String> {
+    let mut parts = cell.splitn(2, '+');
+    let (Some(d), Some(p)) = (parts.next(), parts.next()) else {
+        return Err(format!("cell '{cell}': expected driver+policy"));
+    };
+    let driver = match d {
+        "docker" => DriverKind::DockerWarm,
+        "includeos" => DriverKind::IncludeOsCold,
+        other => return Err(format!("cell '{cell}': unknown driver '{other}'")),
+    };
+    let policy_idx = (0..POLICY_COUNT)
+        .find(|&i| make_policy(i, cfg.tenant.functions).name() == p)
+        .ok_or_else(|| format!("cell '{cell}': unknown policy '{p}'"))?;
+    let mut obs_cfg = cfg.clone();
+    obs_cfg.obs = obs.clone();
+    let trace = TenantTrace::generate(&obs_cfg.tenant);
+    let pcfg = cell_platform_config(&obs_cfg, driver, &trace);
+    let mut policy = make_policy(policy_idx, obs_cfg.tenant.functions);
+    let result = run_platform(&pcfg, policy.as_mut(), obs_cfg.host);
+    Ok(ReplayOutcome {
+        label: cell.to_string(),
+        leg: "streamed replay",
+        grid: format!("E15 planet grid, {} nodes, seed {:#x}", cfg.nodes, cfg.tenant.seed),
+        result,
+    })
+}
+
+/// Human/machine summary of a traced replay (what `coldfaas trace`
+/// prints and writes next to the trace file).
+pub fn replay_report(out: &ReplayOutcome) -> Report {
+    let r = &out.result;
+    let title = format!("TRACE: cell {} ({}; {})", out.label, out.leg, out.grid);
+    let mut report = Report::new(&title);
+    report.set_profile(r.profile.engine_events, r.profile.events_per_s());
+    if let Some(t) = &r.telemetry {
+        for (name, points) in t.rows() {
+            report.add_timeseries(name, t.interval_s(), points);
+        }
+    }
+    report.note(format!(
+        "served {} / killed {} / retries {} / rejected {} / crashes {} / restarts {}",
+        r.served, r.killed, r.retries, r.rejected, r.crashes, r.restarts
+    ));
+    if let Some(json) = &r.trace_json {
+        report.note(format!(
+            "trace captured: {} bytes of Chrome trace_event JSON \
+             ({} events evicted by the ring buffer) — load it in \
+             chrome://tracing or https://ui.perfetto.dev",
+            json.len(),
+            r.trace_dropped
+        ));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Json;
+    use crate::sim::Host;
+    use crate::workload::tenants::TenantConfig;
+
+    fn cfg() -> ChaosConfig {
+        ChaosConfig {
+            tenant: TenantConfig {
+                functions: 200,
+                duration_s: 30.0,
+                total_rps: 40.0,
+                seed: 0x7ACE,
+                ..Default::default()
+            },
+            nodes: 4,
+            cores_per_node: 4,
+            schedulers: vec![SchedPolicy::LeastLoaded],
+            host: Host::default(),
+            timeseries: false,
+        }
+    }
+
+    #[test]
+    fn cell_labels_round_trip_the_grid() {
+        for d in ["docker", "includeos"] {
+            for p in ["cold-only", "fixed-600s", "histogram", "ewma"] {
+                for s in SchedPolicy::ALL {
+                    let label = format!("{d}+{p}+{}", s.name());
+                    let (driver, idx, sched) = parse_cell(&label, 100).unwrap();
+                    assert_eq!(make_policy(idx, 100).name(), p);
+                    assert_eq!(sched, s);
+                    let want = match d {
+                        "docker" => DriverKind::DockerWarm,
+                        _ => DriverKind::IncludeOsCold,
+                    };
+                    assert_eq!(driver, want);
+                }
+            }
+        }
+        assert!(parse_cell("docker+fixed-600s", 100).is_err());
+        assert!(parse_cell("podman+cold-only+spread", 100).is_err());
+        assert!(parse_cell("docker+lru+spread", 100).is_err());
+        assert!(parse_cell("docker+cold-only+random", 100).is_err());
+        parse_cell(DEFAULT_CELL, 100).expect("default cell must parse");
+    }
+
+    #[test]
+    fn traced_chaos_replay_is_byte_identical_per_seed() {
+        let obs = ObsConfig { trace: true, ..Default::default() };
+        let run = || {
+            replay_chaos_cell(&cfg(), DEFAULT_CELL, &obs, true)
+                .unwrap()
+                .result
+                .trace_json
+                .expect("tracing was on")
+        };
+        let a = run();
+        assert!(!a.is_empty());
+        assert_eq!(a, run(), "same seed must produce the same trace bytes");
+        // And the capture is well-formed Chrome trace JSON.
+        let doc = Json::parse(&a).expect("trace must parse");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert!(!events.is_empty());
+    }
+
+    #[test]
+    fn tracing_leaves_measurements_byte_identical() {
+        let off = replay_chaos_cell(&cfg(), DEFAULT_CELL, &ObsConfig::default(), true).unwrap();
+        let obs =
+            ObsConfig { trace: true, telemetry_interval_ns: 1_000_000_000, ..Default::default() };
+        let on = replay_chaos_cell(&cfg(), DEFAULT_CELL, &obs, true).unwrap();
+        let (a, b) = (&off.result, &on.result);
+        assert!(a.trace_json.is_none() && b.trace_json.is_some());
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.killed, b.killed);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.idle_gb_seconds.to_bits(), b.idle_gb_seconds.to_bits());
+        assert_eq!(a.quantile_ms(0.99).to_bits(), b.quantile_ms(0.99).to_bits());
+        assert_eq!(a.events, b.events, "observation must not add engine events");
+    }
+
+    #[test]
+    fn window_capture_and_ring_cap_bound_the_trace() {
+        let full = ObsConfig { trace: true, ..Default::default() };
+        let windowed = ObsConfig { trace: true, trace_window_only: true, ..Default::default() };
+        let capped = ObsConfig { trace: true, trace_capacity: 64, ..Default::default() };
+        let size = |obs: &ObsConfig| {
+            let r = replay_chaos_cell(&cfg(), DEFAULT_CELL, obs, true).unwrap().result;
+            (r.trace_json.unwrap().len(), r.trace_dropped)
+        };
+        let (full_len, full_dropped) = size(&full);
+        let (win_len, _) = size(&windowed);
+        let (cap_len, cap_dropped) = size(&capped);
+        assert_eq!(full_dropped, 0);
+        assert!(win_len < full_len, "window capture must shrink the trace");
+        assert!(cap_len < full_len, "ring cap must bound the trace");
+        assert!(cap_dropped > 0, "the cap must actually have evicted events");
+    }
+}

@@ -163,6 +163,7 @@ pub fn sharing_cells(cfg: &SharingConfig) -> Vec<SharingCell> {
             SchedPolicy::LeastLoaded,
             &trace,
             FaultPlan::default(),
+            crate::obs::ObsConfig::default(),
         );
         pcfg.sharing = mode;
         if mode != SharingMode::Exclusive {

@@ -103,8 +103,18 @@ pub struct WarmPool {
     next_serial: u64,
     /// Total executors alive (idle + busy) per sharing key.
     alive: HashMap<String, u64>,
+    /// Idle warm executors currently enqueued across all keys (gauge for
+    /// telemetry; a slot counts as live until a claim, expiry sweep, or
+    /// drain removes it).
+    idle_live: u64,
     // --- accounting ---
     pub idle_mem_byte_ns: u128,
+    /// Liveness polls the platform would have issued against idle warm
+    /// executors (`idle time / poll period`) — the paper's "extensive
+    /// monitoring requirements" priced as a count.  This is platform
+    /// *work the warm pool causes*, distinct from both the engine's event
+    /// count and the telemetry layer's own sample count (S25): cold-only
+    /// presets keep it at zero because nothing ever idles.
     pub monitor_events: u64,
     pub warm_hits: u64,
     /// Claims of a runtime-warm slot owned by a different function
@@ -128,6 +138,7 @@ impl WarmPool {
             idle: HashMap::new(),
             next_serial: 0,
             alive: HashMap::new(),
+            idle_live: 0,
             idle_mem_byte_ns: 0,
             monitor_events: 0,
             warm_hits: 0,
@@ -147,6 +158,7 @@ impl WarmPool {
     fn insert_slot(&mut self, func: &str, slot: WarmSlot) {
         let serial = self.next_serial;
         self.next_serial += 1;
+        self.idle_live += 1;
         let fs = self.idle.entry(func.to_string()).or_default();
         fs.slots.insert(serial, slot);
         fs.lifo.push(serial);
@@ -170,6 +182,7 @@ impl WarmPool {
         }
         if !charges.is_empty() {
             fs.compact();
+            self.idle_live -= charges.len() as u64;
             self.expirations += charges.len() as u64;
             let a = self.alive.get_mut(func).expect("alive entry");
             *a -= (charges.len() as u64).min(*a);
@@ -242,6 +255,7 @@ impl WarmPool {
         });
         match slot {
             Some(s) => {
+                self.idle_live -= 1;
                 self.account_idle(now - s.idle_since_ns);
                 if s.owner == owner {
                     self.warm_hits += 1;
@@ -362,6 +376,7 @@ impl WarmPool {
                 let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
                 fs.lifo.clear();
                 fs.by_deadline.clear();
+                self.idle_live -= slots.len() as u64;
                 for s in slots {
                     let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
                     self.account_idle(idle_ns);
@@ -382,6 +397,7 @@ impl WarmPool {
                 fs.lifo.clear();
                 fs.by_deadline.clear();
                 let n = slots.len() as u64;
+                self.idle_live -= n;
                 self.expirations += n;
                 if let Some(a) = self.alive.get_mut(&f) {
                     *a -= n.min(*a);
@@ -417,8 +433,22 @@ impl WarmPool {
         // Busy executors die too (their in-flight requests are killed by
         // the caller); nothing survives on the node.
         self.alive.clear();
+        self.idle_live = 0;
         self.crash_drains += dropped;
         dropped
+    }
+
+    /// Idle warm executors currently enqueued across all sharing keys —
+    /// the telemetry pool-occupancy gauge.  Includes slots whose deadline
+    /// has passed but which no claim or sweep has purged yet (expiry is
+    /// lazy; the accounting charges them identically either way).
+    pub fn idle_live(&self) -> u64 {
+        self.idle_live
+    }
+
+    /// Resident bytes the currently idle executors hold.
+    pub fn idle_bytes(&self) -> u64 {
+        self.idle_live.saturating_mul(self.mem_bytes_per_slot)
     }
 
     /// Headline waste metric in gigabyte-seconds.
@@ -802,6 +832,32 @@ mod tests {
             assert_eq!(c.dispatch(), Dispatch::Cold);
         }
         assert_eq!(c.starts, 100);
+    }
+
+    #[test]
+    fn idle_live_gauge_tracks_claims_expiry_and_drains() {
+        let mut p = pool();
+        assert_eq!((p.idle_live(), p.idle_bytes()), (0, 0));
+        p.prewarm("f", 3, 0);
+        p.dispatch("g", 0);
+        p.release("g", 0);
+        assert_eq!(p.idle_live(), 4);
+        assert_eq!(p.idle_bytes(), 4 * (16 << 20));
+        p.dispatch("f", S); // claim drops one
+        assert_eq!(p.idle_live(), 3);
+        p.expire("f", 31 * S); // prewarmed pair expires
+        assert_eq!(p.idle_live(), 1);
+        assert_eq!(p.crash(40 * S), 1); // the g slot is lazily live until drained
+        assert_eq!(p.idle_live(), 0);
+
+        let mut q = pool();
+        q.prewarm("f", 2, 0);
+        q.finalize(5 * S);
+        assert_eq!(q.idle_live(), 0, "finalize drains the gauge");
+        let mut r = pool();
+        r.prewarm("f", 2, 0);
+        r.finalize_expiring();
+        assert_eq!(r.idle_live(), 0, "finalize_expiring drains the gauge");
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod image;
 pub mod lambda;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod platform;
 pub mod policy;
 pub mod report;

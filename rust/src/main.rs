@@ -7,6 +7,7 @@
 //!   chaos                   fault-injection sweep (E14): the fleet under node crashes
 //!   planet                  planet sweep (E15): 256 nodes, 10k fns, millions of requests
 //!   sharing                 universal-worker sharing sweep (E16): shared warm pools
+//!   trace                   replay one experiment cell with lifecycle tracing on
 //!   compare                 bench-regression gate: diff two BENCH_*.json reports
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
@@ -30,6 +31,7 @@ fn main() {
         "chaos" => cmd_chaos(&args),
         "planet" => cmd_planet(&args),
         "sharing" => cmd_sharing(&args),
+        "trace" => cmd_trace(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
@@ -101,6 +103,12 @@ USAGE: coldfaas <subcommand> [options]
       --zipf S              popularity exponent (default 1.1)
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
+      --timeseries          sample interval telemetry (cold fraction, pool
+                            occupancy, ...) on the two focus cells
+      --trace FILE          also write a Chrome trace_event capture of the
+                            flagship cell (docker+fixed-600s+least-loaded)
+      --trace-window        keep only trace events inside disruption windows
+      --trace-capacity N    ring-buffer cap on retained trace events (0 = all)
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -117,6 +125,7 @@ USAGE: coldfaas <subcommand> [options]
       --zipf S              popularity exponent (default 1.1)
       --seed N              deterministic seed
       --quick               reduced trace (same 256-node cluster)
+      --timeseries          sample interval telemetry on every cell
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -137,6 +146,23 @@ USAGE: coldfaas <subcommand> [options]
       --zipf S              popularity exponent (default 1.1)
       --seed N              deterministic seed
       --quick               reduced load for smoke runs
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  trace [cell]              replay one experiment cell with the observability
+                            layer armed and write a Chrome trace_event file
+                            (load it in chrome://tracing or
+                            https://ui.perfetto.dev); default cell:
+                            docker+fixed-600s+least-loaded
+      --experiment NAME     chaos (cells driver+policy+scheduler) or
+                            planet (cells driver+policy); default chaos
+      --baseline            replay the dry fault-free leg (chaos only)
+      --trace FILE          trace output path (default trace.json)
+      --trace-window        keep only trace events inside disruption windows
+      --trace-capacity N    ring-buffer cap on retained trace events (0 = all)
+      --timeseries          also sample interval telemetry into the report
+      --nodes/--cores/--functions/--rps/--duration/--zipf/--seed/--quick
+                            grid shape, as for chaos/planet
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -318,12 +344,46 @@ fn cmd_fleet(args: &Args) -> i32 {
     finish_report(args, "fleet", report, t0.elapsed().as_secs_f64())
 }
 
+/// ~96 telemetry samples across the virtual horizon (the same sampling
+/// density the chaos focus cells use internally).
+fn telemetry_interval_ns(duration_s: f64) -> u64 {
+    ((duration_s * 1e9) / 96.0).ceil().max(1.0) as u64
+}
+
+/// Build the tracing config from the shared `--trace-window` /
+/// `--trace-capacity` flags (telemetry is wired separately).
+fn trace_obs(args: &Args) -> Result<coldfaas::obs::ObsConfig, String> {
+    Ok(coldfaas::obs::ObsConfig {
+        trace: true,
+        trace_capacity: args.try_get_u64("trace-capacity", 0)? as usize,
+        trace_window_only: args.has_flag("trace-window"),
+        telemetry_interval_ns: 0,
+    })
+}
+
+/// Write a captured Chrome trace to `path`; false on I/O failure.
+fn write_trace(path: &str, out: &coldfaas::experiments::replay::ReplayOutcome) -> bool {
+    let json = out.result.trace_json.as_deref().unwrap_or_default();
+    match std::fs::write(path, json) {
+        Ok(()) => {
+            println!("  trace of cell {} written to {path} ({} bytes)", out.label, json.len());
+            true
+        }
+        Err(e) => {
+            eprintln!("write --trace {path}: {e}");
+            false
+        }
+    }
+}
+
 fn cmd_chaos(args: &Args) -> i32 {
     use coldfaas::experiments::chaos::{chaos_config, chaos_with};
+    use coldfaas::experiments::replay::{replay_chaos_cell, DEFAULT_CELL};
     let cfg = exp_config(args).and_then(|base| {
         let mut cfg = chaos_config(&base);
         cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
         cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        cfg.timeseries = args.has_flag("timeseries");
         tenant_flags(args, &mut cfg.tenant)?;
         if cfg.nodes < 2 || cfg.nodes > coldfaas::platform::MAX_NODES {
             return Err(format!(
@@ -342,7 +402,30 @@ fn cmd_chaos(args: &Args) -> i32 {
     };
     let t0 = std::time::Instant::now();
     let report = chaos_with(&cfg);
-    finish_report(args, "chaos", report, t0.elapsed().as_secs_f64())
+    let wall_s = t0.elapsed().as_secs_f64();
+    // `--trace FILE`: additionally replay the flagship cell's faulted leg
+    // with tracing armed and stream the capture next to the report.  The
+    // replay is a pure observer pass — the report above is untouched.
+    let mut trace_ok = true;
+    if let Some(path) = args.get("trace") {
+        let obs = match trace_obs(args) {
+            Ok(obs) => obs,
+            Err(e) => return usage_error("chaos", &e),
+        };
+        trace_ok = match replay_chaos_cell(&cfg, DEFAULT_CELL, &obs, true) {
+            Ok(out) => write_trace(path, &out),
+            Err(e) => {
+                eprintln!("chaos --trace: {e}");
+                false
+            }
+        };
+    }
+    let code = finish_report(args, "chaos", report, wall_s);
+    if trace_ok {
+        code
+    } else {
+        code.max(1)
+    }
 }
 
 fn cmd_planet(args: &Args) -> i32 {
@@ -352,6 +435,9 @@ fn cmd_planet(args: &Args) -> i32 {
         cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
         cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
         tenant_flags(args, &mut cfg.tenant)?;
+        if args.has_flag("timeseries") {
+            cfg.obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
+        }
         if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
             return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
         }
@@ -397,6 +483,71 @@ fn cmd_sharing(args: &Args) -> i32 {
     let t0 = std::time::Instant::now();
     let report = sharing_with(&cfg);
     finish_report(args, "sharing", report, t0.elapsed().as_secs_f64())
+}
+
+/// `coldfaas trace [cell]` (S25): replay one chaos/planet grid cell with
+/// the observability layer armed, write the Chrome trace next to a small
+/// replay report.  Pure observer — grid reports and pins are untouched.
+fn cmd_trace(args: &Args) -> i32 {
+    use coldfaas::experiments::chaos::chaos_config;
+    use coldfaas::experiments::planet::planet_config;
+    use coldfaas::experiments::replay::{
+        replay_chaos_cell, replay_planet_cell, replay_report, DEFAULT_CELL,
+    };
+    let cell = args.positional.first().map(String::as_str).unwrap_or(DEFAULT_CELL).to_string();
+    let experiment = args.get_or("experiment", "chaos");
+    let path = args.get_or("trace", "trace.json");
+    let t0 = std::time::Instant::now();
+    let outcome = exp_config(args).and_then(|base| {
+        let mut obs = trace_obs(args)?;
+        if args.try_get_u32("cores", 1)? == 0 {
+            return Err("--cores must be positive".to_string());
+        }
+        match experiment.as_str() {
+            "chaos" => {
+                let mut cfg = chaos_config(&base);
+                cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+                cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+                tenant_flags(args, &mut cfg.tenant)?;
+                if cfg.nodes < 2 || cfg.nodes > coldfaas::platform::MAX_NODES {
+                    return Err(format!(
+                        "--nodes must be in 2..={} (a node must survive the fault plan)",
+                        coldfaas::platform::MAX_NODES
+                    ));
+                }
+                if args.has_flag("timeseries") {
+                    obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
+                }
+                replay_chaos_cell(&cfg, &cell, &obs, !args.has_flag("baseline"))
+            }
+            "planet" => {
+                if args.has_flag("baseline") {
+                    return Err("--baseline only applies to --experiment chaos".to_string());
+                }
+                let mut cfg = planet_config(&base);
+                cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+                cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+                tenant_flags(args, &mut cfg.tenant)?;
+                if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+                    return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
+                }
+                if args.has_flag("timeseries") {
+                    obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
+                }
+                replay_planet_cell(&cfg, &cell, &obs)
+            }
+            other => Err(format!("--experiment must be chaos or planet, got '{other}'")),
+        }
+    });
+    let out = match outcome {
+        Ok(out) => out,
+        Err(e) => return usage_error("trace", &e),
+    };
+    if !write_trace(&path, &out) {
+        return 1;
+    }
+    let report = replay_report(&out);
+    finish_report(args, "trace", report, t0.elapsed().as_secs_f64())
 }
 
 fn cmd_compare(args: &Args) -> i32 {

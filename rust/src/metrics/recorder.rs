@@ -1,6 +1,7 @@
 //! Exact-quantile latency recorder, keyed by a label, plus the boxplot
 //! statistics the paper uses (whiskers at p1/p99, box at p25/p50/p75).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 /// Boxplot summary in milliseconds, matching the paper's figures.
@@ -25,11 +26,26 @@ impl BoxStats {
     }
 }
 
-/// Collects raw samples per label; quantiles are exact (sorted copy).
-/// BTreeMap keeps report ordering stable across runs.
-#[derive(Default, Clone)]
+/// Collects raw samples per label; quantiles are exact (nearest-rank on
+/// sorted samples).  BTreeMap keeps report ordering stable across runs.
+///
+/// Quantile/stat reads used to clone-and-sort the sample vector on every
+/// call, which made report assembly quadratic-ish for callers probing
+/// several quantiles per label.  Sorted copies are now memoized per label
+/// behind a `RefCell` (readers keep `&self` — call sites interleave
+/// closures over `&Recorder` with direct reads) and invalidated on write.
+/// `Recorder` is never shared across threads, so the `!Sync` cell is fine.
+#[derive(Default)]
 pub struct Recorder {
     series: BTreeMap<String, Vec<f64>>,
+    sorted: RefCell<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Clone for Recorder {
+    fn clone(&self) -> Self {
+        // The memo is a pure cache; a clone starts cold.
+        Recorder { series: self.series.clone(), sorted: RefCell::new(BTreeMap::new()) }
+    }
 }
 
 impl Recorder {
@@ -38,12 +54,24 @@ impl Recorder {
     }
 
     pub fn record_ms(&mut self, label: &str, ms: f64) {
-        match self.series.get_mut(label) {
-            Some(v) => v.push(ms),
-            None => {
-                self.series.insert(label.to_string(), vec![ms]);
-            }
+        self.sorted.get_mut().remove(label);
+        self.series.entry(label.to_string()).or_default().push(ms);
+    }
+
+    /// Run `f` over the sorted samples for `label`, building (and
+    /// memoizing) the sorted copy on first read after a write.
+    fn with_sorted<T>(&self, label: &str, f: impl FnOnce(&[f64]) -> T) -> Option<T> {
+        let v = self.series.get(label)?;
+        if v.is_empty() {
+            return None;
         }
+        let mut cache = self.sorted.borrow_mut();
+        let s = cache.entry(label.to_string()).or_insert_with(|| {
+            let mut s = v.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        });
+        Some(f(s))
     }
 
     pub fn record_ns(&mut self, label: &str, ns: u64) {
@@ -64,43 +92,32 @@ impl Recorder {
 
     /// Exact quantile (nearest-rank on the sorted samples), q in [0, 1].
     pub fn quantile(&self, label: &str, q: f64) -> Option<f64> {
-        let v = self.series.get(label)?;
-        if v.is_empty() {
-            return None;
-        }
-        let mut s = v.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(quantile_sorted(&s, q))
+        self.with_sorted(label, |s| quantile_sorted(s, q))
     }
 
     pub fn stats(&self, label: &str) -> Option<BoxStats> {
-        let v = self.series.get(label)?;
-        if v.is_empty() {
-            return None;
-        }
-        let mut s = v.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = s.iter().sum::<f64>() / s.len() as f64;
-        Some(BoxStats {
+        self.with_sorted(label, |s| BoxStats {
             n: s.len(),
-            p1: quantile_sorted(&s, 0.01),
-            p25: quantile_sorted(&s, 0.25),
-            p50: quantile_sorted(&s, 0.50),
-            p75: quantile_sorted(&s, 0.75),
-            p99: quantile_sorted(&s, 0.99),
-            mean,
+            p1: quantile_sorted(s, 0.01),
+            p25: quantile_sorted(s, 0.25),
+            p50: quantile_sorted(s, 0.50),
+            p75: quantile_sorted(s, 0.75),
+            p99: quantile_sorted(s, 0.99),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
             max: *s.last().unwrap(),
         })
     }
 
     pub fn merge(&mut self, other: &Recorder) {
         for (k, v) in &other.series {
+            self.sorted.get_mut().remove(k);
             self.series.entry(k.clone()).or_default().extend_from_slice(v);
         }
     }
 
     pub fn clear(&mut self) {
         self.series.clear();
+        self.sorted.get_mut().clear();
     }
 }
 
@@ -173,6 +190,24 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count("x"), 2);
         assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn sorted_cache_invalidates_on_write_merge_and_clone() {
+        let mut r = Recorder::new();
+        r.record_ms("a", 5.0);
+        assert_eq!(r.quantile("a", 1.0), Some(5.0)); // memoize
+        r.record_ms("a", 9.0); // write must invalidate
+        assert_eq!(r.quantile("a", 1.0), Some(9.0));
+        let mut other = Recorder::new();
+        other.record_ms("a", 11.0);
+        r.merge(&other); // merge must invalidate too
+        assert_eq!(r.quantile("a", 1.0), Some(11.0));
+        let c = r.clone(); // clones read correctly from a cold cache
+        assert_eq!(c.quantile("a", 1.0), Some(11.0));
+        assert_eq!(c.stats("a").map(|s| s.n), Some(3));
+        r.clear();
+        assert!(r.quantile("a", 0.5).is_none());
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Deterministic observability (S25): lifecycle trace sinks, interval
+//! time-series telemetry, and coarse simulator self-profiling.
+//!
+//! Everything in this module observes the simulation without perturbing
+//! it: no sink or collector ever schedules an engine event, draws from an
+//! RNG, or changes a counter the metrics read — so a run with tracing or
+//! telemetry enabled produces byte-identical *measurements* to the same
+//! run with the default [`NullSink`], and the trace/telemetry output
+//! itself is byte-identical per seed (timestamps are virtual time).
+//!
+//! Three layers:
+//!
+//! * **Lifecycle spans** ([`trace`]): every placed request opens a span
+//!   on its node's "thread" at dispatch and closes it at completion;
+//!   faults (crash, restart, retry, reject, brown-out) land as instant /
+//!   duration events.  The [`TraceSink`] trait keeps the hot path free of
+//!   allocation when tracing is off ([`NullSink`] is a no-op); the
+//!   [`ChromeTraceSink`] streams Chrome `trace_event` JSON that loads
+//!   straight into `chrome://tracing` / Perfetto, with a bounded ring
+//!   buffer and optional disruption-window filtering for planet-scale
+//!   runs.
+//! * **Interval telemetry** ([`telemetry`]): per-interval dispatch rates,
+//!   cold fraction, pool occupancy, idle GB, in-flight and retry/reject
+//!   counts, sampled lazily at event boundaries (no timer events are
+//!   injected) into columnar series the report layer serializes and
+//!   renders as sparklines.
+//! * **Self-profiling** ([`profile`]): coarse phase accounting — how many
+//!   dispatch decisions, pool effects, fault effects, and completions a
+//!   run processed, its exact engine event count (compared strictly by
+//!   the bench gate), and the wall-clock `events/s` throughput
+//!   (informational only: it depends on the machine).
+
+pub mod profile;
+pub mod telemetry;
+pub mod trace;
+
+pub use profile::PhaseProfile;
+pub use telemetry::{Gauges, Telemetry, TelemetrySeries};
+pub use trace::{ChromeTraceSink, NullSink, TraceSink};
+
+/// Per-run observability configuration.  The default is everything off:
+/// the platform uses the [`NullSink`] and takes no telemetry samples, so
+/// pre-existing runs stay byte-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Record lifecycle spans into a [`ChromeTraceSink`]; the trace JSON
+    /// comes back on the platform result.
+    pub trace: bool,
+    /// Ring-buffer capacity for trace events (0 = unbounded).  Metadata
+    /// records are never evicted; when the ring is full the *oldest*
+    /// event is dropped and counted, so a capped trace keeps the most
+    /// recent window of activity.
+    pub trace_capacity: usize,
+    /// Keep only trace events inside the fault plan's disruption windows
+    /// (crash .. restart + spike window, plus fabric brown-outs) — the
+    /// planet-scale capture mode.
+    pub trace_window_only: bool,
+    /// Telemetry sampling interval in virtual nanoseconds (0 = off).
+    pub telemetry_interval_ns: u64,
+}
+
+impl ObsConfig {
+    /// True when this config observes nothing (the byte-identity default).
+    pub fn is_off(&self) -> bool {
+        !self.trace && self.telemetry_interval_ns == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_observes_nothing() {
+        let cfg = ObsConfig::default();
+        assert!(cfg.is_off());
+        assert!(!ObsConfig { trace: true, ..Default::default() }.is_off());
+        assert!(!ObsConfig { telemetry_interval_ns: 1, ..Default::default() }.is_off());
+    }
+}

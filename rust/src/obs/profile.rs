@@ -1,0 +1,52 @@
+//! Simulator self-profiling: coarse phase accounting per platform run.
+//!
+//! The counters are pure functions of the seed (they count domain
+//! callbacks and engine events, all deterministic); only `wall_ns` — and
+//! therefore [`PhaseProfile::events_per_s`] — depends on the machine,
+//! which is why the bench compare gate treats `events` as an exact field
+//! and `events/s` as informational.
+
+/// Where a platform run's work went, by callback phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Routing/placement decisions (`decide` callbacks on user requests).
+    pub dispatch_decisions: u64,
+    /// Pool lifecycle effects: releases, retires, pre-warm fires.
+    pub pool_effects: u64,
+    /// Fault-control effects: crashes and restarts.
+    pub fault_effects: u64,
+    /// Request chains that reached `done`.
+    pub completions: u64,
+    /// Telemetry interval samples (lazy; not engine events).
+    pub telemetry_samples: u64,
+    /// Exact engine event count — strictly compared by the bench gate.
+    pub engine_events: u64,
+    /// Wall-clock nanoseconds spent inside `Engine::run`.  Machine
+    /// dependent: never rendered, never strictly compared.
+    pub wall_ns: u64,
+}
+
+impl PhaseProfile {
+    /// Wall-clock simulation throughput; 0.0 when wall time was not
+    /// measured (or the run finished faster than the clock resolution).
+    pub fn events_per_s(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.engine_events as f64 / (self.wall_ns as f64 / 1e9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_per_s_guards_zero_wall_time() {
+        let mut p = PhaseProfile { engine_events: 1000, ..Default::default() };
+        assert_eq!(p.events_per_s(), 0.0);
+        p.wall_ns = 500_000_000; // 0.5 s
+        assert_eq!(p.events_per_s(), 2000.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Interval time-series telemetry: per-interval dispatch rates, cold
+//! fraction, pool occupancy, and fault counters, collected into columnar
+//! series for report serialization and sparkline rendering.
+//!
+//! Sampling is **lazy and event-driven**: the platform checks
+//! [`Telemetry::pending`] at the top of every domain callback and calls
+//! [`Telemetry::advance`] only when a boundary has passed — no timer
+//! events are injected into the engine heap and no RNG is drawn, so a
+//! run with telemetry on produces byte-identical measurements to the
+//! same run with it off.  Counters recorded since the previous boundary
+//! belong to the interval being closed (every event past a boundary
+//! closes it before being counted); quiet periods fill forward with zero
+//! counters and the gauges as last observed.
+
+/// Instantaneous pool/cluster state sampled at interval boundaries.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Gauges {
+    /// Idle warm executors live across all nodes.
+    pub idle_slots: u64,
+    /// Resident bytes those idle executors hold.
+    pub idle_bytes: u64,
+    /// User requests currently in flight across all nodes.
+    pub inflight: u64,
+}
+
+/// The collected columnar series; all columns share one length (one
+/// entry per closed interval).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySeries {
+    pub interval_ns: u64,
+    /// Cold dispatches / all dispatches per interval (0 when idle).
+    pub cold_fraction: Vec<f64>,
+    /// Warm-hit dispatches per second.
+    pub warm_rate: Vec<f64>,
+    /// Specialized-claim dispatches per second.
+    pub spec_rate: Vec<f64>,
+    /// Cold dispatches per second.
+    pub cold_rate: Vec<f64>,
+    /// Retry attempts spawned in the interval.
+    pub retries: Vec<f64>,
+    /// Chains rejected in the interval.
+    pub rejected: Vec<f64>,
+    /// Idle warm executors at the interval boundary.
+    pub pool_slots: Vec<f64>,
+    /// Idle resident memory at the boundary, in GB.
+    pub idle_gb: Vec<f64>,
+    /// In-flight user requests at the boundary.
+    pub inflight: Vec<f64>,
+}
+
+impl TelemetrySeries {
+    pub fn len(&self) -> usize {
+        self.cold_fraction.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cold_fraction.is_empty()
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.interval_ns as f64 / 1e9
+    }
+
+    /// `(label, points)` rows in a fixed order, for rendering.
+    pub fn rows(&self) -> [(&'static str, &[f64]); 9] {
+        [
+            ("cold fraction", &self.cold_fraction),
+            ("warm rate (1/s)", &self.warm_rate),
+            ("spec rate (1/s)", &self.spec_rate),
+            ("cold rate (1/s)", &self.cold_rate),
+            ("retries", &self.retries),
+            ("rejected", &self.rejected),
+            ("pool slots", &self.pool_slots),
+            ("idle GB", &self.idle_gb),
+            ("in-flight", &self.inflight),
+        ]
+    }
+}
+
+/// The interval collector the platform domain owns.  Disabled (interval
+/// 0) it is a couple of integer compares per event; enabled it closes
+/// intervals lazily as virtual time passes boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    interval_ns: u64,
+    next_boundary_ns: u64,
+    warm: u64,
+    spec: u64,
+    cold: u64,
+    retry: u64,
+    reject: u64,
+    /// Interval samples taken — the telemetry layer's own observability
+    /// cost, reported separately from pool monitor events and engine
+    /// events.
+    pub samples: u64,
+    series: TelemetrySeries,
+}
+
+impl Telemetry {
+    /// `interval_ns == 0` disables collection entirely.
+    pub fn new(interval_ns: u64) -> Telemetry {
+        Telemetry {
+            interval_ns,
+            next_boundary_ns: interval_ns,
+            series: TelemetrySeries { interval_ns, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval_ns > 0
+    }
+
+    /// Has virtual time passed the next boundary?  The hot-path check:
+    /// callers only pay for gauge computation when this is true.
+    pub fn pending(&self, now: u64) -> bool {
+        self.interval_ns > 0 && now >= self.next_boundary_ns
+    }
+
+    /// Close every interval whose boundary is at or before `now`.  The
+    /// first closed interval takes the accumulated counters (they all
+    /// happened before its boundary); later ones fill forward with zero
+    /// counters and the same gauges.
+    pub fn advance(&mut self, now: u64, g: &Gauges) {
+        while self.interval_ns > 0 && now >= self.next_boundary_ns {
+            self.close_interval(g);
+            self.next_boundary_ns += self.interval_ns;
+        }
+    }
+
+    fn close_interval(&mut self, g: &Gauges) {
+        let dispatches = self.warm + self.spec + self.cold;
+        let secs = self.interval_ns as f64 / 1e9;
+        let s = &mut self.series;
+        s.cold_fraction.push(if dispatches == 0 {
+            0.0
+        } else {
+            self.cold as f64 / dispatches as f64
+        });
+        s.warm_rate.push(self.warm as f64 / secs);
+        s.spec_rate.push(self.spec as f64 / secs);
+        s.cold_rate.push(self.cold as f64 / secs);
+        s.retries.push(self.retry as f64);
+        s.rejected.push(self.reject as f64);
+        s.pool_slots.push(g.idle_slots as f64);
+        s.idle_gb.push(g.idle_bytes as f64 / 1e9);
+        s.inflight.push(g.inflight as f64);
+        self.warm = 0;
+        self.spec = 0;
+        self.cold = 0;
+        self.retry = 0;
+        self.reject = 0;
+        self.samples += 1;
+    }
+
+    pub fn on_warm(&mut self) {
+        if self.interval_ns > 0 {
+            self.warm += 1;
+        }
+    }
+
+    pub fn on_spec(&mut self) {
+        if self.interval_ns > 0 {
+            self.spec += 1;
+        }
+    }
+
+    pub fn on_cold(&mut self) {
+        if self.interval_ns > 0 {
+            self.cold += 1;
+        }
+    }
+
+    pub fn on_retry(&mut self) {
+        if self.interval_ns > 0 {
+            self.retry += 1;
+        }
+    }
+
+    pub fn on_reject(&mut self) {
+        if self.interval_ns > 0 {
+            self.reject += 1;
+        }
+    }
+
+    /// End of run: close intervals up to `now`, flush a partial tail
+    /// interval if it saw activity, and hand the series over (`None`
+    /// when collection was disabled).
+    pub fn finish(mut self, now: u64, g: &Gauges) -> Option<TelemetrySeries> {
+        if self.interval_ns == 0 {
+            return None;
+        }
+        self.advance(now, g);
+        if self.warm + self.spec + self.cold + self.retry + self.reject > 0 {
+            self.close_interval(g);
+        }
+        Some(self.series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    #[test]
+    fn disabled_collector_takes_no_samples() {
+        let mut t = Telemetry::new(0);
+        assert!(!t.enabled());
+        assert!(!t.pending(u64::MAX));
+        t.on_warm();
+        t.on_cold();
+        assert!(t.finish(100 * S, &Gauges::default()).is_none());
+    }
+
+    #[test]
+    fn counters_land_in_the_interval_they_occurred_in() {
+        let mut t = Telemetry::new(10 * S);
+        let g = Gauges { idle_slots: 2, idle_bytes: 3_000_000_000, inflight: 1 };
+        // Two colds and a warm before the first boundary.
+        t.on_cold();
+        t.on_cold();
+        t.on_warm();
+        // First event past 10 s closes interval 0.
+        assert!(t.pending(12 * S));
+        t.advance(12 * S, &g);
+        t.on_warm();
+        let s = t.finish(15 * S, &g).unwrap();
+        assert_eq!(s.len(), 2, "one full interval + the active tail");
+        assert!((s.cold_fraction[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.cold_rate[0], 0.2); // 2 colds / 10 s
+        assert_eq!(s.warm_rate[1], 0.1);
+        assert_eq!(s.pool_slots[0], 2.0);
+        assert_eq!(s.idle_gb[0], 3.0);
+        assert_eq!(s.inflight[0], 1.0);
+    }
+
+    #[test]
+    fn quiet_periods_fill_forward_with_zero_counters() {
+        let mut t = Telemetry::new(S);
+        t.on_cold();
+        // Next event 5 intervals later: intervals 0..=4 close at once.
+        t.advance(5 * S + 1, &Gauges { idle_slots: 7, ..Default::default() });
+        let s = t.finish(5 * S + 1, &Gauges::default()).unwrap();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.cold_rate[0], 1.0);
+        assert!(s.cold_rate[1..].iter().all(|&r| r == 0.0));
+        assert!(s.pool_slots.iter().all(|&p| p == 7.0), "gauges fill forward");
+    }
+
+    #[test]
+    fn finish_flushes_partial_tail_only_when_active() {
+        let mut t = Telemetry::new(10 * S);
+        t.on_warm();
+        let s = t.finish(3 * S, &Gauges::default()).unwrap();
+        assert_eq!(s.len(), 1, "active tail flushed");
+        let t2 = Telemetry::new(10 * S);
+        let s2 = t2.finish(3 * S, &Gauges::default()).unwrap();
+        assert!(s2.is_empty(), "idle tail is not an interval");
+    }
+
+    #[test]
+    fn samples_count_closed_intervals() {
+        let mut t = Telemetry::new(S);
+        for i in 1..=10u64 {
+            t.on_cold();
+            t.advance(i * S, &Gauges::default());
+        }
+        assert_eq!(t.samples, 10);
+    }
+
+    #[test]
+    fn rows_cover_every_column() {
+        let mut t = Telemetry::new(S);
+        t.on_cold();
+        let s = t.finish(2 * S, &Gauges::default()).unwrap();
+        for (label, points) in s.rows() {
+            assert!(!label.is_empty());
+            assert_eq!(points.len(), s.len());
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! Lifecycle trace sinks: a no-op default and a Chrome `trace_event`
+//! JSON writer.
+//!
+//! The platform emits spans through the [`TraceSink`] trait: a `B`/`E`
+//! pair per placed request (begin at dispatch on the chosen node's
+//! process row, end at completion), `X` duration events for pipeline
+//! phases and scheduled outages, and `i` instants for faults (crash,
+//! restart, retry, reject, pre-warm boot).  Timestamps are virtual
+//! nanoseconds, serialized as microseconds with fixed 3-decimal
+//! formatting — the trace is a pure function of the seed, so the same
+//! run always writes the same bytes.
+//!
+//! The [`NullSink`] is the default: every method is an inherited no-op
+//! and `enabled()` is false, so callers can skip even the string
+//! formatting on the hot path.  The [`ChromeTraceSink`] buffers
+//! pre-rendered JSON lines in a bounded ring (oldest events evicted
+//! first, eviction counted) and can restrict capture to disruption
+//! windows — the two knobs that keep planet-scale traces loadable.
+
+use std::collections::VecDeque;
+
+use crate::report::json_str;
+
+/// Where lifecycle events go.  All methods default to no-ops so a sink
+/// only implements what it records; `enabled()` lets emitters skip
+/// argument construction entirely when tracing is off.
+pub trait TraceSink {
+    /// Does this sink record anything?  Emitters must not build event
+    /// names/args when this is false (zero-cost-when-off contract).
+    fn enabled(&self) -> bool {
+        false
+    }
+    /// Name a process row (pid 0 = frontend, pid n+1 = node n).
+    fn process_name(&mut self, _pid: u32, _name: &str) {}
+    /// Open a span on (pid, tid) at `ts_ns`.  `args` values are raw JSON
+    /// fragments (numbers, pre-quoted strings).
+    fn begin(&mut self, _ts_ns: u64, _pid: u32, _tid: u32, _name: &str, _args: &[(&str, String)]) {}
+    /// Close the innermost open span on (pid, tid).
+    fn end(&mut self, _ts_ns: u64, _pid: u32, _tid: u32) {}
+    /// A self-contained duration event over `[t0_ns, t1_ns)`.
+    fn complete(&mut self, _t0_ns: u64, _t1_ns: u64, _pid: u32, _tid: u32, _name: &str) {}
+    /// A process-scoped instant marker.
+    fn instant(&mut self, _ts_ns: u64, _pid: u32, _name: &str) {}
+    /// Events evicted by the ring buffer (0 for unbounded sinks).
+    fn dropped(&self) -> u64 {
+        0
+    }
+    /// Serialize and hand over the trace document, if this sink has one.
+    fn take_trace_json(&mut self) -> Option<String> {
+        None
+    }
+}
+
+/// The default sink: records nothing, allocates nothing.
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// Virtual-ns timestamp as Chrome's microsecond field, fixed 3 decimals
+/// (deterministic formatting; sub-µs phases stay distinguishable).
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+/// Streams Chrome `trace_event` JSON (the "JSON Array Format" with a
+/// `traceEvents` wrapper) loadable in `chrome://tracing` and Perfetto.
+///
+/// Events are rendered to strings eagerly and kept in a ring buffer;
+/// metadata (process names) lives outside the ring so labels survive
+/// however much of a long run is evicted.  With a window filter, events
+/// are kept only if they touch a disruption window — spans clipped at a
+/// window edge may lose their `B` or `E` half, which both viewers
+/// tolerate (the span renders as unterminated).
+pub struct ChromeTraceSink {
+    meta: Vec<String>,
+    events: VecDeque<String>,
+    capacity: usize,
+    windows: Vec<(u64, u64)>,
+    dropped: u64,
+}
+
+impl ChromeTraceSink {
+    /// `capacity` bounds the event ring (0 = unbounded); `windows` is the
+    /// half-open time filter (empty = capture everything).
+    pub fn new(capacity: usize, windows: Vec<(u64, u64)>) -> ChromeTraceSink {
+        ChromeTraceSink {
+            meta: Vec::new(),
+            events: VecDeque::new(),
+            capacity,
+            windows,
+            dropped: 0,
+        }
+    }
+
+    fn in_window(&self, ts_ns: u64) -> bool {
+        self.windows.is_empty() || self.windows.iter().any(|&(a, b)| ts_ns >= a && ts_ns < b)
+    }
+
+    fn span_in_window(&self, t0_ns: u64, t1_ns: u64) -> bool {
+        self.windows.is_empty() || self.windows.iter().any(|&(a, b)| t0_ns < b && t1_ns >= a)
+    }
+
+    fn push(&mut self, line: String) {
+        if self.capacity > 0 && self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(line);
+    }
+
+    /// The complete trace document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        for (i, line) in self.meta.iter().chain(self.events.iter()).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(line);
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Buffered event count (metadata excluded).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for ChromeTraceSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn process_name(&mut self, pid: u32, name: &str) {
+        self.meta.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\"args\":{{\"name\":{}}}}}",
+            json_str(name)
+        ));
+    }
+
+    fn begin(&mut self, ts_ns: u64, pid: u32, tid: u32, name: &str, args: &[(&str, String)]) {
+        if !self.in_window(ts_ns) {
+            return;
+        }
+        let mut line = format!(
+            "{{\"ph\":\"B\",\"cat\":\"lifecycle\",\"ts\":{},\"pid\":{pid},\"tid\":{tid},\
+             \"name\":{}",
+            us(ts_ns),
+            json_str(name)
+        );
+        if !args.is_empty() {
+            line.push_str(",\"args\":{");
+            for (i, (k, v)) in args.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                line.push_str(&format!("{}:{v}", json_str(k)));
+            }
+            line.push('}');
+        }
+        line.push('}');
+        self.push(line);
+    }
+
+    fn end(&mut self, ts_ns: u64, pid: u32, tid: u32) {
+        if !self.in_window(ts_ns) {
+            return;
+        }
+        self.push(format!(
+            "{{\"ph\":\"E\",\"cat\":\"lifecycle\",\"ts\":{},\"pid\":{pid},\"tid\":{tid}}}",
+            us(ts_ns)
+        ));
+    }
+
+    fn complete(&mut self, t0_ns: u64, t1_ns: u64, pid: u32, tid: u32, name: &str) {
+        if !self.span_in_window(t0_ns, t1_ns) {
+            return;
+        }
+        self.push(format!(
+            "{{\"ph\":\"X\",\"cat\":\"lifecycle\",\"ts\":{},\"dur\":{},\"pid\":{pid},\
+             \"tid\":{tid},\"name\":{}}}",
+            us(t0_ns),
+            us(t1_ns.saturating_sub(t0_ns)),
+            json_str(name)
+        ));
+    }
+
+    fn instant(&mut self, ts_ns: u64, pid: u32, name: &str) {
+        if !self.in_window(ts_ns) {
+            return;
+        }
+        self.push(format!(
+            "{{\"ph\":\"i\",\"s\":\"p\",\"cat\":\"lifecycle\",\"ts\":{},\"pid\":{pid},\
+             \"name\":{}}}",
+            us(ts_ns),
+            json_str(name)
+        ));
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn take_trace_json(&mut self) -> Option<String> {
+        Some(self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1_000_000;
+
+    #[test]
+    fn null_sink_is_disabled_and_yields_nothing() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.begin(0, 1, 2, "x", &[]);
+        s.end(1, 1, 2);
+        assert_eq!(s.dropped(), 0);
+        assert!(s.take_trace_json().is_none());
+    }
+
+    #[test]
+    fn chrome_sink_renders_spans_and_instants() {
+        let mut s = ChromeTraceSink::new(0, Vec::new());
+        s.process_name(0, "frontend");
+        s.begin(1500, 1, 7, "cold f3", &[("attempt", "0".to_string())]);
+        s.end(2 * MS, 1, 7);
+        s.instant(3 * MS, 2, "crash");
+        s.complete(MS, 2 * MS, 1, 7, "image-pull");
+        let j = s.to_json();
+        assert!(j.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(j.contains("\"ph\":\"M\"") && j.contains("\"frontend\""));
+        assert!(j.contains("\"ph\":\"B\"") && j.contains("\"ts\":1.500"));
+        assert!(j.contains("\"args\":{\"attempt\":0}"));
+        assert!(j.contains("\"ph\":\"E\"") && j.contains("\"ts\":2000.000"));
+        assert!(j.contains("\"ph\":\"i\"") && j.contains("\"crash\""));
+        assert!(j.contains("\"ph\":\"X\"") && j.contains("\"dur\":1000.000"));
+        assert!(j.ends_with("]}\n"));
+    }
+
+    #[test]
+    fn trace_json_is_deterministic() {
+        let render = || {
+            let mut s = ChromeTraceSink::new(0, Vec::new());
+            for i in 0..50u64 {
+                s.begin(i * MS, 1, i as u32, "w", &[]);
+                s.end(i * MS + 500, 1, i as u32);
+            }
+            s.to_json()
+        };
+        assert_eq!(render(), render());
+    }
+
+    #[test]
+    fn ring_buffer_keeps_newest_and_counts_drops() {
+        let mut s = ChromeTraceSink::new(10, Vec::new());
+        s.process_name(3, "node 2");
+        for i in 0..100u64 {
+            s.instant(i * MS, 3, "tick");
+        }
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.dropped(), 90);
+        let j = s.to_json();
+        // Metadata survives eviction; the newest events are retained.
+        assert!(j.contains("\"node 2\""));
+        assert!(j.contains(&format!("\"ts\":{}", us(99 * MS))));
+        assert!(!j.contains(&format!("\"ts\":{}", us(10 * MS))));
+    }
+
+    #[test]
+    fn window_filter_keeps_only_overlapping_events() {
+        let w = vec![(10 * MS, 20 * MS)];
+        let mut s = ChromeTraceSink::new(0, w);
+        s.instant(5 * MS, 0, "before");
+        s.instant(15 * MS, 0, "inside");
+        s.instant(25 * MS, 0, "after");
+        s.complete(8 * MS, 12 * MS, 0, 0, "straddles");
+        s.complete(0, 5 * MS, 0, 0, "misses");
+        let j = s.to_json();
+        assert!(!j.contains("before") && !j.contains("after") && !j.contains("misses"));
+        assert!(j.contains("inside") && j.contains("straddles"));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn trace_json_parses_as_json() {
+        let mut s = ChromeTraceSink::new(0, Vec::new());
+        s.process_name(0, "frontend \"quoted\"");
+        s.begin(0, 0, 1, "warm f\\0", &[("func", "0".to_string())]);
+        s.end(100, 0, 1);
+        let doc = crate::runtime::Json::parse(&s.to_json()).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(crate::runtime::Json::as_arr).unwrap();
+        assert_eq!(events.len(), 3);
+    }
+}

@@ -191,6 +191,17 @@ impl FaultPlan {
             .copied()
             .find(|f| f.node == node && f.up_at_ns == now)
     }
+
+    /// Every disruption window as a half-open `[start, end)` interval:
+    /// each outage from crash through restart plus the spike window, and
+    /// each fabric brown-out.  The `--trace-window` capture filter.
+    pub fn disruption_windows(&self) -> Vec<(u64, u64)> {
+        self.node_faults
+            .iter()
+            .map(|f| (f.down_at_ns, f.up_at_ns.saturating_add(self.spike_window_ns)))
+            .chain(self.fabric_faults.iter().map(|f| (f.from_ns, f.until_ns)))
+            .collect()
+    }
 }
 
 const S: u64 = 1_000_000_000;
@@ -306,6 +317,20 @@ mod tests {
         assert_eq!(p.restart_fault(f.node, f.up_at_ns), Some(f));
         assert_eq!(p.restart_fault(0, f.up_at_ns), None);
         assert_eq!(p.restart_fault(f.node, f.up_at_ns + 1), None);
+    }
+
+    #[test]
+    fn disruption_windows_cover_outages_and_brownouts() {
+        let p = chaos_plan(8, 100 * S);
+        let w = p.disruption_windows();
+        assert_eq!(w.len(), 3, "two outages + one brown-out");
+        // Every instant the window classifier flags lies inside some window.
+        for t in (0..100).map(|s| s * S) {
+            if p.in_disruption_window(t) {
+                assert!(w.iter().any(|&(a, b)| t >= a && t < b));
+            }
+        }
+        assert!(w.contains(&(70 * S, 80 * S)), "fabric brown-out window");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub use sim::{exact_quantile_ms, run_platform, PlatformResult, PlatformSim};
 
 use crate::fnplat::{DbBackend, DriverKind, Placement};
 use crate::net::{Frontend, Site};
+use crate::obs::ObsConfig;
 use crate::sim::Step;
 use crate::virt::Tech;
 use crate::workload::tenants::TenantTrace;
@@ -235,6 +236,9 @@ pub struct PlatformConfig {
     /// Fault schedule woven into the run (S21).  The default empty plan
     /// injects nothing and leaves the run byte-identical.
     pub faults: FaultPlan,
+    /// Observability (S25): lifecycle tracing and interval telemetry.
+    /// The default observes nothing and leaves the run byte-identical.
+    pub obs: ObsConfig,
     pub seed: u64,
 }
 
@@ -267,6 +271,7 @@ impl PlatformConfig {
             warmup_keep_ns: 30 * 1_000_000_000,
             exact_latencies: false,
             faults: FaultPlan::default(),
+            obs: ObsConfig::default(),
             seed: 0xC01D,
         }
     }

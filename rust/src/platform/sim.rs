@@ -43,6 +43,9 @@ use std::collections::{HashMap, VecDeque};
 use crate::image::{Image, NodeCache};
 use crate::metrics::Histogram;
 use crate::net::transfer_step;
+use crate::obs::{
+    ChromeTraceSink, Gauges, NullSink, PhaseProfile, Telemetry, TelemetrySeries, TraceSink,
+};
 use crate::policy::{IdleAction, LifecyclePolicy};
 use crate::sim::{Dist, Domain, Engine, Host, ReqId, Rng, Spawn, Step, StepKind, N_LOCKS};
 use crate::workload::tenants::TenantTrace;
@@ -209,6 +212,12 @@ pub struct PlatformSim<'a> {
     window_total: u64,
     steady_cold: u64,
     steady_total: u64,
+    // --- observability (S25): pure observers, never consulted by any
+    // routing/pool/fault decision, so the NullSink + disabled telemetry
+    // default is byte-identical to the pre-obs platform ---
+    sink: Box<dyn TraceSink>,
+    telemetry: Telemetry,
+    profile: PhaseProfile,
     // --- metrics ---
     cold_hist: Histogram,
     warm_hist: Histogram,
@@ -220,8 +229,31 @@ pub struct PlatformSim<'a> {
     spec_latencies_ns: Vec<u64>,
 }
 
+/// Instantaneous cluster gauges for a telemetry sample: idle pool
+/// occupancy/bytes and in-flight requests, summed over nodes.
+fn cluster_gauges(nodes: &[NodeState]) -> Gauges {
+    let mut g = Gauges::default();
+    for n in nodes {
+        g.idle_slots += n.pool.idle_live();
+        g.idle_bytes += n.pool.idle_bytes();
+        g.inflight += n.inflight as u64;
+    }
+    g
+}
+
 impl PlatformSim<'_> {
-    fn dispatch_tail(&mut self, req: ReqId, func: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
+    /// Close any telemetry intervals virtual time has passed.  Called at
+    /// the top of every domain callback; a couple of integer compares
+    /// when telemetry is off or no boundary has been crossed.
+    fn tick_telemetry(&mut self, now: u64) {
+        if self.telemetry.pending(now) {
+            let g = cluster_gauges(&self.nodes);
+            self.telemetry.advance(now, &g);
+        }
+    }
+
+    fn dispatch_tail(&mut self, req: ReqId, class: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
+        let func = class & FUNC_MASK;
         self.policy.on_invoke(func, now);
         let in_window = self.faults.in_disruption_window(now);
         let key = &self.route_keys[func as usize];
@@ -251,6 +283,24 @@ impl PlatformSim<'_> {
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
             self.placed.insert(req, Placed { node, heat, killed: false });
+            if heat == Heat::Specialized {
+                self.telemetry.on_spec();
+            } else {
+                self.telemetry.on_warm();
+            }
+            if self.sink.enabled() {
+                let kind = if heat == Heat::Specialized { "spec" } else { "warm" };
+                self.sink.begin(
+                    now,
+                    node as u32 + 1,
+                    req,
+                    &format!("{kind} f{func}"),
+                    &[
+                        ("func", func.to_string()),
+                        ("attempt", attempt_of(class).to_string()),
+                    ],
+                );
+            }
             if in_window {
                 self.window_total += 1;
             } else {
@@ -263,6 +313,10 @@ impl PlatformSim<'_> {
                 // Whole cluster down: the gateway answers 503 and this
                 // chain ends here (no placement, no latency sample).
                 self.rejected += 1;
+                self.telemetry.on_reject();
+                if self.sink.enabled() {
+                    self.sink.instant(now, 0, "reject");
+                }
                 return tail;
             };
             let node = out.node;
@@ -290,6 +344,19 @@ impl PlatformSim<'_> {
             ));
             tail.push(Step::effect("release", TAG_RELEASE));
             self.placed.insert(req, Placed { node, heat: Heat::Cold, killed: false });
+            self.telemetry.on_cold();
+            if self.sink.enabled() {
+                self.sink.begin(
+                    now,
+                    node as u32 + 1,
+                    req,
+                    &format!("cold f{func}"),
+                    &[
+                        ("func", func.to_string()),
+                        ("attempt", attempt_of(class).to_string()),
+                    ],
+                );
+            }
             if in_window {
                 self.window_total += 1;
                 self.window_cold += 1;
@@ -305,13 +372,17 @@ impl PlatformSim<'_> {
 impl Domain for PlatformSim<'_> {
     fn decide(&mut self, req: ReqId, class: u32, tag: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
         debug_assert_eq!(tag, TAG_DISPATCH);
-        self.dispatch_tail(req, class & FUNC_MASK, now, rng)
+        self.tick_telemetry(now);
+        self.profile.dispatch_decisions += 1;
+        self.dispatch_tail(req, class, now, rng)
     }
 
     fn effect(&mut self, req: ReqId, class: u32, tag: u32, now: u64) {
+        self.tick_telemetry(now);
         let func = class & FUNC_MASK;
         match tag {
             TAG_RELEASE => {
+                self.profile.pool_effects += 1;
                 let p = *self.placed.get(&req).expect("released request was placed");
                 if p.killed {
                     // The executor died with its node: nothing to release
@@ -344,6 +415,7 @@ impl Domain for PlatformSim<'_> {
                 self.sched.complete(&mut self.nodes, p.node);
             }
             TAG_PREWARM => {
+                self.profile.pool_effects += 1;
                 // Match this boot to its scheduled keep window by fire
                 // time: boots fire at exactly their scheduled instant.
                 let hit = {
@@ -364,6 +436,9 @@ impl Domain for PlatformSim<'_> {
                         && self.nodes[boot.node].pool.warm_available(key, now) == 0
                     {
                         self.prewarm_boots += 1;
+                        if self.sink.enabled() {
+                            self.sink.instant(now, boot.node as u32 + 1, "prewarm-boot");
+                        }
                         self.nodes[boot.node].pool.prewarm_shared_until(
                             key,
                             func,
@@ -382,6 +457,10 @@ impl Domain for PlatformSim<'_> {
                 // order-independent, so iteration order does not matter).
                 let node = func as usize;
                 self.crashes += 1;
+                self.profile.fault_effects += 1;
+                if self.sink.enabled() {
+                    self.sink.instant(now, node as u32 + 1, "crash");
+                }
                 self.sched.node_down(&self.nodes[node]);
                 self.nodes[node].up = false;
                 self.nodes[node].inflight = 0;
@@ -400,6 +479,10 @@ impl Domain for PlatformSim<'_> {
                     .restart_fault(node, now)
                     .expect("restart matches a plan entry");
                 self.restarts += 1;
+                self.profile.fault_effects += 1;
+                if self.sink.enabled() {
+                    self.sink.instant(now, node as u32 + 1, "restart");
+                }
                 let n = &mut self.nodes[node];
                 n.up = true;
                 if f.flush_cache {
@@ -416,6 +499,8 @@ impl Domain for PlatformSim<'_> {
     }
 
     fn done(&mut self, req: ReqId, class: u32, start: u64, now: u64) -> Vec<Spawn> {
+        self.tick_telemetry(now);
+        self.profile.completions += 1;
         let mut spawns = Vec::new();
         for (func, node, delay_ns, keep_ns) in self.pending_prewarms.drain(..) {
             self.prewarm_keeps[func as usize].push_back(PrewarmBoot {
@@ -484,8 +569,16 @@ impl Domain for PlatformSim<'_> {
                     // surviving node), or give up once the budget is
                     // spent — either way the request is accounted for.
                     self.killed += 1;
+                    if self.sink.enabled() {
+                        // Close the killed attempt's span where it opened.
+                        self.sink.end(now, p.node as u32 + 1, req);
+                    }
                     if attempt < self.faults.max_retries {
                         self.retries += 1;
+                        self.telemetry.on_retry();
+                        if self.sink.enabled() {
+                            self.sink.instant(now, 0, "retry");
+                        }
                         let mut steps = Vec::with_capacity(self.head.len() + 1);
                         steps.push(Step::delay(
                             "client-retry-backoff",
@@ -504,10 +597,17 @@ impl Domain for PlatformSim<'_> {
                         spawns.push(Spawn { delay_ns: 0, class: retry_class, steps });
                     } else {
                         self.rejected += 1;
+                        self.telemetry.on_reject();
+                        if self.sink.enabled() {
+                            self.sink.instant(now, 0, "reject");
+                        }
                     }
                 }
                 Some(p) => {
                     self.served += 1;
+                    if self.sink.enabled() {
+                        self.sink.end(now, p.node as u32 + 1, req);
+                    }
                     let lat = now - origin;
                     self.nodes[p.node].hist.record_ns(lat);
                     match p.heat {
@@ -537,6 +637,24 @@ impl Domain for PlatformSim<'_> {
             }
         }
         spawns
+    }
+
+    fn observe_step(
+        &mut self,
+        req: ReqId,
+        class: u32,
+        tag: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+    ) {
+        // Only user-request phases are traced (control chains carry no
+        // lifecycle); before placement the phase ran on the frontend
+        // (pid 0), after it on the placed node's process row.
+        if class & CONTROL_BIT != 0 || !self.sink.enabled() {
+            return;
+        }
+        let pid = self.placed.get(&req).map_or(0, |p| p.node as u32 + 1);
+        self.sink.complete(start_ns, end_ns, pid, req, tag);
     }
 }
 
@@ -604,6 +722,18 @@ pub struct PlatformResult {
     /// Median connection-setup cost for the driver's frontend (reported
     /// separately, as in Table I); 0 when the run has no network path.
     pub conn_setup_ms: f64,
+    // --- observability (S25) ---
+    /// Interval time-series; `None` unless the run sampled telemetry.
+    pub telemetry: Option<TelemetrySeries>,
+    /// Chrome `trace_event` JSON document; `None` unless tracing was on.
+    /// Byte-identical per seed (timestamps are virtual time).
+    pub trace_json: Option<String>,
+    /// Trace events evicted by the ring buffer (0 when unbounded).
+    pub trace_dropped: u64,
+    /// Self-profile: per-phase callback counts, the exact engine event
+    /// count (strictly compared by the bench gate), wall time and the
+    /// machine-dependent `events/s` derived from it (informational only).
+    pub profile: PhaseProfile,
 }
 
 fn fraction(num: u64, den: u64) -> f64 {
@@ -733,6 +863,17 @@ pub fn run_platform(
         ),
     };
 
+    let sink: Box<dyn TraceSink> = if cfg.obs.trace {
+        let windows = if cfg.obs.trace_window_only {
+            cfg.faults.disruption_windows()
+        } else {
+            Vec::new()
+        };
+        Box::new(ChromeTraceSink::new(cfg.obs.trace_capacity, windows))
+    } else {
+        Box::new(NullSink)
+    };
+
     let domain = PlatformSim {
         cold_extra,
         warm_steps: cfg.driver.warm_steps.clone(),
@@ -771,6 +912,9 @@ pub fn run_platform(
         window_total: 0,
         steady_cold: 0,
         steady_total: 0,
+        sink,
+        telemetry: Telemetry::new(cfg.obs.telemetry_interval_ns),
+        profile: PhaseProfile::default(),
         cold_hist: Histogram::new(),
         warm_hist: Histogram::new(),
         spec_hist: Histogram::new(),
@@ -860,6 +1004,28 @@ pub fn run_platform(
         }
     }
 
+    // Tracing: name the process rows and pre-draw the scheduled fault
+    // windows as duration spans, so a Perfetto view shows the outages and
+    // brown-outs the lifecycle events happened under.
+    e.observe_steps = cfg.obs.trace;
+    if e.domain.sink.enabled() {
+        e.domain.sink.process_name(0, "frontend");
+        for id in 0..cfg.nodes {
+            e.domain.sink.process_name(id as u32 + 1, &format!("node {id}"));
+        }
+        if !cfg.faults.dry_run {
+            for f in &cfg.faults.node_faults {
+                if f.up_at_ns < u64::MAX {
+                    let pid = f.node as u32 + 1;
+                    e.domain.sink.complete(f.down_at_ns, f.up_at_ns, pid, 0, "outage");
+                }
+            }
+            for f in &cfg.faults.fabric_faults {
+                e.domain.sink.complete(f.from_ns, f.until_ns, 0, 0, "fabric-brownout");
+            }
+        }
+    }
+
     let head = head_steps(cfg);
     e.domain.head = head.clone();
     // Weave the fault schedule into virtual time as zero-latency control
@@ -880,6 +1046,7 @@ pub fn run_platform(
             }
         }
     }
+    let run_started = std::time::Instant::now();
     match &cfg.load {
         PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
             assert!(*parallelism as u64 <= *total);
@@ -931,9 +1098,23 @@ pub fn run_platform(
         }
     }
 
+    // Wall time spans load spawning + the engine run: machine dependent,
+    // never rendered, informational-only in the compare gate.
+    let wall_ns = run_started.elapsed().as_nanos() as u64;
+
     let now = e.now();
     let events = e.events_processed();
     let d = &mut e.domain;
+    // Close out the observers before pool finalization mutates the
+    // gauges they sample.
+    let end_gauges = cluster_gauges(&d.nodes);
+    let telemetry = std::mem::take(&mut d.telemetry).finish(now, &end_gauges);
+    let trace_json = d.sink.take_trace_json();
+    let trace_dropped = d.sink.dropped();
+    let mut profile = d.profile;
+    profile.engine_events = events;
+    profile.telemetry_samples = telemetry.as_ref().map_or(0, |t| t.len() as u64);
+    profile.wall_ns = wall_ns;
     let mut hist = Histogram::new();
     let mut node_hists = Vec::with_capacity(d.nodes.len());
     let mut idle_mem_byte_ns: u128 = 0;
@@ -992,6 +1173,10 @@ pub fn run_platform(
         footprint_bytes: footprint_bytes(&d.nodes),
         nodes_with_first_image: nodes_with_first,
         conn_setup_ms,
+        telemetry,
+        trace_json,
+        trace_dropped,
+        profile,
     }
 }
 

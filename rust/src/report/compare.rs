@@ -145,7 +145,10 @@ fn compare_labelled(
     fields: &[&str],
     tol: f64,
 ) {
-    let metric_key = if kind == "series" { "" } else { "metric" };
+    // `series` and `timeseries` rows are keyed by label alone and carry
+    // no pass boolean; `checks`/`bands` key by (label, metric).
+    let by_label_only = kind == "series" || kind == "timeseries";
+    let metric_key = if by_label_only { "" } else { "metric" };
     let run_map = by_label(run_items, metric_key);
     let base_map = by_label(base_items, metric_key);
     // Duplicate (label, metric) entries would shadow each other in the
@@ -166,7 +169,7 @@ fn compare_labelled(
             drifts.push(format!("{ctx}: missing from run"));
             continue;
         };
-        if kind != "series" {
+        if !by_label_only {
             compare_pass(
                 drifts,
                 &ctx,
@@ -268,6 +271,31 @@ pub fn compare_documents(run: &str, baseline: &str, tol: f64) -> Result<Comparis
             &["n", "p1", "p25", "p50", "p75", "p99", "mean", "max"],
             tol,
         );
+        compare_labelled(
+            &mut cmp.drifts,
+            id,
+            "timeseries",
+            arr(run_exp, "timeseries"),
+            arr(base_exp, "timeseries"),
+            &["interval_s", "n", "mean", "max", "last"],
+            tol,
+        );
+        // S25 self-profile: engine event counts are deterministic in
+        // virtual time, so they compare *exactly* — any delta is a code
+        // change, not noise.  `events_per_s` is wall-clock: info only.
+        compare_num(
+            &mut cmp.drifts,
+            &format!("{id}/profile"),
+            "events",
+            field_num(run_exp, "events"),
+            field_num(base_exp, "events"),
+            0.0,
+        );
+        if let (Some(r), Some(b)) =
+            (field_num(run_exp, "events_per_s"), field_num(base_exp, "events_per_s"))
+        {
+            cmp.infos.push(format!("{id}: events/s {r:.0} vs baseline {b:.0} (informational)"));
+        }
     }
     let base_ids: Vec<&str> = base_exps.iter().map(|e| field_str(e, "id")).collect();
     for e in run_exps {
@@ -337,6 +365,51 @@ mod tests {
         // boolean matches: no drift.
         let fast = base.replace("\"measured\":12345", "\"measured\":99999999");
         assert!(compare_documents(&fast, &base, DEFAULT_TOL).unwrap().ok());
+    }
+
+    fn doc_with_profile(events: u64, eps: f64, ts_max: f64) -> String {
+        format!(
+            "{{\"generator\":\"coldfaas\",\"total_wall_s\":1.5,\"experiments\":[\
+             {{\"id\":\"e14\",\"title\":\"t\",\"wall_s\":0.5,\"all_pass\":true,\
+             \"series\":[],\"checks\":[],\"bands\":[],\
+             \"timeseries\":[{{\"label\":\"cold fraction\",\"interval_s\":30,\
+             \"n\":4,\"mean\":0.5,\"max\":{ts_max},\"last\":0.25,\
+             \"points\":[1,0.5,0.25,0.25]}}],\
+             \"notes\":[],\"events\":{events},\"events_per_s\":{eps}}}]}}"
+        )
+    }
+
+    #[test]
+    fn engine_event_counts_compare_exactly() {
+        let base = doc_with_profile(1000, 5e6, 1.0);
+        assert!(compare_documents(&base, &base, DEFAULT_TOL).unwrap().ok());
+        // One event of drift — far inside the ±10% band — still gates.
+        let off = doc_with_profile(1001, 5e6, 1.0);
+        let cmp = compare_documents(&off, &base, DEFAULT_TOL).unwrap();
+        assert!(!cmp.ok());
+        assert!(cmp.drifts.iter().any(|d| d.contains("e14/profile")), "{:?}", cmp.drifts);
+    }
+
+    #[test]
+    fn events_per_s_field_is_informational() {
+        let base = doc_with_profile(1000, 5e6, 1.0);
+        let slow = doc_with_profile(1000, 1e3, 1.0);
+        let cmp = compare_documents(&slow, &base, DEFAULT_TOL).unwrap();
+        assert!(cmp.ok(), "{:?}", cmp.drifts);
+        assert!(cmp.infos.iter().any(|i| i.contains("events/s")), "{:?}", cmp.infos);
+    }
+
+    #[test]
+    fn timeseries_summaries_gate_like_series() {
+        let base = doc_with_profile(1000, 5e6, 1.0);
+        let drifted = doc_with_profile(1000, 5e6, 2.0);
+        let cmp = compare_documents(&drifted, &base, DEFAULT_TOL).unwrap();
+        assert!(!cmp.ok());
+        assert!(
+            cmp.drifts.iter().any(|d| d.contains("timeseries 'cold fraction'")),
+            "{:?}",
+            cmp.drifts
+        );
     }
 
     #[test]

@@ -67,6 +67,17 @@ impl BandCheck {
     }
 }
 
+/// One interval time-series (S25): a telemetry column sampled at a fixed
+/// virtual-time interval, rendered as a sparkline row and exported with a
+/// summary (n/mean/max/last) the bench gate can band.
+#[derive(Clone, Debug)]
+pub struct TimeSeriesOut {
+    pub label: String,
+    /// Sampling interval in virtual seconds.
+    pub interval_s: f64,
+    pub points: Vec<f64>,
+}
+
 /// A rendered experiment: measured series + checks + free-form notes.
 pub struct Report {
     pub title: String,
@@ -74,6 +85,14 @@ pub struct Report {
     pub checks: Vec<Check>,
     pub bands: Vec<BandCheck>,
     pub notes: Vec<String>,
+    /// Interval time-series (S25); empty unless telemetry ran.
+    pub timeseries: Vec<TimeSeriesOut>,
+    /// Total engine events processed — deterministic per seed, compared
+    /// *strictly* by the bench gate when both sides carry it.
+    pub events: Option<u64>,
+    /// Simulator throughput (wall-clock): JSON-only and informational,
+    /// never rendered and never gated.
+    pub events_per_s: Option<f64>,
 }
 
 impl Report {
@@ -84,11 +103,29 @@ impl Report {
             checks: Vec::new(),
             bands: Vec::new(),
             notes: Vec::new(),
+            timeseries: Vec::new(),
+            events: None,
+            events_per_s: None,
         }
     }
 
     pub fn add_series(&mut self, label: &str, stats: BoxStats) {
         self.series.push((label.to_string(), stats));
+    }
+
+    pub fn add_timeseries(&mut self, label: &str, interval_s: f64, points: &[f64]) {
+        self.timeseries.push(TimeSeriesOut {
+            label: label.to_string(),
+            interval_s,
+            points: points.to_vec(),
+        });
+    }
+
+    /// Record the run's self-profile (S25).  `events` is virtual-time
+    /// deterministic; `events_per_s` is wall-clock and stays JSON-only.
+    pub fn set_profile(&mut self, events: u64, events_per_s: f64) {
+        self.events = Some(events);
+        self.events_per_s = Some(events_per_s);
     }
 
     pub fn check(&mut self, label: &str, metric: &'static str, got: f64, want: f64, tol: f64) {
@@ -175,6 +212,29 @@ impl Report {
                 b.pass()
             ));
         }
+        out.push_str("],\"timeseries\":[");
+        for (i, t) in self.timeseries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let max = t.points.iter().copied().fold(0.0_f64, f64::max);
+            let mean = if t.points.is_empty() {
+                0.0
+            } else {
+                t.points.iter().sum::<f64>() / t.points.len() as f64
+            };
+            let last = t.points.last().copied().unwrap_or(0.0);
+            let points = t.points.iter().map(|v| json_num(*v)).collect::<Vec<_>>().join(",");
+            out.push_str(&format!(
+                "{{\"label\":{},\"interval_s\":{},\"n\":{},\"mean\":{},\"max\":{},\"last\":{},\"points\":[{points}]}}",
+                json_str(&t.label),
+                json_num(t.interval_s),
+                t.points.len(),
+                json_num(mean),
+                json_num(max),
+                json_num(last)
+            ));
+        }
         out.push_str("],\"notes\":[");
         for (i, n) in self.notes.iter().enumerate() {
             if i > 0 {
@@ -182,7 +242,14 @@ impl Report {
             }
             out.push_str(&json_str(n));
         }
-        out.push_str("]}");
+        out.push(']');
+        if let Some(ev) = self.events {
+            out.push_str(&format!(",\"events\":{ev}"));
+        }
+        if let Some(eps) = self.events_per_s {
+            out.push_str(&format!(",\"events_per_s\":{}", json_num(eps)));
+        }
+        out.push('}');
         out
     }
 
@@ -204,6 +271,25 @@ impl Report {
                 out.push_str(&format!("  {}\n", b.row()));
             }
         }
+        if !self.timeseries.is_empty() {
+            out.push_str("\n  interval time-series:\n");
+            for t in &self.timeseries {
+                let max = t.points.iter().copied().fold(0.0_f64, f64::max);
+                out.push_str(&format!(
+                    "  {:<28} |{}| n={} max={:.3} ({:.0}s/interval)\n",
+                    t.label,
+                    sparkline(&t.points),
+                    t.points.len(),
+                    max,
+                    t.interval_s
+                ));
+            }
+        }
+        if let Some(ev) = self.events {
+            // Deterministic per seed: safe to render.  events/s is
+            // wall-clock and deliberately stays out of the render.
+            out.push_str(&format!("  simulator events: {ev}\n"));
+        }
         for n in &self.notes {
             out.push_str(&format!("  note: {n}\n"));
         }
@@ -211,6 +297,23 @@ impl Report {
         out.push_str(&format!("  -> {verdict}\n"));
         out
     }
+}
+
+/// Eight-level unicode sparkline, scaled to the series max.  All-zero
+/// (or empty) series render flat; negatives clamp to the floor glyph.
+pub fn sparkline(points: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = points.iter().copied().filter(|v| v.is_finite()).fold(0.0_f64, f64::max);
+    points
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() || v <= 0.0 {
+                BARS[0]
+            } else {
+                BARS[((v / max * 7.0).round() as usize).min(7)]
+            }
+        })
+        .collect()
 }
 
 /// JSON string literal with the escapes the report text can contain.
@@ -296,6 +399,42 @@ mod tests {
         let doc = json_document(&[j.clone(), j], 3.0);
         assert!(doc.contains("\"experiments\":[{"));
         assert!(doc.contains("},{"));
+    }
+
+    #[test]
+    fn sparkline_buckets_scale_to_max() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[0.0, 0.0]), "▁▁");
+        let s = sparkline(&[0.0, 4.0, 8.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁') && s.ends_with('█'), "{s}");
+        // Negatives and non-finite values clamp to the floor glyph.
+        assert_eq!(sparkline(&[-1.0, f64::NAN, 1.0]), "▁▁█");
+    }
+
+    #[test]
+    fn timeseries_and_profile_serialize_and_render() {
+        let mut r = Report::new("t");
+        r.add_timeseries("cold fraction", 30.0, &[0.5, 0.25, 0.0]);
+        r.set_profile(1234, 56789.5);
+        let j = r.to_json("e14", 1.0);
+        assert!(j.contains("\"timeseries\":[{\"label\":\"cold fraction\""), "{j}");
+        assert!(j.contains("\"interval_s\":30"));
+        assert!(j.contains("\"n\":3") && j.contains("\"max\":0.5") && j.contains("\"last\":0"));
+        assert!(j.contains("\"mean\":0.25"));
+        assert!(j.contains("\"points\":[0.5,0.25,0]"));
+        assert!(j.contains("\"events\":1234"));
+        assert!(j.contains("\"events_per_s\":56789.5"));
+        let rendered = r.render();
+        assert!(rendered.contains("interval time-series:"));
+        assert!(rendered.contains("cold fraction"));
+        assert!(rendered.contains("simulator events: 1234"));
+        // Wall-clock throughput must never reach the rendered report.
+        assert!(!rendered.contains("56789"));
+        // A report without profile/telemetry renders and serializes as before.
+        let bare = Report::new("t").to_json("x", 0.0);
+        assert!(bare.contains("\"timeseries\":[]"));
+        assert!(!bare.contains("\"events\""));
     }
 
     #[test]

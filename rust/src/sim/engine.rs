@@ -111,6 +111,20 @@ pub trait Domain {
     fn effect(&mut self, _req: ReqId, _class: u32, _tag: u32, _now: u64) {}
     /// Called when a request finishes; records latency, returns follow-ups.
     fn done(&mut self, req: ReqId, class: u32, start_ns: u64, now: u64) -> Vec<Spawn>;
+    /// Observation hook: called after each timed step completes when
+    /// [`Engine::observe_steps`] is on, with the step's wall span
+    /// (arrival at the step through finish, resource wait included).
+    /// Pure observation — implementations must not perturb domain state
+    /// that measurements read.
+    fn observe_step(
+        &mut self,
+        _req: ReqId,
+        _class: u32,
+        _tag: &'static str,
+        _start_ns: u64,
+        _end_ns: u64,
+    ) {
+    }
 }
 
 /// Host resource configuration.
@@ -205,6 +219,9 @@ pub struct Engine<D: Domain> {
     /// When true, every timed step records a [`PhaseSample`].
     pub trace_phases: bool,
     pub phase_trace: Vec<PhaseSample>,
+    /// When true, every timed step calls [`Domain::observe_step`] —
+    /// the lifecycle-trace hook (S25).  Off by default.
+    pub observe_steps: bool,
 }
 
 impl<D: Domain> Engine<D> {
@@ -226,6 +243,7 @@ impl<D: Domain> Engine<D> {
             events_processed: 0,
             trace_phases: false,
             phase_trace: Vec::new(),
+            observe_steps: false,
         }
     }
 
@@ -413,6 +431,13 @@ impl<D: Domain> Engine<D> {
                 tag: step.tag,
                 dur_ns: self.now - req.step_arrival,
             });
+        }
+        if self.observe_steps {
+            let (class, arrival) = {
+                let req = &self.reqs[r as usize];
+                (req.class, req.step_arrival)
+            };
+            self.domain.observe_step(r, class, step.tag, arrival, self.now);
         }
         self.reqs[r as usize].idx += 1;
         self.advance(r);

@@ -1,0 +1,84 @@
+//! Observability-layer integration pins (S25): span chains must be
+//! complete, and observation must stay strictly distinct from the
+//! platform work it watches (`monitor_events` vs telemetry samples).
+
+use coldfaas::experiments::chaos::ChaosConfig;
+use coldfaas::experiments::replay::{replay_chaos_cell, DEFAULT_CELL};
+use coldfaas::obs::ObsConfig;
+use coldfaas::platform::SchedPolicy;
+use coldfaas::runtime::Json;
+use coldfaas::sim::Host;
+use coldfaas::workload::tenants::TenantConfig;
+
+/// A small chaos grid whose faulted leg exercises every lifecycle edge:
+/// warm/spec/cold dispatches, crashes, retries, restarts.
+fn cfg() -> ChaosConfig {
+    ChaosConfig {
+        tenant: TenantConfig {
+            functions: 200,
+            duration_s: 30.0,
+            total_rps: 40.0,
+            seed: 0x0B5,
+            ..Default::default()
+        },
+        nodes: 4,
+        cores_per_node: 4,
+        schedulers: vec![SchedPolicy::LeastLoaded],
+        host: Host::default(),
+        timeseries: false,
+    }
+}
+
+/// Every span that opens must close, and every instant must tie back to
+/// a counted platform outcome — on an unwindowed, uncapped trace the
+/// trace IS the ledger: `B` events = `E` events = served + killed
+/// (every dispatch that reached a pool), and the fault instants match
+/// the fault counters exactly.
+#[test]
+fn span_chains_are_complete_and_match_the_counters() {
+    let obs = ObsConfig { trace: true, ..Default::default() };
+    let out = replay_chaos_cell(&cfg(), DEFAULT_CELL, &obs, true).unwrap();
+    let r = &out.result;
+    let doc = Json::parse(r.trace_json.as_ref().expect("tracing was on")).expect("trace parses");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+
+    let ph = |e: &Json| e.get("ph").and_then(Json::as_str).unwrap_or("").to_string();
+    let count_ph = |want: &str| events.iter().filter(|e| ph(e) == want).count() as u64;
+    let count_instant = |name: &str| {
+        events
+            .iter()
+            .filter(|e| ph(e) == "i" && e.get("name").and_then(Json::as_str) == Some(name))
+            .count() as u64
+    };
+
+    // The faulted leg must actually have exercised the fault machinery,
+    // or the instant assertions below are vacuous.
+    assert!(r.served > 0 && r.crashes > 0, "chaos leg too quiet to pin");
+
+    let begins = count_ph("B");
+    assert_eq!(begins, count_ph("E"), "every opened span must close");
+    assert_eq!(begins, r.served + r.killed, "one span per dispatch that reached a pool");
+    assert_eq!(count_instant("reject"), r.rejected);
+    assert_eq!(count_instant("retry"), r.retries);
+    assert_eq!(count_instant("crash"), r.crashes);
+    assert_eq!(count_instant("restart"), r.restarts);
+    assert_eq!(count_instant("prewarm-boot"), r.prewarm_boots);
+}
+
+/// `monitor_events` counts the keep-alive poller's billable scans of
+/// idle warm slots — platform work the pool *causes* — while telemetry
+/// samples are pure observation.  A cold-only cell must keep the former
+/// at exactly zero even while the latter is busy sampling; a keep-alive
+/// cell pays for its monitoring.
+#[test]
+fn monitor_events_stay_zero_under_observation() {
+    let obs = ObsConfig { telemetry_interval_ns: 1_000_000_000, ..Default::default() };
+    let cold =
+        replay_chaos_cell(&cfg(), "includeos+cold-only+least-loaded", &obs, true).unwrap().result;
+    assert_eq!(cold.monitor_events, 0, "nothing idles under cold-only");
+    assert!(cold.profile.telemetry_samples > 0, "telemetry was on and sampling");
+    assert!(!cold.telemetry.expect("telemetry series present").is_empty());
+
+    let warm = replay_chaos_cell(&cfg(), DEFAULT_CELL, &obs, true).unwrap().result;
+    assert!(warm.monitor_events > 0, "keep-alive pools pay for their monitor scans");
+}
