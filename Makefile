@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet chaos planet sharing trace baselines
+.PHONY: build test artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines
 
 build:
 	cd rust && cargo build --release
@@ -32,6 +32,9 @@ planet: build
 sharing: build
 	./rust/target/release/coldfaas sharing --quick
 
+hyperplanet: build
+	./rust/target/release/coldfaas hyperplanet --quick
+
 # Replay the flagship chaos cell with the observability layer armed and
 # write a Chrome trace_event capture (open trace.json in chrome://tracing
 # or https://ui.perfetto.dev).  Override the cell / grid with TRACE_ARGS,
@@ -41,8 +44,11 @@ trace: build
 
 # Regenerate the CI bench-regression baselines (rust/baselines/) and
 # commit the result; the DES is deterministic per seed, so these are
-# machine-independent except for the informational wall-clock fields.
+# machine-independent except for the wall-clock fields — of which only
+# events/s gates (one-sidedly), so regenerate on the runner class that
+# will enforce the throughput floor.
 baselines: build
 	./rust/target/release/coldfaas experiment all --quick --json rust/baselines/BENCH_quick.json
 	./rust/target/release/coldfaas chaos --quick --timeseries --json rust/baselines/BENCH_chaos_quick.json
 	./rust/target/release/coldfaas planet --quick --json rust/baselines/BENCH_planet_quick.json
+	./rust/target/release/coldfaas hyperplanet --quick --json rust/baselines/BENCH_hyperplanet_quick.json

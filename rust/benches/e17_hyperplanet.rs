@@ -1,0 +1,26 @@
+//! Bench E17: hyperplanet sweep — 1024 nodes x 10 000 functions x 8
+//! accounting shards, a 2x10^8-request streamed Zipf trace per cell
+//! (10^9 aggregate across the grid), cells running concurrently on the
+//! sweep runner.  Reports aggregate simulator throughput (engine events
+//! per second of grid wall clock) and the parallel speedup over
+//! single-engine serial execution alongside the frontier checks.
+//!
+//! Full mode holds one multi-GB trace plus a clone per in-flight cell:
+//! budget ~32 GB of RAM and a long run.
+//!
+//!     cargo bench --bench e17_hyperplanet
+
+use coldfaas::experiments::{hyperplanet, ExpConfig};
+
+fn main() {
+    println!("== bench e17_hyperplanet: the cold-only claim at sharded scale ==\n");
+    let t0 = std::time::Instant::now();
+    let report = hyperplanet(&ExpConfig::default());
+    print!("{}", report.render());
+    println!(
+        "\nE17 regeneration (5 cells x 2e8 streamed requests, 1024 nodes, 10k fns, \
+         8 shards): {:.2} s wall",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(report.all_pass(), "e17 regressions: {:#?}", report.failures());
+}

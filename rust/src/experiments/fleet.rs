@@ -143,6 +143,7 @@ pub(crate) fn cell_config(
         exact_latencies: false,
         faults,
         obs,
+        shards: 1,
         seed: tenant.seed,
     }
 }

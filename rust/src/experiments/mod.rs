@@ -1,8 +1,8 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E16).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E17).
 //!
-//! The grid experiments (E12–E16) run their cells through the shared
+//! The grid experiments (E12–E17) run their cells through the shared
 //! [`sweep`] runner: cells are self-contained, so they execute on worker
 //! threads and collect in cell order — reports stay byte-identical to
 //! serial execution.
@@ -13,6 +13,7 @@ pub mod complexity;
 pub mod decompose;
 pub mod fleet;
 pub mod fnlocal;
+pub mod hyperplanet;
 pub mod images;
 pub mod planet;
 pub mod policies;
@@ -29,6 +30,7 @@ pub use complexity::complexity;
 pub use decompose::decompose;
 pub use fleet::fleet;
 pub use fnlocal::fig4;
+pub use hyperplanet::hyperplanet;
 pub use images::images;
 pub use planet::planet;
 pub use policies::policies;
@@ -94,17 +96,19 @@ pub fn by_name(name: &str, cfg: &ExpConfig) -> Option<crate::report::Report> {
         "fleet" => fleet(cfg),
         "chaos" => chaos(cfg),
         "planet" => planet(cfg),
+        "hyperplanet" => hyperplanet(cfg),
         "sharing" => sharing(cfg),
         _ => return None,
     })
 }
 
 /// Experiments `experiment all` sweeps — E16 `sharing` included (its
-/// quick grid is fleet-sized).  E15 `planet` is deliberately absent: it
-/// is by far the heaviest grid and has its own subcommand and CI smoke
-/// step (`coldfaas planet`), so including it here would run it twice per
-/// CI pass for no added coverage — `by_name` still accepts `"planet"`
-/// for explicit `experiment planet` runs.
+/// quick grid is fleet-sized).  E15 `planet` and E17 `hyperplanet` are
+/// deliberately absent: they are by far the heaviest grids and each has
+/// its own subcommand and CI smoke step (`coldfaas planet`,
+/// `coldfaas hyperplanet`), so including them here would run them twice
+/// per CI pass for no added coverage — `by_name` still accepts both for
+/// explicit `experiment planet` / `experiment hyperplanet` runs.
 pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "decompose", "images", "complexity", "waste",
     "distance", "scaleout", "policies", "fleet", "chaos", "sharing",

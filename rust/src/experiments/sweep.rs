@@ -11,18 +11,43 @@
 //!
 //! Thread count comes from `COLDFAAS_SWEEP_THREADS` when set (`1` forces
 //! serial execution), else from `std::thread::available_parallelism`.
+//! A malformed value is a hard error, not a silent fallback: a typo like
+//! `COLDFAAS_SWEEP_THREADS=O1` silently re-parallelizing a run that was
+//! meant to be serial is exactly the failure mode the strict-CLI policy
+//! exists to rule out.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Parse an explicit `COLDFAAS_SWEEP_THREADS` value: `Ok(n)` for a
+/// positive integer, `Err` (with the reason) for anything else.  Pure so
+/// the error paths are testable without mutating the process environment.
+fn parse_sweep_threads(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!(
+            "COLDFAAS_SWEEP_THREADS must be >= 1, got {raw:?} \
+             (use 1 to force serial execution, or unset it)"
+        )),
+        Ok(t) => Ok(t),
+        Err(e) => Err(format!(
+            "COLDFAAS_SWEEP_THREADS must be a positive integer, got {raw:?}: {e} \
+             (unset it to use the machine's available parallelism)"
+        )),
+    }
+}
+
 /// Worker threads a sweep may use: the env override, else the machine's
-/// available parallelism, never more than one per cell.
+/// available parallelism, never more than one per cell.  Panics on a
+/// malformed override — degrading quietly would let a typo change which
+/// runs are serial.
 pub fn sweep_threads(cells: usize) -> usize {
-    let configured = std::env::var("COLDFAAS_SWEEP_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&t| t >= 1)
-        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |p| p.get()));
+    let configured = match std::env::var("COLDFAAS_SWEEP_THREADS") {
+        Ok(v) => parse_sweep_threads(&v).unwrap_or_else(|e| panic!("{e}")),
+        Err(std::env::VarError::NotPresent) => {
+            std::thread::available_parallelism().map_or(1, |p| p.get())
+        }
+        Err(e) => panic!("COLDFAAS_SWEEP_THREADS is not readable: {e}"),
+    };
     configured.min(cells.max(1))
 }
 
@@ -106,5 +131,20 @@ mod tests {
         // Never more threads than cells, never fewer than one.
         assert_eq!(sweep_threads(1), 1);
         assert!(sweep_threads(64) >= 1);
+    }
+
+    #[test]
+    fn explicit_thread_overrides_parse_strictly() {
+        assert_eq!(parse_sweep_threads("1"), Ok(1));
+        assert_eq!(parse_sweep_threads(" 8 "), Ok(8));
+        // Malformed or zero values are hard errors, never silent
+        // fallbacks to available parallelism.
+        assert!(parse_sweep_threads("0").is_err());
+        assert!(parse_sweep_threads("O1").is_err());
+        assert!(parse_sweep_threads("").is_err());
+        assert!(parse_sweep_threads("-2").is_err());
+        assert!(parse_sweep_threads("4 threads").is_err());
+        let err = parse_sweep_threads("nope").unwrap_err();
+        assert!(err.contains("COLDFAAS_SWEEP_THREADS"), "{err}");
     }
 }

@@ -51,24 +51,85 @@ struct WarmSlot {
     owner: u32,
 }
 
-/// Idle slots of one function: live slots by serial, claim order (LIFO,
-/// newest serial at the back), and deadline order for expiry.  Entries in
-/// `lifo`/`by_deadline` whose serial is no longer in `slots` are stale
-/// (claimed or expired) and skipped lazily.
+/// Pool-wide idle-slot storage, struct-of-arrays with generational
+/// handles (S26).  A handle packs `(generation << 32) | index`; removing
+/// a slot bumps its generation, so every handle left behind in a LIFO
+/// stack or deadline heap becomes a tombstone detectable in O(1) — the
+/// role the per-key `HashMap<serial, WarmSlot>` membership check used to
+/// play, without the hashing or the per-key allocation.  Freed indices
+/// recycle through a free list, bounding the arena by peak idle
+/// occupancy.
+#[derive(Clone, Debug, Default)]
+struct SlotArena {
+    idle_since_ns: Vec<u64>,
+    expires_at_ns: Vec<u64>,
+    owner: Vec<u32>,
+    gen: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl SlotArena {
+    fn alloc(&mut self, slot: WarmSlot) -> u64 {
+        let idx = if let Some(idx) = self.free.pop() {
+            let i = idx as usize;
+            self.idle_since_ns[i] = slot.idle_since_ns;
+            self.expires_at_ns[i] = slot.expires_at_ns;
+            self.owner[i] = slot.owner;
+            idx
+        } else {
+            self.idle_since_ns.push(slot.idle_since_ns);
+            self.expires_at_ns.push(slot.expires_at_ns);
+            self.owner.push(slot.owner);
+            self.gen.push(0);
+            (self.idle_since_ns.len() - 1) as u32
+        };
+        ((self.gen[idx as usize] as u64) << 32) | idx as u64
+    }
+
+    fn is_live(&self, handle: u64) -> bool {
+        let idx = handle as u32 as usize;
+        (handle >> 32) as u32 == self.gen[idx]
+    }
+
+    fn owner_of(&self, handle: u64) -> u32 {
+        debug_assert!(self.is_live(handle));
+        self.owner[handle as u32 as usize]
+    }
+
+    /// Claim/expire a slot: returns its fields and tombstones the handle
+    /// (generation bump), or `None` if the handle was already stale.
+    fn remove(&mut self, handle: u64) -> Option<WarmSlot> {
+        if !self.is_live(handle) {
+            return None;
+        }
+        let i = handle as u32 as usize;
+        self.gen[i] = self.gen[i].wrapping_add(1);
+        self.free.push(handle as u32);
+        Some(WarmSlot {
+            idle_since_ns: self.idle_since_ns[i],
+            expires_at_ns: self.expires_at_ns[i],
+            owner: self.owner[i],
+        })
+    }
+}
+
+/// Idle slots of one sharing key: claim order (LIFO, newest at the
+/// back), deadline order for expiry, and the live-slot count.  Both
+/// orders hold arena handles; entries whose handle went stale (claimed
+/// or expired elsewhere) are skipped lazily via the generation check.
 #[derive(Clone, Debug, Default)]
 struct FuncSlots {
-    slots: HashMap<u64, WarmSlot>,
     lifo: Vec<u64>,
     by_deadline: BinaryHeap<Reverse<(u64, u64)>>,
+    live: usize,
 }
 
 impl FuncSlots {
     /// Drop stale lifo entries once they dominate the vector, so a
     /// long-lived function cannot accumulate unbounded tombstones.
-    fn compact(&mut self) {
-        if self.lifo.len() > 4 * self.slots.len() + 16 {
-            let slots = &self.slots;
-            self.lifo.retain(|s| slots.contains_key(s));
+    fn compact(&mut self, arena: &SlotArena) {
+        if self.lifo.len() > 4 * self.live + 16 {
+            self.lifo.retain(|&h| arena.is_live(h));
         }
     }
 }
@@ -97,10 +158,10 @@ pub struct WarmPool {
     /// Liveness-poll period for idle executors (monitoring complexity).
     pub poll_period_ns: u64,
     /// Idle slots per sharing key (the function name in the classic
-    /// exclusive pool).
+    /// exclusive pool).  Orders only — the slot fields live in `slots`.
     idle: HashMap<String, FuncSlots>,
-    /// Monotone slot id: release order, shared across keys.
-    next_serial: u64,
+    /// Pool-wide SoA slot storage (S26), shared across sharing keys.
+    slots: SlotArena,
     /// Total executors alive (idle + busy) per sharing key.
     alive: HashMap<String, u64>,
     /// Idle warm executors currently enqueued across all keys (gauge for
@@ -136,7 +197,7 @@ impl WarmPool {
             mem_bytes_per_slot,
             poll_period_ns: 1_000_000_000, // 1 s liveness poll
             idle: HashMap::new(),
-            next_serial: 0,
+            slots: SlotArena::default(),
             alive: HashMap::new(),
             idle_live: 0,
             idle_mem_byte_ns: 0,
@@ -156,13 +217,12 @@ impl WarmPool {
     }
 
     fn insert_slot(&mut self, func: &str, slot: WarmSlot) {
-        let serial = self.next_serial;
-        self.next_serial += 1;
+        let handle = self.slots.alloc(slot);
         self.idle_live += 1;
         let fs = self.idle.entry(func.to_string()).or_default();
-        fs.slots.insert(serial, slot);
-        fs.lifo.push(serial);
-        fs.by_deadline.push(Reverse((slot.expires_at_ns, serial)));
+        fs.lifo.push(handle);
+        fs.by_deadline.push(Reverse((slot.expires_at_ns, handle)));
+        fs.live += 1;
     }
 
     /// Drop idle slots whose deadline has passed by `now`: pop the
@@ -170,18 +230,20 @@ impl WarmPool {
     /// slot was already claimed.
     fn expire(&mut self, func: &str, now: u64) {
         let Some(fs) = self.idle.get_mut(func) else { return };
+        let arena = &mut self.slots;
         let mut charges: Vec<u64> = Vec::new();
-        while let Some(&Reverse((expires_at_ns, serial))) = fs.by_deadline.peek() {
+        while let Some(&Reverse((expires_at_ns, handle))) = fs.by_deadline.peek() {
             if expires_at_ns > now {
                 break;
             }
             fs.by_deadline.pop();
-            if let Some(s) = fs.slots.remove(&serial) {
+            if let Some(s) = arena.remove(handle) {
                 charges.push(s.expires_at_ns.saturating_sub(s.idle_since_ns));
             }
         }
         if !charges.is_empty() {
-            fs.compact();
+            fs.live -= charges.len();
+            fs.compact(arena);
             self.idle_live -= charges.len() as u64;
             self.expirations += charges.len() as u64;
             let a = self.alive.get_mut(func).expect("alive entry");
@@ -213,12 +275,13 @@ impl WarmPool {
     pub fn dispatch_shared(&mut self, key: &str, owner: u32, now: u64) -> Dispatch {
         self.expire(key, now);
         // LIFO claim (most recently idle): matches Fn's behaviour and
-        // maximizes expiry of the cold tail.  Pops stale serials as it
+        // maximizes expiry of the cold tail.  Pops stale handles as it
         // walks down.
+        let arena = &mut self.slots;
         let slot = self.idle.get_mut(key).and_then(|fs| {
             // Drop stale tombstones off the top of the claim stack.
             while let Some(&top) = fs.lifo.last() {
-                if fs.slots.contains_key(&top) {
+                if arena.is_live(top) {
                     break;
                 }
                 fs.lifo.pop();
@@ -226,30 +289,33 @@ impl WarmPool {
             let &top = fs.lifo.last()?;
             // In the exclusive pool every slot matches the claimant, so
             // this is the plain LIFO pop, bit for bit.
-            if fs.slots[&top].owner == owner {
+            if arena.owner_of(top) == owner {
                 fs.lifo.pop();
-                return fs.slots.remove(&top);
+                fs.live -= 1;
+                return arena.remove(top);
             }
             let own = fs
                 .lifo
                 .iter()
                 .rev()
-                .find(|&&s| fs.slots.get(&s).is_some_and(|sl| sl.owner == owner))
+                .find(|&&h| arena.is_live(h) && arena.owner_of(h) == owner)
                 .copied();
             match own {
                 // Mid-stack same-owner claim: the lifo entry stays
                 // behind as a lazy tombstone (compacted like every other
                 // stale entry).
-                Some(s) => {
-                    let claimed = fs.slots.remove(&s);
-                    fs.compact();
+                Some(h) => {
+                    let claimed = arena.remove(h);
+                    fs.live -= 1;
+                    fs.compact(arena);
                     claimed
                 }
                 // No slot holds this function's state: claim the newest
                 // runtime-warm worker and pay specialization.
                 None => {
                     fs.lifo.pop();
-                    fs.slots.remove(&top)
+                    fs.live -= 1;
+                    arena.remove(top)
                 }
             }
         });
@@ -345,7 +411,7 @@ impl WarmPool {
     }
 
     pub fn idle_count(&self, func: &str) -> usize {
-        self.idle.get(func).map_or(0, |fs| fs.slots.len())
+        self.idle.get(func).map_or(0, |fs| fs.live)
     }
 
     /// Idle warm executors still live at `now` (expires stale slots first).
@@ -360,11 +426,24 @@ impl WarmPool {
     /// dropped).  Lets the platform's warm index seed its candidate sets
     /// from a pre-populated pool.
     pub fn warm_funcs(&self) -> impl Iterator<Item = &str> {
-        self.idle.iter().filter(|(_, fs)| !fs.slots.is_empty()).map(|(k, _)| k.as_str())
+        self.idle.iter().filter(|(_, fs)| fs.live > 0).map(|(k, _)| k.as_str())
     }
 
     pub fn alive_count(&self, func: &str) -> u64 {
         self.alive.get(func).copied().unwrap_or(0)
+    }
+
+    /// Drain every live slot of one key out of the arena, clearing both
+    /// orders.  The LIFO stack is a superset of the live set (claims
+    /// leave tombstones, never drop live handles), so removing each
+    /// still-live handle visits every slot exactly once.
+    fn drain_key(fs: &mut FuncSlots, arena: &mut SlotArena) -> Vec<WarmSlot> {
+        let slots: Vec<WarmSlot> =
+            fs.lifo.drain(..).filter_map(|h| arena.remove(h)).collect();
+        debug_assert_eq!(slots.len(), fs.live, "live count matches drained slots");
+        fs.by_deadline.clear();
+        fs.live = 0;
+        slots
     }
 
     /// Account all still-idle slots up to `now` (end of run).
@@ -373,9 +452,7 @@ impl WarmPool {
         for f in funcs {
             self.expire(&f, now);
             if let Some(fs) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
-                fs.lifo.clear();
-                fs.by_deadline.clear();
+                let slots = Self::drain_key(fs, &mut self.slots);
                 self.idle_live -= slots.len() as u64;
                 for s in slots {
                     let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
@@ -393,9 +470,7 @@ impl WarmPool {
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
             if let Some(fs) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
-                fs.lifo.clear();
-                fs.by_deadline.clear();
+                let slots = Self::drain_key(fs, &mut self.slots);
                 let n = slots.len() as u64;
                 self.idle_live -= n;
                 self.expirations += n;
@@ -420,9 +495,7 @@ impl WarmPool {
         let mut dropped = 0u64;
         for f in funcs {
             if let Some(fs) = self.idle.get_mut(&f) {
-                let slots: Vec<WarmSlot> = fs.slots.drain().map(|(_, s)| s).collect();
-                fs.lifo.clear();
-                fs.by_deadline.clear();
+                let slots = Self::drain_key(fs, &mut self.slots);
                 dropped += slots.len() as u64;
                 for s in slots {
                     let idle_ns = now.min(s.expires_at_ns).saturating_sub(s.idle_since_ns);
@@ -726,16 +799,23 @@ mod tests {
         {
             let fs = p.idle.get("f").expect("func entry");
             assert!(
-                fs.lifo.len() <= 4 * fs.slots.len() + 64,
+                fs.lifo.len() <= 4 * fs.live + 64,
                 "tombstones must be compacted: {} stale-ish entries over {} live slots",
                 fs.lifo.len(),
-                fs.slots.len()
+                fs.live
             );
         }
         p.finalize(now + 100 * S);
         assert_eq!(p.warm_hits + p.cold_starts, 2_000);
         let fs = p.idle.get("f").expect("func entry");
-        assert!(fs.slots.is_empty(), "finalize drains all live slots");
+        assert_eq!(fs.live, 0, "finalize drains all live slots");
+        // The arena recycles: its capacity is bounded by peak idle
+        // occupancy, not by total slot churn.
+        assert!(
+            p.slots.gen.len() <= 64,
+            "arena must recycle freed indices, holds {}",
+            p.slots.gen.len()
+        );
     }
 
     #[test]

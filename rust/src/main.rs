@@ -7,6 +7,7 @@
 //!   chaos                   fault-injection sweep (E14): the fleet under node crashes
 //!   planet                  planet sweep (E15): 256 nodes, 10k fns, millions of requests
 //!   sharing                 universal-worker sharing sweep (E16): shared warm pools
+//!   hyperplanet             sharded sweep (E17): 1024 nodes, 10k fns, parallel cells
 //!   trace                   replay one experiment cell with lifecycle tracing on
 //!   compare                 bench-regression gate: diff two BENCH_*.json reports
 //!   serve                   start the live platform (HTTP + PJRT)
@@ -31,6 +32,7 @@ fn main() {
         "chaos" => cmd_chaos(&args),
         "planet" => cmd_planet(&args),
         "sharing" => cmd_sharing(&args),
+        "hyperplanet" => cmd_hyperplanet(&args),
         "trace" => cmd_trace(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
@@ -55,7 +57,7 @@ coldfaas — cold-start-only FaaS (reproduction of 'Cooling Down FaaS', 2022)
 
 USAGE: coldfaas <subcommand> [options]
 
-  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|chaos|planet|all>
+  experiment <fig1|fig2|fig3|fig4|table1|decompose|images|complexity|waste|distance|scaleout|policies|fleet|chaos|planet|sharing|hyperplanet|all>
       --requests N          requests per cell (default 10000; paper value)
       --parallelism LIST    e.g. 1,5,10,20,40 (default)
       --seed N              deterministic seed
@@ -149,6 +151,26 @@ USAGE: coldfaas <subcommand> [options]
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
+  hyperplanet               sharded sweep (E17): the E15 grid at 1024 nodes
+                            with the S26 sharded accounting plane (per-shard
+                            partials merged bit-identically at any shard
+                            count) and cells running in parallel on the
+                            sweep runner; aggregate events/s is the gated
+                            throughput headline
+      --nodes N             cluster size, 1..=1024 (default 1024)
+      --cores N             cores per node (default 8)
+      --shards N            accounting shards per cell (default 8; any
+                            value yields byte-identical reports)
+      --functions N         distinct functions (default 10000)
+      --rps F               aggregate offered load (default sized from --requests)
+      --duration S          virtual trace seconds (default 600)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic seed
+      --quick               reduced trace (same 1024-node cluster)
+      --timeseries          sample interval telemetry on every cell
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
   trace [cell]              replay one experiment cell with the observability
                             layer armed and write a Chrome trace_event file
                             (load it in chrome://tracing or
@@ -169,8 +191,9 @@ USAGE: coldfaas <subcommand> [options]
   compare <run.json> <baseline.json>
                             bench-regression gate over two machine-readable
                             reports: paper-check booleans must match exactly,
-                            latency/waste metrics within --tol, wall-clock and
-                            events/s informational only; exit 1 on drift
+                            latency/waste metrics within --tol, wall-clock
+                            informational, events/s gated one-sidedly against
+                            regressions; exit 1 on drift
       --tol F               relative tolerance for metrics (default 0.10)
       --out FILE            also append the diff to FILE
 
@@ -453,6 +476,37 @@ fn cmd_planet(args: &Args) -> i32 {
     let t0 = std::time::Instant::now();
     let report = planet_with(&cfg);
     finish_report(args, "planet", report, t0.elapsed().as_secs_f64())
+}
+
+fn cmd_hyperplanet(args: &Args) -> i32 {
+    use coldfaas::experiments::hyperplanet::{hyperplanet_config, hyperplanet_with};
+    let cfg = exp_config(args).and_then(|base| {
+        let mut cfg = hyperplanet_config(&base);
+        cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
+        cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        cfg.shards = args.try_get_u64("shards", cfg.shards as u64)? as usize;
+        tenant_flags(args, &mut cfg.tenant)?;
+        if args.has_flag("timeseries") {
+            cfg.obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
+        }
+        if cfg.nodes == 0 || cfg.nodes > coldfaas::platform::MAX_NODES {
+            return Err(format!("--nodes must be in 1..={}", coldfaas::platform::MAX_NODES));
+        }
+        if cfg.cores_per_node == 0 {
+            return Err("--cores must be positive".to_string());
+        }
+        if cfg.shards == 0 {
+            return Err("--shards must be positive (1 = the single-engine layout)".to_string());
+        }
+        Ok(cfg)
+    });
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("hyperplanet", &e),
+    };
+    let t0 = std::time::Instant::now();
+    let report = hyperplanet_with(&cfg);
+    finish_report(args, "hyperplanet", report, t0.elapsed().as_secs_f64())
 }
 
 fn cmd_sharing(args: &Args) -> i32 {

@@ -9,11 +9,13 @@ const BUCKETS: usize = 512;
 const MIN_NS: f64 = 100.0;
 const GROWTH: f64 = 1.0461;
 
-#[derive(Clone)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Histogram {
     counts: [u64; BUCKETS],
     n: u64,
-    sum_ns: f64,
+    /// Exact integer sum: merges are associative and commutative bit-for-bit,
+    /// which the sharded-platform merge (S26) relies on for K-invariance.
+    sum_ns: u128,
     min_ns: u64,
     max_ns: u64,
 }
@@ -29,7 +31,7 @@ impl Histogram {
         Histogram {
             counts: [0; BUCKETS],
             n: 0,
-            sum_ns: 0.0,
+            sum_ns: 0,
             min_ns: u64::MAX,
             max_ns: 0,
         }
@@ -48,7 +50,7 @@ impl Histogram {
     pub fn record_ns(&mut self, ns: u64) {
         self.counts[Self::bucket(ns)] += 1;
         self.n += 1;
-        self.sum_ns += ns as f64;
+        self.sum_ns += ns as u128;
         self.min_ns = self.min_ns.min(ns);
         self.max_ns = self.max_ns.max(ns);
     }
@@ -65,7 +67,7 @@ impl Histogram {
         if self.n == 0 {
             return 0.0;
         }
-        self.sum_ns / self.n as f64 / 1e6
+        self.sum_ns as f64 / self.n as f64 / 1e6
     }
 
     pub fn max_ms(&self) -> f64 {
@@ -181,6 +183,40 @@ mod tests {
                 "q{q}: merged {approx} vs exact {exact}"
             );
         }
+    }
+
+    #[test]
+    fn merge_is_order_independent_bitwise() {
+        // The sharded platform merges per-shard partials in shard order,
+        // which groups the same records differently than the single-engine
+        // per-node fold; with integer sums the result must be bit-identical
+        // regardless of grouping or order.
+        let mut parts: Vec<Histogram> = (0..5).map(|_| Histogram::new()).collect();
+        let mut x = 0xDEADBEEFu64;
+        for i in 0..10_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            parts[(i % 5) as usize].record_ns(100 + x % 2_000_000_000);
+        }
+        let mut fwd = Histogram::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = Histogram::new();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        let mut grouped = Histogram::new();
+        let mut left = Histogram::new();
+        left.merge(&parts[0]);
+        left.merge(&parts[1]);
+        let mut right = Histogram::new();
+        right.merge(&parts[2]);
+        right.merge(&parts[3]);
+        right.merge(&parts[4]);
+        grouped.merge(&left);
+        grouped.merge(&right);
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd, grouped);
     }
 
     #[test]

@@ -23,11 +23,13 @@ pub mod faults;
 pub mod node;
 pub mod presets;
 pub mod sched;
+pub mod shard;
 pub mod sim;
 
 pub use faults::{chaos_plan, FabricFault, FaultConfig, FaultPlan, NodeFault};
 pub use node::NodeState;
 pub use sched::{PlacementOutcome, SchedPolicy, Scheduler};
+pub use shard::{HeatClass, ShardMailbox, ShardMsg, ShardPartial, ShardPlan};
 pub use sim::{exact_quantile_ms, run_platform, PlatformResult, PlatformSim};
 
 use crate::fnplat::{DbBackend, DriverKind, Placement};
@@ -239,6 +241,13 @@ pub struct PlatformConfig {
     /// Observability (S25): lifecycle tracing and interval telemetry.
     /// The default observes nothing and leaves the run byte-identical.
     pub obs: ObsConfig,
+    /// Accounting shards (S26): nodes partition contiguously across this
+    /// many shards, domain decisions route through the deterministic
+    /// inter-shard mailbox, and per-shard partials merge into the report.
+    /// Every value (clamped to the node count) produces a byte-identical
+    /// result — pinned by the regression suite; 1 is the single-engine
+    /// layout.
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -272,6 +281,7 @@ impl PlatformConfig {
             exact_latencies: false,
             faults: FaultPlan::default(),
             obs: ObsConfig::default(),
+            shards: 1,
             seed: 0xC01D,
         }
     }

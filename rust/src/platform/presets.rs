@@ -353,6 +353,8 @@ pub fn run_burst(cfg: &ClusterConfig) -> BurstResult {
         warmup_keep_ns: 30 * 1_000_000_000,
         exact_latencies: true,
         faults: super::FaultPlan::default(),
+        obs: crate::obs::ObsConfig::default(),
+        shards: 1,
         seed: cfg.seed,
     };
     let r: PlatformResult =

@@ -1,0 +1,454 @@
+//! Sharded platform accounting (S26): deterministic node partition,
+//! ordered inter-shard mailbox, and mergeable per-shard result partials.
+//!
+//! The platform's event *spine* stays a single deterministic DES — step
+//! durations sample an engine-global PRNG in global event order, so any
+//! interleaving change would change the draws themselves.  What shards is
+//! the **accounting plane**: nodes are partitioned contiguously across K
+//! shards by [`ShardPlan`]; every domain decision that lands on a node
+//! (dispatch, serve, kill, crash, restart, pre-warm boot) posts an
+//! explicit [`ShardMsg`] into that node's shard queue in the
+//! [`ShardMailbox`], stamped with the event's virtual time and a unique
+//! serial; the mailbox drains at virtual-time barriers into per-shard
+//! [`ShardPartial`] accumulators; and the final report is the shard-order
+//! merge of those partials.  Node-finalization work (pool teardown,
+//! histogram merging) runs **concurrently per shard** — each worker owns
+//! a disjoint contiguous node range — on `std::thread::scope`, the same
+//! primitive the sweep runner uses.
+//!
+//! The invariant everything hangs off: every quantity a partial carries
+//! is an exact integer (counts, `u128` nanosecond sums), so applying
+//! messages per shard and merging partials in shard order is associative
+//! and commutative **bit-for-bit**.  That is what makes the merged report
+//! byte-identical for every shard count, including K = 1 — pinned by the
+//! regression suite and a property test, and re-checked in debug builds
+//! where the legacy global counters are retained as a parity oracle.
+
+use crate::metrics::Histogram;
+
+/// Mailbox drain cadence: one barrier per virtual second.  Drain timing
+/// is observationally pure (partials apply exact integer deltas), so the
+/// cadence only bounds queued-message memory, never results.
+pub const DEFAULT_BARRIER_NS: u64 = 1_000_000_000;
+
+/// Contiguous partition of `nodes` across `shards` (clamped to
+/// `[1, nodes]`): shard `i` owns `base + 1` nodes if `i < nodes % shards`
+/// else `base`, where `base = nodes / shards`.  Contiguity keeps the
+/// shard-order merge of per-node histograms identical to the node-order
+/// fold of the single-engine path.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    nodes: usize,
+    shards: usize,
+}
+
+impl ShardPlan {
+    pub fn new(nodes: usize, shards: usize) -> ShardPlan {
+        assert!(nodes >= 1, "a shard plan needs at least one node");
+        ShardPlan { nodes, shards: shards.clamp(1, nodes) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The contiguous node range shard `shard` owns.
+    pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
+        debug_assert!(shard < self.shards);
+        let base = self.nodes / self.shards;
+        let rem = self.nodes % self.shards;
+        let start = shard * base + shard.min(rem);
+        let len = base + usize::from(shard < rem);
+        start..start + len
+    }
+
+    /// The shard owning `node` — the inverse of [`ShardPlan::range`].
+    pub fn shard_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.nodes);
+        let base = self.nodes / self.shards;
+        let rem = self.nodes % self.shards;
+        let big = rem * (base + 1);
+        if node < big {
+            node / (base + 1)
+        } else {
+            rem + (node - big) / base
+        }
+    }
+}
+
+/// Latency class of a served dispatch, as carried by [`ShardMsg::Served`]
+/// (mirrors the platform's private dispatch-heat classification).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeatClass {
+    Cold,
+    Warm,
+    /// Runtime-warm slot owned by another function (S23): paid the
+    /// specialization pipeline.
+    Specialized,
+}
+
+/// One cross-shard accounting message: a domain decision attributed to
+/// the shard owning the node it landed on (gateway-scoped outcomes —
+/// injections, retries, rejections — route to shard 0, the frontend's
+/// home shard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardMsg {
+    /// Attempt 0 of a user chain completed its injection accounting.
+    Injected,
+    /// A dispatch decision placed an attempt on a node.
+    Dispatched { cold: bool, in_window: bool },
+    /// An attempt completed and returned a response.
+    Served { heat: HeatClass, lat_ns: u64 },
+    /// An attempt died with its crashed node.
+    Killed,
+    /// A retry attempt was spawned for a killed request.
+    Retry,
+    /// A chain was abandoned (cluster down, or retries exhausted).
+    Rejected,
+    /// A node crashed, destroying `slots_lost` idle warm executors.
+    Crashed { slots_lost: u64 },
+    /// A crashed node came back up.
+    Restarted,
+    /// A scheduled pre-warm boot fired and populated a pool.
+    PrewarmBoot,
+}
+
+/// Per-shard accumulator: the message-driven counters plus the
+/// node-derived fields the per-shard finalize pass fills in.  Every field
+/// is an exact integer quantity (histogram sums are `u128` ns), so
+/// [`ShardPartial::merge`] is associative and commutative bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardPartial {
+    // --- message-driven (applied at mailbox drains) ---
+    pub injected: u64,
+    pub served: u64,
+    pub killed: u64,
+    pub retries: u64,
+    pub rejected: u64,
+    pub crashes: u64,
+    pub restarts: u64,
+    pub prewarm_boots: u64,
+    pub warm_slots_lost: u64,
+    pub window_cold: u64,
+    pub window_total: u64,
+    pub steady_cold: u64,
+    pub steady_total: u64,
+    pub cold_hist: Histogram,
+    pub warm_hist: Histogram,
+    pub spec_hist: Histogram,
+    // --- node-derived (filled by the shard's finalize worker) ---
+    pub hist: Histogram,
+    pub idle_mem_byte_ns: u128,
+    pub warm_hits: u64,
+    pub specializations: u64,
+    pub cold_starts: u64,
+    pub expirations: u64,
+    pub retirements: u64,
+    pub monitor_events: u64,
+}
+
+impl ShardPartial {
+    /// Apply one drained message to this shard's accumulator.
+    pub fn apply(&mut self, msg: &ShardMsg) {
+        match *msg {
+            ShardMsg::Injected => self.injected += 1,
+            ShardMsg::Dispatched { cold, in_window } => {
+                if in_window {
+                    self.window_total += 1;
+                    self.window_cold += u64::from(cold);
+                } else {
+                    self.steady_total += 1;
+                    self.steady_cold += u64::from(cold);
+                }
+            }
+            ShardMsg::Served { heat, lat_ns } => {
+                self.served += 1;
+                match heat {
+                    HeatClass::Cold => self.cold_hist.record_ns(lat_ns),
+                    HeatClass::Warm => self.warm_hist.record_ns(lat_ns),
+                    HeatClass::Specialized => self.spec_hist.record_ns(lat_ns),
+                }
+            }
+            ShardMsg::Killed => self.killed += 1,
+            ShardMsg::Retry => self.retries += 1,
+            ShardMsg::Rejected => self.rejected += 1,
+            ShardMsg::Crashed { slots_lost } => {
+                self.crashes += 1;
+                self.warm_slots_lost += slots_lost;
+            }
+            ShardMsg::Restarted => self.restarts += 1,
+            ShardMsg::PrewarmBoot => self.prewarm_boots += 1,
+        }
+    }
+
+    /// Fold another partial into this one.  Exact integer adds
+    /// throughout: grouping and order cannot change the result.
+    pub fn merge(&mut self, other: &ShardPartial) {
+        self.injected += other.injected;
+        self.served += other.served;
+        self.killed += other.killed;
+        self.retries += other.retries;
+        self.rejected += other.rejected;
+        self.crashes += other.crashes;
+        self.restarts += other.restarts;
+        self.prewarm_boots += other.prewarm_boots;
+        self.warm_slots_lost += other.warm_slots_lost;
+        self.window_cold += other.window_cold;
+        self.window_total += other.window_total;
+        self.steady_cold += other.steady_cold;
+        self.steady_total += other.steady_total;
+        self.cold_hist.merge(&other.cold_hist);
+        self.warm_hist.merge(&other.warm_hist);
+        self.spec_hist.merge(&other.spec_hist);
+        self.hist.merge(&other.hist);
+        self.idle_mem_byte_ns += other.idle_mem_byte_ns;
+        self.warm_hits += other.warm_hits;
+        self.specializations += other.specializations;
+        self.cold_starts += other.cold_starts;
+        self.expirations += other.expirations;
+        self.retirements += other.retirements;
+        self.monitor_events += other.monitor_events;
+    }
+}
+
+/// Deterministic inter-shard mailbox: one `(t, seq, msg)` queue per
+/// shard.  Posts carry the posting event's virtual time plus a unique
+/// serial, and arrive in nondecreasing `(t, seq)` order (the event spine
+/// is totally ordered), so each queue is sorted by construction — the
+/// debug assert pins that.  Queues drain into [`ShardPartial`]s at
+/// virtual-time barriers, bounding queued-message memory by the barrier
+/// interval instead of the run length.
+#[derive(Debug)]
+pub struct ShardMailbox {
+    queues: Vec<Vec<(u64, u64, ShardMsg)>>,
+    seq: u64,
+    barrier_ns: u64,
+    next_barrier_ns: u64,
+    posted: u64,
+    barriers: u64,
+}
+
+impl ShardMailbox {
+    pub fn new(shards: usize, barrier_ns: u64) -> ShardMailbox {
+        assert!(shards >= 1, "mailbox needs at least one shard");
+        assert!(barrier_ns >= 1, "barrier interval must be positive");
+        ShardMailbox {
+            queues: (0..shards).map(|_| Vec::new()).collect(),
+            seq: 0,
+            barrier_ns,
+            next_barrier_ns: barrier_ns,
+            posted: 0,
+            barriers: 0,
+        }
+    }
+
+    /// Messages posted over the mailbox's lifetime.
+    pub fn posted(&self) -> u64 {
+        self.posted
+    }
+
+    /// Barrier drains executed (including the final explicit drain).
+    pub fn barriers(&self) -> u64 {
+        self.barriers
+    }
+
+    /// Post a message to `shard`, stamped `(t, seq)` with a fresh serial.
+    pub fn post(&mut self, shard: usize, t: u64, msg: ShardMsg) {
+        self.seq += 1;
+        let seq = self.seq;
+        debug_assert!(
+            !self.queues[shard].last().is_some_and(|&(lt, ls, _)| (lt, ls) >= (t, seq)),
+            "mailbox posts must arrive in (t, seq) order"
+        );
+        self.queues[shard].push((t, seq, msg));
+        self.posted += 1;
+    }
+
+    /// Drain every queue if virtual time has crossed the next barrier.
+    pub fn maybe_drain(&mut self, now: u64, partials: &mut [ShardPartial]) {
+        if now < self.next_barrier_ns {
+            return;
+        }
+        // Land on the barrier after `now` (skip any starved intervals).
+        self.next_barrier_ns = (now / self.barrier_ns + 1) * self.barrier_ns;
+        self.drain(partials);
+    }
+
+    /// Apply every queued message to its shard's partial, in per-shard
+    /// `(t, seq)` order, and clear the queues.
+    pub fn drain(&mut self, partials: &mut [ShardPartial]) {
+        debug_assert_eq!(partials.len(), self.queues.len());
+        for (shard, queue) in self.queues.iter_mut().enumerate() {
+            for (_, _, msg) in queue.drain(..) {
+                partials[shard].apply(&msg);
+            }
+        }
+        self.barriers += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_partitions_contiguously_and_inverts() {
+        for nodes in [1usize, 2, 7, 64, 256, 1024] {
+            for shards in [1usize, 2, 3, 5, 8, 1500] {
+                let plan = ShardPlan::new(nodes, shards);
+                assert!(plan.shards() >= 1 && plan.shards() <= nodes);
+                let mut covered = 0usize;
+                for s in 0..plan.shards() {
+                    let r = plan.range(s);
+                    assert_eq!(r.start, covered, "{nodes}x{shards} shard {s}");
+                    for node in r.clone() {
+                        assert_eq!(plan.shard_of(node), s, "{nodes}x{shards} node {node}");
+                    }
+                    covered = r.end;
+                }
+                assert_eq!(covered, nodes, "{nodes}x{shards} must cover all nodes");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_balances_within_one_node() {
+        let plan = ShardPlan::new(10, 4);
+        let sizes: Vec<usize> = (0..4).map(|s| plan.range(s).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn mailbox_drains_messages_into_owning_shards() {
+        let mut mb = ShardMailbox::new(3, 1_000);
+        let mut parts = vec![ShardPartial::default(); 3];
+        mb.post(0, 10, ShardMsg::Injected);
+        mb.post(2, 10, ShardMsg::Dispatched { cold: true, in_window: false });
+        mb.post(2, 20, ShardMsg::Served { heat: HeatClass::Cold, lat_ns: 5_000_000 });
+        mb.post(1, 30, ShardMsg::Crashed { slots_lost: 7 });
+        // Below the barrier: nothing drains.
+        mb.maybe_drain(999, &mut parts);
+        assert_eq!(parts[0].injected, 0);
+        mb.maybe_drain(1_000, &mut parts);
+        assert_eq!(parts[0].injected, 1);
+        assert_eq!(parts[2].steady_total, 1);
+        assert_eq!(parts[2].steady_cold, 1);
+        assert_eq!(parts[2].served, 1);
+        assert_eq!(parts[2].cold_hist.len(), 1);
+        assert_eq!(parts[1].crashes, 1);
+        assert_eq!(parts[1].warm_slots_lost, 7);
+        assert_eq!(mb.posted(), 4);
+        assert_eq!(mb.barriers(), 1);
+        // Drained queues stay reusable and ordered.
+        mb.post(0, 1_500, ShardMsg::Retry);
+        mb.drain(&mut parts);
+        assert_eq!(parts[0].retries, 1);
+    }
+
+    #[test]
+    fn drain_timing_cannot_change_totals() {
+        // The same message stream applied through one big drain vs. many
+        // small ones must produce bit-identical partials: drains only
+        // bound memory.
+        let msgs = [
+            (0usize, 5u64, ShardMsg::Injected),
+            (1, 10, ShardMsg::Dispatched { cold: false, in_window: true }),
+            (1, 15, ShardMsg::Served { heat: HeatClass::Warm, lat_ns: 2_000_000 }),
+            (0, 2_500, ShardMsg::Rejected),
+            (1, 3_000, ShardMsg::Served { heat: HeatClass::Specialized, lat_ns: 9_000_000 }),
+        ];
+        let mut eager_mb = ShardMailbox::new(2, 1_000);
+        let mut eager = vec![ShardPartial::default(); 2];
+        for &(shard, t, msg) in &msgs {
+            eager_mb.post(shard, t, msg);
+            eager_mb.maybe_drain(t, &mut eager);
+        }
+        eager_mb.drain(&mut eager);
+        let mut lazy_mb = ShardMailbox::new(2, 1_000);
+        let mut lazy = vec![ShardPartial::default(); 2];
+        for &(shard, t, msg) in &msgs {
+            lazy_mb.post(shard, t, msg);
+        }
+        lazy_mb.drain(&mut lazy);
+        for (e, l) in eager.iter().zip(&lazy) {
+            assert_eq!(e.injected, l.injected);
+            assert_eq!(e.served, l.served);
+            assert_eq!(e.rejected, l.rejected);
+            assert_eq!(e.window_total, l.window_total);
+            assert_eq!(e.warm_hist, l.warm_hist);
+            assert_eq!(e.spec_hist, l.spec_hist);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "(t, seq) order")]
+    fn out_of_order_post_is_rejected() {
+        let mut mb = ShardMailbox::new(1, 1_000);
+        mb.post(0, 100, ShardMsg::Injected);
+        mb.post(0, 50, ShardMsg::Injected);
+    }
+
+    #[test]
+    fn partial_merge_is_associative_and_commutative() {
+        // Build three partials from disjoint slices of one deterministic
+        // message stream, then merge in several groupings: all must be
+        // bit-identical (every field is an exact integer).
+        let mut x = 0x5EEDu64;
+        let mut step = || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x
+        };
+        let mut parts = vec![ShardPartial::default(); 3];
+        for i in 0..3_000u64 {
+            let p = &mut parts[(i % 3) as usize];
+            let msg = match step() % 7 {
+                0 => ShardMsg::Injected,
+                1 => ShardMsg::Dispatched { cold: step() % 2 == 0, in_window: step() % 3 == 0 },
+                2 => ShardMsg::Served { heat: HeatClass::Warm, lat_ns: 1_000 + step() % 1_000_000_000 },
+                3 => ShardMsg::Served { heat: HeatClass::Cold, lat_ns: 1_000 + step() % 4_000_000_000 },
+                4 => ShardMsg::Killed,
+                5 => ShardMsg::Crashed { slots_lost: step() % 50 },
+                _ => ShardMsg::PrewarmBoot,
+            };
+            p.apply(&msg);
+            p.hist.record_ns(1_000 + step() % 2_000_000_000);
+            p.idle_mem_byte_ns += (step() % (1 << 40)) as u128;
+            p.warm_hits += step() % 5;
+        }
+        let fold = |order: &[usize]| {
+            let mut total = ShardPartial::default();
+            for &i in order {
+                total.merge(&parts[i]);
+            }
+            total
+        };
+        let a = fold(&[0, 1, 2]);
+        let b = fold(&[2, 1, 0]);
+        let mut c = ShardPartial::default();
+        let mut right = ShardPartial::default();
+        right.merge(&parts[1]);
+        right.merge(&parts[2]);
+        c.merge(&parts[0]);
+        c.merge(&right);
+        for t in [&b, &c] {
+            assert_eq!(a.injected, t.injected);
+            assert_eq!(a.served, t.served);
+            assert_eq!(a.killed, t.killed);
+            assert_eq!(a.crashes, t.crashes);
+            assert_eq!(a.warm_slots_lost, t.warm_slots_lost);
+            assert_eq!(a.window_cold, t.window_cold);
+            assert_eq!(a.steady_total, t.steady_total);
+            assert_eq!(a.prewarm_boots, t.prewarm_boots);
+            assert_eq!(a.cold_hist, t.cold_hist);
+            assert_eq!(a.warm_hist, t.warm_hist);
+            assert_eq!(a.hist, t.hist);
+            assert_eq!(a.idle_mem_byte_ns, t.idle_mem_byte_ns);
+            assert_eq!(a.warm_hits, t.warm_hits);
+        }
+    }
+}

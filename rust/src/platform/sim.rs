@@ -53,6 +53,9 @@ use crate::workload::tenants::TenantTrace;
 use super::faults::FaultPlan;
 use super::node::NodeState;
 use super::sched::{footprint_bytes, nodes_with_image, Scheduler};
+use super::shard::{
+    HeatClass, ShardMailbox, ShardMsg, ShardPartial, ShardPlan, DEFAULT_BARRIER_NS,
+};
 use super::{ImageSeeding, PlatformConfig, PlatformLoad, RequestPath};
 
 const TAG_DISPATCH: u32 = 1;
@@ -218,6 +221,14 @@ pub struct PlatformSim<'a> {
     sink: Box<dyn TraceSink>,
     telemetry: Telemetry,
     profile: PhaseProfile,
+    // --- sharding (S26): the accounting plane.  Node-attributed domain
+    // decisions post ordered messages into the mailbox; per-shard
+    // partials absorb them at virtual-time barriers; the report is the
+    // shard-order merge.  The engine-global counters below are retained
+    // as the debug-parity oracle the merge is asserted against. ---
+    plan: ShardPlan,
+    mailbox: ShardMailbox,
+    partials: Vec<ShardPartial>,
     // --- metrics ---
     cold_hist: Histogram,
     warm_hist: Histogram,
@@ -250,6 +261,10 @@ impl PlatformSim<'_> {
             let g = cluster_gauges(&self.nodes);
             self.telemetry.advance(now, &g);
         }
+        // S26: drain the inter-shard mailbox when virtual time crosses a
+        // barrier, bounding queued messages by the barrier interval (the
+        // drain applies exact integer deltas, so timing is result-pure).
+        self.mailbox.maybe_drain(now, &mut self.partials);
     }
 
     fn dispatch_tail(&mut self, req: ReqId, class: u32, now: u64, rng: &mut Rng) -> Vec<Step> {
@@ -306,6 +321,11 @@ impl PlatformSim<'_> {
             } else {
                 self.steady_total += 1;
             }
+            self.mailbox.post(
+                self.plan.shard_of(node),
+                now,
+                ShardMsg::Dispatched { cold: false, in_window },
+            );
         } else {
             let placement =
                 self.sched.place_cold(&mut self.nodes, &self.images[func as usize], rng);
@@ -314,6 +334,7 @@ impl PlatformSim<'_> {
                 // chain ends here (no placement, no latency sample).
                 self.rejected += 1;
                 self.telemetry.on_reject();
+                self.mailbox.post(0, now, ShardMsg::Rejected);
                 if self.sink.enabled() {
                     self.sink.instant(now, 0, "reject");
                 }
@@ -364,6 +385,11 @@ impl PlatformSim<'_> {
                 self.steady_total += 1;
                 self.steady_cold += 1;
             }
+            self.mailbox.post(
+                self.plan.shard_of(node),
+                now,
+                ShardMsg::Dispatched { cold: true, in_window },
+            );
         }
         tail
     }
@@ -436,6 +462,11 @@ impl Domain for PlatformSim<'_> {
                         && self.nodes[boot.node].pool.warm_available(key, now) == 0
                     {
                         self.prewarm_boots += 1;
+                        self.mailbox.post(
+                            self.plan.shard_of(boot.node),
+                            now,
+                            ShardMsg::PrewarmBoot,
+                        );
                         if self.sink.enabled() {
                             self.sink.instant(now, boot.node as u32 + 1, "prewarm-boot");
                         }
@@ -466,6 +497,11 @@ impl Domain for PlatformSim<'_> {
                 self.nodes[node].inflight = 0;
                 let drained = self.nodes[node].pool.crash(now);
                 self.warm_slots_lost += drained;
+                self.mailbox.post(
+                    self.plan.shard_of(node),
+                    now,
+                    ShardMsg::Crashed { slots_lost: drained },
+                );
                 for p in self.placed.values_mut() {
                     if p.node == node {
                         p.killed = true;
@@ -479,6 +515,7 @@ impl Domain for PlatformSim<'_> {
                     .restart_fault(node, now)
                     .expect("restart matches a plan entry");
                 self.restarts += 1;
+                self.mailbox.post(self.plan.shard_of(node), now, ShardMsg::Restarted);
                 self.profile.fault_effects += 1;
                 if self.sink.enabled() {
                     self.sink.instant(now, node as u32 + 1, "restart");
@@ -544,6 +581,7 @@ impl Domain for PlatformSim<'_> {
             let attempt = attempt_of(class);
             if attempt == 0 {
                 self.injected += 1;
+                self.mailbox.post(0, now, ShardMsg::Injected);
             }
             // The chain's true start: attempt 0 starts the chain itself;
             // a retry inherits the origin stashed when it was spawned.
@@ -569,6 +607,7 @@ impl Domain for PlatformSim<'_> {
                     // surviving node), or give up once the budget is
                     // spent — either way the request is accounted for.
                     self.killed += 1;
+                    self.mailbox.post(self.plan.shard_of(p.node), now, ShardMsg::Killed);
                     if self.sink.enabled() {
                         // Close the killed attempt's span where it opened.
                         self.sink.end(now, p.node as u32 + 1, req);
@@ -576,6 +615,7 @@ impl Domain for PlatformSim<'_> {
                     if attempt < self.faults.max_retries {
                         self.retries += 1;
                         self.telemetry.on_retry();
+                        self.mailbox.post(0, now, ShardMsg::Retry);
                         if self.sink.enabled() {
                             self.sink.instant(now, 0, "retry");
                         }
@@ -598,6 +638,7 @@ impl Domain for PlatformSim<'_> {
                     } else {
                         self.rejected += 1;
                         self.telemetry.on_reject();
+                        self.mailbox.post(0, now, ShardMsg::Rejected);
                         if self.sink.enabled() {
                             self.sink.instant(now, 0, "reject");
                         }
@@ -615,6 +656,16 @@ impl Domain for PlatformSim<'_> {
                         Heat::Specialized => self.spec_hist.record_ns(lat),
                         Heat::Warm => self.warm_hist.record_ns(lat),
                     }
+                    let heat = match p.heat {
+                        Heat::Cold => HeatClass::Cold,
+                        Heat::Specialized => HeatClass::Specialized,
+                        Heat::Warm => HeatClass::Warm,
+                    };
+                    self.mailbox.post(
+                        self.plan.shard_of(p.node),
+                        now,
+                        ShardMsg::Served { heat, lat_ns: lat },
+                    );
                     if self.exact {
                         self.latencies_ns.push(lat);
                         match p.heat {
@@ -722,6 +773,16 @@ pub struct PlatformResult {
     /// Median connection-setup cost for the driver's frontend (reported
     /// separately, as in Table I); 0 when the run has no network path.
     pub conn_setup_ms: f64,
+    // --- sharding (S26) ---
+    /// Accounting shards the node set was partitioned across (clamped to
+    /// the node count).  Every value yields a byte-identical report.
+    pub shards: usize,
+    /// Messages routed through the deterministic inter-shard mailbox.
+    /// Independent of the shard count: posting happens per domain event.
+    pub shard_msgs: u64,
+    /// Virtual-time barriers at which the mailbox drained (including the
+    /// final end-of-run drain).
+    pub shard_barriers: u64,
     // --- observability (S25) ---
     /// Interval time-series; `None` unless the run sampled telemetry.
     pub telemetry: Option<TelemetrySeries>,
@@ -842,7 +903,9 @@ pub fn run_platform(
     if let super::SharingMode::PerRuntime { runtimes } = cfg.sharing {
         assert!(runtimes >= 1, "per-runtime sharing needs at least one runtime family");
     }
+    assert!(cfg.shards >= 1, "need at least one accounting shard");
     cfg.faults.validate(cfg.nodes);
+    let plan = ShardPlan::new(cfg.nodes, cfg.shards);
 
     let func_names: Vec<String> = (0..cfg.functions).map(|f| format!("f{f}")).collect();
     let route_keys: Vec<String> = func_names
@@ -915,6 +978,9 @@ pub fn run_platform(
         sink,
         telemetry: Telemetry::new(cfg.obs.telemetry_interval_ns),
         profile: PhaseProfile::default(),
+        plan,
+        mailbox: ShardMailbox::new(plan.shards(), DEFAULT_BARRIER_NS),
+        partials: vec![ShardPartial::default(); plan.shards()],
         cold_hist: Histogram::new(),
         warm_hist: Histogram::new(),
         spec_hist: Histogram::new(),
@@ -1115,64 +1181,116 @@ pub fn run_platform(
     profile.engine_events = events;
     profile.telemetry_samples = telemetry.as_ref().map_or(0, |t| t.len() as u64);
     profile.wall_ns = wall_ns;
-    let mut hist = Histogram::new();
-    let mut node_hists = Vec::with_capacity(d.nodes.len());
-    let mut idle_mem_byte_ns: u128 = 0;
-    let (mut warm_hits, mut cold_starts, mut expirations, mut retirements, mut monitor_events) =
-        (0u64, 0u64, 0u64, 0u64, 0u64);
-    let mut specializations = 0u64;
-    for n in &mut d.nodes {
-        n.pool.finalize(now);
-        hist.merge(&n.hist);
-        node_hists.push(n.hist.clone());
-        idle_mem_byte_ns += n.pool.idle_mem_byte_ns;
-        warm_hits += n.pool.warm_hits;
-        specializations += n.pool.specializations;
-        cold_starts += n.pool.cold_starts;
-        expirations += n.pool.expirations;
-        retirements += n.pool.retirements;
-        monitor_events += n.pool.monitor_events;
+    // S26 finalize: land every queued mailbox message in its shard's
+    // partial, then run the per-shard node teardown — each worker owns
+    // one shard's contiguous node range, so with K > 1 (and the sweep
+    // thread knob allowing it) the workers run concurrently on
+    // `thread::scope`, the sweep-runner primitive.  The shard-order merge
+    // below is exact-integer arithmetic throughout, which is what makes
+    // the result bit-identical for every shard count, including K = 1.
+    let mut partials = std::mem::take(&mut d.partials);
+    d.mailbox.drain(&mut partials);
+    {
+        let mut chunks: Vec<(&mut ShardPartial, &mut [NodeState])> =
+            Vec::with_capacity(partials.len());
+        let mut rest: &mut [NodeState] = &mut d.nodes;
+        for (shard, p) in partials.iter_mut().enumerate() {
+            let (chunk, tail) = rest.split_at_mut(d.plan.range(shard).len());
+            rest = tail;
+            chunks.push((p, chunk));
+        }
+        let finalize_shard = |p: &mut ShardPartial, nodes: &mut [NodeState]| {
+            for n in nodes {
+                n.pool.finalize(now);
+                p.hist.merge(&n.hist);
+                p.idle_mem_byte_ns += n.pool.idle_mem_byte_ns;
+                p.warm_hits += n.pool.warm_hits;
+                p.specializations += n.pool.specializations;
+                p.cold_starts += n.pool.cold_starts;
+                p.expirations += n.pool.expirations;
+                p.retirements += n.pool.retirements;
+                p.monitor_events += n.pool.monitor_events;
+            }
+        };
+        if chunks.len() > 1 && crate::experiments::sweep::sweep_threads(chunks.len()) > 1 {
+            std::thread::scope(|s| {
+                for (p, chunk) in chunks {
+                    s.spawn(move || finalize_shard(p, chunk));
+                }
+            });
+        } else {
+            for (p, chunk) in chunks {
+                finalize_shard(p, chunk);
+            }
+        }
     }
+    let mut total = ShardPartial::default();
+    for p in &partials {
+        total.merge(p);
+    }
+    // Debug-parity oracle: the engine-global accounting retained on the
+    // domain must agree with the message-driven shard merge exactly.
+    debug_assert_eq!(total.injected, d.injected);
+    debug_assert_eq!(total.served, d.served);
+    debug_assert_eq!(total.killed, d.killed);
+    debug_assert_eq!(total.retries, d.retries);
+    debug_assert_eq!(total.rejected, d.rejected);
+    debug_assert_eq!(total.crashes, d.crashes);
+    debug_assert_eq!(total.restarts, d.restarts);
+    debug_assert_eq!(total.prewarm_boots, d.prewarm_boots);
+    debug_assert_eq!(total.warm_slots_lost, d.warm_slots_lost);
+    debug_assert_eq!(
+        (total.window_cold, total.window_total, total.steady_cold, total.steady_total),
+        (d.window_cold, d.window_total, d.steady_cold, d.steady_total),
+        "disruption-window split diverged from the shard merge"
+    );
+    debug_assert!(total.cold_hist == d.cold_hist, "cold-heat histogram diverged");
+    debug_assert!(total.warm_hist == d.warm_hist, "warm-heat histogram diverged");
+    debug_assert!(total.spec_hist == d.spec_hist, "spec-heat histogram diverged");
+    let node_hists: Vec<Histogram> = d.nodes.iter().map(|n| n.hist.clone()).collect();
     let nodes_with_first = nodes_with_image(&d.nodes, &d.func_names[0]);
 
     PlatformResult {
-        requests: hist.len(),
+        requests: total.hist.len(),
         elapsed_ns: now,
         events,
-        hist,
-        cold_hist: d.cold_hist.clone(),
-        warm_hist: d.warm_hist.clone(),
-        spec_hist: d.spec_hist.clone(),
+        hist: total.hist,
+        cold_hist: total.cold_hist,
+        warm_hist: total.warm_hist,
+        spec_hist: total.spec_hist,
         node_hists,
         latencies_ns: std::mem::take(&mut d.latencies_ns),
         cold_latencies_ns: std::mem::take(&mut d.cold_latencies_ns),
         warm_latencies_ns: std::mem::take(&mut d.warm_latencies_ns),
         spec_latencies_ns: std::mem::take(&mut d.spec_latencies_ns),
-        warm_hits,
-        specializations,
-        cold_starts,
-        prewarm_boots: d.prewarm_boots,
-        expirations,
-        retirements,
-        idle_gb_seconds: idle_mem_byte_ns as f64 / 1e9 / (1u64 << 30) as f64,
-        monitor_events,
-        injected: d.injected,
-        served: d.served,
-        killed: d.killed,
-        retries: d.retries,
-        rejected: d.rejected,
-        warm_slots_lost: d.warm_slots_lost,
-        crashes: d.crashes,
-        restarts: d.restarts,
-        window_cold: d.window_cold,
-        window_total: d.window_total,
-        steady_cold: d.steady_cold,
-        steady_total: d.steady_total,
+        warm_hits: total.warm_hits,
+        specializations: total.specializations,
+        cold_starts: total.cold_starts,
+        prewarm_boots: total.prewarm_boots,
+        expirations: total.expirations,
+        retirements: total.retirements,
+        idle_gb_seconds: total.idle_mem_byte_ns as f64 / 1e9 / (1u64 << 30) as f64,
+        monitor_events: total.monitor_events,
+        injected: total.injected,
+        served: total.served,
+        killed: total.killed,
+        retries: total.retries,
+        rejected: total.rejected,
+        warm_slots_lost: total.warm_slots_lost,
+        crashes: total.crashes,
+        restarts: total.restarts,
+        window_cold: total.window_cold,
+        window_total: total.window_total,
+        steady_cold: total.steady_cold,
+        steady_total: total.steady_total,
         transfers: d.sched.transfers,
         transferred_bytes: d.sched.transferred_bytes,
         footprint_bytes: footprint_bytes(&d.nodes),
         nodes_with_first_image: nodes_with_first,
         conn_setup_ms,
+        shards: d.plan.shards(),
+        shard_msgs: d.mailbox.posted(),
+        shard_barriers: d.mailbox.barriers(),
         telemetry,
         trace_json,
         trace_dropped,

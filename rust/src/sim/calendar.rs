@@ -1,0 +1,302 @@
+//! Flat calendar-queue event scheduler (S26): the DES hot path.
+//!
+//! The engine's pending-event set is overwhelmingly *near-future* — the
+//! next event is almost always within a few milliseconds of virtual now.
+//! A binary heap pays `O(log n)` pointer-chasing per operation over the
+//! whole set; a calendar queue instead hashes each event by time into a
+//! ring of fixed-width buckets, so push is an append into a small `Vec`
+//! and pop is a linear min-scan of the *current* bucket only.  Far-future
+//! events (beyond the ring's horizon) spill into a conventional binary
+//! heap and are consulted by a single `peek` per pop, migrating back into
+//! the ring in batches when the ring drains.
+//!
+//! Ordering contract — identical to the heap it replaces: events pop in
+//! ascending `(t, seq)` order, where `seq` is a unique insertion serial.
+//! The bucket min-scan breaks ties by `seq`, and `seq` uniqueness makes
+//! the scan's choice total, so the pop order is deterministic regardless
+//! of bucket layout.  In debug builds a shadow `BinaryHeap` re-derives
+//! every pop and a `debug_assert` pins the two orders against each other
+//! — the same retained-oracle pattern the index fast paths use.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Bucket width: `2^20` ns ≈ 1.05 ms per bucket — the scale of the
+/// startup phases and service times that dominate the event population.
+const BUCKET_SHIFT: u32 = 20;
+/// Ring size (power of two): horizon = `N_BUCKETS << BUCKET_SHIFT`
+/// ≈ 4.3 s of virtual time ahead of the cursor.
+const N_BUCKETS: usize = 4096;
+
+struct Item<T> {
+    t: u64,
+    seq: u64,
+    val: T,
+}
+
+/// Shadow-heap entry (debug oracle + overflow storage): min-heap on
+/// `(t, seq)`.
+struct HeapItem<T> {
+    t: u64,
+    seq: u64,
+    val: T,
+}
+
+impl<T> PartialEq for HeapItem<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapItem<T> {}
+impl<T> PartialOrd for HeapItem<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapItem<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on (time, seq): earlier first; FIFO for ties.
+        other.t.cmp(&self.t).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// A timestamp-ordered event queue: calendar ring for the near future,
+/// binary-heap overflow for the far future.  `push` assigns each event a
+/// unique serial; `pop` returns events in ascending `(t, seq)`.
+pub struct CalendarQueue<T> {
+    ring: Vec<Vec<Item<T>>>,
+    /// Absolute bucket index (`t >> BUCKET_SHIFT`) of the ring cursor.
+    /// Ring items always live in absolute buckets `[base, base + N)`.
+    base: u64,
+    ring_len: usize,
+    overflow: BinaryHeap<HeapItem<T>>,
+    seq: u64,
+    /// Debug-parity oracle: a plain heap over the same events whose pop
+    /// order every calendar pop is checked against.
+    #[cfg(debug_assertions)]
+    shadow: BinaryHeap<HeapItem<()>>,
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            ring: (0..N_BUCKETS).map(|_| Vec::new()).collect(),
+            base: 0,
+            ring_len: 0,
+            overflow: BinaryHeap::new(),
+            seq: 0,
+            #[cfg(debug_assertions)]
+            shadow: BinaryHeap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring_len + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert an event at absolute virtual time `t`.  `t` must be at or
+    /// after the time of the last popped event (the DES never schedules
+    /// into the past), which keeps every insertion at or past the cursor.
+    pub fn push(&mut self, t: u64, val: T) {
+        self.seq += 1;
+        let seq = self.seq;
+        #[cfg(debug_assertions)]
+        self.shadow.push(HeapItem { t, seq, val: () });
+        let abs = t >> BUCKET_SHIFT;
+        debug_assert!(abs >= self.base, "event scheduled before the cursor");
+        if abs < self.base + N_BUCKETS as u64 {
+            self.ring[(abs as usize) & (N_BUCKETS - 1)].push(Item { t, seq, val });
+            self.ring_len += 1;
+        } else {
+            self.overflow.push(HeapItem { t, seq, val });
+        }
+    }
+
+    /// Remove and return the earliest event by `(t, seq)`.
+    pub fn pop(&mut self) -> Option<(u64, u64, T)> {
+        if self.ring_len == 0 && !self.overflow.is_empty() {
+            self.migrate_overflow();
+        }
+        let ring_min = self.find_ring_min();
+        let take_overflow = match (ring_min, self.overflow.peek()) {
+            (None, Some(_)) => true,
+            (Some((b, i)), Some(top)) => {
+                let it = &self.ring[b][i];
+                (top.t, top.seq) < (it.t, it.seq)
+            }
+            (_, None) => false,
+        };
+        let out = if take_overflow {
+            let top = self.overflow.pop().expect("peeked");
+            Some((top.t, top.seq, top.val))
+        } else if let Some((b, i)) = ring_min {
+            let it = self.ring[b].swap_remove(i);
+            self.ring_len -= 1;
+            Some((it.t, it.seq, it.val))
+        } else {
+            None
+        };
+        #[cfg(debug_assertions)]
+        if let Some((t, seq, _)) = &out {
+            let oracle = self.shadow.pop().expect("oracle heap in sync");
+            debug_assert_eq!(
+                (oracle.t, oracle.seq),
+                (*t, *seq),
+                "calendar pop order diverged from the heap oracle"
+            );
+        }
+        out
+    }
+
+    /// Advance the cursor to the first non-empty ring bucket and return
+    /// the index of that bucket's `(t, seq)`-minimum item.  All ring
+    /// items sit in absolute buckets `[base, base + N)`, which map to
+    /// distinct slots, so the first non-empty bucket holds the ring's
+    /// global minimum and the cursor advances at most `N` slots.
+    fn find_ring_min(&mut self) -> Option<(usize, usize)> {
+        if self.ring_len == 0 {
+            return None;
+        }
+        let mut slot = (self.base as usize) & (N_BUCKETS - 1);
+        while self.ring[slot].is_empty() {
+            self.base += 1;
+            slot = (self.base as usize) & (N_BUCKETS - 1);
+        }
+        let bucket = &self.ring[slot];
+        let mut min = 0;
+        for (i, it) in bucket.iter().enumerate().skip(1) {
+            if (it.t, it.seq) < (bucket[min].t, bucket[min].seq) {
+                min = i;
+            }
+        }
+        Some((slot, min))
+    }
+
+    /// The ring drained: jump the cursor to the overflow minimum's bucket
+    /// and pull every overflow event inside the new horizon into the
+    /// ring.  (Heap pops here are batched, not per-event: this runs once
+    /// per ring drain, not once per pop.)
+    fn migrate_overflow(&mut self) {
+        let min_t = self.overflow.peek().expect("overflow non-empty").t;
+        self.base = self.base.max(min_t >> BUCKET_SHIFT);
+        let horizon = self.base + N_BUCKETS as u64;
+        while let Some(top) = self.overflow.peek() {
+            if top.t >> BUCKET_SHIFT >= horizon {
+                break;
+            }
+            let it = self.overflow.pop().expect("peeked");
+            let abs = it.t >> BUCKET_SHIFT;
+            self.ring[(abs as usize) & (N_BUCKETS - 1)].push(Item {
+                t: it.t,
+                seq: it.seq,
+                val: it.val,
+            });
+            self.ring_len += 1;
+        }
+    }
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn pops_in_time_then_insertion_order() {
+        let mut q = CalendarQueue::new();
+        q.push(50, 'b');
+        q.push(10, 'a');
+        q.push(50, 'c');
+        q.push(5, 'z');
+        assert_eq!(q.len(), 4);
+        let order: Vec<char> = std::iter::from_fn(|| q.pop()).map(|(_, _, v)| v).collect();
+        assert_eq!(order, vec!['z', 'a', 'b', 'c']);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_future_events_round_trip_through_overflow() {
+        let mut q = CalendarQueue::new();
+        // Horizon is N_BUCKETS << BUCKET_SHIFT ≈ 4.3e9 ns: schedule far
+        // beyond it, then near it, and interleave pops with new pushes.
+        q.push(300_000_000_000, 1u32); // 300 s: deep overflow
+        q.push(1_000, 2);
+        q.push(10_000_000_000, 3); // 10 s: overflow
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((1_000, 2)));
+        q.push(2_000, 4);
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((2_000, 4)));
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((10_000_000_000, 3)));
+        // After migrating to 10 s, an insertion near 10 s lands in-ring
+        // and must still order against the remaining overflow event.
+        q.push(10_000_000_001, 5);
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((10_000_000_001, 5)));
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((300_000_000_000, 1)));
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), None);
+    }
+
+    #[test]
+    fn ring_candidate_never_shadows_an_earlier_overflow_event() {
+        // Regression shape: the cursor advances past empty buckets
+        // (extending the horizon), a later insertion then lands in-ring
+        // at a time *after* an event still sitting in overflow; pop must
+        // take the overflow event first, not the ring candidate.
+        let mut q = CalendarQueue::new();
+        let horizon = (N_BUCKETS as u64) << BUCKET_SHIFT;
+        q.push(0, 0u32); // ring bucket 0
+        q.push(horizon - 1, 1); // ring's last bucket
+        q.push(horizon + 2, 2); // one bucket past the horizon: overflow
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some(0));
+        // Popping the last-bucket event walks the cursor to bucket N-1,
+        // so the next horizon now covers the overflow event's bucket...
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some(1));
+        // ...and this insertion (same bucket, later time) lands in-ring
+        // while the earlier event is still in overflow.
+        q.push(horizon + 5, 3);
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some(2), "overflow event was earlier");
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some(3));
+    }
+
+    #[test]
+    fn matches_reference_heap_on_random_workload() {
+        // Drive the calendar and a reference BinaryHeap with the same
+        // randomized push/pop schedule; pop streams must be identical.
+        let mut rng = Rng::new(0xCA1E_17DA);
+        let mut q = CalendarQueue::new();
+        let mut reference: BinaryHeap<HeapItem<u64>> = BinaryHeap::new();
+        let mut now = 0u64;
+        let mut seq = 0u64;
+        for round in 0..10_000u64 {
+            // Mixed horizon: mostly near-future, a tail far past the ring.
+            let dt = match rng.next_u64() % 10 {
+                0..=6 => rng.next_u64() % 5_000_000,          // < 5 ms
+                7 | 8 => rng.next_u64() % 5_000_000_000,      // < 5 s
+                _ => rng.next_u64() % 400_000_000_000,        // < 400 s
+            };
+            q.push(now + dt, round);
+            seq += 1;
+            reference.push(HeapItem { t: now + dt, seq, val: round });
+            if rng.next_u64() % 3 == 0 {
+                let got = q.pop();
+                let want = reference.pop().map(|h| (h.t, h.seq, h.val));
+                assert_eq!(got, want);
+                if let Some((t, _, _)) = got {
+                    now = t;
+                }
+            }
+        }
+        while let Some(want) = reference.pop() {
+            assert_eq!(q.pop(), Some((want.t, want.seq, want.val)));
+        }
+        assert!(q.is_empty());
+    }
+}

@@ -13,9 +13,9 @@
 //! own state at a point in virtual time, and `done` lets it record the
 //! latency and spawn follow-up requests.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
+use super::calendar::CalendarQueue;
 use super::dist::Dist;
 use super::rng::Rng;
 
@@ -148,37 +148,60 @@ enum Ev {
     Finish(ReqId),
 }
 
-struct HeapItem {
-    t: u64,
-    seq: u64,
-    ev: Ev,
+/// In-flight request storage, struct-of-arrays (S26).  The hot loop
+/// touches one or two fields per request per event; parallel vectors
+/// keep those accesses dense instead of striding across whole structs,
+/// and freed ids recycle through the free list exactly as the old
+/// `Vec<ReqState>` + free-list pair did.
+struct ReqArena {
+    steps: Vec<Vec<Step>>,
+    idx: Vec<usize>,
+    start_ns: Vec<u64>,
+    step_arrival: Vec<u64>,
+    class: Vec<u32>,
+    live: Vec<bool>,
+    free: Vec<ReqId>,
 }
 
-impl PartialEq for HeapItem {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+impl ReqArena {
+    fn new() -> Self {
+        ReqArena {
+            steps: Vec::new(),
+            idx: Vec::new(),
+            start_ns: Vec::new(),
+            step_arrival: Vec::new(),
+            class: Vec::new(),
+            live: Vec::new(),
+            free: Vec::new(),
+        }
     }
-}
-impl Eq for HeapItem {}
-impl PartialOrd for HeapItem {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapItem {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap on (time, seq): earlier first; FIFO for ties.
-        other.t.cmp(&self.t).then(other.seq.cmp(&self.seq))
-    }
-}
 
-struct ReqState {
-    steps: Vec<Step>,
-    idx: usize,
-    start_ns: u64,
-    step_arrival: u64,
-    class: u32,
-    live: bool,
+    /// Live + recyclable slot count (bounded by peak concurrency).
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    fn alloc(&mut self, steps: Vec<Step>, at_ns: u64, class: u32) -> ReqId {
+        if let Some(id) = self.free.pop() {
+            let i = id as usize;
+            self.steps[i] = steps;
+            self.idx[i] = 0;
+            self.start_ns[i] = at_ns;
+            self.step_arrival[i] = at_ns;
+            self.class[i] = class;
+            self.live[i] = true;
+            id
+        } else {
+            self.steps.push(steps);
+            self.idx.push(0);
+            self.start_ns.push(at_ns);
+            self.step_arrival.push(at_ns);
+            self.class.push(class);
+            self.live.push(true);
+            (self.steps.len() - 1) as ReqId
+        }
+    }
 }
 
 #[derive(Default)]
@@ -206,10 +229,12 @@ pub struct Engine<D: Domain> {
     pub rng: Rng,
     pub host: Host,
     now: u64,
-    seq: u64,
-    heap: BinaryHeap<HeapItem>,
-    reqs: Vec<ReqState>,
-    free_slots: Vec<ReqId>,
+    /// Calendar-queue event scheduler (S26): near-future ring + far-
+    /// future overflow heap, popping in the same `(t, seq)` order the
+    /// old `BinaryHeap` did (debug builds pin this against a shadow
+    /// heap oracle inside the queue).
+    queue: CalendarQueue<Ev>,
+    reqs: ReqArena,
     cores_free: u32,
     core_queue: VecDeque<ReqId>,
     locks: [LockState; N_LOCKS],
@@ -231,10 +256,8 @@ impl<D: Domain> Engine<D> {
             rng: Rng::new(seed),
             host,
             now: 0,
-            seq: 0,
-            heap: BinaryHeap::new(),
-            reqs: Vec::new(),
-            free_slots: Vec::new(),
+            queue: CalendarQueue::new(),
+            reqs: ReqArena::new(),
             cores_free: host.cores,
             core_queue: VecDeque::new(),
             locks: Default::default(),
@@ -263,27 +286,12 @@ impl<D: Domain> Engine<D> {
     }
 
     fn push(&mut self, t: u64, ev: Ev) {
-        self.seq += 1;
-        self.heap.push(HeapItem { t, seq: self.seq, ev });
+        self.queue.push(t, ev);
     }
 
     /// Seed a request at absolute virtual time `at_ns`.
     pub fn spawn_at(&mut self, at_ns: u64, class: u32, steps: Vec<Step>) -> ReqId {
-        let state = ReqState {
-            steps,
-            idx: 0,
-            start_ns: at_ns,
-            step_arrival: at_ns,
-            class,
-            live: true,
-        };
-        let id = if let Some(id) = self.free_slots.pop() {
-            self.reqs[id as usize] = state;
-            id
-        } else {
-            self.reqs.push(state);
-            (self.reqs.len() - 1) as ReqId
-        };
+        let id = self.reqs.alloc(steps, at_ns, class);
         self.push(at_ns, Ev::Start(id));
         id
     }
@@ -291,16 +299,16 @@ impl<D: Domain> Engine<D> {
     /// Run until the event queue drains. Panics if `max_events` is exceeded
     /// (runaway-model backstop).
     pub fn run(&mut self, max_events: u64) {
-        while let Some(item) = self.heap.pop() {
-            debug_assert!(item.t >= self.now, "time went backwards");
-            self.now = item.t;
+        while let Some((t, _seq, ev)) = self.queue.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
             self.events_processed += 1;
             if self.events_processed > max_events {
                 panic!("simulation exceeded {max_events} events — runaway model?");
             }
-            match item.ev {
+            match ev {
                 Ev::Start(r) => {
-                    self.reqs[r as usize].start_ns = self.now;
+                    self.reqs.start_ns[r as usize] = self.now;
                     self.advance(r);
                 }
                 Ev::Finish(r) => self.finish_step(r),
@@ -311,33 +319,33 @@ impl<D: Domain> Engine<D> {
     /// Move a request forward through zero-time steps until it blocks on a
     /// timed step, queues on a resource, or completes.
     fn advance(&mut self, r: ReqId) {
+        let ri = r as usize;
         loop {
-            let idx = self.reqs[r as usize].idx;
-            if idx >= self.reqs[r as usize].steps.len() {
+            let idx = self.reqs.idx[ri];
+            if idx >= self.reqs.steps[ri].len() {
                 self.complete(r);
                 return;
             }
-            let step = self.reqs[r as usize].steps[idx];
+            let step = self.reqs.steps[ri][idx];
             match step.kind {
                 StepKind::Effect(tag) => {
-                    let class = self.reqs[r as usize].class;
+                    let class = self.reqs.class[ri];
                     self.domain.effect(r, class, tag, self.now);
-                    self.reqs[r as usize].idx += 1;
+                    self.reqs.idx[ri] += 1;
                 }
                 StepKind::Decision(tag) => {
-                    let class = self.reqs[r as usize].class;
+                    let class = self.reqs.class[ri];
                     let new_steps = self.domain.decide(r, class, tag, self.now, &mut self.rng);
-                    let req = &mut self.reqs[r as usize];
-                    req.steps.splice(idx..idx + 1, new_steps);
+                    self.reqs.steps[ri].splice(idx..idx + 1, new_steps);
                 }
                 StepKind::Delay => {
-                    self.reqs[r as usize].step_arrival = self.now;
+                    self.reqs.step_arrival[ri] = self.now;
                     let d = step.dur.sample(&mut self.rng);
                     self.push(self.now + d, Ev::Finish(r));
                     return;
                 }
                 StepKind::Cpu => {
-                    self.reqs[r as usize].step_arrival = self.now;
+                    self.reqs.step_arrival[ri] = self.now;
                     if self.cores_free > 0 {
                         self.cores_free -= 1;
                         let d = step.dur.sample(&mut self.rng);
@@ -348,7 +356,7 @@ impl<D: Domain> Engine<D> {
                     return;
                 }
                 StepKind::Lock(class) => {
-                    self.reqs[r as usize].step_arrival = self.now;
+                    self.reqs.step_arrival[ri] = self.now;
                     let lock = &mut self.locks[class as usize];
                     if !lock.busy {
                         lock.busy = true;
@@ -360,14 +368,14 @@ impl<D: Domain> Engine<D> {
                     return;
                 }
                 StepKind::Disk(bytes) => {
-                    self.reqs[r as usize].step_arrival = self.now;
+                    self.reqs.step_arrival[ri] = self.now;
                     let service = (bytes as f64 / self.host.disk_bw_bytes_per_s * 1e9) as u64;
                     self.disk_next_free = self.disk_next_free.max(self.now) + service;
                     self.push(self.disk_next_free, Ev::Finish(r));
                     return;
                 }
                 StepKind::Pool(p) => {
-                    self.reqs[r as usize].step_arrival = self.now;
+                    self.reqs.step_arrival[ri] = self.now;
                     let pool = &mut self.pools[p as usize];
                     if pool.free > 0 {
                         pool.free -= 1;
@@ -385,15 +393,16 @@ impl<D: Domain> Engine<D> {
     /// A timed step finished: release its resource, hand it to the next
     /// queued request, record the trace, and move on.
     fn finish_step(&mut self, r: ReqId) {
-        let idx = self.reqs[r as usize].idx;
-        let step = self.reqs[r as usize].steps[idx];
+        let ri = r as usize;
+        let idx = self.reqs.idx[ri];
+        let step = self.reqs.steps[ri][idx];
         match step.kind {
             StepKind::Cpu => {
                 if let Some(q) = self.core_queue.pop_front() {
                     // Grant the freed core directly: sample the waiter's
                     // duration now (acquisition time).
-                    let qidx = self.reqs[q as usize].idx;
-                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    let qidx = self.reqs.idx[q as usize];
+                    let d = self.reqs.steps[q as usize][qidx].dur.sample(&mut self.rng);
                     self.push(self.now + d, Ev::Finish(q));
                 } else {
                     self.cores_free += 1;
@@ -402,8 +411,8 @@ impl<D: Domain> Engine<D> {
             StepKind::Lock(class) => {
                 let next = self.locks[class as usize].queue.pop_front();
                 if let Some(q) = next {
-                    let qidx = self.reqs[q as usize].idx;
-                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    let qidx = self.reqs.idx[q as usize];
+                    let d = self.reqs.steps[q as usize][qidx].dur.sample(&mut self.rng);
                     self.push(self.now + d, Ev::Finish(q));
                 } else {
                     self.locks[class as usize].busy = false;
@@ -412,8 +421,8 @@ impl<D: Domain> Engine<D> {
             StepKind::Pool(p) => {
                 let next = self.pools[p as usize].queue.pop_front();
                 if let Some(q) = next {
-                    let qidx = self.reqs[q as usize].idx;
-                    let d = self.reqs[q as usize].steps[qidx].dur.sample(&mut self.rng);
+                    let qidx = self.reqs.idx[q as usize];
+                    let d = self.reqs.steps[q as usize][qidx].dur.sample(&mut self.rng);
                     self.push(self.now + d, Ev::Finish(q));
                 } else {
                     self.pools[p as usize].free += 1;
@@ -425,33 +434,27 @@ impl<D: Domain> Engine<D> {
             }
         }
         if self.trace_phases {
-            let req = &self.reqs[r as usize];
             self.phase_trace.push(PhaseSample {
-                class: req.class,
+                class: self.reqs.class[ri],
                 tag: step.tag,
-                dur_ns: self.now - req.step_arrival,
+                dur_ns: self.now - self.reqs.step_arrival[ri],
             });
         }
         if self.observe_steps {
-            let (class, arrival) = {
-                let req = &self.reqs[r as usize];
-                (req.class, req.step_arrival)
-            };
+            let (class, arrival) = (self.reqs.class[ri], self.reqs.step_arrival[ri]);
             self.domain.observe_step(r, class, step.tag, arrival, self.now);
         }
-        self.reqs[r as usize].idx += 1;
+        self.reqs.idx[ri] += 1;
         self.advance(r);
     }
 
     fn complete(&mut self, r: ReqId) {
-        let (class, start) = {
-            let req = &mut self.reqs[r as usize];
-            debug_assert!(req.live);
-            req.live = false;
-            (req.class, req.start_ns)
-        };
+        let ri = r as usize;
+        debug_assert!(self.reqs.live[ri]);
+        self.reqs.live[ri] = false;
+        let (class, start) = (self.reqs.class[ri], self.reqs.start_ns[ri]);
         let spawns = self.domain.done(r, class, start, self.now);
-        self.free_slots.push(r);
+        self.reqs.free.push(r);
         for s in spawns {
             self.spawn_at(self.now + s.delay_ns, s.class, s.steps);
         }

@@ -1,10 +1,12 @@
 //! Discrete-event simulation substrate (S1): deterministic PRNG,
 //! latency distributions, and the resource-contention event engine.
 
+pub mod calendar;
 pub mod dist;
 pub mod engine;
 pub mod rng;
 
+pub use calendar::CalendarQueue;
 pub use dist::{Dist, MS, US};
 pub use engine::{
     Domain, Engine, Host, LockClass, PhaseSample, ReqId, Spawn, Step, StepKind, N_LOCKS,

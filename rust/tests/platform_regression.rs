@@ -106,6 +106,71 @@ fn exclusive_presets_never_specialize() {
     assert_eq!(r.warm_hits + r.cold_starts, trace.len() as u64);
 }
 
+/// S26 shard invariance: the sharded accounting plane is a pure
+/// partition of the single engine's bookkeeping, so `run_platform` must
+/// produce byte-identical results for *every* shard count — K=1 (the
+/// legacy layout), K>1, and K past the node count (clamped) — over both
+/// a fault-free and a crashing schedule (crash/restart messages cross
+/// shards too).  The mailbox traffic itself is K-invariant: posting is
+/// per-event, not per-shard.
+#[test]
+fn sharded_runs_are_byte_identical_for_every_shard_count() {
+    use coldfaas::fnplat::DriverKind;
+    use coldfaas::platform::{
+        chaos_plan, run_platform, DriverProfile, FaultPlan, PlatformConfig, PlatformLoad,
+    };
+    use coldfaas::policy::FixedKeepAlive;
+    use coldfaas::sim::Host;
+    use coldfaas::workload::tenants::{TenantConfig, TenantTrace};
+
+    let trace = TenantTrace::generate(&TenantConfig {
+        functions: 60,
+        duration_s: 30.0,
+        total_rps: 50.0,
+        seed: 0x526,
+        ..Default::default()
+    });
+    let run = |shards: usize, faults: FaultPlan| {
+        let cfg = PlatformConfig {
+            load: PlatformLoad::Tenants(trace.clone()),
+            functions: 60,
+            nodes: 6,
+            shards,
+            faults,
+            ..PlatformConfig::single_node(DriverProfile::from_kind(DriverKind::DockerWarm), 8)
+        };
+        run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default())
+    };
+    for faults in [FaultPlan::default(), chaos_plan(6, 30 * 1_000_000_000)] {
+        let single = run(1, faults.clone());
+        assert_eq!(single.shards, 1);
+        for shards in [2, 3, 5, 6, 64] {
+            let sharded = run(shards, faults.clone());
+            assert_eq!(sharded.shards, shards.min(6), "plan clamps to the node count");
+            assert_eq!(sharded.latencies_ns, single.latencies_ns, "K={shards}");
+            assert_eq!(sharded.requests, single.requests, "K={shards}");
+            assert_eq!(sharded.cold_starts, single.cold_starts, "K={shards}");
+            assert_eq!(sharded.warm_hits, single.warm_hits, "K={shards}");
+            assert_eq!(sharded.specializations, single.specializations, "K={shards}");
+            assert_eq!(sharded.monitor_events, single.monitor_events, "K={shards}");
+            assert_eq!(
+                sharded.idle_gb_seconds.to_bits(),
+                single.idle_gb_seconds.to_bits(),
+                "K={shards}"
+            );
+            assert_eq!(
+                (sharded.crashes, sharded.killed, sharded.retries),
+                (single.crashes, single.killed, single.retries),
+                "K={shards}"
+            );
+            assert_eq!(sharded.events, single.events, "K={shards}");
+            assert_eq!(sharded.elapsed_ns, single.elapsed_ns, "K={shards}");
+            assert_eq!(sharded.shard_msgs, single.shard_msgs, "mailbox traffic is K-invariant");
+            assert_eq!(sharded.shard_barriers, single.shard_barriers, "K={shards}");
+        }
+    }
+}
+
 /// E14 determinism: the same seed drives the same trace *and* the same
 /// fault schedule, so the chaos report must be byte-identical per run —
 /// crashes, kills, retries and all.

@@ -1,7 +1,9 @@
 //! Property-based tests (testkit) on the coordinator/simulator invariants:
 //! work conservation, clock monotonicity, resource serialization bounds,
-//! warm-pool accounting identities, quantile monotonicity, and parser
-//! robustness on adversarial inputs.
+//! warm-pool accounting identities, quantile monotonicity, parser
+//! robustness on adversarial inputs, and the S26 shard-merge algebra
+//! (histogram/partial merging is exact and order-independent; sharded
+//! platform runs match the single engine bit-for-bit).
 
 use coldfaas::fnplat::pool::{Dispatch, WarmPool};
 use coldfaas::fnplat::DriverKind;
@@ -766,6 +768,162 @@ fn prop_indexed_routing_matches_scan_under_random_traces_and_faults() {
                 if policy_pick == 0 { &mut cold } else { &mut keep };
             let r = run_platform(&cfg, policy, Host::default());
             r.injected == trace.len() as u64 && r.injected == r.served + r.rejected
+        },
+    );
+}
+
+/// S26 merge algebra, histogram layer: `Histogram::merge` over any
+/// round-robin partition of any sample stream reproduces the
+/// unpartitioned histogram exactly — forward, reversed, and pairwise
+/// (associativity) merge orders all land on the same bits, which is
+/// what makes the sharded report independent of shard count.  Exactness
+/// relies on `sum_ns` being an integer; an f64 accumulator would drift
+/// with grouping.
+#[test]
+fn prop_histogram_merge_is_exact_and_order_independent() {
+    use coldfaas::metrics::Histogram;
+    forall(
+        0x4157_5843,
+        40,
+        |rng| {
+            let n = gen::u64_in(rng, 0, 400) as usize;
+            let k = gen::u64_in(rng, 1, 8) as usize;
+            let ns: Vec<u64> =
+                (0..n).map(|_| gen::u64_in(rng, 1_000, 10_000_000_000)).collect();
+            (k, ns)
+        },
+        |(k, ns)| {
+            let mut whole = Histogram::new();
+            for &x in ns {
+                whole.record_ns(x);
+            }
+            let mut parts = vec![Histogram::new(); *k];
+            for (i, &x) in ns.iter().enumerate() {
+                parts[i % k].record_ns(x);
+            }
+            let mut fwd = Histogram::new();
+            for p in &parts {
+                fwd.merge(p);
+            }
+            let mut rev = Histogram::new();
+            for p in parts.iter().rev() {
+                rev.merge(p);
+            }
+            // Associativity: fold pairwise from the right instead of
+            // accumulating left-to-right.
+            let mut tree = parts.clone();
+            while tree.len() > 1 {
+                let b = tree.pop().expect("nonempty");
+                tree.last_mut().expect("nonempty").merge(&b);
+            }
+            fwd == whole && rev == whole && tree[0] == whole
+        },
+    );
+}
+
+/// S26 merge algebra, counter layer: applying any message stream to one
+/// `ShardPartial` equals round-robin-scattering it over K partials and
+/// merging them back, in any merge order and for any K.  This is the
+/// identity the platform's finalize step leans on when it folds
+/// per-shard partials into the report.
+#[test]
+fn prop_shard_partial_merge_matches_unpartitioned() {
+    use coldfaas::platform::{HeatClass, ShardMsg, ShardPartial};
+    forall_vec(0x526_AB, 60, 80, 10, |ops| {
+        let msg = |op: u64, i: usize| -> ShardMsg {
+            let lat_ns = 1_000_000 + (i as u64) * 37_000;
+            match op {
+                0 => ShardMsg::Injected,
+                1 => ShardMsg::Dispatched { cold: i % 2 == 0, in_window: i % 3 == 0 },
+                2 => ShardMsg::Served { heat: HeatClass::Cold, lat_ns },
+                3 => ShardMsg::Served { heat: HeatClass::Warm, lat_ns },
+                4 => ShardMsg::Served { heat: HeatClass::Specialized, lat_ns },
+                5 => ShardMsg::Killed,
+                6 => ShardMsg::Retry,
+                7 => ShardMsg::Rejected,
+                8 => ShardMsg::Crashed { slots_lost: (i % 5) as u64 },
+                9 => ShardMsg::PrewarmBoot,
+                _ => ShardMsg::Restarted,
+            }
+        };
+        let msgs: Vec<ShardMsg> = ops.iter().enumerate().map(|(i, &op)| msg(op, i)).collect();
+        let mut whole = ShardPartial::default();
+        for &m in &msgs {
+            whole.apply(m);
+        }
+        (1..=4).all(|k| {
+            let mut parts = vec![ShardPartial::default(); k];
+            for (i, &m) in msgs.iter().enumerate() {
+                parts[i % k].apply(m);
+            }
+            let mut fwd = ShardPartial::default();
+            for p in &parts {
+                fwd.merge(p);
+            }
+            let mut rev = ShardPartial::default();
+            for p in parts.iter().rev() {
+                rev.merge(p);
+            }
+            fwd == whole && rev == whole
+        })
+    });
+}
+
+/// S26 end to end: for random traces, seeds, cluster sizes, drivers, and
+/// shard counts (including counts past the node count, which the plan
+/// clamps), the sharded platform reproduces the single-engine run
+/// bit-for-bit — exact latency streams, float waste bits, event and
+/// mailbox counts and all.
+#[test]
+fn prop_sharded_run_matches_single_engine() {
+    forall(
+        0x5A2D_E17,
+        6,
+        |rng| {
+            (
+                gen::u64_in(rng, 2, 8) as usize,   // nodes
+                gen::u64_in(rng, 2, 12) as usize,  // shards (clamped to nodes)
+                gen::u64_in(rng, 0, 1),            // driver pick
+                rng.next_u64(),                    // seed
+            )
+        },
+        |&(nodes, shards, driver_pick, seed)| {
+            let trace = TenantTrace::generate(&TenantConfig {
+                functions: 40,
+                duration_s: 25.0,
+                total_rps: 30.0,
+                seed,
+                ..Default::default()
+            });
+            let driver = if driver_pick == 0 {
+                DriverKind::IncludeOsCold
+            } else {
+                DriverKind::DockerWarm
+            };
+            let run = |k: usize| {
+                let cfg = PlatformConfig {
+                    load: PlatformLoad::Tenants(trace.clone()),
+                    functions: 40,
+                    nodes,
+                    shards: k,
+                    exact_latencies: true,
+                    ..PlatformConfig::single_node(DriverProfile::from_kind(driver), 8)
+                };
+                run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default())
+            };
+            let single = run(1);
+            let sharded = run(shards);
+            sharded.latencies_ns == single.latencies_ns
+                && sharded.requests == single.requests
+                && sharded.cold_starts == single.cold_starts
+                && sharded.warm_hits == single.warm_hits
+                && sharded.specializations == single.specializations
+                && sharded.idle_gb_seconds.to_bits() == single.idle_gb_seconds.to_bits()
+                && sharded.monitor_events == single.monitor_events
+                && sharded.events == single.events
+                && sharded.elapsed_ns == single.elapsed_ns
+                && sharded.shard_msgs == single.shard_msgs
+                && sharded.shard_barriers == single.shard_barriers
         },
     );
 }
