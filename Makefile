@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines
+.PHONY: build test artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines resume-smoke
 
 build:
 	cd rust && cargo build --release
@@ -42,11 +42,30 @@ hyperplanet: build
 trace: build
 	./rust/target/release/coldfaas trace $(TRACE_ARGS) --quick --timeseries --trace trace.json
 
+# S27 kill + resume smoke (mirrors the CI `resume` job): checkpoint the
+# E17 quick grid, SIGKILL it right after its first per-cell snapshot
+# lands, resume from the snapshot directory, and require the resumed
+# report byte-identical (--tol 0) to an uninterrupted reference run.
+RESUME_DIR := /tmp/coldfaas-resume-smoke
+resume-smoke: build
+	rm -rf $(RESUME_DIR) && mkdir -p $(RESUME_DIR)
+	./rust/target/release/coldfaas hyperplanet --quick --json $(RESUME_DIR)/ref.json
+	./rust/target/release/coldfaas hyperplanet --quick --checkpoint $(RESUME_DIR)/ckpt --json $(RESUME_DIR)/killed.json & \
+	pid=$$!; \
+	while ! ls $(RESUME_DIR)/ckpt/*.ckpt >/dev/null 2>&1 && kill -0 $$pid 2>/dev/null; do sleep 0.1; done; \
+	kill -9 $$pid 2>/dev/null && echo "killed the grid after its first snapshot" || echo "grid finished before the kill"; \
+	wait $$pid || true
+	./rust/target/release/coldfaas hyperplanet --quick --resume $(RESUME_DIR)/ckpt --json $(RESUME_DIR)/resumed.json
+	./rust/target/release/coldfaas compare $(RESUME_DIR)/resumed.json $(RESUME_DIR)/ref.json --tol 0
+
 # Regenerate the CI bench-regression baselines (rust/baselines/) and
 # commit the result; the DES is deterministic per seed, so these are
 # machine-independent except for the wall-clock fields — of which only
 # events/s gates (one-sidedly), so regenerate on the runner class that
-# will enforce the throughput floor.
+# will enforce the throughput floor.  The CI gates run with
+# --deny-bootstrap: committed placeholder baselines fail the build loudly
+# until this target's output (or the CI bench-quick-report artifact,
+# which is the same regenerated set) is committed.
 baselines: build
 	./rust/target/release/coldfaas experiment all --quick --json rust/baselines/BENCH_quick.json
 	./rust/target/release/coldfaas chaos --quick --timeseries --json rust/baselines/BENCH_chaos_quick.json

@@ -28,7 +28,7 @@
 //! in-flight cell: budget ~32 GB of RAM and hours of wall time.
 
 use super::fleet::cell_config;
-use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
+use super::{make_policy, sweep, CheckpointPlan, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
 use crate::obs::{ObsConfig, TelemetrySeries};
 use crate::platform::{
@@ -50,6 +50,10 @@ pub struct HyperplanetConfig {
     pub shards: usize,
     pub host: Host,
     pub obs: ObsConfig,
+    /// S27: per-cell snapshot/resume plan (inert by default).  A killed
+    /// grid relaunched with `resume` picks every cell up from its last
+    /// barrier file and still produces byte-identical reports.
+    pub checkpoint: CheckpointPlan,
 }
 
 /// Derive an E17 configuration from the shared experiment config.  The
@@ -77,6 +81,7 @@ pub fn hyperplanet_config(cfg: &ExpConfig) -> HyperplanetConfig {
         shards: 8,
         host: cfg.host,
         obs: ObsConfig::default(),
+        checkpoint: cfg.checkpoint.clone(),
     }
 }
 
@@ -175,7 +180,8 @@ pub fn hyperplanet_cells(cfg: &HyperplanetConfig) -> (Vec<HyperplanetCell>, f64)
     let grid_started = std::time::Instant::now();
     let mut cells = sweep::run_cells(&specs, |_, &(driver, policy_idx)| {
         let mut policy = make_policy(policy_idx, cfg.tenant.functions);
-        let pcfg = cell_platform_config(cfg, driver, &trace);
+        let mut pcfg = cell_platform_config(cfg, driver, &trace);
+        cfg.checkpoint.apply(&mut pcfg, "e17", &format!("{driver:?}-{}", policy.name()));
         let t0 = std::time::Instant::now();
         let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
         HyperplanetCell {
@@ -362,6 +368,7 @@ mod tests {
             shards: 5,
             host: Host::default(),
             obs: ObsConfig::default(),
+            checkpoint: CheckpointPlan::default(),
         }
     }
 
@@ -461,5 +468,44 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn killed_grid_resumes_cell_for_cell_bitwise() {
+        // S27 end to end at grid scope: run once writing per-cell
+        // snapshots, then relaunch with resume — every cell restores its
+        // last barrier, replays the tail, and reports identical bytes.
+        let fingerprint = |cells: &[HyperplanetCell]| {
+            cells
+                .iter()
+                .map(|c| {
+                    (
+                        c.label(),
+                        c.requests,
+                        c.p99_ms.to_bits(),
+                        c.idle_gb_seconds.to_bits(),
+                        c.events,
+                        c.shard_msgs,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let dir = std::env::temp_dir().join(format!("coldfaas-grid-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let reference = fingerprint(&hyperplanet_cells(&tiny_cfg()).0);
+        let mut writer = tiny_cfg();
+        writer.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+        writer.checkpoint.state_hash = true;
+        assert_eq!(fingerprint(&hyperplanet_cells(&writer).0), reference);
+        let mut resumer = writer.clone();
+        resumer.checkpoint.resume = true;
+        assert_eq!(fingerprint(&hyperplanet_cells(&resumer).0), reference);
+        // Every cell left exactly one snapshot file behind.
+        let files = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".ckpt"))
+            .count();
+        assert_eq!(files, 1 + POLICY_COUNT);
     }
 }

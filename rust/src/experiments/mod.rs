@@ -116,6 +116,47 @@ pub const ALL_EXPERIMENTS: [&str; 15] = [
 
 use crate::sim::Host;
 
+/// S27 checkpoint plumbing shared by the heavy grids (E15/E17): one
+/// directory holds a snapshot file per cell, named after the cell's
+/// deterministic label, so a killed and relaunched grid finds each
+/// cell's last barrier.  Cells without a file (or with `resume` off)
+/// start fresh; completed cells replay their tail from the last mid-run
+/// barrier — wasted work, never wrong answers (the resume contract is
+/// byte-identity with the uninterrupted run).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointPlan {
+    /// Snapshot directory; `None` leaves checkpoint writing off.
+    pub dir: Option<String>,
+    /// Resume cells whose snapshot file already exists.
+    pub resume: bool,
+    /// Fold the rolling state hash even without a snapshot directory.
+    pub state_hash: bool,
+}
+
+impl CheckpointPlan {
+    /// The file one cell's snapshots live in (labels are sanitized so
+    /// every deterministic grid label maps to a portable filename).
+    pub fn cell_path(&self, exp: &str, label: &str) -> Option<String> {
+        let dir = self.dir.as_ref()?;
+        let safe: String = label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        Some(format!("{dir}/{exp}_{safe}.ckpt"))
+    }
+
+    /// Arm one cell's platform config with this plan.
+    pub fn apply(&self, cfg: &mut crate::platform::PlatformConfig, exp: &str, label: &str) {
+        cfg.state_hash |= self.state_hash;
+        if let Some(path) = self.cell_path(exp, label) {
+            if self.resume && std::path::Path::new(&path).exists() {
+                cfg.resume_from = Some(path.clone());
+            }
+            cfg.checkpoint_path = Some(path);
+        }
+    }
+}
+
 /// Shared experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -125,6 +166,9 @@ pub struct ExpConfig {
     pub parallelisms: Vec<u32>,
     pub host: Host,
     pub seed: u64,
+    /// S27: snapshot/resume plan the heavy grids (E15/E17) thread down to
+    /// their cells; inert (`Default`) everywhere else.
+    pub checkpoint: CheckpointPlan,
 }
 
 impl Default for ExpConfig {
@@ -134,6 +178,7 @@ impl Default for ExpConfig {
             parallelisms: vec![1, 5, 10, 20, 40],
             host: Host::default(),
             seed: 0xC01D_FAA5,
+            checkpoint: CheckpointPlan::default(),
         }
     }
 }

@@ -20,7 +20,7 @@
 //! shrinks the trace, not the cluster.
 
 use super::fleet::cell_config;
-use super::{make_policy, sweep, ExpConfig, POLICY_COUNT};
+use super::{make_policy, sweep, CheckpointPlan, ExpConfig, POLICY_COUNT};
 use crate::fnplat::DriverKind;
 use crate::obs::{ObsConfig, TelemetrySeries};
 use crate::platform::{
@@ -41,6 +41,8 @@ pub struct PlanetConfig {
     /// is virtual-time pure, so enabling it leaves every metric
     /// untouched; tracing at planet scale wants `trace_window_only`.
     pub obs: ObsConfig,
+    /// S27: per-cell snapshot/resume plan (inert by default).
+    pub checkpoint: CheckpointPlan,
 }
 
 /// Derive an E15 configuration from the shared experiment config.  The
@@ -63,6 +65,7 @@ pub fn planet_config(cfg: &ExpConfig) -> PlanetConfig {
         cores_per_node: 8,
         host: cfg.host,
         obs: ObsConfig::default(),
+        checkpoint: cfg.checkpoint.clone(),
     }
 }
 
@@ -156,7 +159,8 @@ pub fn planet_cells(cfg: &PlanetConfig) -> Vec<PlanetCell> {
     // by up to the cell count and make it vary with machine load.
     let mut cells = sweep::run_cells_with(1, &specs, |_, &(driver, policy_idx)| {
         let mut policy = make_policy(policy_idx, cfg.tenant.functions);
-        let pcfg = cell_platform_config(cfg, driver, &trace);
+        let mut pcfg = cell_platform_config(cfg, driver, &trace);
+        cfg.checkpoint.apply(&mut pcfg, "e15", &format!("{driver:?}-{}", policy.name()));
         let t0 = std::time::Instant::now();
         let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
         PlanetCell {
@@ -315,6 +319,7 @@ mod tests {
             cores_per_node: 4,
             host: Host::default(),
             obs: ObsConfig::default(),
+            checkpoint: CheckpointPlan::default(),
         }
     }
 

@@ -32,6 +32,8 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+use crate::sim::snap::{Dec, Enc};
+
 /// Owner tag for slots that belong to no particular function: everything
 /// released through the legacy per-function wrappers (whose bucket *is*
 /// the function, so every claim matches trivially) and runtime-level
@@ -511,6 +513,101 @@ impl WarmPool {
         dropped
     }
 
+    /// Snapshot codec (S27).  Canonical, layout-free form: per sharing
+    /// key (sorted), the *live* slots in LIFO claim order — tombstoned
+    /// handles, heap layout, and arena slot numbering are unobservable
+    /// and omitted — plus the alive counts and accounting counters.
+    /// Keys with no live slot and no alive executor are dropped (both
+    /// maps are presence-supersets; absence is observationally
+    /// identical), so a restored pool re-encodes to the same bytes.
+    pub fn encode(&self, w: &mut Enc) {
+        w.u64(self.idle_timeout_ns);
+        w.u64(self.mem_bytes_per_slot);
+        w.u64(self.poll_period_ns);
+        let mut keyed: Vec<(&String, &FuncSlots)> =
+            self.idle.iter().filter(|(_, fs)| fs.live > 0).collect();
+        keyed.sort_unstable_by_key(|&(k, _)| k);
+        w.len(keyed.len());
+        for (key, fs) in keyed {
+            w.str(key);
+            w.len(fs.live);
+            let mut seen = 0usize;
+            for &h in fs.lifo.iter().filter(|&&h| self.slots.is_live(h)) {
+                let i = h as u32 as usize;
+                w.u64(self.slots.idle_since_ns[i]);
+                w.u64(self.slots.expires_at_ns[i]);
+                w.u32(self.slots.owner[i]);
+                seen += 1;
+            }
+            assert_eq!(seen, fs.live, "pool live count out of sync with arena for '{key}'");
+        }
+        let mut alive: Vec<(&String, u64)> = self
+            .alive
+            .iter()
+            .filter(|(k, &c)| c > 0 || self.idle.get(*k).is_some_and(|fs| fs.live > 0))
+            .map(|(k, &c)| (k, c))
+            .collect();
+        alive.sort_unstable();
+        w.len(alive.len());
+        for (k, c) in alive {
+            w.str(k);
+            w.u64(c);
+        }
+        w.u64(self.idle_live);
+        w.u128(self.idle_mem_byte_ns);
+        w.u64(self.monitor_events);
+        w.u64(self.warm_hits);
+        w.u64(self.specializations);
+        w.u64(self.cold_starts);
+        w.u64(self.expirations);
+        w.u64(self.retirements);
+        w.u64(self.crash_drains);
+    }
+
+    /// Inverse of [`Self::encode`]: rebuilds the arena with fresh
+    /// handles.  Handle values and heap layout differ from the
+    /// snapshotted pool, but neither is observable — claims walk the
+    /// LIFO order restored here, stale entries are skipped lazily on
+    /// both sides, and equal-deadline expiry ties commute in the
+    /// accounting (charges depend only on each slot's own fields).
+    pub fn restore(&mut self, r: &mut Dec) {
+        self.idle_timeout_ns = r.u64();
+        self.mem_bytes_per_slot = r.u64();
+        self.poll_period_ns = r.u64();
+        self.idle.clear();
+        self.slots = SlotArena::default();
+        let nkeys = r.len();
+        for _ in 0..nkeys {
+            let key = r.str();
+            let nslots = r.len();
+            let fs = self.idle.entry(key).or_default();
+            for _ in 0..nslots {
+                let slot =
+                    WarmSlot { idle_since_ns: r.u64(), expires_at_ns: r.u64(), owner: r.u32() };
+                let handle = self.slots.alloc(slot);
+                fs.lifo.push(handle);
+                fs.by_deadline.push(Reverse((slot.expires_at_ns, handle)));
+                fs.live += 1;
+            }
+        }
+        self.alive.clear();
+        let nalive = r.len();
+        for _ in 0..nalive {
+            let k = r.str();
+            let c = r.u64();
+            self.alive.insert(k, c);
+        }
+        self.idle_live = r.u64();
+        self.idle_mem_byte_ns = r.u128();
+        self.monitor_events = r.u64();
+        self.warm_hits = r.u64();
+        self.specializations = r.u64();
+        self.cold_starts = r.u64();
+        self.expirations = r.u64();
+        self.retirements = r.u64();
+        self.crash_drains = r.u64();
+    }
+
     /// Idle warm executors currently enqueued across all sharing keys —
     /// the telemetry pool-occupancy gauge.  Includes slots whose deadline
     /// has passed but which no claim or sweep has purged yet (expiry is
@@ -938,6 +1035,46 @@ mod tests {
         r.prewarm("f", 2, 0);
         r.finalize_expiring();
         assert_eq!(r.idle_live(), 0, "finalize_expiring drains the gauge");
+    }
+
+    #[test]
+    fn snapshot_restore_is_canonical_and_behaviour_preserving() {
+        // Build a pool with claims (tombstones in the LIFO + heap),
+        // shared keys, prewarms, and mixed deadlines.
+        let mut p = pool();
+        p.prewarm_shared_until("rt0", NO_OWNER, 3, 0, 100 * S);
+        assert_eq!(p.dispatch_shared("rt0", 7, S), Dispatch::Specialized);
+        p.release_shared_until("rt0", 7, 2 * S, 40 * S);
+        p.dispatch("f", 2 * S);
+        p.release_until("f", 3 * S, 9 * S);
+        p.dispatch("g", 3 * S);
+        p.retire("g");
+        let mut w = Enc::new();
+        p.encode(&mut w);
+        let mut q = WarmPool::new(0, 0);
+        let mut r = Dec::new(&w.buf);
+        q.restore(&mut r);
+        r.finish();
+        // Canonical: the restored pool re-encodes byte-identically even
+        // though its arena handles and heap layout differ.
+        let mut w2 = Enc::new();
+        q.encode(&mut w2);
+        assert_eq!(w.buf, w2.buf, "restore must round-trip byte-exactly");
+        // Behaviour: drive both pools through the same schedule and
+        // compare every observable.
+        for pool_ in [&mut p, &mut q] {
+            assert_eq!(pool_.dispatch_shared("rt0", 7, 4 * S), Dispatch::Warm);
+            assert_eq!(pool_.dispatch_shared("rt0", 9, 5 * S), Dispatch::Specialized);
+            assert_eq!(pool_.dispatch("f", 10 * S), Dispatch::Cold); // 9s deadline passed
+            pool_.finalize(20 * S);
+        }
+        assert_eq!(p.idle_mem_byte_ns, q.idle_mem_byte_ns);
+        assert_eq!(
+            (p.warm_hits, p.specializations, p.cold_starts, p.expirations, p.retirements),
+            (q.warm_hits, q.specializations, q.cold_starts, q.expirations, q.retirements)
+        );
+        assert_eq!(p.monitor_events, q.monitor_events);
+        assert_eq!(p.idle_live(), q.idle_live());
     }
 
     #[test]

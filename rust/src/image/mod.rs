@@ -4,6 +4,7 @@
 
 use std::collections::HashMap;
 
+use crate::sim::snap::{Dec, Enc};
 use crate::virt::Tech;
 
 /// How a function image is produced at deploy time (§IV-B).
@@ -90,6 +91,36 @@ impl NodeCache {
         self.used_bytes += img.bytes;
         self.images.insert(img.name.clone(), img.bytes);
         Ok(Some(img.bytes))
+    }
+
+    /// Snapshot codec (S27): resident images in sorted-name order plus
+    /// the counters.  `capacity_bytes` is config-derived and keeps the
+    /// value the fresh construction set.
+    pub fn encode(&self, w: &mut Enc) {
+        let mut names: Vec<(&String, &u64)> = self.images.iter().collect();
+        names.sort_unstable();
+        w.len(names.len());
+        for (name, &bytes) in names {
+            w.str(name);
+            w.u64(bytes);
+        }
+        w.u64(self.used_bytes);
+        w.u64(self.hits);
+        w.u64(self.misses);
+    }
+
+    /// Inverse of [`Self::encode`], replacing the resident set.
+    pub fn restore(&mut self, r: &mut Dec) {
+        self.images.clear();
+        let n = r.len();
+        for _ in 0..n {
+            let name = r.str();
+            let bytes = r.u64();
+            self.images.insert(name, bytes);
+        }
+        self.used_bytes = r.u64();
+        self.hits = r.u64();
+        self.misses = r.u64();
     }
 
     pub fn evict(&mut self, name: &str) -> bool {

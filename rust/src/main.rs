@@ -128,6 +128,15 @@ USAGE: coldfaas <subcommand> [options]
       --seed N              deterministic seed
       --quick               reduced trace (same 256-node cluster)
       --timeseries          sample interval telemetry on every cell
+      --checkpoint DIR      write one snapshot file per cell at virtual-time
+                            barriers (10 virtual seconds); a killed run
+                            relaunched with --resume picks up from there
+      --resume DIR          resume cells from their snapshot files in DIR,
+                            byte-identical to an uninterrupted run
+                            (implies --checkpoint DIR)
+      --state-hash          fold the rolling per-barrier state hash without
+                            writing snapshots (pinned by the regression
+                            suite; observationally pure)
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -168,6 +177,15 @@ USAGE: coldfaas <subcommand> [options]
       --seed N              deterministic seed
       --quick               reduced trace (same 1024-node cluster)
       --timeseries          sample interval telemetry on every cell
+      --checkpoint DIR      write one snapshot file per cell at virtual-time
+                            barriers (10 virtual seconds); a killed run
+                            relaunched with --resume picks up from there
+      --resume DIR          resume cells from their snapshot files in DIR,
+                            byte-identical to an uninterrupted run
+                            (implies --checkpoint DIR)
+      --state-hash          fold the rolling per-barrier state hash without
+                            writing snapshots (pinned by the regression
+                            suite; observationally pure)
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
 
@@ -195,6 +213,9 @@ USAGE: coldfaas <subcommand> [options]
                             informational, events/s gated one-sidedly against
                             regressions; exit 1 on drift
       --tol F               relative tolerance for metrics (default 0.10)
+      --deny-bootstrap      fail (exit 1) when the baseline is still the
+                            bootstrap placeholder instead of passing with a
+                            notice — CI uses this so an unarmed gate is loud
       --out FILE            also append the diff to FILE
 
   serve
@@ -367,6 +388,33 @@ fn cmd_fleet(args: &Args) -> i32 {
     finish_report(args, "fleet", report, t0.elapsed().as_secs_f64())
 }
 
+/// Parse the S27 checkpoint flags shared by the heavy grids:
+/// `--checkpoint DIR` writes per-cell snapshots, `--resume DIR` implies
+/// `--checkpoint DIR` and restores cells whose file already exists, and
+/// `--state-hash` folds the rolling chain without writing anything.  The
+/// directory is created eagerly so a cell's first barrier cannot fail
+/// mid-grid on a missing path.
+fn checkpoint_flags(args: &Args) -> Result<coldfaas::experiments::CheckpointPlan, String> {
+    let mut plan = coldfaas::experiments::CheckpointPlan {
+        state_hash: args.has_flag("state-hash"),
+        ..Default::default()
+    };
+    if let Some(dir) = args.get("resume") {
+        plan.dir = Some(dir.to_string());
+        plan.resume = true;
+    }
+    if let Some(dir) = args.get("checkpoint") {
+        if plan.dir.as_deref().is_some_and(|d| d != dir) {
+            return Err("--checkpoint and --resume must name the same directory".to_string());
+        }
+        plan.dir = Some(dir.to_string());
+    }
+    if let Some(dir) = &plan.dir {
+        std::fs::create_dir_all(dir).map_err(|e| format!("--checkpoint {dir}: {e}"))?;
+    }
+    Ok(plan)
+}
+
 /// ~96 telemetry samples across the virtual horizon (the same sampling
 /// density the chaos focus cells use internally).
 fn telemetry_interval_ns(duration_s: f64) -> u64 {
@@ -457,6 +505,7 @@ fn cmd_planet(args: &Args) -> i32 {
         let mut cfg = planet_config(&base);
         cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
         cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
+        cfg.checkpoint = checkpoint_flags(args)?;
         tenant_flags(args, &mut cfg.tenant)?;
         if args.has_flag("timeseries") {
             cfg.obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
@@ -485,6 +534,7 @@ fn cmd_hyperplanet(args: &Args) -> i32 {
         cfg.nodes = args.try_get_u64("nodes", cfg.nodes as u64)? as usize;
         cfg.cores_per_node = args.try_get_u32("cores", cfg.cores_per_node)?;
         cfg.shards = args.try_get_u64("shards", cfg.shards as u64)? as usize;
+        cfg.checkpoint = checkpoint_flags(args)?;
         tenant_flags(args, &mut cfg.tenant)?;
         if args.has_flag("timeseries") {
             cfg.obs.telemetry_interval_ns = telemetry_interval_ns(cfg.tenant.duration_s);
@@ -608,7 +658,9 @@ fn cmd_compare(args: &Args) -> i32 {
     use coldfaas::report::compare::{compare_documents, DEFAULT_TOL};
     let (Some(run_path), Some(base_path)) = (args.positional.first(), args.positional.get(1))
     else {
-        eprintln!("usage: coldfaas compare <run.json> <baseline.json> [--tol 0.10]");
+        eprintln!(
+            "usage: coldfaas compare <run.json> <baseline.json> [--tol 0.10] [--deny-bootstrap]"
+        );
         return 2;
     };
     let tol = match args.try_get_f64("tol", DEFAULT_TOL) {
@@ -626,13 +678,21 @@ fn cmd_compare(args: &Args) -> i32 {
     };
     match compare_documents(&run_doc, &base_doc, tol) {
         Ok(cmp) => {
-            let txt = format!(
+            let mut txt = format!(
                 "\n=== compare {run_path} vs {base_path} ===\n{}",
                 cmp.render(tol)
             );
+            let denied = cmp.bootstrap && args.has_flag("deny-bootstrap");
+            if denied {
+                txt.push_str(
+                    "  FAIL: --deny-bootstrap — the committed baseline is still the \
+                     bootstrap placeholder; commit a real one (the CI artifact from this \
+                     run, or `make baselines` locally) to arm the gate\n",
+                );
+            }
             print!("{txt}");
             append_out(args, &txt);
-            if cmp.ok() {
+            if cmp.ok() && !denied {
                 0
             } else {
                 1

@@ -4,6 +4,8 @@
 //! Buckets grow geometrically (~4.6% width), bounding quantile error to
 //! one bucket (<5%) with a fixed 512-slot footprint and O(1) record.
 
+use crate::sim::snap::{Dec, Enc};
+
 const BUCKETS: usize = 512;
 /// Bucket boundaries: b(i) = MIN_NS * GROWTH^i, covering 100 ns .. >1000 s.
 const MIN_NS: f64 = 100.0;
@@ -89,6 +91,40 @@ impl Histogram {
             }
         }
         self.max_ns as f64 / 1e6
+    }
+
+    /// Snapshot codec (S27): the summary fields plus the non-zero
+    /// buckets in ascending index order — sparse, since most per-node
+    /// histograms populate a handful of the 512 buckets.
+    pub fn encode(&self, w: &mut Enc) {
+        w.u64(self.n);
+        w.u128(self.sum_ns);
+        w.u64(self.min_ns);
+        w.u64(self.max_ns);
+        let nz = self.counts.iter().filter(|&&c| c != 0).count();
+        w.len(nz);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c != 0 {
+                w.u16(i as u16);
+                w.u64(c);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::encode`].
+    pub fn decode(r: &mut Dec) -> Histogram {
+        let mut h = Histogram::new();
+        h.n = r.u64();
+        h.sum_ns = r.u128();
+        h.min_ns = r.u64();
+        h.max_ns = r.u64();
+        let nz = r.len();
+        for _ in 0..nz {
+            let i = r.u16() as usize;
+            assert!(i < BUCKETS, "snapshot corrupt: histogram bucket {i}");
+            h.counts[i] = r.u64();
+        }
+        h
     }
 
     pub fn merge(&mut self, other: &Histogram) {

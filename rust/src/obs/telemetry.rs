@@ -12,6 +12,8 @@
 //! closes it before being counted); quiet periods fill forward with zero
 //! counters and the gauges as last observed.
 
+use crate::sim::snap::{Dec, Enc};
+
 /// Instantaneous pool/cluster state sampled at interval boundaries.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Gauges {
@@ -181,6 +183,56 @@ impl Telemetry {
         if self.interval_ns > 0 {
             self.reject += 1;
         }
+    }
+
+    /// Snapshot codec (S27): every interval counter plus the collected
+    /// columnar series, floats as raw bit patterns.
+    pub fn encode(&self, w: &mut Enc) {
+        w.u64(self.interval_ns);
+        w.u64(self.next_boundary_ns);
+        w.u64(self.warm);
+        w.u64(self.spec);
+        w.u64(self.cold);
+        w.u64(self.retry);
+        w.u64(self.reject);
+        w.u64(self.samples);
+        w.u64(self.series.interval_ns);
+        for (_, col) in self.series.rows() {
+            w.len(col.len());
+            for &v in col {
+                w.f64(v);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::encode`].
+    pub fn decode(r: &mut Dec) -> Telemetry {
+        let mut t = Telemetry {
+            interval_ns: r.u64(),
+            next_boundary_ns: r.u64(),
+            warm: r.u64(),
+            spec: r.u64(),
+            cold: r.u64(),
+            retry: r.u64(),
+            reject: r.u64(),
+            samples: r.u64(),
+            series: TelemetrySeries::default(),
+        };
+        let col = |r: &mut Dec| -> Vec<f64> {
+            let n = r.len();
+            (0..n).map(|_| r.f64()).collect()
+        };
+        t.series.interval_ns = r.u64();
+        t.series.cold_fraction = col(r);
+        t.series.warm_rate = col(r);
+        t.series.spec_rate = col(r);
+        t.series.cold_rate = col(r);
+        t.series.retries = col(r);
+        t.series.rejected = col(r);
+        t.series.pool_slots = col(r);
+        t.series.idle_gb = col(r);
+        t.series.inflight = col(r);
+        t
     }
 
     /// End of run: close intervals up to `now`, flush a partial tail

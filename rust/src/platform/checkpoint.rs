@@ -1,0 +1,279 @@
+//! Checkpoint file format (S27): a versioned, self-describing binary
+//! snapshot of one platform run at a virtual-time barrier.
+//!
+//! A checkpoint carries four header invariants — magic, format version,
+//! a fingerprint of the *configuration* that produced it, and the barrier
+//! cadence — followed by the state section (the engine core plus the
+//! domain's canonical encoding, exactly the bytes the rolling state hash
+//! folds over) and a restore supplement (shard-layout details that are
+//! deliberately excluded from the hash because they vary with the shard
+//! count).  Writes are atomic (tmp + rename), so a kill mid-write leaves
+//! the previous barrier's snapshot intact; each barrier overwrites the
+//! last, so a checkpoint file always holds the newest complete barrier.
+//!
+//! The resume contract: restoring a snapshot and running to completion is
+//! **byte-identical** to the uninterrupted run — same report, same hash
+//! chain — for every shard count and sweep-thread setting.  The
+//! fingerprint makes config drift a hard error instead of a silently
+//! diverging resume; it hashes everything that shapes the event stream
+//! (topology, load arrivals, fault plan, seed) and nothing that does not
+//! (checkpoint paths, wall-clock knobs).
+
+use std::fs;
+use std::io::{Error, ErrorKind};
+
+use crate::sim::snap::{Dec, Enc, Fnv};
+use crate::workload::tenants::TenantTrace;
+
+use super::{ImageSeeding, PlatformConfig, PlatformLoad};
+
+/// File magic: "coldfaas checkpoint, layout 1".
+pub const MAGIC: [u8; 8] = *b"CFAASCK1";
+pub const VERSION: u32 = 1;
+
+/// Default barrier cadence when the loop is armed without an explicit
+/// interval: every 10 virtual seconds — coarse enough to stay invisible
+/// in the profile, fine enough that a killed fleet sweep loses little.
+pub const DEFAULT_CHECKPOINT_NS: u64 = 10_000_000_000;
+
+fn hash_tenants(h: &mut Fnv, tt: &TenantTrace) {
+    h.u64(tt.functions as u64);
+    h.u64(tt.arrivals.len() as u64);
+    for &(at, func) in &tt.arrivals {
+        h.u64(at);
+        h.u64(func as u64);
+    }
+}
+
+/// FNV fingerprint of every configuration input that shapes the event
+/// stream.  Two configs with equal fingerprints replay the same events
+/// from the same state; resuming under a different fingerprint is a
+/// config-drift error caught at restore.
+pub fn config_fingerprint(cfg: &PlatformConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.str(cfg.driver.name);
+    h.u64(cfg.driver.cold_steps.len() as u64);
+    h.u64(cfg.driver.warm_steps.len() as u64);
+    h.u64(cfg.driver.specialize_steps.len() as u64);
+    h.u64(cfg.nodes as u64);
+    h.u64(cfg.cores_per_node as u64);
+    h.u64(cfg.mem_slots_per_node as u64);
+    h.str(cfg.scheduler.name());
+    h.u64(cfg.functions as u64);
+    h.f64(cfg.exec_ms);
+    h.u64(cfg.mem_bytes_per_slot);
+    match cfg.seeding {
+        ImageSeeding::FirstN(n) => {
+            h.u64(1);
+            h.u64(n as u64);
+        }
+        ImageSeeding::RoundRobin => {
+            h.u64(2);
+        }
+    }
+    h.f64(cfg.fabric_gbps);
+    // The request path is a small closed enum tree: its Debug form is a
+    // faithful, cheap canonical encoding.
+    h.str(&format!("{:?}", cfg.path));
+    match &cfg.load {
+        PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
+            h.u64(10);
+            h.u64(*parallelism as u64);
+            h.u64(*total);
+            h.u64(u64::from(*prewarm));
+            h.u64(*gap_ns);
+        }
+        PlatformLoad::OpenTrace(trace) => {
+            h.u64(11);
+            h.u64(trace.arrivals_ns.len() as u64);
+            for &at in &trace.arrivals_ns {
+                h.u64(at);
+            }
+        }
+        PlatformLoad::Tenants(tt) => {
+            h.u64(12);
+            hash_tenants(&mut h, tt);
+        }
+        PlatformLoad::TenantsStreamed(tt) => {
+            h.u64(13);
+            hash_tenants(&mut h, tt);
+        }
+        PlatformLoad::Burst { requests, burst_ms } => {
+            h.u64(14);
+            h.u64(*requests);
+            h.f64(*burst_ms);
+        }
+    }
+    h.str(&cfg.sharing.name());
+    h.u64(cfg.universal_prewarm as u64);
+    h.u64(cfg.warmup_keep_ns);
+    h.u64(u64::from(cfg.exact_latencies));
+    h.u64(cfg.faults.node_faults.len() as u64);
+    for f in &cfg.faults.node_faults {
+        h.u64(f.node as u64);
+        h.u64(f.down_at_ns);
+        h.u64(f.up_at_ns);
+        h.u64(u64::from(f.flush_cache));
+        h.f64(f.straggler_mult);
+        h.u64(f.straggler_ns);
+    }
+    h.u64(cfg.faults.fabric_faults.len() as u64);
+    for f in &cfg.faults.fabric_faults {
+        h.u64(f.from_ns);
+        h.u64(f.until_ns);
+        h.f64(f.slowdown);
+    }
+    h.u64(cfg.faults.max_retries as u64);
+    h.u64(cfg.faults.retry_backoff_ns);
+    h.u64(cfg.faults.spike_window_ns);
+    h.u64(u64::from(cfg.faults.dry_run));
+    h.u64(cfg.obs.telemetry_interval_ns);
+    h.u64(cfg.shards as u64);
+    h.u64(cfg.seed);
+    h.finish()
+}
+
+/// One barrier snapshot, as stored on disk.
+pub struct Checkpoint {
+    /// [`config_fingerprint`] of the producing run.
+    pub fingerprint: u64,
+    /// Barrier cadence of the producing run (resume must match: the hash
+    /// chain folds once per barrier).
+    pub every_ns: u64,
+    /// The virtual-time barrier this snapshot was taken at.
+    pub t_barrier_ns: u64,
+    /// Rolling hash chain *after* folding this barrier's state.
+    pub chain: u64,
+    /// Folds executed so far (this barrier included).
+    pub folds: u64,
+    /// Engine core + canonical domain state — the hashed bytes.
+    pub state: Vec<u8>,
+    /// Shard-layout restore details, excluded from the hash.
+    pub supplement: Vec<u8>,
+}
+
+impl Checkpoint {
+    /// Atomic write: serialize to `<path>.tmp`, then rename over `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut w = Enc::new();
+        w.buf.extend_from_slice(&MAGIC);
+        w.u32(VERSION);
+        w.u64(self.fingerprint);
+        w.u64(self.every_ns);
+        w.u64(self.t_barrier_ns);
+        w.u64(self.chain);
+        w.u64(self.folds);
+        w.len(self.state.len());
+        w.buf.extend_from_slice(&self.state);
+        w.len(self.supplement.len());
+        w.buf.extend_from_slice(&self.supplement);
+        let tmp = format!("{path}.tmp");
+        fs::write(&tmp, &w.buf)?;
+        fs::rename(&tmp, path)
+    }
+
+    /// Read and validate the header.  Wrong magic/version is an error; a
+    /// *truncated* body panics through the section reader — a corrupt
+    /// snapshot must never resume silently wrong.
+    pub fn read(path: &str) -> std::io::Result<Checkpoint> {
+        let buf = fs::read(path)?;
+        let bad =
+            |msg: String| Error::new(ErrorKind::InvalidData, format!("{path}: {msg}"));
+        if buf.len() < MAGIC.len() || buf[..MAGIC.len()] != MAGIC {
+            return Err(bad("not a coldfaas checkpoint (bad magic)".to_string()));
+        }
+        let mut r = Dec::new(&buf[MAGIC.len()..]);
+        let version = r.u32();
+        if version != VERSION {
+            return Err(bad(format!("unsupported checkpoint version {version}")));
+        }
+        let fingerprint = r.u64();
+        let every_ns = r.u64();
+        let t_barrier_ns = r.u64();
+        let chain = r.u64();
+        let folds = r.u64();
+        let n = r.len();
+        let state = r.bytes(n).to_vec();
+        let m = r.len();
+        let supplement = r.bytes(m).to_vec();
+        r.finish();
+        Ok(Checkpoint { fingerprint, every_ns, t_barrier_ns, chain, folds, state, supplement })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fnplat::DriverKind;
+    use crate::platform::DriverProfile;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("coldfaas-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn write_read_round_trips_every_field() {
+        let ck = Checkpoint {
+            fingerprint: 0xFEEDFACE,
+            every_ns: 5_000_000_000,
+            t_barrier_ns: 15_000_000_000,
+            chain: 0xC0FFEE,
+            folds: 3,
+            state: vec![1, 2, 3, 4, 5],
+            supplement: vec![9, 8],
+        };
+        let path = tmp("roundtrip.ckpt");
+        ck.write(&path).unwrap();
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.every_ns, ck.every_ns);
+        assert_eq!(back.t_barrier_ns, ck.t_barrier_ns);
+        assert_eq!(back.chain, ck.chain);
+        assert_eq!(back.folds, ck.folds);
+        assert_eq!(back.state, ck.state);
+        assert_eq!(back.supplement, ck.supplement);
+        // No stray tmp file left behind by the atomic write.
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+    }
+
+    #[test]
+    fn foreign_files_are_rejected_not_restored() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let err = Checkpoint::read(&path).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        assert!(Checkpoint::read(&tmp("missing.ckpt")).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_event_shaping_inputs_only() {
+        let base = || {
+            PlatformConfig::single_node(
+                DriverProfile::from_kind(DriverKind::DockerWarm),
+                8,
+            )
+        };
+        let a = config_fingerprint(&base());
+        // Same config, same fingerprint.
+        assert_eq!(a, config_fingerprint(&base()));
+        // Checkpoint plumbing does not shape events: fingerprint-neutral.
+        let mut neutral = base();
+        neutral.checkpoint_every_ns = 123;
+        neutral.checkpoint_path = Some("x.ckpt".to_string());
+        neutral.state_hash = true;
+        assert_eq!(a, config_fingerprint(&neutral));
+        // Seed, topology, and load all change it.
+        let mut seed = base();
+        seed.seed ^= 1;
+        assert_ne!(a, config_fingerprint(&seed));
+        let mut nodes = base();
+        nodes.nodes = 2;
+        assert_ne!(a, config_fingerprint(&nodes));
+        let mut load = base();
+        load.load =
+            PlatformLoad::ClosedLoop { parallelism: 1, total: 2, prewarm: false, gap_ns: 0 };
+        assert_ne!(a, config_fingerprint(&load));
+    }
+}

@@ -19,6 +19,7 @@
 //! cluster-scale sweeps like E13 (`coldfaas fleet`) a configuration
 //! instead of a fourth copy of the pipeline.
 
+pub mod checkpoint;
 pub mod faults;
 pub mod node;
 pub mod presets;
@@ -26,6 +27,7 @@ pub mod sched;
 pub mod shard;
 pub mod sim;
 
+pub use checkpoint::{config_fingerprint, Checkpoint, DEFAULT_CHECKPOINT_NS};
 pub use faults::{chaos_plan, FabricFault, FaultConfig, FaultPlan, NodeFault};
 pub use node::NodeState;
 pub use sched::{PlacementOutcome, SchedPolicy, Scheduler};
@@ -248,6 +250,20 @@ pub struct PlatformConfig {
     /// result — pinned by the regression suite; 1 is the single-engine
     /// layout.
     pub shards: usize,
+    /// Checkpointing (S27): snapshot the complete platform state every
+    /// this many virtual nanoseconds (0 = default interval when a
+    /// checkpoint path or the state hash arms the barrier loop).
+    pub checkpoint_every_ns: u64,
+    /// Write each barrier's snapshot to this file (atomic tmp+rename;
+    /// each barrier overwrites the last).  `None` disables snapshots.
+    pub checkpoint_path: Option<String>,
+    /// Resume from this snapshot file instead of starting at t=0.  The
+    /// resumed run is byte-identical to an uninterrupted one.
+    pub resume_from: Option<String>,
+    /// Fold a rolling FNV state hash over the same canonical encoding at
+    /// every barrier, even when snapshots are off — a cheap corruption
+    /// tripwire pinned by the regression suite.
+    pub state_hash: bool,
     pub seed: u64,
 }
 
@@ -282,6 +298,10 @@ impl PlatformConfig {
             faults: FaultPlan::default(),
             obs: ObsConfig::default(),
             shards: 1,
+            checkpoint_every_ns: 0,
+            checkpoint_path: None,
+            resume_from: None,
+            state_hash: false,
             seed: 0xC01D,
         }
     }

@@ -7,6 +7,7 @@
 use crate::fnplat::pool::WarmPool;
 use crate::image::NodeCache;
 use crate::metrics::Histogram;
+use crate::sim::snap::{Dec, Enc};
 use crate::sim::N_LOCKS;
 
 /// One cluster node.  The `cpu_pool` / `lock_pools` ids are engine pool
@@ -76,5 +77,29 @@ impl NodeState {
             disk_pool: 0,
             hist: Histogram::new(),
         }
+    }
+
+    /// Serialize the node's mutable state for a checkpoint (S27).  Config
+    /// shape (id, cores, mem_slots) and the engine pool ids are rebuilt
+    /// deterministically at engine setup and deliberately omitted.
+    pub fn encode(&self, w: &mut Enc) {
+        w.u32(self.inflight);
+        w.bool(self.up);
+        w.u64(self.straggle_until_ns);
+        w.f64(self.straggle_mult);
+        self.cache.encode(w);
+        self.pool.encode(w);
+        self.hist.encode(w);
+    }
+
+    /// Inverse of [`Self::encode`] onto a freshly constructed node.
+    pub fn restore(&mut self, r: &mut Dec) {
+        self.inflight = r.u32();
+        self.up = r.bool();
+        self.straggle_until_ns = r.u64();
+        self.straggle_mult = r.f64();
+        self.cache.restore(r);
+        self.pool.restore(r);
+        self.hist = Histogram::decode(r);
     }
 }

@@ -41,6 +41,7 @@
 use std::collections::{BTreeSet, HashMap};
 
 use crate::image::Image;
+use crate::sim::snap::{Dec, Enc};
 use crate::sim::Rng;
 
 use super::node::NodeState;
@@ -165,6 +166,22 @@ impl Scheduler {
                 self.warm_nodes.entry(func.to_string()).or_default().insert(n.id);
             }
         }
+    }
+
+    /// Serialize the scheduler's durable state (S27): only the transfer
+    /// counters.  The routing indexes are verified supersets rebuilt from
+    /// node state — callers run [`Scheduler::attach`] after restoring the
+    /// nodes, and every decision still matches the full linear scan, so
+    /// a freshly rebuilt (tighter) superset cannot change placements.
+    pub fn encode(&self, w: &mut Enc) {
+        w.u64(self.transfers);
+        w.u64(self.transferred_bytes);
+    }
+
+    /// Inverse of [`Self::encode`]; call [`Scheduler::attach`] afterwards.
+    pub fn restore(&mut self, r: &mut Dec) {
+        self.transfers = r.u64();
+        self.transferred_bytes = r.u64();
     }
 
     /// `node` may now hold a live warm slot under sharing key `key` (an

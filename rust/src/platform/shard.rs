@@ -25,6 +25,7 @@
 //! where the legacy global counters are retained as a parity oracle.
 
 use crate::metrics::Histogram;
+use crate::sim::snap::{Dec, Enc};
 
 /// Mailbox drain cadence: one barrier per virtual second.  Drain timing
 /// is observationally pure (partials apply exact integer deltas), so the
@@ -115,6 +116,61 @@ pub enum ShardMsg {
     Restarted,
     /// A scheduled pre-warm boot fired and populated a pool.
     PrewarmBoot,
+}
+
+impl ShardMsg {
+    /// Serialize for a checkpoint (S27), canonical tag order.
+    pub fn encode(&self, w: &mut Enc) {
+        match *self {
+            ShardMsg::Injected => w.u8(0),
+            ShardMsg::Dispatched { cold, in_window } => {
+                w.u8(1);
+                w.bool(cold);
+                w.bool(in_window);
+            }
+            ShardMsg::Served { heat, lat_ns } => {
+                w.u8(2);
+                w.u8(match heat {
+                    HeatClass::Cold => 0,
+                    HeatClass::Warm => 1,
+                    HeatClass::Specialized => 2,
+                });
+                w.u64(lat_ns);
+            }
+            ShardMsg::Killed => w.u8(3),
+            ShardMsg::Retry => w.u8(4),
+            ShardMsg::Rejected => w.u8(5),
+            ShardMsg::Crashed { slots_lost } => {
+                w.u8(6);
+                w.u64(slots_lost);
+            }
+            ShardMsg::Restarted => w.u8(7),
+            ShardMsg::PrewarmBoot => w.u8(8),
+        }
+    }
+
+    pub fn decode(r: &mut Dec) -> ShardMsg {
+        match r.u8() {
+            0 => ShardMsg::Injected,
+            1 => ShardMsg::Dispatched { cold: r.bool(), in_window: r.bool() },
+            2 => {
+                let heat = match r.u8() {
+                    0 => HeatClass::Cold,
+                    1 => HeatClass::Warm,
+                    2 => HeatClass::Specialized,
+                    other => panic!("snapshot corrupt: HeatClass tag {other}"),
+                };
+                ShardMsg::Served { heat, lat_ns: r.u64() }
+            }
+            3 => ShardMsg::Killed,
+            4 => ShardMsg::Retry,
+            5 => ShardMsg::Rejected,
+            6 => ShardMsg::Crashed { slots_lost: r.u64() },
+            7 => ShardMsg::Restarted,
+            8 => ShardMsg::PrewarmBoot,
+            other => panic!("snapshot corrupt: ShardMsg tag {other}"),
+        }
+    }
 }
 
 /// Per-shard accumulator: the message-driven counters plus the
@@ -213,6 +269,63 @@ impl ShardPartial {
         self.retirements += other.retirements;
         self.monitor_events += other.monitor_events;
     }
+
+    /// Serialize every field, declaration order (S27).
+    pub fn encode(&self, w: &mut Enc) {
+        w.u64(self.injected);
+        w.u64(self.served);
+        w.u64(self.killed);
+        w.u64(self.retries);
+        w.u64(self.rejected);
+        w.u64(self.crashes);
+        w.u64(self.restarts);
+        w.u64(self.prewarm_boots);
+        w.u64(self.warm_slots_lost);
+        w.u64(self.window_cold);
+        w.u64(self.window_total);
+        w.u64(self.steady_cold);
+        w.u64(self.steady_total);
+        self.cold_hist.encode(w);
+        self.warm_hist.encode(w);
+        self.spec_hist.encode(w);
+        self.hist.encode(w);
+        w.u128(self.idle_mem_byte_ns);
+        w.u64(self.warm_hits);
+        w.u64(self.specializations);
+        w.u64(self.cold_starts);
+        w.u64(self.expirations);
+        w.u64(self.retirements);
+        w.u64(self.monitor_events);
+    }
+
+    pub fn decode(r: &mut Dec) -> ShardPartial {
+        ShardPartial {
+            injected: r.u64(),
+            served: r.u64(),
+            killed: r.u64(),
+            retries: r.u64(),
+            rejected: r.u64(),
+            crashes: r.u64(),
+            restarts: r.u64(),
+            prewarm_boots: r.u64(),
+            warm_slots_lost: r.u64(),
+            window_cold: r.u64(),
+            window_total: r.u64(),
+            steady_cold: r.u64(),
+            steady_total: r.u64(),
+            cold_hist: Histogram::decode(r),
+            warm_hist: Histogram::decode(r),
+            spec_hist: Histogram::decode(r),
+            hist: Histogram::decode(r),
+            idle_mem_byte_ns: r.u128(),
+            warm_hits: r.u64(),
+            specializations: r.u64(),
+            cold_starts: r.u64(),
+            expirations: r.u64(),
+            retirements: r.u64(),
+            monitor_events: r.u64(),
+        }
+    }
 }
 
 /// Deterministic inter-shard mailbox: one `(t, seq, msg)` queue per
@@ -288,6 +401,72 @@ impl ShardMailbox {
             }
         }
         self.barriers += 1;
+    }
+
+    /// Canonical, **shard-count-invariant** encoding for the state-hash
+    /// section (S27): counters plus the flat, seq-sorted multiset of
+    /// undrained messages.  Which queue each message sits in is a
+    /// K-dependent layout detail and deliberately unobservable here — it
+    /// goes in [`Self::encode_layout`] instead, so the hash chain is
+    /// identical for every shard count.
+    pub fn encode_canonical(&self, w: &mut Enc) {
+        w.u64(self.seq);
+        w.u64(self.barrier_ns);
+        w.u64(self.next_barrier_ns);
+        w.u64(self.posted);
+        w.u64(self.barriers);
+        let msgs = self.sorted_msgs();
+        w.len(msgs.len());
+        for &(t, seq, msg, _) in &msgs {
+            w.u64(t);
+            w.u64(seq);
+            msg.encode(w);
+        }
+    }
+
+    /// Restore supplement: each message's queue index, in the same
+    /// seq-sorted order as [`Self::encode_canonical`].  Never hashed.
+    pub fn encode_layout(&self, w: &mut Enc) {
+        let msgs = self.sorted_msgs();
+        w.len(msgs.len());
+        for &(_, _, _, shard) in &msgs {
+            w.usize(shard);
+        }
+    }
+
+    fn sorted_msgs(&self) -> Vec<(u64, u64, ShardMsg, usize)> {
+        let mut msgs: Vec<(u64, u64, ShardMsg, usize)> = self
+            .queues
+            .iter()
+            .enumerate()
+            .flat_map(|(shard, q)| q.iter().map(move |&(t, seq, msg)| (t, seq, msg, shard)))
+            .collect();
+        msgs.sort_unstable_by_key(|&(_, seq, _, _)| seq);
+        msgs
+    }
+
+    /// Inverse of [`Self::encode_canonical`] + [`Self::encode_layout`]
+    /// onto a freshly constructed mailbox with the same shard count.
+    pub fn restore(&mut self, r: &mut Dec, layout: &mut Dec) {
+        self.seq = r.u64();
+        self.barrier_ns = r.u64();
+        self.next_barrier_ns = r.u64();
+        self.posted = r.u64();
+        self.barriers = r.u64();
+        for q in &mut self.queues {
+            q.clear();
+        }
+        let n = r.len();
+        assert_eq!(n, layout.len(), "mailbox layout supplement out of sync with snapshot");
+        for _ in 0..n {
+            let t = r.u64();
+            let seq = r.u64();
+            let msg = ShardMsg::decode(r);
+            let shard = layout.usize();
+            assert!(shard < self.queues.len(), "snapshot corrupt: mailbox shard {shard}");
+            // Pushing in global seq order keeps each queue seq-sorted.
+            self.queues[shard].push((t, seq, msg));
+        }
     }
 }
 
@@ -391,6 +570,97 @@ mod tests {
         let mut mb = ShardMailbox::new(1, 1_000);
         mb.post(0, 100, ShardMsg::Injected);
         mb.post(0, 50, ShardMsg::Injected);
+    }
+
+    #[test]
+    fn canonical_mailbox_encoding_is_shard_count_invariant() {
+        // The same message stream posted under two different shard layouts
+        // must hash-encode identically: queue placement is layout, not
+        // state.
+        let stream = [
+            (10u64, ShardMsg::Injected),
+            (20, ShardMsg::Dispatched { cold: true, in_window: true }),
+            (25, ShardMsg::Served { heat: HeatClass::Specialized, lat_ns: 3_000_000 }),
+            (40, ShardMsg::Crashed { slots_lost: 3 }),
+            (41, ShardMsg::Restarted),
+            (90, ShardMsg::PrewarmBoot),
+        ];
+        let mut one = ShardMailbox::new(1, 1_000);
+        let mut four = ShardMailbox::new(4, 1_000);
+        for (i, &(t, msg)) in stream.iter().enumerate() {
+            one.post(0, t, msg);
+            four.post(i % 4, t, msg);
+        }
+        let (mut w1, mut w4) = (Enc::new(), Enc::new());
+        one.encode_canonical(&mut w1);
+        four.encode_canonical(&mut w4);
+        assert_eq!(w1.buf, w4.buf, "canonical encoding must not observe shard layout");
+    }
+
+    #[test]
+    fn mailbox_restore_round_trips_and_preserves_drains() {
+        let mut mb = ShardMailbox::new(3, 1_000);
+        let mut parts = vec![ShardPartial::default(); 3];
+        mb.post(1, 10, ShardMsg::Injected);
+        mb.post(2, 20, ShardMsg::Served { heat: HeatClass::Warm, lat_ns: 7_000 });
+        mb.maybe_drain(1_500, &mut parts);
+        mb.post(0, 1_600, ShardMsg::Retry);
+        mb.post(2, 1_700, ShardMsg::Rejected);
+
+        let (mut canon, mut layout) = (Enc::new(), Enc::new());
+        mb.encode_canonical(&mut canon);
+        mb.encode_layout(&mut layout);
+
+        let mut back = ShardMailbox::new(3, 1_000);
+        let (mut cr, mut lr) = (Dec::new(&canon.buf), Dec::new(&layout.buf));
+        back.restore(&mut cr, &mut lr);
+        cr.finish();
+        lr.finish();
+
+        let mut canon2 = Enc::new();
+        back.encode_canonical(&mut canon2);
+        assert_eq!(canon.buf, canon2.buf, "restore must round-trip byte-exactly");
+
+        // Draining both produces identical partial deltas, in the right
+        // shard queues.
+        let mut p1 = vec![ShardPartial::default(); 3];
+        let mut p2 = vec![ShardPartial::default(); 3];
+        mb.drain(&mut p1);
+        back.drain(&mut p2);
+        assert_eq!(p1, p2);
+        assert_eq!(p1[0].retries, 1);
+        assert_eq!(p1[2].rejected, 1);
+        assert_eq!(mb.posted(), back.posted());
+        assert_eq!(mb.barriers(), back.barriers());
+    }
+
+    #[test]
+    fn partial_codec_round_trips_every_field() {
+        let mut p = ShardPartial::default();
+        for msg in [
+            ShardMsg::Injected,
+            ShardMsg::Dispatched { cold: true, in_window: false },
+            ShardMsg::Served { heat: HeatClass::Cold, lat_ns: 9_000_000 },
+            ShardMsg::Served { heat: HeatClass::Warm, lat_ns: 2_000_000 },
+            ShardMsg::Killed,
+            ShardMsg::Retry,
+            ShardMsg::Rejected,
+            ShardMsg::Crashed { slots_lost: 11 },
+            ShardMsg::Restarted,
+            ShardMsg::PrewarmBoot,
+        ] {
+            p.apply(&msg);
+        }
+        p.hist.record_ns(123_456);
+        p.idle_mem_byte_ns = 1 << 80;
+        p.warm_hits = 5;
+        p.monitor_events = 9;
+        let mut w = Enc::new();
+        p.encode(&mut w);
+        let mut r = Dec::new(&w.buf);
+        let q = ShardPartial::decode(&mut r);
+        r.finish();
+        assert_eq!(p, q);
     }
 
     #[test]

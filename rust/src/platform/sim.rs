@@ -47,9 +47,11 @@ use crate::obs::{
     ChromeTraceSink, Gauges, NullSink, PhaseProfile, Telemetry, TelemetrySeries, TraceSink,
 };
 use crate::policy::{IdleAction, LifecyclePolicy};
+use crate::sim::snap::{fold_chain, Dec, Enc, FNV_OFFSET};
 use crate::sim::{Dist, Domain, Engine, Host, ReqId, Rng, Spawn, Step, StepKind, N_LOCKS};
 use crate::workload::tenants::TenantTrace;
 
+use super::checkpoint::{config_fingerprint, Checkpoint, DEFAULT_CHECKPOINT_NS};
 use super::faults::FaultPlan;
 use super::node::NodeState;
 use super::sched::{footprint_bytes, nodes_with_image, Scheduler};
@@ -392,6 +394,221 @@ impl PlatformSim<'_> {
             );
         }
         tail
+    }
+
+    /// Canonical encoding of the domain's mutable state (S27) — the bytes
+    /// the rolling state hash folds over, appended after the engine core.
+    /// Every map is emitted in sorted key order so `HashMap` iteration
+    /// order is unobservable, and the sharded accounting plane goes
+    /// through its shard-count-invariant form
+    /// ([`ShardMailbox::encode_canonical`] + the *merged* partial), so
+    /// the hash chain is identical for every `shards` value.  Config-
+    /// derived fields (steps, names, images, fault plan, load) are
+    /// deliberately omitted: the resume path reconstructs them and the
+    /// checkpoint fingerprint pins them.
+    fn encode_state(&self, w: &mut Enc) {
+        let mut placed: Vec<(&ReqId, &Placed)> = self.placed.iter().collect();
+        placed.sort_unstable_by_key(|&(req, _)| *req);
+        w.len(placed.len());
+        for (req, p) in placed {
+            w.u32(*req);
+            w.usize(p.node);
+            w.u8(match p.heat {
+                Heat::Warm => 0,
+                Heat::Specialized => 1,
+                Heat::Cold => 2,
+            });
+            w.bool(p.killed);
+        }
+        w.len(self.pending_prewarms.len());
+        for &(func, node, delay_ns, keep_ns) in &self.pending_prewarms {
+            w.u32(func);
+            w.usize(node);
+            w.u64(delay_ns);
+            w.u64(keep_ns);
+        }
+        w.len(self.prewarm_keeps.len());
+        for q in &self.prewarm_keeps {
+            w.len(q.len());
+            for b in q {
+                w.u64(b.fire_at_ns);
+                w.usize(b.node);
+                w.u64(b.keep_ns);
+            }
+        }
+        w.u64(self.prewarm_boots);
+        let mut origins: Vec<(&(u32, u64), &VecDeque<u64>)> = self.retry_origins.iter().collect();
+        origins.sort_unstable_by_key(|&(key, _)| *key);
+        w.len(origins.len());
+        for (&(class, at), q) in origins {
+            w.u32(class);
+            w.u64(at);
+            w.len(q.len());
+            for &origin in q {
+                w.u64(origin);
+            }
+        }
+        w.usize(self.stream_next);
+        w.u64(self.remaining);
+        w.u64(self.injected);
+        w.u64(self.served);
+        w.u64(self.killed);
+        w.u64(self.retries);
+        w.u64(self.rejected);
+        w.u64(self.warm_slots_lost);
+        w.u64(self.crashes);
+        w.u64(self.restarts);
+        w.u64(self.window_cold);
+        w.u64(self.window_total);
+        w.u64(self.steady_cold);
+        w.u64(self.steady_total);
+        self.telemetry.encode(w);
+        // Profile minus `wall_ns`: wall time is machine-dependent and
+        // stamped after the run; the remaining counters are seed-pure.
+        w.u64(self.profile.dispatch_decisions);
+        w.u64(self.profile.pool_effects);
+        w.u64(self.profile.fault_effects);
+        w.u64(self.profile.completions);
+        w.u64(self.profile.telemetry_samples);
+        self.mailbox.encode_canonical(w);
+        let mut merged = ShardPartial::default();
+        for p in &self.partials {
+            merged.merge(p);
+        }
+        merged.encode(w);
+        self.cold_hist.encode(w);
+        self.warm_hist.encode(w);
+        self.spec_hist.encode(w);
+        for v in [
+            &self.latencies_ns,
+            &self.cold_latencies_ns,
+            &self.warm_latencies_ns,
+            &self.spec_latencies_ns,
+        ] {
+            w.len(v.len());
+            for &lat in v {
+                w.u64(lat);
+            }
+        }
+        w.len(self.nodes.len());
+        for n in &self.nodes {
+            n.encode(w);
+        }
+        self.sched.encode(w);
+        self.policy.encode_state(w);
+    }
+
+    /// Restore supplement: the shard-count-*dependent* layout details a
+    /// resume needs but the hash must not see — per-message mailbox queue
+    /// indices and the per-shard partials (whose merge is in the hashed
+    /// section).
+    fn encode_supplement(&self, w: &mut Enc) {
+        self.mailbox.encode_layout(w);
+        w.len(self.partials.len());
+        for p in &self.partials {
+            p.encode(w);
+        }
+    }
+
+    /// Inverse of [`Self::encode_state`] + [`Self::encode_supplement`]
+    /// onto a freshly constructed domain of the same configuration.
+    /// Rebuilds the scheduler indexes from the restored node state.
+    fn restore_state(&mut self, r: &mut Dec, supp: &mut Dec) {
+        self.placed.clear();
+        for _ in 0..r.len() {
+            let req = r.u32();
+            let node = r.usize();
+            let heat = match r.u8() {
+                0 => Heat::Warm,
+                1 => Heat::Specialized,
+                2 => Heat::Cold,
+                other => panic!("snapshot corrupt: Heat tag {other}"),
+            };
+            let killed = r.bool();
+            self.placed.insert(req, Placed { node, heat, killed });
+        }
+        self.pending_prewarms.clear();
+        for _ in 0..r.len() {
+            self.pending_prewarms.push((r.u32(), r.usize(), r.u64(), r.u64()));
+        }
+        let nfuncs = r.len();
+        assert_eq!(nfuncs, self.prewarm_keeps.len(), "snapshot function count mismatch");
+        for q in &mut self.prewarm_keeps {
+            q.clear();
+            for _ in 0..r.len() {
+                q.push_back(PrewarmBoot { fire_at_ns: r.u64(), node: r.usize(), keep_ns: r.u64() });
+            }
+        }
+        self.prewarm_boots = r.u64();
+        self.retry_origins.clear();
+        for _ in 0..r.len() {
+            let key = (r.u32(), r.u64());
+            let mut q = VecDeque::new();
+            for _ in 0..r.len() {
+                q.push_back(r.u64());
+            }
+            self.retry_origins.insert(key, q);
+        }
+        self.stream_next = r.usize();
+        self.remaining = r.u64();
+        self.injected = r.u64();
+        self.served = r.u64();
+        self.killed = r.u64();
+        self.retries = r.u64();
+        self.rejected = r.u64();
+        self.warm_slots_lost = r.u64();
+        self.crashes = r.u64();
+        self.restarts = r.u64();
+        self.window_cold = r.u64();
+        self.window_total = r.u64();
+        self.steady_cold = r.u64();
+        self.steady_total = r.u64();
+        self.telemetry = Telemetry::decode(r);
+        self.profile.dispatch_decisions = r.u64();
+        self.profile.pool_effects = r.u64();
+        self.profile.fault_effects = r.u64();
+        self.profile.completions = r.u64();
+        self.profile.telemetry_samples = r.u64();
+        self.mailbox.restore(r, supp);
+        let merged = ShardPartial::decode(r);
+        let nparts = supp.len();
+        assert_eq!(nparts, self.partials.len(), "snapshot shard count mismatch");
+        for p in &mut self.partials {
+            *p = ShardPartial::decode(supp);
+        }
+        if cfg!(debug_assertions) {
+            let mut check = ShardPartial::default();
+            for p in &self.partials {
+                check.merge(p);
+            }
+            debug_assert_eq!(check, merged, "per-shard partials diverge from the hashed merge");
+        }
+        self.cold_hist = Histogram::decode(r);
+        self.warm_hist = Histogram::decode(r);
+        self.spec_hist = Histogram::decode(r);
+        for v in [
+            &mut self.latencies_ns,
+            &mut self.cold_latencies_ns,
+            &mut self.warm_latencies_ns,
+            &mut self.spec_latencies_ns,
+        ] {
+            v.clear();
+            for _ in 0..r.len() {
+                v.push(r.u64());
+            }
+        }
+        let nnodes = r.len();
+        assert_eq!(nnodes, self.nodes.len(), "snapshot node count mismatch");
+        for n in &mut self.nodes {
+            n.restore(r);
+        }
+        self.sched.restore(r);
+        self.policy.restore_state(r);
+        // The routing indexes are rebuilt from restored pools/caches: a
+        // (possibly tighter) verified superset, which cannot change any
+        // placement decision — debug builds re-assert every pick against
+        // the full linear scan.
+        self.sched.attach(&self.nodes);
     }
 }
 
@@ -795,6 +1012,15 @@ pub struct PlatformResult {
     /// count (strictly compared by the bench gate), wall time and the
     /// machine-dependent `events/s` derived from it (informational only).
     pub profile: PhaseProfile,
+    // --- checkpointing (S27) ---
+    /// Final value of the rolling state-hash chain; `None` unless the run
+    /// was armed (`state_hash`, a checkpoint path, or a resume).  Kept
+    /// out of the report JSON — it pins *state*, the report pins output.
+    pub state_hash: Option<u64>,
+    /// Barrier folds the chain accumulated (resumed runs count the folds
+    /// replayed from the checkpoint header, so the total matches an
+    /// uninterrupted run).
+    pub state_hash_folds: u64,
 }
 
 fn fraction(num: u64, den: u64) -> f64 {
@@ -1113,7 +1339,7 @@ pub fn run_platform(
         }
     }
     let run_started = std::time::Instant::now();
-    match &cfg.load {
+    let budget: u64 = match &cfg.load {
         PlatformLoad::ClosedLoop { parallelism, total, prewarm, gap_ns } => {
             assert!(*parallelism as u64 <= *total);
             if *prewarm {
@@ -1135,24 +1361,24 @@ pub fn run_platform(
             for _ in 0..*parallelism {
                 e.spawn_at(0, 0, head.clone());
             }
-            e.run(total.saturating_mul(192).max(1 << 20));
+            total.saturating_mul(192).max(1 << 20)
         }
         PlatformLoad::OpenTrace(trace) => {
             for &t in &trace.arrivals_ns {
                 e.spawn_at(t, 0, head.clone());
             }
-            e.run((trace.len() as u64).saturating_mul(192).max(1 << 20));
+            (trace.len() as u64).saturating_mul(192).max(1 << 20)
         }
         PlatformLoad::Tenants(tt) => {
             for &(at, func) in &tt.arrivals {
                 e.spawn_at(at, func, head.clone());
             }
-            e.run((tt.len() as u64).saturating_mul(192).max(1 << 20));
+            (tt.len() as u64).saturating_mul(192).max(1 << 20)
         }
         PlatformLoad::TenantsStreamed(tt) => {
             e.domain.stream = Some(tt);
             e.spawn_at(0, FEED_CLASS, Vec::new());
-            e.run((tt.len() as u64).saturating_mul(192).max(1 << 20));
+            (tt.len() as u64).saturating_mul(192).max(1 << 20)
         }
         PlatformLoad::Burst { requests, burst_ms } => {
             let mut arrivals = Rng::new(cfg.seed ^ 0xA5A5);
@@ -1160,13 +1386,40 @@ pub fn run_platform(
                 let at = (arrivals.next_f64() * burst_ms * 1e6) as u64;
                 e.spawn_at(at, 0, head.clone());
             }
-            e.run(requests.saturating_mul(192).max(1 << 20));
+            requests.saturating_mul(192).max(1 << 20)
         }
-    }
+    };
+    // S27: the rolling state hash and the checkpoint loop share one armed
+    // path — any of the four knobs turns the plain `run` into a sequence
+    // of `run_until` barrier legs with a hash fold at each.  The legs
+    // process exactly the events the plain run would (the barrier peeks,
+    // never pops), so an unarmed run is byte-identical to an armed one.
+    let armed = cfg.state_hash
+        || cfg.checkpoint_path.is_some()
+        || cfg.resume_from.is_some()
+        || cfg.checkpoint_every_ns > 0;
+    let (state_hash, state_hash_folds) = if armed {
+        let every = if cfg.checkpoint_every_ns > 0 {
+            cfg.checkpoint_every_ns
+        } else {
+            DEFAULT_CHECKPOINT_NS
+        };
+        let (chain, folds) = run_checkpointed(&mut e, cfg, budget, every);
+        (Some(chain), folds)
+    } else {
+        e.run(budget);
+        (None, 0)
+    };
 
     // Wall time spans load spawning + the engine run: machine dependent,
     // never rendered, informational-only in the compare gate.
     let wall_ns = run_started.elapsed().as_nanos() as u64;
+
+    // S27 satellite: the cheapest engine invariants are always-on checked
+    // errors at finalize, not debug-only hopes — a run that ends with a
+    // misordered queue or undrained events must never produce a report.
+    e.validate_queue();
+    assert_eq!(e.pending_events(), 0, "run ended with events still queued — budget exhausted?");
 
     let now = e.now();
     let events = e.events_processed();
@@ -1228,6 +1481,19 @@ pub fn run_platform(
     for p in &partials {
         total.merge(p);
     }
+    // S27 satellite: conservation laws promoted to always-on checked
+    // errors — they cost a handful of integer compares per *run* and turn
+    // lost-request bugs into hard failures in release builds too.
+    assert_eq!(
+        total.injected,
+        total.served + total.rejected,
+        "request conservation violated: injected != served + rejected"
+    );
+    assert_eq!(
+        total.warm_hits + total.specializations + total.cold_starts,
+        total.window_total + total.steady_total,
+        "dispatch conservation violated: pool claims != dispatch decisions"
+    );
     // Debug-parity oracle: the engine-global accounting retained on the
     // domain must agree with the message-driven shard merge exactly.
     debug_assert_eq!(total.injected, d.injected);
@@ -1295,7 +1561,89 @@ pub fn run_platform(
         trace_json,
         trace_dropped,
         profile,
+        state_hash,
+        state_hash_folds,
     }
+}
+
+/// The armed engine loop (S27): run to each virtual-time barrier, fold
+/// the canonical state section into the rolling hash chain, and — when a
+/// checkpoint path is set — persist the barrier atomically.  On resume,
+/// the freshly constructed engine+domain are overwritten with the
+/// snapshot before the first leg, and the chain/fold counters continue
+/// from the header, so a killed run and an uninterrupted one finish with
+/// identical chains and identical reports.
+///
+/// The checkpoint is written only for *mid-run* barriers (`more ==
+/// true`): the final fold happens once the queue is drained, at an
+/// arbitrary virtual time, and persisting it would make resume-after-
+/// completion fold one extra link and diverge the chain.  Resuming a
+/// completed run therefore replays the tail from the last mid-run
+/// barrier — wasted work, never wrong answers.
+fn run_checkpointed(
+    e: &mut Engine<PlatformSim<'_>>,
+    cfg: &PlatformConfig,
+    budget: u64,
+    every: u64,
+) -> (u64, u64) {
+    assert!(
+        !cfg.obs.trace,
+        "checkpointing/state-hash runs are incompatible with lifecycle tracing (S27): \
+         the trace ring is not snapshotted"
+    );
+    let fingerprint = config_fingerprint(cfg);
+    let mut chain = FNV_OFFSET;
+    let mut folds: u64 = 0;
+    let mut next_barrier = every;
+    if let Some(path) = &cfg.resume_from {
+        let ck = Checkpoint::read(path)
+            .unwrap_or_else(|err| panic!("cannot resume from {path}: {err}"));
+        assert_eq!(
+            ck.fingerprint, fingerprint,
+            "checkpoint {path} was written by a different configuration — refusing to resume"
+        );
+        assert_eq!(
+            ck.every_ns, every,
+            "checkpoint {path} used a different barrier cadence — the hash chain folds once \
+             per barrier, so resume must match"
+        );
+        let mut r = Dec::new(&ck.state);
+        let mut supp = Dec::new(&ck.supplement);
+        e.restore_core(&mut r);
+        e.domain.restore_state(&mut r, &mut supp);
+        r.finish();
+        supp.finish();
+        chain = ck.chain;
+        folds = ck.folds;
+        next_barrier = ck.t_barrier_ns + every;
+    }
+    loop {
+        let more = e.run_until(next_barrier, budget);
+        let mut w = Enc::new();
+        e.encode_core(&mut w);
+        e.domain.encode_state(&mut w);
+        chain = fold_chain(chain, &w.buf);
+        folds += 1;
+        if !more {
+            break;
+        }
+        if let Some(path) = &cfg.checkpoint_path {
+            let mut supp = Enc::new();
+            e.domain.encode_supplement(&mut supp);
+            let ck = Checkpoint {
+                fingerprint,
+                every_ns: every,
+                t_barrier_ns: next_barrier,
+                chain,
+                folds,
+                state: w.buf,
+                supplement: supp.buf,
+            };
+            ck.write(path).unwrap_or_else(|err| panic!("cannot write checkpoint {path}: {err}"));
+        }
+        next_barrier += every;
+    }
+    (chain, folds)
 }
 
 #[cfg(test)]
@@ -1304,7 +1652,7 @@ mod tests {
     use crate::fnplat::DriverKind;
     use crate::platform::faults::{chaos_plan, NodeFault};
     use crate::platform::DriverProfile;
-    use crate::policy::{ColdOnlyPolicy, FixedKeepAlive};
+    use crate::policy::{ColdOnlyPolicy, EwmaPredictive, FixedKeepAlive};
     use crate::workload::tenants::{TenantConfig, TenantTrace};
 
     const S: u64 = 1_000_000_000;
@@ -1585,6 +1933,145 @@ mod tests {
                 (approx / exact - 1.0).abs() < 0.06,
                 "q{q}: hist {approx} vs exact {exact}"
             );
+        }
+    }
+
+    /// Every scalar a report pins, flattened for exact comparison (S27:
+    /// floats compared as bit patterns — byte-identical, not "close").
+    fn report_blob(r: &PlatformResult) -> Vec<u64> {
+        let mut v = vec![
+            r.requests,
+            r.elapsed_ns,
+            r.events,
+            r.warm_hits,
+            r.specializations,
+            r.cold_starts,
+            r.prewarm_boots,
+            r.expirations,
+            r.retirements,
+            r.monitor_events,
+            r.injected,
+            r.served,
+            r.killed,
+            r.retries,
+            r.rejected,
+            r.warm_slots_lost,
+            r.crashes,
+            r.restarts,
+            r.window_cold,
+            r.window_total,
+            r.steady_cold,
+            r.steady_total,
+            r.transfers,
+            r.transferred_bytes,
+            r.footprint_bytes,
+            r.nodes_with_first_image as u64,
+            r.shard_msgs,
+            r.shard_barriers,
+            r.trace_dropped,
+            r.idle_gb_seconds.to_bits(),
+            r.conn_setup_ms.to_bits(),
+            r.profile.dispatch_decisions,
+            r.profile.pool_effects,
+            r.profile.fault_effects,
+            r.profile.completions,
+            r.profile.engine_events,
+        ];
+        v.extend(&r.latencies_ns);
+        v.extend(&r.cold_latencies_ns);
+        v.extend(&r.warm_latencies_ns);
+        v.extend(&r.spec_latencies_ns);
+        v
+    }
+
+    fn assert_same_report(a: &PlatformResult, b: &PlatformResult) {
+        assert_eq!(report_blob(a), report_blob(b));
+        assert!(a.hist == b.hist, "all-request histogram diverged");
+        assert!(a.cold_hist == b.cold_hist, "cold histogram diverged");
+        assert!(a.warm_hist == b.warm_hist, "warm histogram diverged");
+        assert!(a.spec_hist == b.spec_hist, "spec histogram diverged");
+        assert!(a.node_hists == b.node_hists, "node histograms diverged");
+        assert_eq!(a.state_hash, b.state_hash, "state-hash chain diverged");
+        assert_eq!(a.state_hash_folds, b.state_hash_folds, "fold count diverged");
+    }
+
+    #[test]
+    fn state_hash_chain_is_invariant_across_shard_counts() {
+        // The chain folds only canonical (layout-free) sections, so every
+        // shard count must walk the identical hash trajectory.
+        let run = |shards: usize| {
+            let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 8);
+            cfg.shards = shards;
+            cfg.state_hash = true;
+            let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+            (r.state_hash.expect("armed run must produce a chain"), r.state_hash_folds)
+        };
+        let one = run(1);
+        assert_eq!(one, run(2), "shards=2 diverged from the single-shard chain");
+        assert_eq!(one, run(8), "shards=8 diverged from the single-shard chain");
+        assert!(one.1 >= 2, "a 60s trace must cross several 10s barriers: {} folds", one.1);
+    }
+
+    #[test]
+    fn state_hash_folding_is_observationally_pure() {
+        // Arming the hash splits the run into barrier legs, but the legs
+        // pop the identical event stream: no extra events, no RNG draws,
+        // byte-identical outputs.  Unarmed runs report no chain at all.
+        let base = || {
+            let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 4);
+            cfg.exact_latencies = true;
+            cfg
+        };
+        let off = run_platform(&base(), &mut FixedKeepAlive::default(), Host::default());
+        assert_eq!(off.state_hash, None);
+        assert_eq!(off.state_hash_folds, 0);
+        let mut armed = base();
+        armed.state_hash = true;
+        let on = run_platform(&armed, &mut FixedKeepAlive::default(), Host::default());
+        assert!(on.state_hash.is_some());
+        assert_eq!(report_blob(&off), report_blob(&on));
+        assert!(off.hist == on.hist, "arming the state hash changed the latency histogram");
+    }
+
+    #[test]
+    fn resume_from_any_barrier_is_byte_identical() {
+        // The resume contract, end to end: run-to-completion vs
+        // checkpoint-then-resume must agree on the full report *and* the
+        // hash chain.  Varying the barrier cadence moves the on-disk
+        // barrier — deterministically emulating kills at different points
+        // — and the stateful EWMA policy exercises policy-state restore.
+        let dir = std::env::temp_dir().join(format!("coldfaas-resume-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for shards in [1usize, 8] {
+            for every_s in [7u64, 23, 40] {
+                let base = || {
+                    let (mut cfg, _) = tenant_cfg(DriverKind::DockerWarm, 8);
+                    cfg.shards = shards;
+                    cfg.exact_latencies = true;
+                    cfg.checkpoint_every_ns = every_s * S;
+                    cfg
+                };
+                let reference = {
+                    let cfg = base();
+                    run_platform(&cfg, &mut EwmaPredictive::new(50), Host::default())
+                };
+                let path = dir
+                    .join(format!("cell-{shards}-{every_s}.ckpt"))
+                    .to_string_lossy()
+                    .into_owned();
+                let mut writer = base();
+                writer.checkpoint_path = Some(path.clone());
+                let written = run_platform(&writer, &mut EwmaPredictive::new(50), Host::default());
+                // Writing checkpoints is as invisible as hashing alone.
+                assert_same_report(&reference, &written);
+                // The completed run leaves its last *mid-run* barrier on
+                // disk; resuming replays the tail from there into a fresh
+                // engine + domain + policy.
+                let mut resumer = base();
+                resumer.resume_from = Some(path);
+                let resumed = run_platform(&resumer, &mut EwmaPredictive::new(50), Host::default());
+                assert_same_report(&reference, &resumed);
+            }
         }
     }
 }

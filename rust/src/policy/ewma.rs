@@ -7,6 +7,7 @@
 //! pre-warms just ahead of the predicted arrival.
 
 use super::{IdleAction, LifecyclePolicy};
+use crate::sim::snap::{Dec, Enc};
 
 /// EWMA arrival-forecast keep-alive/pre-warm policy.
 pub struct EwmaPredictive {
@@ -95,6 +96,33 @@ impl LifecyclePolicy for EwmaPredictive {
             IdleAction::KeepFor { keep_ns: keep_edge.clamp(1, self.max_keep_ns) }
         }
     }
+
+    fn encode_state(&self, w: &mut Enc) {
+        w.len(self.mean_ns.len());
+        for i in 0..self.mean_ns.len() {
+            w.f64(self.mean_ns[i]);
+            w.f64(self.var_ns2[i]);
+            match self.last_invoke_ns[i] {
+                Some(t) => {
+                    w.bool(true);
+                    w.u64(t);
+                }
+                None => w.bool(false),
+            }
+            w.u32(self.samples[i]);
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut Dec) {
+        let n = r.len();
+        assert_eq!(n, self.mean_ns.len(), "ewma policy state size mismatch — config drift?");
+        for i in 0..n {
+            self.mean_ns[i] = r.f64();
+            self.var_ns2[i] = r.f64();
+            self.last_invoke_ns[i] = if r.bool() { Some(r.u64()) } else { None };
+            self.samples[i] = r.u32();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +189,34 @@ mod tests {
             IdleAction::KeepFor { keep_ns } => assert!(keep_ns <= p.max_keep_ns),
             other => panic!("erratic gaps must not prewarm: {other:?}"),
         }
+    }
+
+    #[test]
+    fn state_round_trip_preserves_forecasts() {
+        let mut p = EwmaPredictive::new(3);
+        let mut t = 0u64;
+        for i in 0..30u64 {
+            t += (i % 5 + 1) * S;
+            p.on_invoke((i % 3) as u32, t);
+        }
+        let mut w = Enc::new();
+        p.encode_state(&mut w);
+
+        let mut q = EwmaPredictive::new(3);
+        let mut r = Dec::new(&w.buf);
+        q.restore_state(&mut r);
+        r.finish();
+
+        let mut w2 = Enc::new();
+        q.encode_state(&mut w2);
+        assert_eq!(w.buf, w2.buf, "restore must round-trip byte-exactly");
+        // Identical further history drives identical decisions.
+        for pol in [&mut p, &mut q] {
+            pol.on_invoke(1, t + 7 * S);
+        }
+        assert_eq!(p.on_idle(0, t + 8 * S), q.on_idle(0, t + 8 * S));
+        assert_eq!(p.on_idle(1, t + 8 * S), q.on_idle(1, t + 8 * S));
+        assert_eq!(p.on_idle(2, t + 8 * S), q.on_idle(2, t + 8 * S));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! keep-alive (observation mode).
 
 use crate::metrics::Histogram;
+use crate::sim::snap::{Dec, Enc};
 
 use super::{IdleAction, LifecyclePolicy};
 
@@ -92,6 +93,29 @@ impl LifecyclePolicy for HistogramPrewarm {
             IdleAction::KeepFor { keep_ns: tail_edge.clamp(1, self.max_keep_ns) }
         }
     }
+
+    fn encode_state(&self, w: &mut Enc) {
+        w.len(self.hists.len());
+        for i in 0..self.hists.len() {
+            self.hists[i].encode(w);
+            match self.last_invoke_ns[i] {
+                Some(t) => {
+                    w.bool(true);
+                    w.u64(t);
+                }
+                None => w.bool(false),
+            }
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut Dec) {
+        let n = r.len();
+        assert_eq!(n, self.hists.len(), "histogram policy state size mismatch — config drift?");
+        for i in 0..n {
+            self.hists[i] = Histogram::decode(r);
+            self.last_invoke_ns[i] = if r.bool() { Some(r.u64()) } else { None };
+        }
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +181,28 @@ mod tests {
             IdleAction::KeepFor { keep_ns } => assert!(keep_ns <= p.max_keep_ns),
             other => panic!("forced keep, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn state_round_trip_preserves_decisions() {
+        let mut p = HistogramPrewarm::new(2);
+        for i in 0..50u64 {
+            p.on_invoke(0, i * 2 * S);
+            p.on_invoke(1, i * 310 * S);
+        }
+        let mut w = Enc::new();
+        p.encode_state(&mut w);
+
+        let mut q = HistogramPrewarm::new(2);
+        let mut r = Dec::new(&w.buf);
+        q.restore_state(&mut r);
+        r.finish();
+
+        let mut w2 = Enc::new();
+        q.encode_state(&mut w2);
+        assert_eq!(w.buf, w2.buf, "restore must round-trip byte-exactly");
+        assert_eq!(p.on_idle(0, 200 * S), q.on_idle(0, 200 * S));
+        assert_eq!(p.on_idle(1, 16_000 * S), q.on_idle(1, 16_000 * S));
     }
 
     #[test]

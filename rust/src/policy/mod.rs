@@ -45,6 +45,8 @@ pub use histogram::HistogramPrewarm;
 pub use sim::{run_policy_scenario, PolicyResult, PolicyScenario};
 pub use universal::UniversalPool;
 
+use crate::sim::snap::{Dec, Enc};
+
 /// What to do with an executor that just went idle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IdleAction {
@@ -72,6 +74,15 @@ pub trait LifecyclePolicy {
     /// An executor for `func` finished serving at `now_ns`: decide its
     /// fate.
     fn on_idle(&mut self, func: u32, now_ns: u64) -> IdleAction;
+
+    /// Serialize mutable policy state for a checkpoint (S27).  Stateless
+    /// policies — the default — write nothing; stateful ones must write
+    /// every field their decisions read, in a canonical order.
+    fn encode_state(&self, _w: &mut Enc) {}
+
+    /// Restore state written by [`Self::encode_state`] into a freshly
+    /// constructed policy of the same shape.
+    fn restore_state(&mut self, _r: &mut Dec) {}
 }
 
 /// The paper's lifecycle: every executor exits on completion.  No state,

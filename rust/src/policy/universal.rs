@@ -19,6 +19,7 @@
 //! global bucket (the promiscuous mode).
 
 use super::{IdleAction, LifecyclePolicy};
+use crate::sim::snap::{Dec, Enc};
 
 /// Per-runtime target-size keep-alive with EWMA rate tracking.
 #[derive(Clone, Debug)]
@@ -94,6 +95,27 @@ impl LifecyclePolicy for UniversalPool {
         let rt = self.runtime_of(func);
         IdleAction::KeepFor { keep_ns: self.keep_ns(rt) }
     }
+
+    fn encode_state(&self, w: &mut Enc) {
+        w.len(self.last_arrival_ns.len());
+        for i in 0..self.last_arrival_ns.len() {
+            w.u64(self.last_arrival_ns[i]);
+            w.f64(self.ewma_gap_ns[i]);
+        }
+    }
+
+    fn restore_state(&mut self, r: &mut Dec) {
+        let n = r.len();
+        assert_eq!(
+            n,
+            self.last_arrival_ns.len(),
+            "universal policy state size mismatch — config drift?"
+        );
+        for i in 0..n {
+            self.last_arrival_ns[i] = r.u64();
+            self.ewma_gap_ns[i] = r.f64();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +156,28 @@ mod tests {
         assert_eq!(p.on_idle(0, 1000 * S), IdleAction::KeepFor { keep_ns: 600 * S });
         // Runtime 1 never saw an arrival: still on the floor.
         assert_eq!(p.on_idle(1, 1000 * S), IdleAction::KeepFor { keep_ns: 60 * S });
+    }
+
+    #[test]
+    fn state_round_trip_preserves_rate_estimates() {
+        let mut p = UniversalPool::new(3, 8.0);
+        for i in 1..40u64 {
+            p.on_invoke((i % 5) as u32, i * S / 4);
+        }
+        let mut w = Enc::new();
+        p.encode_state(&mut w);
+
+        let mut q = UniversalPool::new(3, 8.0);
+        let mut r = Dec::new(&w.buf);
+        q.restore_state(&mut r);
+        r.finish();
+
+        let mut w2 = Enc::new();
+        q.encode_state(&mut w2);
+        assert_eq!(w.buf, w2.buf, "restore must round-trip byte-exactly");
+        for rt in 0..3u32 {
+            assert_eq!(p.on_idle(rt, 40 * S), q.on_idle(rt, 40 * S));
+        }
     }
 
     #[test]

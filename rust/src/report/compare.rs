@@ -23,10 +23,13 @@
 //!
 //! A baseline whose top level carries `"bootstrap": true` is a committed
 //! placeholder (no toolchain was available to generate real numbers):
-//! the gate passes with a notice telling the operator to regenerate via
-//! `make baselines` and commit the result.  The DES itself is
-//! deterministic per seed in virtual time, so once a real baseline is
-//! committed the gate is tight: any measured drift is a code change.
+//! the library reports it as a pass with a notice, and the CLI's
+//! `--deny-bootstrap` flag — which CI passes on every gate — turns that
+//! into a hard failure, so an unarmed gate can never rot silently.
+//! Regenerate via `make baselines` (or commit CI's bench-quick-report
+//! artifact) to arm it.  The DES itself is deterministic per seed in
+//! virtual time, so once a real baseline is committed the gate is
+//! tight: any measured drift is a code change.
 
 use std::collections::BTreeMap;
 

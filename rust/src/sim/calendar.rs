@@ -101,6 +101,10 @@ impl<T> CalendarQueue<T> {
     /// Insert an event at absolute virtual time `t`.  `t` must be at or
     /// after the time of the last popped event (the DES never schedules
     /// into the past), which keeps every insertion at or past the cursor.
+    /// A past-cursor push (a contract violation — loud in debug builds)
+    /// is clamped into the cursor bucket, where the min-scan still finds
+    /// it first: in release builds it pops early, never in a wrong slot
+    /// modulo `N_BUCKETS` far in the future.
     pub fn push(&mut self, t: u64, val: T) {
         self.seq += 1;
         let seq = self.seq;
@@ -108,11 +112,32 @@ impl<T> CalendarQueue<T> {
         self.shadow.push(HeapItem { t, seq, val: () });
         let abs = t >> BUCKET_SHIFT;
         debug_assert!(abs >= self.base, "event scheduled before the cursor");
+        let abs = abs.max(self.base);
         if abs < self.base + N_BUCKETS as u64 {
             self.ring[(abs as usize) & (N_BUCKETS - 1)].push(Item { t, seq, val });
             self.ring_len += 1;
         } else {
             self.overflow.push(HeapItem { t, seq, val });
+        }
+    }
+
+    /// The `(t, seq)` key of the event the next [`Self::pop`] would
+    /// return, without removing it.  May advance the cursor past empty
+    /// buckets and migrate overflow batches — both invisible to the pop
+    /// order (peek-then-pop returns exactly what pop alone would).
+    pub fn peek(&mut self) -> Option<(u64, u64)> {
+        if self.ring_len == 0 && !self.overflow.is_empty() {
+            self.migrate_overflow();
+        }
+        let ring_min = self.find_ring_min().map(|(b, i)| {
+            let it = &self.ring[b][i];
+            (it.t, it.seq)
+        });
+        match (ring_min, self.overflow.peek()) {
+            (None, None) => None,
+            (Some(r), None) => Some(r),
+            (None, Some(top)) => Some((top.t, top.seq)),
+            (Some(r), Some(top)) => Some(r.min((top.t, top.seq))),
         }
     }
 
@@ -174,6 +199,60 @@ impl<T> CalendarQueue<T> {
             }
         }
         Some((slot, min))
+    }
+
+    /// Canonical snapshot for checkpointing (S27): the seq counter plus
+    /// every pending item in ascending `(t, seq)` order.  Deliberately
+    /// layout-free — neither the cursor position nor the ring/overflow
+    /// placement of an item is observable through the pop order, so the
+    /// canonical form keeps the state hash identical between a run that
+    /// arrived at this state directly and one that restored into it.
+    pub fn snapshot(&self) -> (u64, Vec<(u64, u64, &T)>) {
+        let mut items: Vec<(u64, u64, &T)> = self
+            .ring
+            .iter()
+            .flatten()
+            .map(|it| (it.t, it.seq, &it.val))
+            .chain(self.overflow.iter().map(|h| (h.t, h.seq, &h.val)))
+            .collect();
+        items.sort_unstable_by_key(|&(t, seq, _)| (t, seq));
+        (self.seq, items)
+    }
+
+    /// Rebuild a queue from a [`Self::snapshot`]: the seq counter is
+    /// restored verbatim (so post-restore pushes continue the same serial
+    /// stream) and each item keeps its original `(t, seq)` key, which
+    /// fully determines the pop order regardless of bucket layout.
+    pub fn restore(seq: u64, items: Vec<(u64, u64, T)>) -> Self {
+        let mut q = CalendarQueue::new();
+        q.seq = seq;
+        q.base = items.iter().map(|&(t, _, _)| t >> BUCKET_SHIFT).min().unwrap_or(0);
+        for (t, item_seq, val) in items {
+            assert!(item_seq <= seq, "snapshot item serial beyond the seq counter");
+            #[cfg(debug_assertions)]
+            q.shadow.push(HeapItem { t, seq: item_seq, val: () });
+            let abs = (t >> BUCKET_SHIFT).max(q.base);
+            if abs < q.base + N_BUCKETS as u64 {
+                q.ring[(abs as usize) & (N_BUCKETS - 1)].push(Item { t, seq: item_seq, val });
+                q.ring_len += 1;
+            } else {
+                q.overflow.push(HeapItem { t, seq: item_seq, val });
+            }
+        }
+        q
+    }
+
+    /// Always-on structural check (cheap): the cached `ring_len` must
+    /// match the actual ring population.  A mismatch means pops/pushes
+    /// corrupted the count — release-mode corruption surfaces as a failed
+    /// run instead of a silently wrong report.
+    pub fn validate(&self) {
+        let actual: usize = self.ring.iter().map(Vec::len).sum();
+        assert_eq!(
+            self.ring_len, actual,
+            "calendar ring_len {} out of sync with {} ring items",
+            self.ring_len, actual
+        );
     }
 
     /// The ring drained: jump the cursor to the overflow minimum's bucket
@@ -264,6 +343,108 @@ mod tests {
         q.push(horizon + 5, 3);
         assert_eq!(q.pop().map(|(_, _, v)| v), Some(2), "overflow event was earlier");
         assert_eq!(q.pop().map(|(_, _, v)| v), Some(3));
+    }
+
+    /// Release-profile regression for the past-cursor clamp: without it a
+    /// past-cursor push files into `t >> SHIFT (mod N_BUCKETS)` — a slot
+    /// the min-scan treats as far-future — and pops *after* later events.
+    /// Debug builds reject the push outright (`debug_assert`), so this
+    /// only compiles where the assert is compiled out.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn past_cursor_push_clamps_into_the_cursor_bucket() {
+        let mut q = CalendarQueue::new();
+        // Walk the cursor to absolute bucket N + 5 (slot 5).
+        let h = ((N_BUCKETS as u64) + 5) << BUCKET_SHIFT;
+        q.push(h, 'a');
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some('a'));
+        // A same-bucket future event, then a past-cursor push (bucket 0,
+        // slot 0): the past event must still pop first.
+        q.push(h + 1, 'c');
+        q.push(0, 'b');
+        assert_eq!(q.pop().map(|(t, _, v)| (t, v)), Some((0, 'b')), "past-cursor event pops first");
+        assert_eq!(q.pop().map(|(_, _, v)| v), Some('c'));
+        assert!(q.is_empty());
+        q.validate();
+    }
+
+    #[test]
+    fn peek_matches_pop_without_consuming() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.peek(), None);
+        q.push(50, 'b');
+        q.push(10, 'a');
+        q.push(10_000_000_000_000, 'z'); // deep overflow
+        for _ in 0..3 {
+            let key = q.peek().expect("non-empty");
+            assert_eq!(q.peek(), Some(key), "peek is idempotent");
+            let (t, seq, _) = q.pop().expect("non-empty");
+            assert_eq!((t, seq), key);
+        }
+        assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_pop_order_and_serial_stream() {
+        let mut rng = Rng::new(0x5AFE);
+        let mut q = CalendarQueue::new();
+        let mut now = 0u64;
+        for i in 0..5_000u64 {
+            let dt = match rng.next_u64() % 10 {
+                0..=6 => rng.next_u64() % 5_000_000,
+                7 | 8 => rng.next_u64() % 5_000_000_000,
+                _ => rng.next_u64() % 400_000_000_000,
+            };
+            q.push(now + dt, i);
+            if rng.next_u64() % 3 == 0 {
+                if let Some((t, _, _)) = q.pop() {
+                    now = t;
+                }
+            }
+        }
+        // Snapshot mid-run, rebuild, and keep driving both queues with an
+        // identical schedule: pop streams must stay identical.
+        let (seq, items) = q.snapshot();
+        let owned: Vec<(u64, u64, u64)> = items.iter().map(|&(t, s, v)| (t, s, *v)).collect();
+        let mut r = CalendarQueue::restore(seq, owned);
+        r.validate();
+        assert_eq!(r.len(), q.len());
+        // The canonical snapshot of the restored queue is byte-identical
+        // in content to the original's (the state-hash contract).
+        {
+            let (sa, ia) = q.snapshot();
+            let (sb, ib) = r.snapshot();
+            assert_eq!(sa, sb);
+            assert_eq!(
+                ia.iter().map(|&(t, s, v)| (t, s, *v)).collect::<Vec<_>>(),
+                ib.iter().map(|&(t, s, v)| (t, s, *v)).collect::<Vec<_>>()
+            );
+        }
+        for i in 0..8_000u64 {
+            let dt = rng.next_u64() % 2_000_000_000;
+            q.push(now + dt, i);
+            r.push(now + dt, i);
+            assert_eq!(q.pop(), r.pop());
+            assert_eq!(q.len(), r.len());
+        }
+        while !q.is_empty() {
+            assert_eq!(q.pop(), r.pop());
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn validate_passes_on_live_queues() {
+        let mut q = CalendarQueue::new();
+        q.validate();
+        for i in 0..100u64 {
+            q.push(i * 3_000_000, i);
+        }
+        q.validate();
+        for _ in 0..50 {
+            q.pop();
+        }
+        q.validate();
     }
 
     #[test]

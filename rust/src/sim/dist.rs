@@ -6,6 +6,7 @@
 //! paper's p99 whiskers.  All samples are returned in nanoseconds.
 
 use super::rng::Rng;
+use super::snap::{Dec, Enc};
 
 pub const MS: f64 = 1e6; // ns per millisecond
 pub const US: f64 = 1e3; // ns per microsecond
@@ -50,6 +51,42 @@ impl Dist {
             Dist::LogNormal { median_ns, .. } => median_ns,
             Dist::Exp { mean_ns } => mean_ns * std::f64::consts::LN_2,
             Dist::Uniform { lo_ns, hi_ns } => 0.5 * (lo_ns + hi_ns),
+        }
+    }
+
+    /// Snapshot codec (S27): variant tag + raw f64 bit patterns, so a
+    /// decode → encode round trip is byte-exact.
+    pub fn encode(&self, w: &mut Enc) {
+        match *self {
+            Dist::Const(ns) => {
+                w.u8(0);
+                w.f64(ns);
+            }
+            Dist::LogNormal { median_ns, sigma } => {
+                w.u8(1);
+                w.f64(median_ns);
+                w.f64(sigma);
+            }
+            Dist::Exp { mean_ns } => {
+                w.u8(2);
+                w.f64(mean_ns);
+            }
+            Dist::Uniform { lo_ns, hi_ns } => {
+                w.u8(3);
+                w.f64(lo_ns);
+                w.f64(hi_ns);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::encode`]; panics on a corrupt variant tag.
+    pub fn decode(r: &mut Dec) -> Dist {
+        match r.u8() {
+            0 => Dist::Const(r.f64()),
+            1 => Dist::LogNormal { median_ns: r.f64(), sigma: r.f64() },
+            2 => Dist::Exp { mean_ns: r.f64() },
+            3 => Dist::Uniform { lo_ns: r.f64(), hi_ns: r.f64() },
+            other => panic!("snapshot corrupt: Dist tag {other}"),
         }
     }
 

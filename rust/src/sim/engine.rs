@@ -13,11 +13,13 @@
 //! own state at a point in virtual time, and `done` lets it record the
 //! latency and spawn follow-up requests.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, OnceLock};
 
 use super::calendar::CalendarQueue;
 use super::dist::Dist;
 use super::rng::Rng;
+use super::snap::{Dec, Enc};
 
 pub type ReqId = u32;
 
@@ -299,7 +301,22 @@ impl<D: Domain> Engine<D> {
     /// Run until the event queue drains. Panics if `max_events` is exceeded
     /// (runaway-model backstop).
     pub fn run(&mut self, max_events: u64) {
-        while let Some((t, _seq, ev)) = self.queue.pop() {
+        self.run_until(u64::MAX, max_events);
+    }
+
+    /// Run until the queue drains or the next pending event is at or
+    /// after `t_stop` (a checkpoint barrier): only events strictly before
+    /// the barrier process, and the barrier itself adds no event and
+    /// draws no RNG — the pop stream is exactly the uninterrupted one,
+    /// split.  Returns `true` while pending events remain.  `max_events`
+    /// is a cumulative budget (compared against total events processed),
+    /// so segmented runs share one backstop.
+    pub fn run_until(&mut self, t_stop: u64, max_events: u64) -> bool {
+        while let Some((t, _)) = self.queue.peek() {
+            if t >= t_stop {
+                return true;
+            }
+            let (t, _seq, ev) = self.queue.pop().expect("peeked non-empty");
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
             self.events_processed += 1;
@@ -314,6 +331,152 @@ impl<D: Domain> Engine<D> {
                 Ev::Finish(r) => self.finish_step(r),
             }
         }
+        false
+    }
+
+    /// Pending-event count (used by finalize invariants and tests).
+    pub fn pending_events(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Always-on structural check over the event queue (S27 satellite):
+    /// release-mode queue corruption fails the run instead of silently
+    /// skewing the report.
+    pub fn validate_queue(&self) {
+        self.queue.validate();
+    }
+
+    /// Serialize the engine core (the S27 "engine" section): virtual
+    /// clock, RNG state, the canonical pending-event set, the request
+    /// arena verbatim, and every resource-queue state.  `host` and the
+    /// pool *registry* are config-derived and rebuilt by normal
+    /// construction; only mutable state enters the section.  The arena's
+    /// slot layout and free list are deterministic functions of event
+    /// history, so uninterrupted and resumed runs agree byte-for-byte.
+    pub fn encode_core(&self, w: &mut Enc) {
+        w.u64(self.now);
+        let (s, spare) = self.rng.state();
+        for word in s {
+            w.u64(word);
+        }
+        match spare {
+            Some(z) => {
+                w.bool(true);
+                w.f64(z);
+            }
+            None => w.bool(false),
+        }
+        let (seq, items) = self.queue.snapshot();
+        w.u64(seq);
+        w.len(items.len());
+        for (t, s, ev) in items {
+            w.u64(t);
+            w.u64(s);
+            match *ev {
+                Ev::Start(id) => {
+                    w.u8(0);
+                    w.u32(id);
+                }
+                Ev::Finish(id) => {
+                    w.u8(1);
+                    w.u32(id);
+                }
+            }
+        }
+        w.len(self.reqs.steps.len());
+        for i in 0..self.reqs.steps.len() {
+            w.len(self.reqs.steps[i].len());
+            for step in &self.reqs.steps[i] {
+                encode_step(step, w);
+            }
+            w.usize(self.reqs.idx[i]);
+            w.u64(self.reqs.start_ns[i]);
+            w.u64(self.reqs.step_arrival[i]);
+            w.u32(self.reqs.class[i]);
+            w.bool(self.reqs.live[i]);
+        }
+        w.len(self.reqs.free.len());
+        for &id in &self.reqs.free {
+            w.u32(id);
+        }
+        w.u32(self.cores_free);
+        w.len(self.core_queue.len());
+        for &id in &self.core_queue {
+            w.u32(id);
+        }
+        for lock in &self.locks {
+            w.bool(lock.busy);
+            w.len(lock.queue.len());
+            for &id in &lock.queue {
+                w.u32(id);
+            }
+        }
+        w.len(self.pools.len());
+        for pool in &self.pools {
+            w.u32(pool.free);
+            w.len(pool.queue.len());
+            for &id in &pool.queue {
+                w.u32(id);
+            }
+        }
+        w.u64(self.disk_next_free);
+        w.u64(self.events_processed);
+    }
+
+    /// Restore the core from [`Self::encode_core`] bytes.  The engine
+    /// must be freshly constructed from the same config first (same
+    /// host, pools registered in the same order); restore then replaces
+    /// every piece of mutable state.
+    pub fn restore_core(&mut self, r: &mut Dec) {
+        self.now = r.u64();
+        let s = [r.u64(), r.u64(), r.u64(), r.u64()];
+        let spare = if r.bool() { Some(r.f64()) } else { None };
+        self.rng = Rng::from_state(s, spare);
+        let seq = r.u64();
+        let n = r.len();
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = r.u64();
+            let s = r.u64();
+            let ev = match r.u8() {
+                0 => Ev::Start(r.u32()),
+                1 => Ev::Finish(r.u32()),
+                other => panic!("snapshot corrupt: event tag {other}"),
+            };
+            items.push((t, s, ev));
+        }
+        self.queue = CalendarQueue::restore(seq, items);
+        let slots = r.len();
+        self.reqs = ReqArena::new();
+        for _ in 0..slots {
+            let nsteps = r.len();
+            let steps: Vec<Step> = (0..nsteps).map(|_| decode_step(r)).collect();
+            self.reqs.steps.push(steps);
+            self.reqs.idx.push(r.usize());
+            self.reqs.start_ns.push(r.u64());
+            self.reqs.step_arrival.push(r.u64());
+            self.reqs.class.push(r.u32());
+            self.reqs.live.push(r.bool());
+        }
+        let nfree = r.len();
+        self.reqs.free = (0..nfree).map(|_| r.u32()).collect();
+        self.cores_free = r.u32();
+        let ncq = r.len();
+        self.core_queue = (0..ncq).map(|_| r.u32()).collect();
+        for lock in &mut self.locks {
+            lock.busy = r.bool();
+            let nq = r.len();
+            lock.queue = (0..nq).map(|_| r.u32()).collect();
+        }
+        let npools = r.len();
+        assert_eq!(npools, self.pools.len(), "snapshot pool count mismatch — config drift?");
+        for pool in &mut self.pools {
+            pool.free = r.u32();
+            let nq = r.len();
+            pool.queue = (0..nq).map(|_| r.u32()).collect();
+        }
+        self.disk_next_free = r.u64();
+        self.events_processed = r.u64();
     }
 
     /// Move a request forward through zero-time steps until it blocks on a
@@ -459,6 +622,78 @@ impl<D: Domain> Engine<D> {
             self.spawn_at(self.now + s.delay_ns, s.class, s.steps);
         }
     }
+}
+
+/// Intern a tag string as `&'static str` for snapshot restore.  Live
+/// runs carry compile-time literal tags; restored tags are leaked copies
+/// registered here, bounded by the distinct-tag population (a few dozen
+/// short strings per process, never per restore).
+fn intern_tag(s: String) -> &'static str {
+    static TAGS: OnceLock<Mutex<BTreeMap<String, &'static str>>> = OnceLock::new();
+    let mut map = TAGS.get_or_init(|| Mutex::new(BTreeMap::new())).lock().expect("tag registry");
+    if let Some(&t) = map.get(&s) {
+        return t;
+    }
+    let leaked: &'static str = Box::leak(s.clone().into_boxed_str());
+    map.insert(s, leaked);
+    leaked
+}
+
+fn lock_class_from(v: u8) -> LockClass {
+    match v {
+        0 => LockClass::Netns,
+        1 => LockClass::Mount,
+        2 => LockClass::Ipc,
+        3 => LockClass::Kvm,
+        4 => LockClass::DockerEngine,
+        5 => LockClass::Db,
+        other => panic!("snapshot corrupt: lock class {other}"),
+    }
+}
+
+fn encode_step(step: &Step, w: &mut Enc) {
+    match step.kind {
+        StepKind::Cpu => w.u8(0),
+        StepKind::Lock(c) => {
+            w.u8(1);
+            w.u8(c as u8);
+        }
+        StepKind::Delay => w.u8(2),
+        StepKind::Disk(bytes) => {
+            w.u8(3);
+            w.u64(bytes);
+        }
+        StepKind::Pool(p) => {
+            w.u8(4);
+            w.u16(p);
+        }
+        StepKind::Effect(t) => {
+            w.u8(5);
+            w.u32(t);
+        }
+        StepKind::Decision(t) => {
+            w.u8(6);
+            w.u32(t);
+        }
+    }
+    step.dur.encode(w);
+    w.str(step.tag);
+}
+
+fn decode_step(r: &mut Dec) -> Step {
+    let kind = match r.u8() {
+        0 => StepKind::Cpu,
+        1 => StepKind::Lock(lock_class_from(r.u8())),
+        2 => StepKind::Delay,
+        3 => StepKind::Disk(r.u64()),
+        4 => StepKind::Pool(r.u16()),
+        5 => StepKind::Effect(r.u32()),
+        6 => StepKind::Decision(r.u32()),
+        other => panic!("snapshot corrupt: step kind {other}"),
+    };
+    let dur = Dist::decode(r);
+    let tag = intern_tag(r.str());
+    Step { kind, dur, tag }
 }
 
 #[cfg(test)]
@@ -646,6 +881,83 @@ mod tests {
             e.domain.latencies.clone()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn run_until_splits_the_run_without_changing_it() {
+        let run_whole = || {
+            let mut e = engine(200, vec![Step::cpu("c", Dist::ms(2.0, 0.3))]);
+            for _ in 0..4 {
+                e.spawn_at(0, 0, vec![Step::cpu("c", Dist::ms(2.0, 0.3))]);
+            }
+            e.run(1_000_000);
+            (e.domain.latencies.clone(), e.now(), e.events_processed())
+        };
+        let mut e = engine(200, vec![Step::cpu("c", Dist::ms(2.0, 0.3))]);
+        for _ in 0..4 {
+            e.spawn_at(0, 0, vec![Step::cpu("c", Dist::ms(2.0, 0.3))]);
+        }
+        // Walk barriers of 3 ms of virtual time until the queue drains.
+        let mut barrier = 3_000_000u64;
+        let mut segments = 0;
+        while e.run_until(barrier, 1_000_000) {
+            barrier += 3_000_000;
+            segments += 1;
+        }
+        assert!(segments > 5, "barriers should split the run many times");
+        assert_eq!(run_whole(), (e.domain.latencies.clone(), e.now(), e.events_processed()));
+    }
+
+    #[test]
+    fn core_snapshot_restore_resumes_identically() {
+        let mk = |spawn: bool| {
+            let mut e = engine(300, vec![Step::cpu("c", Dist::ms(2.0, 0.3))]);
+            let p = e.add_pool(2);
+            if spawn {
+                for k in 0..6u64 {
+                    e.spawn_at(
+                        k * 100_000,
+                        0,
+                        vec![
+                            Step::pool("w", p, Dist::ms(1.0, 0.2)),
+                            Step::cpu("c", Dist::ms(2.0, 0.3)),
+                            Step::lock("l", LockClass::Db, Dist::ms(0.5, 0.1)),
+                            Step::delay("d", Dist::ms(0.3, 0.2)),
+                            Step::disk("r", 10_000_000),
+                        ],
+                    );
+                }
+            }
+            e
+        };
+        // Uninterrupted reference run.
+        let mut a = mk(true);
+        a.run(1_000_000);
+        // Interrupted run: stop mid-flight, snapshot, restore into a
+        // freshly constructed engine, continue both.
+        let mut b = mk(true);
+        assert!(b.run_until(5_000_000, 1_000_000), "barrier should land mid-run");
+        let mut w = Enc::new();
+        b.encode_core(&mut w);
+        let mut c = mk(false);
+        c.domain.latencies = b.domain.latencies.clone();
+        c.domain.remaining = b.domain.remaining;
+        let mut r = Dec::new(&w.buf);
+        c.restore_core(&mut r);
+        r.finish();
+        // Re-encoding right after restore reproduces the same bytes —
+        // the state-hash contract (restored state is hash-identical).
+        let mut w2 = Enc::new();
+        c.encode_core(&mut w2);
+        assert_eq!(w.buf, w2.buf, "restore must round-trip byte-exactly");
+        b.run(1_000_000);
+        c.run(1_000_000);
+        assert_eq!(b.domain.latencies, a.domain.latencies);
+        assert_eq!(c.domain.latencies, a.domain.latencies);
+        assert_eq!(c.now(), a.now());
+        assert_eq!(c.events_processed(), a.events_processed());
+        c.validate_queue();
+        assert_eq!(c.pending_events(), 0);
     }
 
     #[test]

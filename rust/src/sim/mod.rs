@@ -5,6 +5,7 @@ pub mod calendar;
 pub mod dist;
 pub mod engine;
 pub mod rng;
+pub mod snap;
 
 pub use calendar::CalendarQueue;
 pub use dist::{Dist, MS, US};
@@ -12,3 +13,4 @@ pub use engine::{
     Domain, Engine, Host, LockClass, PhaseSample, ReqId, Spawn, Step, StepKind, N_LOCKS,
 };
 pub use rng::Rng;
+pub use snap::{fnv1a, fold_chain, Dec, Enc, Fnv, FNV_OFFSET};

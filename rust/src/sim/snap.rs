@@ -1,0 +1,309 @@
+//! Snapshot byte codec + FNV-1a-64 hashing (S27).
+//!
+//! The checkpoint subsystem serializes complete simulator state into a
+//! flat byte section at virtual-time barriers; the same bytes feed the
+//! rolling state-hash chain.  The codec is deliberately primitive — a
+//! length-prefixed little-endian writer/reader with no schema — because
+//! the *encoding order* is the schema, documented in DESIGN.md §27 and
+//! versioned by [`crate::platform::checkpoint::VERSION`].  Floats are
+//! encoded as raw bit patterns so a decode → encode round trip is
+//! byte-exact (the whole byte-identity contract rests on this).
+//!
+//! Decode errors panic with context: a truncated or corrupt snapshot is
+//! a hard error, never a silently wrong resume.  Header-level validation
+//! (magic, version, config fingerprint) happens before any [`Dec`] is
+//! constructed, in `platform::checkpoint`.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a-64 hash state.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One step of the rolling state-hash chain: the previous chain value
+/// (little-endian) is folded first, then the barrier's state section, so
+/// every link depends on the entire history of prior sections.
+pub fn fold_chain(prev: u64, section: &[u8]) -> u64 {
+    fnv1a(fnv1a(FNV_OFFSET, &prev.to_le_bytes()), section)
+}
+
+/// Streaming FNV-1a-64 hasher, for fingerprinting large config-derived
+/// data (e.g. a multi-million-arrival tenant trace) without buffering an
+/// encoded copy.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.0 = fnv1a(self.0, b);
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64).bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Little-endian byte writer for snapshot sections.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// usize encoded as u64 (snapshots must be layout-independent).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// f64 as its raw bit pattern: decode→encode is byte-exact.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(u32::try_from(s.len()).expect("snapshot string fits u32"));
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Sequence length prefix; the caller writes the elements.
+    pub fn len(&mut self, n: usize) {
+        self.u64(n as u64);
+    }
+}
+
+/// Reader over one encoded section.  Every getter panics with context on
+/// truncation — a corrupt snapshot must never resume silently wrong.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        assert!(
+            self.pos + n <= self.buf.len(),
+            "snapshot truncated: need {n} bytes at offset {} of {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        self.take(1)[0]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        match self.u8() {
+            0 => false,
+            1 => true,
+            other => panic!("snapshot corrupt: bool byte {other}"),
+        }
+    }
+
+    pub fn u16(&mut self) -> u16 {
+        u16::from_le_bytes(self.take(2).try_into().unwrap())
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    pub fn u128(&mut self) -> u128 {
+        u128::from_le_bytes(self.take(16).try_into().unwrap())
+    }
+
+    pub fn usize(&mut self) -> usize {
+        usize::try_from(self.u64()).expect("snapshot usize fits the host")
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        f64::from_bits(self.u64())
+    }
+
+    /// Raw byte run of a known length (e.g. an embedded section).
+    pub fn bytes(&mut self, n: usize) -> &'a [u8] {
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> String {
+        let n = self.u32() as usize;
+        std::str::from_utf8(self.take(n)).expect("snapshot string is UTF-8").to_string()
+    }
+
+    pub fn len(&mut self) -> usize {
+        self.usize()
+    }
+
+    /// Bytes left unread (0 once a section is fully consumed).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the section was consumed exactly — trailing bytes mean the
+    /// encode and decode orders drifted apart.
+    pub fn finish(self) {
+        assert_eq!(self.remaining(), 0, "snapshot section has trailing bytes");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(FNV_OFFSET, b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn chain_links_depend_on_history() {
+        let a = fold_chain(FNV_OFFSET, b"section-one");
+        let b = fold_chain(a, b"section-two");
+        // Same second section after a different first section: different
+        // chain — each link commits to the whole history.
+        let a2 = fold_chain(FNV_OFFSET, b"section-1");
+        let b2 = fold_chain(a2, b"section-two");
+        assert_ne!(a, a2);
+        assert_ne!(b, b2);
+        // And the fold is deterministic.
+        assert_eq!(b, fold_chain(fold_chain(FNV_OFFSET, b"section-one"), b"section-two"));
+    }
+
+    #[test]
+    fn streaming_fnv_matches_buffered() {
+        let mut h = Fnv::new();
+        h.u64(7).str("warm").f64(1.5);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(&4u64.to_le_bytes());
+        buf.extend_from_slice(b"warm");
+        buf.extend_from_slice(&1.5f64.to_bits().to_le_bytes());
+        assert_eq!(h.finish(), fnv1a(FNV_OFFSET, &buf));
+    }
+
+    #[test]
+    fn codec_round_trips_every_primitive() {
+        let mut w = Enc::new();
+        w.u8(0xAB);
+        w.bool(true);
+        w.bool(false);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.u128(u128::MAX - 7);
+        w.usize(123_456);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.str("tag:dispatch");
+        w.len(9);
+        let mut r = Dec::new(&w.buf);
+        assert_eq!(r.u8(), 0xAB);
+        assert!(r.bool());
+        assert!(!r.bool());
+        assert_eq!(r.u16(), 0xBEEF);
+        assert_eq!(r.u32(), 0xDEAD_BEEF);
+        assert_eq!(r.u64(), u64::MAX - 3);
+        assert_eq!(r.u128(), u128::MAX - 7);
+        assert_eq!(r.usize(), 123_456);
+        // Bit-exact floats, including -0.0 and NaN payloads.
+        assert_eq!(r.f64().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.str(), "tag:dispatch");
+        assert_eq!(r.len(), 9);
+        r.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot truncated")]
+    fn truncated_section_panics_with_context() {
+        let mut w = Enc::new();
+        w.u32(1);
+        let mut r = Dec::new(&w.buf);
+        r.u64();
+    }
+
+    #[test]
+    #[should_panic(expected = "trailing bytes")]
+    fn unconsumed_section_fails_finish() {
+        let mut w = Enc::new();
+        w.u64(1);
+        w.u64(2);
+        let mut r = Dec::new(&w.buf);
+        r.u64();
+        r.finish();
+    }
+}

@@ -171,6 +171,60 @@ fn sharded_runs_are_byte_identical_for_every_shard_count() {
     }
 }
 
+/// S27: the rolling state-hash chain joins the determinism contract —
+/// same seed, same chain — and folds only canonical (layout-free)
+/// sections, so every shard count walks the identical hash trajectory
+/// over both a fault-free and a crashing schedule.  The CI determinism
+/// matrix runs this suite under `COLDFAAS_SWEEP_THREADS=1` and the
+/// default, extending the pin across finalize-thread settings (the fold
+/// happens in the single-threaded engine loop, so threads cannot touch
+/// it — this test is what would catch that assumption breaking).
+#[test]
+fn state_hash_chain_is_deterministic_and_shard_invariant() {
+    use coldfaas::fnplat::DriverKind;
+    use coldfaas::platform::{
+        chaos_plan, run_platform, DriverProfile, FaultPlan, PlatformConfig, PlatformLoad,
+    };
+    use coldfaas::policy::FixedKeepAlive;
+    use coldfaas::sim::Host;
+    use coldfaas::workload::tenants::{TenantConfig, TenantTrace};
+
+    let trace = TenantTrace::generate(&TenantConfig {
+        functions: 60,
+        duration_s: 30.0,
+        total_rps: 50.0,
+        seed: 0x527,
+        ..Default::default()
+    });
+    let run = |shards: usize, seed: u64, faults: FaultPlan| {
+        let cfg = PlatformConfig {
+            load: PlatformLoad::Tenants(trace.clone()),
+            functions: 60,
+            nodes: 8,
+            shards,
+            faults,
+            state_hash: true,
+            seed,
+            ..PlatformConfig::single_node(DriverProfile::from_kind(DriverKind::DockerWarm), 8)
+        };
+        let r = run_platform(&cfg, &mut FixedKeepAlive::default(), Host::default());
+        (r.state_hash.expect("armed run must produce a chain"), r.state_hash_folds)
+    };
+    for faults in [FaultPlan::default(), chaos_plan(8, 30 * 1_000_000_000)] {
+        let pin = run(1, 0x5EED, faults.clone());
+        assert!(pin.1 >= 2, "a 30s trace must cross several 10s barriers: {} folds", pin.1);
+        assert_eq!(pin, run(1, 0x5EED, faults.clone()), "same seed must refold the same chain");
+        for shards in [2, 8] {
+            assert_eq!(pin, run(shards, 0x5EED, faults.clone()), "K={shards}");
+        }
+        assert_ne!(
+            pin.0,
+            run(1, 0x5EED ^ 1, faults.clone()).0,
+            "a different seed must change the chain"
+        );
+    }
+}
+
 /// E14 determinism: the same seed drives the same trace *and* the same
 /// fault schedule, so the chaos report must be byte-identical per run —
 /// crashes, kills, retries and all.
