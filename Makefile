@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines resume-smoke
+.PHONY: build test lint artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines resume-smoke
 
 build:
 	cd rust && cargo build --release
@@ -9,6 +9,12 @@ build:
 test:
 	cd rust && cargo test -q
 	python -m pytest python/tests -q
+
+# Determinism audit (detlint, DESIGN.md S28): wall-clock reads, hash-map
+# iteration in the DES core, lenient parses, mutating debug_asserts, and
+# snapshot-codec completeness.  Exit 1 on any unsuppressed finding.
+lint: build
+	./rust/target/release/coldfaas lint
 
 # JAX/Pallas AOT pipeline -> HLO text + manifest under rust/artifacts/.
 artifacts:

@@ -8,6 +8,10 @@
 //!
 //!     cargo bench --bench ablations
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::ExpConfig;
 use coldfaas::fnplat::{agent_steps, run_scenario, DbBackend, DriverKind, Scenario};
 use coldfaas::fnplat::sim::Load;

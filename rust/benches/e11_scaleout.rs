@@ -2,6 +2,10 @@
 //!
 //!     cargo bench --bench e11_scaleout
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{scaleout, ExpConfig};
 
 fn main() {

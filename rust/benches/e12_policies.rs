@@ -4,6 +4,10 @@
 //!
 //!     cargo bench --bench e12_policies
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{policies, ExpConfig};
 
 fn main() {

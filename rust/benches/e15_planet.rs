@@ -5,6 +5,10 @@
 //!
 //!     cargo bench --bench e15_planet
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{planet, ExpConfig};
 
 fn main() {

@@ -10,6 +10,10 @@
 //!
 //!     cargo bench --bench e17_hyperplanet
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{hyperplanet, ExpConfig};
 
 fn main() {

@@ -3,6 +3,10 @@
 //!
 //!     cargo bench --bench fig1_oci
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{fig1, startup::sweep, ExpConfig};
 use coldfaas::metrics::Recorder;
 use coldfaas::testkit::bench;

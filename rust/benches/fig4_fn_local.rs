@@ -2,6 +2,10 @@
 //!
 //!     cargo bench --bench fig4_fn_local
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{fig4, ExpConfig};
 
 fn main() {

@@ -6,6 +6,10 @@
 //!
 //!     cargo bench --bench perf_stack
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::Arc;
 
 use coldfaas::coordinator::{Config, Coordinator, SchedMode};

@@ -2,6 +2,10 @@
 //!
 //!     cargo bench --bench table1_cloud
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use coldfaas::experiments::{distance_sweep, table1, ExpConfig};
 
 fn main() {

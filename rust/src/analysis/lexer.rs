@@ -1,0 +1,222 @@
+//! Comment/string/raw-string-aware Rust tokenizer for `detlint` (S28).
+//!
+//! Deliberately tiny: the rule engine needs identifiers, punctuation and
+//! line numbers — not a faithful grammar.  Literals are opaque (`Lit`),
+//! lifetimes are distinguished from `char` literals so type positions
+//! like `&'a HashMap<..>` stay walkable, and comments are captured on the
+//! side (with their line numbers) because that is where `// detlint:
+//! allow(..)` pragmas live.  The only compound punctuators emitted are
+//! the four the rules look for or must not trip over: `::` `+=` `->`
+//! `=>`; everything else is one token per character, which keeps
+//! balanced-delimiter walks (`<>`, `()`, `[]`, `{}`) trivial.
+
+/// Token class; rule patterns match on `Ident` text and `Punct` text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    /// String / char / byte / numeric literal — contents never inspected.
+    Lit,
+    /// Lifetime (`'a`) — skippable in type positions.
+    Life,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+impl Tok {
+    /// Is this the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this the punctuator `s`?
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// Tokenized file: the token stream plus captured comments
+/// (`(line, text)`, one entry per `//` comment and per block comment,
+/// block comments attributed to their starting line).
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<(u32, String)>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+    let ident_start = |c: char| c.is_ascii_alphabetic() || c == '_';
+    let ident_cont = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push((line, b[start..i].iter().collect()));
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            // Nested block comments, per the Rust grammar.
+            let (start, start_line) = (i, line);
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push((start_line, b[start..i].iter().collect()));
+        } else if is_raw_string_start(&b, i) {
+            // r"..." / r#"..."# / br#"..."# — no escapes, ends at `"` +
+            // the same number of `#`s.
+            let start_line = line;
+            while b[i] != '#' && b[i] != '"' {
+                i += 1; // consume the r / br prefix
+            }
+            let mut hashes = 0;
+            while i < n && b[i] == '#' {
+                hashes += 1;
+                i += 1;
+            }
+            i += 1; // opening quote
+            loop {
+                if i >= n {
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '"'
+                    && b[i + 1..].iter().take_while(|&&h| h == '#').count() >= hashes
+                {
+                    i += 1 + hashes;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { line: start_line, kind: TokKind::Lit, text: String::new() });
+        } else if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let start_line = line;
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok { line: start_line, kind: TokKind::Lit, text: String::new() });
+        } else if c == '\'' || (c == 'b' && i + 1 < n && b[i + 1] == '\'') {
+            let q = if c == 'b' { i + 1 } else { i };
+            // Lifetime iff `'` + ident run NOT closed by another `'`
+            // (`'a` vs `'a'`); byte literals `b'..'` are always chars.
+            let mut j = q + 1;
+            if c != 'b' && j < n && ident_start(b[j]) {
+                while j < n && ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j >= n || b[j] != '\'' {
+                    toks.push(Tok {
+                        line,
+                        kind: TokKind::Life,
+                        text: b[q..j].iter().collect(),
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            // Char literal: consume one (possibly escaped) char + quote.
+            i = q + 1;
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '\'' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok { line, kind: TokKind::Lit, text: String::new() });
+        } else if ident_start(c) {
+            let start = i;
+            while i < n && ident_cont(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { line, kind: TokKind::Ident, text: b[start..i].iter().collect() });
+        } else if c.is_ascii_digit() {
+            // Opaque numeric literal; `1.5`, `1_000u64`, `0x1f` all fold
+            // into one token, and `8..10` leaves `..` alone.
+            while i < n && (ident_cont(b[i])) {
+                i += 1;
+            }
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && ident_cont(b[i]) {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { line, kind: TokKind::Lit, text: String::new() });
+        } else {
+            let two: String = b[i..(i + 2).min(n)].iter().collect();
+            if matches!(two.as_str(), "::" | "+=" | "->" | "=>") {
+                toks.push(Tok { line, kind: TokKind::Punct, text: two });
+                i += 2;
+            } else {
+                toks.push(Tok { line, kind: TokKind::Punct, text: c.to_string() });
+                i += 1;
+            }
+        }
+    }
+    Lexed { toks, comments }
+}
+
+/// Does a raw (byte) string literal start at `i`?  (`r"`, `r#`, `br"`,
+/// `br#` — with any number of `#`s before the quote.)
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if j < b.len() && b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"' && j > i + usize::from(b[i] == 'b')
+}

@@ -1,0 +1,760 @@
+//! `detlint` — the in-repo determinism auditor (S28).
+//!
+//! Every claim this reproduction makes (the cold-only frontier, chaos
+//! conservation, S27's "resume is invisible") rests on byte-identical
+//! determinism, defended dynamically by report pins and hash chains.
+//! This module defends it *statically*: a std-only analyzer over
+//! `rust/src/**.rs` whose findings fail `cargo test -q` (via
+//! `tests/detlint.rs`) and the CI `lint` job (via `coldfaas lint`).
+//!
+//! Rules:
+//!
+//! | code  | contract |
+//! |-------|----------|
+//! | DL001 | no `Instant::now` / `SystemTime` / `thread::sleep` outside `obs/profile.rs` and `gateway/` (wall-clock islands go through the committed allowlist) |
+//! | DL002 | no iteration over `HashMap`/`HashSet` (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in &map`, …) in the deterministic core (`sim/`, `platform/`, `fnplat/`, `policy/`, `metrics/`, `experiments/`, `image/`, `lambda/`); keyed lookup stays legal, ordered traversal must go through `BTreeMap` or an explicit sort |
+//! | DL003 | no `unwrap_or(` / `unwrap_or_default(` on `parse()` results — the lenient-CLI bug class the strict `cli.rs` getters removed |
+//! | DL004 | no `debug_assert!` whose argument mutates (`+=`, `.push(`, `.insert(`, `.pop(`) — debug/release behavior divergence |
+//! | DL005 | snapshot-codec completeness: every named field of a struct with `Enc`/`Dec` codec fns in the same file must appear in at least one codec body, or carry a justified pragma — the drift that corrupts `CFAASCK1` resumes invisibly |
+//!
+//! Suppression: `// detlint: allow(DL002) <why>` on the finding's line
+//! or the line directly above silences that code there; whole-subtree
+//! wall-clock islands live in the committed `rust/detlint.allow`
+//! (`<code> <path-prefix> <justification>` per line).
+
+pub mod lexer;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use lexer::{lex, Lexed, Tok, TokKind};
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub code: &'static str,
+    /// Path relative to the crate root, forward slashes (`src/...`).
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Result of linting a tree: surviving findings plus scan statistics.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    /// Findings silenced by a pragma or an allowlist entry.
+    pub suppressed: usize,
+}
+
+/// The committed allowlist: `(code, path-prefix)` pairs, one per line of
+/// `rust/detlint.allow`, each carrying a mandatory justification.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<(String, String)>,
+}
+
+impl Allowlist {
+    /// Parse the allowlist format: `#` comments and blank lines skipped;
+    /// otherwise `<code> <path-prefix> <justification...>` — a line
+    /// without a justification is an error (allows must say why).
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let code = parts.next().unwrap_or_default();
+            let prefix = parts.next().unwrap_or_default();
+            if !code.starts_with("DL") || prefix.is_empty() || parts.next().is_none() {
+                return Err(format!(
+                    "detlint.allow:{}: want `<code> <path-prefix> <justification>`, got `{line}`",
+                    i + 1
+                ));
+            }
+            entries.push((code.to_string(), prefix.to_string()));
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn allows(&self, code: &str, file: &str) -> bool {
+        self.entries.iter().any(|(c, p)| c == code && file.starts_with(p.as_str()))
+    }
+}
+
+/// Lint one file's source.  `rel_path` is crate-root-relative
+/// (`src/platform/sim.rs`); it selects which rules apply and how
+/// findings are labeled.  Pragmas in `src` and `allow` entries are
+/// applied; suppressed findings are counted, not returned.
+pub fn lint_source(rel_path: &str, src: &str, allow: &Allowlist) -> (Vec<Finding>, usize) {
+    let lx = lex(src);
+    let mut raw = Vec::new();
+    rule_wall_clock(rel_path, &lx.toks, &mut raw);
+    rule_hash_iteration(rel_path, &lx.toks, &mut raw);
+    rule_lenient_parse(rel_path, &lx.toks, &mut raw);
+    rule_mutating_debug_assert(rel_path, &lx.toks, &mut raw);
+    rule_codec_completeness(rel_path, &lx.toks, &mut raw);
+    let pragmas = collect_pragmas(&lx);
+    let mut kept = Vec::new();
+    let mut suppressed = 0;
+    for f in raw {
+        let pragma_hit = pragmas
+            .iter()
+            .any(|(l, c)| c == f.code && (*l == f.line || *l + 1 == f.line));
+        if pragma_hit || allow.allows(f.code, rel_path) {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    kept.sort_by(|a, b| (a.line, a.code).cmp(&(b.line, b.code)));
+    (kept, suppressed)
+}
+
+/// Lint every `.rs` file under `<root>/src`, honoring
+/// `<root>/detlint.allow` when present.  Deterministic: files are walked
+/// in sorted order, findings sorted by (file, line, code).
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let allow = match std::fs::read_to_string(root.join("detlint.allow")) {
+        Ok(text) => Allowlist::parse(&text)?,
+        Err(_) => Allowlist::default(),
+    };
+    let src_root = root.join("src");
+    let mut files = Vec::new();
+    walk(&src_root, &mut files).map_err(|e| format!("walk {}: {e}", src_root.display()))?;
+    files.sort();
+    let mut report = LintReport::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path).map_err(|e| format!("read {rel}: {e}"))?;
+        let (mut findings, suppressed) = lint_source(&rel, &src, &allow);
+        report.findings.append(&mut findings);
+        report.suppressed += suppressed;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings as `file:line: code: msg` lines plus a summary.
+pub fn render_text(report: &LintReport) -> String {
+    let mut s = String::new();
+    for f in &report.findings {
+        s.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.code, f.msg));
+    }
+    s.push_str(&format!(
+        "detlint: {} finding(s), {} suppressed, {} file(s) scanned\n",
+        report.findings.len(),
+        report.suppressed,
+        report.files
+    ));
+    s
+}
+
+/// Machine-readable report (the CI `lint` job uploads this).
+pub fn render_json(report: &LintReport) -> String {
+    let mut s = String::from("{\n  \"findings\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"code\": \"{}\", \"msg\": \"{}\"}}",
+            esc(&f.file),
+            f.line,
+            f.code,
+            esc(&f.msg)
+        ));
+    }
+    if !report.findings.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str(&format!(
+        "],\n  \"count\": {},\n  \"suppressed\": {},\n  \"files\": {}\n}}\n",
+        report.findings.len(),
+        report.suppressed,
+        report.files
+    ));
+    s
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// `// detlint: allow(DL001, DL002) why` → one `(line, code)` per code.
+fn collect_pragmas(lx: &Lexed) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    for (line, text) in &lx.comments {
+        let Some(at) = text.find("detlint: allow(") else { continue };
+        let rest = &text[at + "detlint: allow(".len()..];
+        let Some(end) = rest.find(')') else { continue };
+        for code in rest[..end].split(',') {
+            out.push((*line, code.trim().to_string()));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- DL001
+
+/// DL001: wall-clock reads in deterministic code.  `obs/profile.rs` and
+/// `gateway/` are the rule's built-in islands; every other island (the
+/// live exec/coordinator/runtime stack, the CLI binary, testkit) must be
+/// named in `detlint.allow` with a justification.
+fn rule_wall_clock(path: &str, t: &[Tok], out: &mut Vec<Finding>) {
+    if path.starts_with("src/obs/profile.rs") || path.starts_with("src/gateway/") {
+        return;
+    }
+    let finding = |tok: &Tok, what: &str| Finding {
+        code: "DL001",
+        file: path.to_string(),
+        line: tok.line,
+        msg: format!(
+            "{what} in deterministic code — virtual time only; wall-clock islands \
+             need a detlint.allow entry or a justified pragma"
+        ),
+    };
+    for i in 0..t.len() {
+        if t[i].is_ident("Instant")
+            && t.get(i + 1).is_some_and(|x| x.is_punct("::"))
+            && t.get(i + 2).is_some_and(|x| x.is_ident("now"))
+        {
+            out.push(finding(&t[i], "`Instant::now`"));
+        }
+        if t[i].is_ident("thread")
+            && t.get(i + 1).is_some_and(|x| x.is_punct("::"))
+            && t.get(i + 2).is_some_and(|x| x.is_ident("sleep"))
+        {
+            out.push(finding(&t[i], "`thread::sleep`"));
+        }
+        if t[i].is_ident("SystemTime") {
+            out.push(finding(&t[i], "`SystemTime`"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- DL002
+
+const DL002_DIRS: &[&str] = &[
+    "src/sim/",
+    "src/platform/",
+    "src/fnplat/",
+    "src/policy/",
+    "src/metrics/",
+    "src/experiments/",
+    "src/image/",
+    "src/lambda/",
+];
+
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
+
+/// DL002: iteration over `HashMap`/`HashSet` in the deterministic core.
+/// Std hash iteration order is per-instance random (`RandomState`); one
+/// such loop in a merge or encode path breaks byte-identity silently.
+/// Tracks every identifier *declared* with a hash-table type in this
+/// file (field, `let`, or parameter) and flags iterator-method calls and
+/// `for … in` loops over them.  Keyed access never matches.
+fn rule_hash_iteration(path: &str, t: &[Tok], out: &mut Vec<Finding>) {
+    if !DL002_DIRS.iter().any(|d| path.starts_with(d)) {
+        return;
+    }
+    // Pass 1: names bound to HashMap/HashSet.
+    let mut tracked: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..t.len() {
+        if !(t[i].is_ident("HashMap") || t[i].is_ident("HashSet")) {
+            continue;
+        }
+        // Walk back over the `std::collections::` path prefix …
+        let mut j = i;
+        while j >= 2 && t[j - 1].is_punct("::") && t[j - 2].kind == TokKind::Ident {
+            j -= 2;
+        }
+        if j == 0 {
+            continue;
+        }
+        // … and over `&`, `mut`, lifetimes in the type position.
+        let mut p = j - 1;
+        while p > 0
+            && (t[p].is_punct("&") || t[p].is_ident("mut") || t[p].kind == TokKind::Life)
+        {
+            p -= 1;
+        }
+        // `name: HashMap<..>` (field / let / param) or `name = HashMap::new()`.
+        if (t[p].is_punct(":") || t[p].is_punct("=")) && p >= 1 && t[p - 1].kind == TokKind::Ident
+        {
+            tracked.insert(&t[p - 1].text);
+        }
+    }
+    if tracked.is_empty() {
+        return;
+    }
+    // Pass 2: iteration over a tracked name.
+    for i in 0..t.len() {
+        // `name.iter()` / `self.name.keys()` / …
+        if t[i].kind == TokKind::Ident
+            && ITER_METHODS.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|x| x.is_punct("("))
+            && i >= 2
+            && t[i - 1].is_punct(".")
+            && t[i - 2].kind == TokKind::Ident
+            && tracked.contains(t[i - 2].text.as_str())
+        {
+            out.push(Finding {
+                code: "DL002",
+                file: path.to_string(),
+                line: t[i].line,
+                msg: format!(
+                    "`.{}()` on hash-table `{}` — iteration order is nondeterministic; \
+                     use BTreeMap/BTreeSet or collect + sort",
+                    t[i].text,
+                    t[i - 2].text
+                ),
+            });
+        }
+        // `for x in &name` / `for x in name` (not followed by `.`: the
+        // method form above already covers chained calls).
+        if t[i].is_ident("in") && in_for_header(t, i) {
+            let mut k = i + 1;
+            while t.get(k).is_some_and(|x| x.is_punct("&") || x.is_ident("mut")) {
+                k += 1;
+            }
+            if t.get(k).is_some_and(|x| x.is_ident("self"))
+                && t.get(k + 1).is_some_and(|x| x.is_punct("."))
+            {
+                k += 2;
+            }
+            if let Some(name) = t.get(k) {
+                if name.kind == TokKind::Ident
+                    && tracked.contains(name.text.as_str())
+                    && !t.get(k + 1).is_some_and(|x| x.is_punct("."))
+                {
+                    out.push(Finding {
+                        code: "DL002",
+                        file: path.to_string(),
+                        line: name.line,
+                        msg: format!(
+                            "`for … in` over hash-table `{}` — iteration order is \
+                             nondeterministic; use BTreeMap/BTreeSet or collect + sort",
+                            name.text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Is the `in` at `t[i]` part of a `for` loop header?  (Walk back to the
+/// nearest `for`, stopping at statement/block boundaries.)
+fn in_for_header(t: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if t[j].is_ident("for") {
+            return true;
+        }
+        if t[j].is_punct(";") || t[j].is_punct("{") || t[j].is_punct("}") {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- DL003
+
+/// DL003: `parse().unwrap_or(..)` / `parse().unwrap_or_default()` —
+/// malformed input silently becomes a default instead of an error (the
+/// bug class the strict `cli.rs` getters exist to remove).  Turbofish
+/// (`parse::<u64>()`) is handled.
+fn rule_lenient_parse(path: &str, t: &[Tok], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        if !t[i].is_ident("parse") {
+            continue;
+        }
+        let mut j = i + 1;
+        if t.get(j).is_some_and(|x| x.is_punct("::"))
+            && t.get(j + 1).is_some_and(|x| x.is_punct("<"))
+        {
+            let mut depth = 1;
+            j += 2;
+            while depth > 0 && j < t.len() {
+                if t[j].is_punct("<") {
+                    depth += 1;
+                } else if t[j].is_punct(">") {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+        }
+        if !(t.get(j).is_some_and(|x| x.is_punct("("))
+            && t.get(j + 1).is_some_and(|x| x.is_punct(")"))
+            && t.get(j + 2).is_some_and(|x| x.is_punct(".")))
+        {
+            continue;
+        }
+        if let Some(m) = t.get(j + 3) {
+            if m.is_ident("unwrap_or") || m.is_ident("unwrap_or_default") {
+                out.push(Finding {
+                    code: "DL003",
+                    file: path.to_string(),
+                    line: t[i].line,
+                    msg: format!(
+                        "`parse().{}(..)` swallows malformed input — propagate the \
+                         error (`?`, `map_err`) or reject explicitly",
+                        m.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- DL004
+
+/// DL004: `debug_assert!` whose argument mutates state — the assert
+/// compiles out in release builds, so debug and release runs diverge
+/// (the determinism bug that never reproduces in CI).
+fn rule_mutating_debug_assert(path: &str, t: &[Tok], out: &mut Vec<Finding>) {
+    for i in 0..t.len() {
+        let name = &t[i];
+        if !(name.is_ident("debug_assert")
+            || name.is_ident("debug_assert_eq")
+            || name.is_ident("debug_assert_ne"))
+        {
+            continue;
+        }
+        if !(t.get(i + 1).is_some_and(|x| x.is_punct("!"))
+            && t.get(i + 2).is_some_and(|x| x.is_punct("(")))
+        {
+            continue;
+        }
+        let mut depth = 1;
+        let mut j = i + 3;
+        while depth > 0 && j < t.len() {
+            if t[j].is_punct("(") {
+                depth += 1;
+            } else if t[j].is_punct(")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            let mutating = t[j].is_punct("+=")
+                || (t[j].is_punct(".")
+                    && t.get(j + 1).is_some_and(|x| {
+                        x.is_ident("push") || x.is_ident("insert") || x.is_ident("pop")
+                    })
+                    && t.get(j + 2).is_some_and(|x| x.is_punct("(")));
+            if mutating {
+                out.push(Finding {
+                    code: "DL004",
+                    file: path.to_string(),
+                    line: name.line,
+                    msg: format!(
+                        "`{}!` argument mutates state — it compiles out in release \
+                         builds; hoist the mutation out of the assert",
+                        name.text
+                    ),
+                });
+                break;
+            }
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- DL005
+
+/// DL005: snapshot-codec completeness.  A *codec fn* is any fn inside an
+/// `impl Type` block whose parameter list mentions `Enc` or `Dec` (this
+/// uniformly catches `encode_state`/`restore_state`, `encode`/`decode`,
+/// `encode_canonical`/`encode_layout`, …).  For every struct defined in
+/// the same file as ≥1 of its codec fns, every named field must appear
+/// as an identifier in at least one codec body — a field added to the
+/// struct but not to the codec is exactly the drift that corrupts a
+/// `CFAASCK1` resume invisibly.  Deliberately unencoded fields (config-
+/// derived, rebuilt on attach) carry a justified
+/// `// detlint: allow(DL005)` on their line.
+/// `(field name, declaration line)` pairs of one struct.
+type Fields = Vec<(String, u32)>;
+
+fn rule_codec_completeness(path: &str, t: &[Tok], out: &mut Vec<Finding>) {
+    // Pass 1: struct definitions → (name, [(field, line)]).
+    let mut structs: Vec<(String, Fields)> = Vec::new();
+    let mut i = 0;
+    while i < t.len() {
+        if t[i].is_ident("struct") && t.get(i + 1).map(|x| x.kind) == Some(TokKind::Ident) {
+            let name = t[i + 1].text.clone();
+            let mut j = i + 2;
+            // Skip generics / where clause up to the body (or `;` / `(`
+            // for unit and tuple structs, which have no named fields).
+            let mut angle = 0i32;
+            while j < t.len() {
+                if t[j].is_punct("<") {
+                    angle += 1;
+                } else if t[j].is_punct(">") {
+                    angle -= 1;
+                } else if angle == 0
+                    && (t[j].is_punct("{") || t[j].is_punct(";") || t[j].is_punct("("))
+                {
+                    break;
+                }
+                j += 1;
+            }
+            if t.get(j).is_some_and(|x| x.is_punct("{")) {
+                if let Some((fields, end)) = parse_fields(t, j + 1) {
+                    structs.push((name, fields));
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    if structs.is_empty() {
+        return;
+    }
+    // Pass 2: impl blocks → union of identifiers in codec-fn bodies,
+    // per target type.
+    let mut codec_ids: Vec<(String, BTreeSet<String>)> = Vec::new();
+    let mut i = 0;
+    while i < t.len() {
+        if !(t[i].is_ident("impl") && impl_is_item(t, i)) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if t.get(j).is_some_and(|x| x.is_punct("<")) {
+            j = skip_angles(t, j);
+        }
+        let first = read_type_path(t, &mut j);
+        let target = if t.get(j).is_some_and(|x| x.is_ident("for")) {
+            j += 1;
+            while t.get(j).is_some_and(|x| x.is_punct("&") || x.kind == TokKind::Life) {
+                j += 1;
+            }
+            read_type_path(t, &mut j)
+        } else {
+            first
+        };
+        // Skip any where clause, find the body.
+        while j < t.len() && !t[j].is_punct("{") {
+            j += 1;
+        }
+        let Some(target) = target else {
+            i = j + 1;
+            continue;
+        };
+        let body_end = skip_balanced(t, j, "{", "}");
+        let mut k = j + 1;
+        let mut ids = BTreeSet::new();
+        let mut any_codec = false;
+        while k < body_end {
+            if !t[k].is_ident("fn") {
+                k += 1;
+                continue;
+            }
+            let mut p = k + 2; // past `fn name`
+            if t.get(p).is_some_and(|x| x.is_punct("<")) {
+                p = skip_angles(t, p);
+            }
+            if !t.get(p).is_some_and(|x| x.is_punct("(")) {
+                k = p;
+                continue;
+            }
+            let params_end = skip_balanced(t, p, "(", ")");
+            let is_codec = t[p..params_end]
+                .iter()
+                .any(|x| x.is_ident("Enc") || x.is_ident("Dec"));
+            let mut b = params_end;
+            while b < body_end && !t[b].is_punct("{") && !t[b].is_punct(";") {
+                b += 1;
+            }
+            if t.get(b).is_some_and(|x| x.is_punct("{")) {
+                let fn_end = skip_balanced(t, b, "{", "}");
+                if is_codec {
+                    any_codec = true;
+                    for x in &t[b..fn_end] {
+                        if x.kind == TokKind::Ident {
+                            ids.insert(x.text.clone());
+                        }
+                    }
+                }
+                k = fn_end + 1;
+            } else {
+                k = b + 1;
+            }
+        }
+        if any_codec {
+            match codec_ids.iter_mut().find(|(n, _)| *n == target) {
+                Some((_, set)) => set.append(&mut ids),
+                None => codec_ids.push((target, ids)),
+            }
+        }
+        i = body_end + 1;
+    }
+    // Pass 3: cross-reference.
+    for (name, fields) in &structs {
+        let Some((_, ids)) = codec_ids.iter().find(|(n, _)| n == name) else { continue };
+        for (field, line) in fields {
+            if !ids.contains(field) {
+                out.push(Finding {
+                    code: "DL005",
+                    file: path.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "field `{field}` of snapshotted struct `{name}` appears in no \
+                         Enc/Dec codec fn — encode it, or justify why resume can \
+                         rebuild it"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Named fields of a struct body starting just past `{`; returns the
+/// fields and the index of the closing `}`.  `None` on anything the
+/// walker does not understand (bail without findings rather than
+/// misattribute).
+fn parse_fields(t: &[Tok], mut i: usize) -> Option<(Fields, usize)> {
+    let mut fields = Vec::new();
+    loop {
+        while t.get(i).is_some_and(|x| x.is_punct("#")) {
+            i = skip_balanced(t, i + 1, "[", "]") + 1;
+        }
+        if t.get(i).is_some_and(|x| x.is_punct("}")) {
+            return Some((fields, i));
+        }
+        if t.get(i).is_some_and(|x| x.is_ident("pub")) {
+            i += 1;
+            if t.get(i).is_some_and(|x| x.is_punct("(")) {
+                i = skip_balanced(t, i, "(", ")") + 1;
+            }
+        }
+        let name = t.get(i)?;
+        if name.kind != TokKind::Ident || !t.get(i + 1).is_some_and(|x| x.is_punct(":")) {
+            return None;
+        }
+        fields.push((name.text.clone(), name.line));
+        // Skip the type up to the field separator.
+        let (mut angle, mut paren, mut brack) = (0i32, 0i32, 0i32);
+        i += 2;
+        loop {
+            let x = t.get(i)?;
+            if x.is_punct("<") {
+                angle += 1;
+            } else if x.is_punct(">") {
+                angle -= 1;
+            } else if x.is_punct("(") {
+                paren += 1;
+            } else if x.is_punct(")") {
+                paren -= 1;
+            } else if x.is_punct("[") {
+                brack += 1;
+            } else if x.is_punct("]") {
+                brack -= 1;
+            } else if angle == 0 && paren == 0 && brack == 0 {
+                if x.is_punct(",") {
+                    i += 1;
+                    break;
+                }
+                if x.is_punct("}") {
+                    return Some((fields, i));
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+/// Is the `impl` at `t[i]` an item (an impl block), not an `impl Trait`
+/// type position (`-> impl Fn()`, `x: impl Into<..>`)?
+fn impl_is_item(t: &[Tok], i: usize) -> bool {
+    match i.checked_sub(1).and_then(|p| t.get(p)) {
+        None => true,
+        Some(prev) => {
+            prev.is_punct("}") || prev.is_punct("{") || prev.is_punct(";") || prev.is_punct("]")
+        }
+    }
+}
+
+/// Last identifier of a `path::To::Type<..>` at `*j`; advances past it.
+fn read_type_path(t: &[Tok], j: &mut usize) -> Option<String> {
+    let mut last = None;
+    while let Some(x) = t.get(*j) {
+        if x.kind == TokKind::Ident && !x.is_ident("for") {
+            last = Some(x.text.clone());
+            *j += 1;
+            if t.get(*j).is_some_and(|p| p.is_punct("::")) {
+                *j += 1;
+                continue;
+            }
+            if t.get(*j).is_some_and(|p| p.is_punct("<")) {
+                *j = skip_angles(t, *j);
+            }
+            break;
+        }
+        break;
+    }
+    last
+}
+
+/// Skip a balanced `<...>` starting at the `<` at `i`; returns the index
+/// just past the matching `>`.
+fn skip_angles(t: &[Tok], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < t.len() {
+        if t[j].is_punct("<") {
+            depth += 1;
+        } else if t[j].is_punct(">") {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Index of the token closing the balanced `open`/`close` pair whose
+/// opener sits at `i` (returns `t.len()` if unbalanced).
+fn skip_balanced(t: &[Tok], i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < t.len() {
+        if t[j].is_punct(open) {
+            depth += 1;
+        } else if t[j].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    j
+}

@@ -177,12 +177,14 @@ pub fn hyperplanet_cells(cfg: &HyperplanetConfig) -> (Vec<HyperplanetCell>, f64)
     // the headline here is aggregate throughput of the sharded engines,
     // so the grid wall clock is the honest denominator and each cell's
     // own wall clock estimates the serial (single-engine) cost.
-    let grid_started = std::time::Instant::now();
+    #[allow(clippy::disallowed_methods)]
+    let grid_started = std::time::Instant::now(); // detlint: allow(DL001) informational grid wall clock
     let mut cells = sweep::run_cells(&specs, |_, &(driver, policy_idx)| {
         let mut policy = make_policy(policy_idx, cfg.tenant.functions);
         let mut pcfg = cell_platform_config(cfg, driver, &trace);
         cfg.checkpoint.apply(&mut pcfg, "e17", &format!("{driver:?}-{}", policy.name()));
-        let t0 = std::time::Instant::now();
+        #[allow(clippy::disallowed_methods)]
+        let t0 = std::time::Instant::now(); // detlint: allow(DL001) informational per-cell wall clock
         let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
         HyperplanetCell {
             driver,

@@ -161,7 +161,8 @@ pub fn planet_cells(cfg: &PlanetConfig) -> Vec<PlanetCell> {
         let mut policy = make_policy(policy_idx, cfg.tenant.functions);
         let mut pcfg = cell_platform_config(cfg, driver, &trace);
         cfg.checkpoint.apply(&mut pcfg, "e15", &format!("{driver:?}-{}", policy.name()));
-        let t0 = std::time::Instant::now();
+        #[allow(clippy::disallowed_methods)]
+        let t0 = std::time::Instant::now(); // detlint: allow(DL001) informational per-cell wall clock
         let r = run_platform(&pcfg, policy.as_mut(), cfg.host);
         PlanetCell {
             driver,

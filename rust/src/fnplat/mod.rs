@@ -13,6 +13,7 @@
 //!   stdin/stdout (no FDK), and the unikernel exits on completion — no
 //!   lifecycle management at all.
 
+#[allow(clippy::disallowed_types)] // keyed idle/slot maps; iteration audited by detlint DL002
 pub mod pool;
 
 /// The DES wiring moved into the unified [`crate::platform`] layer; this

@@ -428,6 +428,7 @@ impl WarmPool {
     /// dropped).  Lets the platform's warm index seed its candidate sets
     /// from a pre-populated pool.
     pub fn warm_funcs(&self) -> impl Iterator<Item = &str> {
+        // detlint: allow(DL002) superset iterator; consumer inserts into BTreeSets
         self.idle.iter().filter(|(_, fs)| fs.live > 0).map(|(k, _)| k.as_str())
     }
 
@@ -450,6 +451,7 @@ impl WarmPool {
 
     /// Account all still-idle slots up to `now` (end of run).
     pub fn finalize(&mut self, now: u64) {
+        // detlint: allow(DL002) per-key drains commute (integer adds only)
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
             self.expire(&f, now);
@@ -469,6 +471,7 @@ impl WarmPool {
     /// regardless (how AWS's ~27 min keep-alive turns one invocation into
     /// hundreds of GB·s of waste).
     pub fn finalize_expiring(&mut self) {
+        // detlint: allow(DL002) per-key drains commute (integer adds only)
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         for f in funcs {
             if let Some(fs) = self.idle.get_mut(&f) {
@@ -493,6 +496,7 @@ impl WarmPool {
     /// after a restart the platform has no warm state here to route to.
     /// Returns the number of warm slots destroyed.
     pub fn crash(&mut self, now: u64) -> u64 {
+        // detlint: allow(DL002) per-key drains commute (integer adds only)
         let funcs: Vec<String> = self.idle.keys().cloned().collect();
         let mut dropped = 0u64;
         for f in funcs {
@@ -525,7 +529,7 @@ impl WarmPool {
         w.u64(self.mem_bytes_per_slot);
         w.u64(self.poll_period_ns);
         let mut keyed: Vec<(&String, &FuncSlots)> =
-            self.idle.iter().filter(|(_, fs)| fs.live > 0).collect();
+            self.idle.iter().filter(|(_, fs)| fs.live > 0).collect(); // detlint: allow(DL002) sorted next
         keyed.sort_unstable_by_key(|&(k, _)| k);
         w.len(keyed.len());
         for (key, fs) in keyed {
@@ -543,13 +547,13 @@ impl WarmPool {
         }
         let mut alive: Vec<(&String, u64)> = self
             .alive
-            .iter()
+            .iter() // detlint: allow(DL002) collected then sorted below
             .filter(|(k, &c)| c > 0 || self.idle.get(*k).is_some_and(|fs| fs.live > 0))
             .map(|(k, &c)| (k, c))
             .collect();
         alive.sort_unstable();
         w.len(alive.len());
-        for (k, c) in alive {
+        for (k, c) in alive { // detlint: allow(DL002) the sorted Vec, not the map
             w.str(k);
             w.u64(c);
         }

@@ -383,7 +383,12 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, Vec
             break;
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+            content_length = v.trim().parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad content-length {:?}", v.trim()),
+                )
+            })?;
         }
     }
     let mut body = vec![0u8; content_length];
@@ -423,7 +428,12 @@ pub fn http_request(
             break;
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+            content_length = v.trim().parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad content-length {:?}", v.trim()),
+                )
+            })?;
         }
     }
     let mut body = vec![0u8; content_length];

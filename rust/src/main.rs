@@ -10,11 +10,16 @@
 //!   hyperplanet             sharded sweep (E17): 1024 nodes, 10k fns, parallel cells
 //!   trace                   replay one experiment cell with lifecycle tracing on
 //!   compare                 bench-regression gate: diff two BENCH_*.json reports
+//!   lint                    determinism audit: run detlint over rust/src (DESIGN.md S28)
 //!   serve                   start the live platform (HTTP + PJRT)
 //!   invoke <fn>             one-shot local invocation through the stack
 //!   verify                  check every AOT artifact against its oracle
 //!   measure-exec            PJRT execution medians for the workload ladder
 //!   list                    list deployable functions
+
+// The CLI binary is a wall-clock island (detlint.allow): report wall_s
+// fields, serve-loop polling, and live-stack timing all read real time.
+#![allow(clippy::disallowed_methods)]
 
 use std::io::Write;
 
@@ -35,6 +40,7 @@ fn main() {
         "hyperplanet" => cmd_hyperplanet(&args),
         "trace" => cmd_trace(&args),
         "compare" => cmd_compare(&args),
+        "lint" => cmd_lint(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
         "verify" => cmd_verify(&args),
@@ -217,6 +223,17 @@ USAGE: coldfaas <subcommand> [options]
                             bootstrap placeholder instead of passing with a
                             notice — CI uses this so an unarmed gate is loud
       --out FILE            also append the diff to FILE
+
+  lint                      determinism audit (detlint, DESIGN.md S28): scan
+                            rust/src for wall-clock reads (DL001), HashMap
+                            iteration in the DES core (DL002), lenient parses
+                            (DL003), mutating debug_assert! (DL004), and
+                            snapshot-codec field omissions (DL005); findings
+                            suppressed via `// detlint: allow(..)` pragmas or
+                            the committed rust/detlint.allow; exit 1 on any
+                            unsuppressed finding
+      --root DIR            crate root to scan (default: this crate)
+      --json FILE           write a machine-readable report
 
   serve
       --bind ADDR           default 127.0.0.1:8080
@@ -699,6 +716,26 @@ fn cmd_compare(args: &Args) -> i32 {
             }
         }
         Err(e) => usage_error("compare", &e),
+    }
+}
+
+fn cmd_lint(args: &Args) -> i32 {
+    use coldfaas::analysis;
+    let root = args.get_or("root", env!("CARGO_MANIFEST_DIR"));
+    let report = match analysis::lint_tree(std::path::Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => return usage_error("lint", &e),
+    };
+    print!("{}", analysis::render_text(&report));
+    if let Some(path) = args.get("json") {
+        if let Err(e) = std::fs::write(path, analysis::render_json(&report)) {
+            return usage_error("lint", &format!("write {path}: {e}"));
+        }
+    }
+    if report.findings.is_empty() {
+        0
+    } else {
+        1
     }
 }
 

@@ -23,8 +23,10 @@ pub mod checkpoint;
 pub mod faults;
 pub mod node;
 pub mod presets;
+#[allow(clippy::disallowed_types)] // keyed warm/image indexes; iteration audited by detlint DL002
 pub mod sched;
 pub mod shard;
+#[allow(clippy::disallowed_types)] // keyed placement/retry maps; iteration audited by detlint DL002
 pub mod sim;
 
 pub use checkpoint::{config_fingerprint, Checkpoint, DEFAULT_CHECKPOINT_NS};

@@ -15,13 +15,13 @@ use crate::sim::N_LOCKS;
 /// placeholder value 0 is only valid in pure-logic unit tests that never
 /// touch the engine.
 pub struct NodeState {
-    pub id: usize,
-    pub cores: u32,
+    pub id: usize,   // detlint: allow(DL005) construction-time identity
+    pub cores: u32,  // detlint: allow(DL005) config-derived constant
     /// Executor slots bounded by *memory*, not cores — Wang et al.: AWS
     /// co-locates a function's instances "roughly while they fit into the
     /// physical memory", far past the core count.  That gap (mem_slots >>
     /// cores) is exactly what makes co-located bursts queue on the CPU.
-    pub mem_slots: u32,
+    pub mem_slots: u32, // detlint: allow(DL005) config-derived constant
     /// In-flight executors (warm-routed + cold-placed, decremented on
     /// release) — the scheduler's load signal.
     pub inflight: u32,
@@ -37,7 +37,7 @@ pub struct NodeState {
     /// teardown deadlines on it.
     pub pool: WarmPool,
     /// Engine pool id for this node's cores.
-    pub cpu_pool: u16,
+    pub cpu_pool: u16, // detlint: allow(DL005) engine-assigned at setup, not state
     /// Engine pool ids (one single-slot pool per [`crate::sim::LockClass`])
     /// so per-node kernel-lock contention serializes exactly like the
     /// engine-global lock queues did on a single host.  The `Db` slot
@@ -45,10 +45,10 @@ pub struct NodeState {
     /// lock (it lives on the non-retargeted agent path), and skipping it
     /// keeps the per-node pool count at 7 — 256-node fleets fit easily in
     /// the engine's `u16` pool-id space.
-    pub lock_pools: [u16; N_LOCKS],
+    pub lock_pools: [u16; N_LOCKS], // detlint: allow(DL005) engine-assigned at setup
     /// Engine pool id for this node's local disk (single-slot FIFO —
     /// same serialization the engine's global disk gives one host).
-    pub disk_pool: u16,
+    pub disk_pool: u16, // detlint: allow(DL005) engine-assigned at setup
     /// Streaming latency histogram of requests served by this node
     /// (merged across nodes at the end of a run).
     pub hist: Histogram,

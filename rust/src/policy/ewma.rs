@@ -18,15 +18,15 @@ pub struct EwmaPredictive {
     last_invoke_ns: Vec<Option<u64>>,
     samples: Vec<u32>,
     /// Smoothing factor for mean and variance updates.
-    pub alpha: f64,
+    pub alpha: f64, // detlint: allow(DL005) config-derived constant
     /// Keep-alive while a function has too little history to forecast.
-    pub bootstrap_keep_ns: u64,
+    pub bootstrap_keep_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Hard cap on any keep-alive window.
-    pub max_keep_ns: u64,
+    pub max_keep_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Pre-warm (rather than keep) only for forecast gaps beyond this.
-    pub prewarm_threshold_ns: u64,
+    pub prewarm_threshold_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Gap observations required before the forecast drives decisions.
-    pub min_samples: u32,
+    pub min_samples: u32, // detlint: allow(DL005) config-derived constant
 }
 
 impl EwmaPredictive {

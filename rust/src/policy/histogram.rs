@@ -28,14 +28,14 @@ pub struct HistogramPrewarm {
     hists: Vec<Histogram>,
     last_invoke_ns: Vec<Option<u64>>,
     /// Keep-alive while a function has too little history to classify.
-    pub bootstrap_keep_ns: u64,
+    pub bootstrap_keep_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Hard cap on any keep-alive window (the commercial default).
-    pub max_keep_ns: u64,
+    pub max_keep_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Pre-warm (rather than keep) only when the head-percentile gap
     /// exceeds this — short gaps make teardown+reboot churn pointless.
-    pub prewarm_threshold_ns: u64,
+    pub prewarm_threshold_ns: u64, // detlint: allow(DL005) config-derived constant
     /// Gap observations required before the histogram drives decisions.
-    pub min_samples: u64,
+    pub min_samples: u64, // detlint: allow(DL005) config-derived constant
 }
 
 impl HistogramPrewarm {

@@ -24,15 +24,15 @@ use crate::sim::snap::{Dec, Enc};
 /// Per-runtime target-size keep-alive with EWMA rate tracking.
 #[derive(Clone, Debug)]
 pub struct UniversalPool {
-    runtimes: u32,
+    runtimes: u32, // detlint: allow(DL005) config-derived constant
     /// Idle universal workers to aim for per runtime bucket.
-    pub target_per_runtime: f64,
+    pub target_per_runtime: f64, // detlint: allow(DL005) config-derived constant
     /// Keep-window clamp: the floor keeps quiet ramps from thrashing,
     /// the ceiling bounds waste for near-dead runtimes.
-    pub min_keep_ns: u64,
-    pub max_keep_ns: u64,
+    pub min_keep_ns: u64, // detlint: allow(DL005) config-derived constant
+    pub max_keep_ns: u64, // detlint: allow(DL005) config-derived constant
     /// EWMA smoothing factor for the inter-arrival gap estimate.
-    pub alpha: f64,
+    pub alpha: f64, // detlint: allow(DL005) config-derived constant
     /// Last arrival per runtime (`u64::MAX` = none seen yet).
     last_arrival_ns: Vec<u64>,
     /// EWMA inter-arrival gap per runtime (0 = no estimate yet).

@@ -1,0 +1,295 @@
+//! Tier-1: detlint over the live tree, plus fixture coverage proving
+//! every rule fires and every suppression channel works (DESIGN.md S28).
+//!
+//! The compiled `Fx` struct at the bottom doubles as the snapshot-codec
+//! round-trip fixture: it is encoded/decoded through the real
+//! [`coldfaas::sim::snap`] codec *and* this very file is fed back
+//! through the analyzer under a sim-side path, so deleting a codec arm
+//! for any `Fx` field fails the suite from two directions.
+
+use std::path::Path;
+
+use coldfaas::analysis::{lint_source, lint_tree, render_text, Allowlist};
+use coldfaas::sim::snap::{Dec, Enc};
+
+/// Lint `src` as if it lived at `path` (no allowlist) and return the
+/// surviving findings as `(code, line)` pairs.
+fn findings(path: &str, src: &str) -> Vec<(&'static str, u32)> {
+    let (fs, _) = lint_source(path, src, &Allowlist::default());
+    fs.iter().map(|f| (f.code, f.line)).collect()
+}
+
+fn codes(path: &str, src: &str) -> Vec<&'static str> {
+    findings(path, src).into_iter().map(|(c, _)| c).collect()
+}
+
+// ------------------------------------------------------------ live tree
+
+/// The committed tree is lint-clean: every wall-clock island is in
+/// `detlint.allow`, every deliberate exception carries a justified
+/// pragma, and every snapshotted struct's codec is complete.  The panic
+/// message is the full rendered report, so a regression names itself.
+#[test]
+fn live_tree_is_clean() {
+    let report = lint_tree(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("lint_tree");
+    assert!(report.files > 50, "scanned only {} files — wrong root?", report.files);
+    assert!(report.suppressed > 0, "expected allowlisted islands to register");
+    assert!(
+        report.findings.is_empty(),
+        "detlint findings in the live tree:\n{}",
+        render_text(&report)
+    );
+}
+
+// --------------------------------------------------------------- DL001
+
+#[test]
+fn dl001_wall_clock_fires() {
+    let src =
+        "fn f() -> u64 { let t = std::time::Instant::now(); t.elapsed().as_nanos() as u64 }\n";
+    assert_eq!(findings("src/sim/fx.rs", src), [("DL001", 1)]);
+    let sleep = "fn f(d: Duration) { std::thread::sleep(d); }\n";
+    assert_eq!(codes("src/platform/fx.rs", sleep), ["DL001"]);
+    let systime = "fn f() -> std::time::SystemTime { todo!() }\n";
+    assert_eq!(codes("src/policy/fx.rs", systime), ["DL001"]);
+}
+
+#[test]
+fn dl001_islands_are_exempt() {
+    let src = "fn f() { let _t = std::time::Instant::now(); }\n";
+    // Built-in islands need no annotation at all.
+    assert!(codes("src/gateway/http.rs", src).is_empty());
+    assert!(codes("src/obs/profile.rs", src).is_empty());
+    // Everything else does.
+    assert_eq!(codes("src/obs/telemetry.rs", src), ["DL001"]);
+}
+
+#[test]
+fn dl001_pragma_suppresses() {
+    let trailing =
+        "fn f() { let _t = std::time::Instant::now(); } // detlint: allow(DL001) fixture\n";
+    let (fs, suppressed) = lint_source("src/sim/fx.rs", trailing, &Allowlist::default());
+    assert!(fs.is_empty());
+    assert_eq!(suppressed, 1);
+    let preceding =
+        "// detlint: allow(DL001) fixture\nfn f() { let _t = std::time::Instant::now(); }\n";
+    assert!(codes("src/sim/fx.rs", preceding).is_empty());
+    // A pragma for the wrong rule does not suppress.
+    let wrong =
+        "fn f() { let _t = std::time::Instant::now(); } // detlint: allow(DL002) fixture\n";
+    assert_eq!(codes("src/sim/fx.rs", wrong), ["DL001"]);
+}
+
+#[test]
+fn dl001_allowlist_islands() {
+    let allow = Allowlist::parse("DL001 src/exec/ live timing\n").expect("parse");
+    let src = "fn f() { let _t = std::time::Instant::now(); }\n";
+    let (fs, suppressed) = lint_source("src/exec/fx.rs", src, &allow);
+    assert!(fs.is_empty());
+    assert_eq!(suppressed, 1);
+    // The entry is (code, prefix)-scoped: other paths and rules still fire.
+    let (fs, _) = lint_source("src/sim/fx.rs", src, &allow);
+    assert_eq!(fs.len(), 1);
+}
+
+// --------------------------------------------------------------- DL002
+
+#[test]
+fn dl002_hash_iteration_fires() {
+    let for_loop = "struct S { m: HashMap<String, u32> }\n\
+                    impl S { fn f(&self) { for (_k, _v) in &self.m {} } }\n";
+    assert_eq!(findings("src/platform/fx.rs", for_loop), [("DL002", 2)]);
+    let method = "fn f(m: &HashMap<u32, u32>) -> usize { m.keys().count() }\n";
+    assert_eq!(codes("src/sim/fx.rs", method), ["DL002"]);
+    let set = "fn f(s: &mut HashSet<u32>) { s.retain(|x| *x > 0); }\n";
+    assert_eq!(codes("src/fnplat/fx.rs", set), ["DL002"]);
+}
+
+#[test]
+fn dl002_keyed_access_and_other_dirs_pass() {
+    // Keyed lookup is the legal use of a HashMap in the DES core.
+    let keyed = "fn f(m: &HashMap<u32, u32>) -> Option<&u32> { m.get(&1) }\n";
+    assert!(codes("src/sim/fx.rs", keyed).is_empty());
+    // Outside the deterministic core the rule does not apply.
+    let loopy = "struct S { m: HashMap<String, u32> }\n\
+                 impl S { fn f(&self) { for (_k, _v) in &self.m {} } }\n";
+    assert!(codes("src/gateway/fx.rs", loopy).is_empty());
+    // Iterating a *BTreeMap* is fine anywhere.
+    let btree = "fn f(m: &BTreeMap<u32, u32>) { for (_k, _v) in m {} }\n";
+    assert!(codes("src/sim/fx.rs", btree).is_empty());
+}
+
+#[test]
+fn dl002_pragma_suppresses() {
+    let src = "struct S { m: HashMap<String, u32> }\n\
+               impl S { fn f(&self) -> Vec<&String> {\n\
+               // detlint: allow(DL002) collected then sorted below\n\
+               let mut v: Vec<&String> = self.m.keys().collect();\n\
+               v.sort(); v } }\n";
+    let (fs, suppressed) = lint_source("src/platform/fx.rs", src, &Allowlist::default());
+    assert!(fs.is_empty(), "{fs:?}");
+    assert_eq!(suppressed, 1);
+}
+
+// --------------------------------------------------------------- DL003
+
+#[test]
+fn dl003_lenient_parse_fires_and_suppresses() {
+    let bad = "fn f(s: &str) -> u32 { s.parse().unwrap_or(0) }\n";
+    assert_eq!(findings("src/gateway/fx.rs", bad), [("DL003", 1)]);
+    let turbofish = "fn f(s: &str) -> u64 { s.parse::<u64>().unwrap_or_default() }\n";
+    assert_eq!(codes("src/main.rs", turbofish), ["DL003"]);
+    // `unwrap_or` on anything that is not a fresh `parse()` result is legal.
+    let option = "fn f(o: Option<u32>) -> u32 { o.unwrap_or(0) }\n";
+    assert!(codes("src/main.rs", option).is_empty());
+    let handled =
+        "fn f(s: &str) -> Result<u32, String> { s.parse().map_err(|e| format!(\"{e}\")) }\n";
+    assert!(codes("src/main.rs", handled).is_empty());
+    let sup = "fn f(s: &str) -> u32 { s.parse().unwrap_or(0) } // detlint: allow(DL003) fixture\n";
+    assert!(codes("src/main.rs", sup).is_empty());
+}
+
+// --------------------------------------------------------------- DL004
+
+#[test]
+fn dl004_mutating_debug_assert_fires_and_suppresses() {
+    let push = "fn f(v: &mut Vec<u32>) { debug_assert!(v.pop().is_some()); }\n";
+    assert_eq!(findings("src/sim/fx.rs", push), [("DL004", 1)]);
+    let add = "fn f(mut n: u32) { debug_assert!({ n += 1; n > 0 }); }\n";
+    assert_eq!(codes("src/sim/fx.rs", add), ["DL004"]);
+    let eq = "fn f(s: &mut HashSet<u32>) { debug_assert_eq!(s.insert(1), true); }\n";
+    assert_eq!(codes("src/metrics/fx.rs", eq), ["DL004"]);
+    // Pure reads are fine.
+    let pure = "fn f(v: &[u32]) { debug_assert!(!v.is_empty()); }\n";
+    assert!(codes("src/sim/fx.rs", pure).is_empty());
+    let sup =
+        "fn f(v: &mut Vec<u32>) { debug_assert!(v.pop().is_some()); } // detlint: allow(DL004) fx\n";
+    assert!(codes("src/sim/fx.rs", sup).is_empty());
+}
+
+// --------------------------------------------------------------- DL005
+
+/// Source-level fixture: `missing` has no codec arm.  The shape mirrors
+/// the real `PlatformSim::encode_state`/`restore_state` pair.
+const FX_INCOMPLETE: &str = r#"
+pub struct Fx {
+    a: u64,
+    b: f64,
+    missing: u32,
+}
+impl Fx {
+    fn encode_state(&self, enc: &mut Enc) {
+        enc.u64(self.a);
+        enc.f64(self.b);
+    }
+    fn restore_state(&mut self, dec: &mut Dec) {
+        self.a = dec.u64();
+        self.b = dec.f64();
+    }
+}
+"#;
+
+#[test]
+fn dl005_omitted_field_is_flagged() {
+    let fs = findings("src/platform/fx.rs", FX_INCOMPLETE);
+    // Exactly one finding, anchored to `missing`'s declaration line.
+    assert_eq!(fs, [("DL005", 5)]);
+    let (full, _) = lint_source("src/platform/fx.rs", FX_INCOMPLETE, &Allowlist::default());
+    assert!(full[0].msg.contains("`missing`"), "{}", full[0].msg);
+    assert!(full[0].msg.contains("`Fx`"), "{}", full[0].msg);
+}
+
+#[test]
+fn dl005_complete_codec_passes() {
+    let complete = FX_INCOMPLETE
+        .replace("enc.f64(self.b);", "enc.f64(self.b);\n        enc.u32(self.missing);")
+        .replace("self.b = dec.f64();", "self.b = dec.f64();\n        self.missing = dec.u32();");
+    assert!(codes("src/platform/fx.rs", &complete).is_empty());
+    // Covering the field in *either* direction (here: decode only) is
+    // enough for the union-of-bodies check.
+    let decode_only = FX_INCOMPLETE
+        .replace("self.b = dec.f64();", "self.b = dec.f64();\n        self.missing = 0;");
+    assert!(codes("src/platform/fx.rs", &decode_only).is_empty());
+}
+
+#[test]
+fn dl005_pragma_suppresses() {
+    let annotated = FX_INCOMPLETE
+        .replace("missing: u32,", "missing: u32, // detlint: allow(DL005) rebuilt on attach");
+    let (fs, suppressed) = lint_source("src/platform/fx.rs", &annotated, &Allowlist::default());
+    assert!(fs.is_empty());
+    assert_eq!(suppressed, 1);
+}
+
+#[test]
+fn dl005_struct_without_codec_is_ignored() {
+    let src = "pub struct Plain { a: u64, b: f64 }\n\
+               impl Plain { fn sum(&self) -> f64 { self.a as f64 + self.b } }\n";
+    assert!(codes("src/platform/fx.rs", src).is_empty());
+}
+
+// ----------------------------------------------- compiled codec fixture
+
+/// Compiled round-trip fixture: encoded and decoded through the *real*
+/// snapshot codec, and scanned by detlint via [`fixture_file_is_codec_complete`].
+#[derive(Debug, PartialEq)]
+struct Fx {
+    a: u64,
+    b: f64,
+    s: String,
+}
+
+impl Fx {
+    fn encode_state(&self, enc: &mut Enc) {
+        enc.u64(self.a);
+        enc.f64(self.b);
+        enc.str(&self.s);
+    }
+
+    fn restore_state(dec: &mut Dec) -> Fx {
+        Fx { a: dec.u64(), b: dec.f64(), s: dec.str() }
+    }
+}
+
+#[test]
+fn fx_round_trips_through_snapshot_codec() {
+    let fx = Fx { a: 7, b: 1.5, s: "cold".into() };
+    let mut enc = Enc::new();
+    fx.encode_state(&mut enc);
+    let mut dec = Dec::new(&enc.buf);
+    let back = Fx::restore_state(&mut dec);
+    dec.finish(); // every byte consumed
+    assert_eq!(back, fx);
+}
+
+/// Feed this very file through the analyzer under a sim-side path: the
+/// `Fx` codec above must stay complete.  Deleting any `enc.*`/`dec.*`
+/// arm (while the field remains) turns this test red — the acceptance
+/// property that a dropped codec arm fails the suite.
+#[test]
+fn fixture_file_is_codec_complete() {
+    let src = include_str!("detlint.rs");
+    let (fs, suppressed) = lint_source("src/sim/detlint_fixture.rs", src, &Allowlist::default());
+    assert!(fs.is_empty(), "fixture findings:\n{fs:#?}");
+    assert_eq!(suppressed, 0, "the compiled fixture must not need pragmas");
+}
+
+// ------------------------------------------------------------ allowlist
+
+#[test]
+fn allowlist_parse_and_match() {
+    let a = Allowlist::parse("# comment\n\nDL001 src/exec/ live timing\nDL005 src/x.rs why\n")
+        .expect("parse");
+    assert!(a.allows("DL001", "src/exec/mod.rs"));
+    assert!(a.allows("DL005", "src/x.rs"));
+    assert!(!a.allows("DL001", "src/sim/engine.rs"));
+    assert!(!a.allows("DL002", "src/exec/mod.rs"));
+}
+
+#[test]
+fn allowlist_requires_justification() {
+    let err = Allowlist::parse("DL001 src/exec/\n").expect_err("must fail");
+    assert!(err.contains("justification"), "{err}");
+    // And a code that does not look like a rule is rejected too.
+    assert!(Allowlist::parse("XX001 src/exec/ why\n").is_err());
+}

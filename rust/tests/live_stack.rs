@@ -1,6 +1,10 @@
 //! Live-stack integration: the real HTTP gateway + coordinator + PJRT
 //! engine threads under concurrent load.  Requires `make artifacts`.
 
+// Benches and the live-stack test time real work on purpose (clippy
+// disallowed-methods mirrors detlint DL001; see DESIGN.md S28).
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
