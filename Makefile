@@ -1,7 +1,7 @@
 # Convenience targets; the rust crate lives in rust/, the AOT pipeline
 # in python/compile (emits rust/artifacts/ for the live stack).
 
-.PHONY: build test lint artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines resume-smoke
+.PHONY: build test lint artifacts experiments policies fleet chaos planet sharing hyperplanet trace baselines resume-smoke livecheck loadgen
 
 build:
 	cd rust && cargo build --release
@@ -40,6 +40,20 @@ sharing: build
 
 hyperplanet: build
 	./rust/target/release/coldfaas hyperplanet --quick
+
+# E18 sim-vs-live cross-validation (DESIGN.md S29): replay one
+# deterministic tenant trace through the DES and the live HTTP stack,
+# and band each measured heat class's p50 against the DES prediction.
+# ~8 s of real-time replay; CI runs the same cell in its `livecheck`
+# job.  Drop --quick for the ~20 s full cell.
+livecheck: build
+	./rust/target/release/coldfaas livecheck --quick
+
+# Open-loop load generator against a self-hosted S29 live platform
+# (no PJRT artifacts needed); override the trace with LOADGEN_ARGS,
+# e.g. LOADGEN_ARGS='--rps 200 --duration 5 --senders 16'.
+loadgen: build
+	./rust/target/release/coldfaas loadgen $(LOADGEN_ARGS)
 
 # Replay the flagship chaos cell with the observability layer armed and
 # write a Chrome trace_event capture (open trace.json in chrome://tracing

@@ -63,6 +63,36 @@ impl RealtimeStartup {
     }
 }
 
+/// The three startup pipelines of a driver — cold, warm, specialized —
+/// each capped with the execution step, as realtime models.
+///
+/// This is the live plane's mirror of the DES dispatch tail
+/// (`platform/sim.rs`): a cold claim pays the full cold pipeline, a warm
+/// claim the warm-invoke steps, and a specialized claim (S23: runtime
+/// warm, function state cold) the warm steps plus the specialization
+/// pipeline.  E18 `livecheck` relies on both planes sampling from these
+/// same distributions, so the composition here must stay in lock-step
+/// with `dispatch_tail`.
+pub fn heat_pipelines(
+    kind: crate::fnplat::DriverKind,
+    exec_ms: f64,
+    time_scale: f64,
+) -> [RealtimeStartup; 3] {
+    let exec = crate::fnplat::exec_step(exec_ms);
+    let mut cold = kind.cold_start_steps();
+    cold.push(exec);
+    let mut warm = kind.warm_invoke_steps();
+    warm.push(exec);
+    let mut spec = kind.warm_invoke_steps();
+    spec.extend(kind.specialize_steps());
+    spec.push(exec);
+    [
+        RealtimeStartup::new(cold, time_scale),
+        RealtimeStartup::new(warm, time_scale),
+        RealtimeStartup::new(spec, time_scale),
+    ]
+}
+
 /// Payload codec: request bodies are either empty (use the deterministic
 /// check input) or ASCII floats separated by commas/whitespace.
 pub fn parse_payload(body: &[u8], expected: usize) -> Result<Vec<f32>, String> {
@@ -147,6 +177,23 @@ mod tests {
         assert!(parse_payload(b"1,2,3", 4).is_err());
         assert!(parse_payload(b"1,2,x,4", 4).is_err());
         assert!(parse_payload(&[0xff, 0xfe], 2).is_err());
+    }
+
+    #[test]
+    fn heat_pipelines_order_and_composition() {
+        use crate::fnplat::DriverKind;
+        let [cold, warm, spec] = heat_pipelines(DriverKind::DockerWarm, 0.8, 0.0);
+        // Docker nominals (DESIGN.md §2): cold ≫ specialized ≫ warm, and
+        // each pipeline carries the 0.8 ms exec step on top.
+        assert!(cold.nominal_ms() > spec.nominal_ms());
+        assert!(spec.nominal_ms() > warm.nominal_ms());
+        let kind = DriverKind::DockerWarm;
+        let warm_only: f64 =
+            kind.warm_invoke_steps().iter().map(|s| s.dur.median_ns() / 1e6).sum();
+        assert!((warm.nominal_ms() - warm_only - 0.8).abs() < 1e-9);
+        let spec_extra: f64 =
+            kind.specialize_steps().iter().map(|s| s.dur.median_ns() / 1e6).sum();
+        assert!((spec.nominal_ms() - warm_only - spec_extra - 0.8).abs() < 1e-9);
     }
 
     #[test]

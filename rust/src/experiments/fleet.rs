@@ -144,6 +144,10 @@ pub(crate) fn cell_config(
         faults,
         obs,
         shards: 1,
+        checkpoint_every_ns: 0,
+        checkpoint_path: None,
+        resume_from: None,
+        state_hash: false,
         seed: tenant.seed,
     }
 }

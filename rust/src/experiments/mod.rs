@@ -1,6 +1,11 @@
 //! Experiment harnesses (S14): one function per paper figure/table, each
 //! returning a [`Report`] with measured series and paper-vs-measured
-//! checks.  See DESIGN.md §5 for the experiment index (E1–E17).
+//! checks.  See DESIGN.md §5 for the experiment index (E1–E18).
+//!
+//! E18 (`livecheck`) is the one experiment that is *not* fully
+//! deterministic: its sim leg is byte-identical per seed, but its live
+//! leg measures the real serving stack, so it has its own subcommand
+//! (`coldfaas livecheck`) and is never part of `experiment all`.
 //!
 //! The grid experiments (E12–E17) run their cells through the shared
 //! [`sweep`] runner: cells are self-contained, so they execute on worker
@@ -15,6 +20,7 @@ pub mod fleet;
 pub mod fnlocal;
 pub mod hyperplanet;
 pub mod images;
+pub mod livecheck;
 pub mod planet;
 pub mod policies;
 pub mod replay;
@@ -32,6 +38,7 @@ pub use fleet::fleet;
 pub use fnlocal::fig4;
 pub use hyperplanet::hyperplanet;
 pub use images::images;
+pub use livecheck::livecheck;
 pub use planet::planet;
 pub use policies::policies;
 pub use scaleout::scaleout;

@@ -1,10 +1,25 @@
-//! Minimal HTTP/1.1 server and client (S6), std::net only.
+//! Benchmark-grade HTTP/1.1 server and client (S6/S29), std::net only.
 //!
 //! The offline registry has no tokio/hyper, and the paper's gateway
 //! (CppCMS) is itself a thread-pool HTTP server — so this mirrors that
-//! architecture: one accept thread, a bounded queue, and N worker threads
-//! (§III-B: "multiple processes for accepting connections and 20 worker
-//! threads").  Handlers are routed by (method, path-prefix).
+//! architecture on tiny-http idioms (§III-B: "multiple processes for
+//! accepting connections and 20 worker threads"):
+//!
+//! * a **multi-threaded accept pool** — several accept threads share one
+//!   non-blocking listener, so a connection burst is never serialized
+//!   behind a single accept loop;
+//! * **whole-connection workers** over a [`ReusableStream`] — each worker
+//!   owns one persistent connection at a time and serves every request on
+//!   it (keep-alive by default for HTTP/1.1, `Connection: close` honored);
+//! * **stack-buffer head parsing** — the request line and headers are
+//!   scanned in place inside one fixed `[u8; MAX_HEAD_BYTES]` on the
+//!   worker's stack: the hot path heap-allocates nothing per header, only
+//!   the `Request` fields the handler actually keeps (method/path/body).
+//!
+//! The parser is strict where it matters for accounting: duplicate
+//! `Content-Length` headers, non-numeric lengths, bad method tokens,
+//! oversized heads, and oversized bodies are all hard 400s — a request
+//! that cannot be framed unambiguously is never served.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -12,6 +27,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// Request line + headers must fit this fixed stack buffer.
+pub const MAX_HEAD_BYTES: usize = 8192;
+
+/// Bound request bodies: the gateway must not be a memory DoS.
+pub const MAX_BODY_BYTES: usize = 16 << 20;
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -89,46 +110,140 @@ impl Response {
     }
 }
 
+fn bad(msg: &'static str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Find the `\r\n\r\n` head terminator.
+fn find_head_end(hay: &[u8]) -> Option<usize> {
+    hay.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Fill `head` from the reader until the blank line ending the head.
+///
+/// Returns `Ok(None)` on clean EOF before any byte (client closed a
+/// persistent connection between requests), `Ok(Some(end))` with the
+/// length including the terminator otherwise.  Only head bytes are
+/// consumed from the reader — the body stays buffered for the caller.
+fn fill_head<R: BufRead>(
+    r: &mut R,
+    head: &mut [u8; MAX_HEAD_BYTES],
+) -> std::io::Result<Option<usize>> {
+    let mut len = 0usize;
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            if len == 0 {
+                return Ok(None); // clean close between requests
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-head",
+            ));
+        }
+        let take = chunk.len().min(MAX_HEAD_BYTES - len);
+        head[len..len + take].copy_from_slice(&chunk[..take]);
+        // Re-scan only the window a straddling terminator could occupy.
+        let scan_from = len.saturating_sub(3);
+        let new_len = len + take;
+        if let Some(pos) = find_head_end(&head[scan_from..new_len]) {
+            let end = scan_from + pos + 4;
+            r.consume(end - len);
+            return Ok(Some(end));
+        }
+        r.consume(take);
+        len = new_len;
+        if len == MAX_HEAD_BYTES {
+            return Err(bad("oversized header"));
+        }
+    }
+}
+
+/// What the in-place head scan extracts; borrows the stack buffer.
+struct Head<'a> {
+    method: &'a str,
+    path: &'a str,
+    keep_alive: bool,
+    content_length: usize,
+}
+
+/// Scan the head slice (sans terminator) without allocating: the request
+/// line and every header are inspected as `&str` views into the stack
+/// buffer.  Strict by design — see the module docs for the hard-400 list.
+fn scan_head(head: &[u8]) -> std::io::Result<Head<'_>> {
+    let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+    let req_line = lines.next().unwrap_or(b"");
+    let req_line = std::str::from_utf8(req_line).map_err(|_| bad("non-utf8 request line"))?;
+    let mut parts = req_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    if method.is_empty() {
+        return Err(bad("empty request line"));
+    }
+    if !method.bytes().all(|b| b.is_ascii_alphabetic()) {
+        return Err(bad("bad method token"));
+    }
+    let path = parts.next().unwrap_or("/");
+    // Keep-alive is the HTTP/1.1 default; 1.0 must opt in.
+    let mut keep_alive = parts.next() != Some("HTTP/1.0");
+
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if line.is_empty() {
+            continue; // trailing fragment after the final CRLF
+        }
+        let line = std::str::from_utf8(line).map_err(|_| bad("non-utf8 header"))?;
+        let (name, value) = line.split_once(':').ok_or_else(|| bad("malformed header"))?;
+        let (name, value) = (name.trim(), value.trim());
+        if name.eq_ignore_ascii_case("content-length") {
+            // Duplicate Content-Length headers are a request-smuggling
+            // classic; an ambiguous frame is never served (hard 400).
+            if content_length.is_some() {
+                return Err(bad("duplicate content-length"));
+            }
+            if value.is_empty() || !value.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(bad("bad content-length"));
+            }
+            content_length = Some(value.parse().map_err(|_| bad("bad content-length"))?);
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    Ok(Head { method, path, keep_alive, content_length: content_length.unwrap_or(0) })
+}
+
+/// Parse one request from any buffered stream: head in a stack buffer,
+/// then exactly `Content-Length` body bytes.  Returns `Ok(None)` on clean
+/// EOF (client closed a persistent connection between requests).
+pub fn parse_from<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> {
+    let mut head_buf = [0u8; MAX_HEAD_BYTES];
+    let end = match fill_head(reader, &mut head_buf)? {
+        Some(end) => end,
+        None => return Ok(None),
+    };
+    let head = scan_head(&head_buf[..end - 4])?;
+    if head.content_length > MAX_BODY_BYTES {
+        return Err(bad("body too large"));
+    }
+    // Only now does the request touch the heap: the fields the handler
+    // keeps (method/path/body), nothing per-header.
+    let method = head.method.to_uppercase();
+    let path = head.path.to_string();
+    let keep_alive = head.keep_alive;
+    let mut body = vec![0u8; head.content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, body, keep_alive }))
+}
+
 /// Parse one request from a buffered stream (request line + headers + body).
 /// Returns Ok(None) on clean EOF (client closed a persistent connection).
 pub fn parse_request_buf(
     reader: &mut BufReader<TcpStream>,
 ) -> std::io::Result<Option<Request>> {
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
-        return Ok(None); // clean close between requests
-    }
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_uppercase();
-    let path = parts.next().unwrap_or("/").to_string();
-    if method.is_empty() {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "empty request line"));
-    }
-    let mut content_length = 0usize;
-    let mut keep_alive = true; // HTTP/1.1 default
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        let lower = h.to_ascii_lowercase();
-        if let Some(v) = lower.strip_prefix("content-length:").map(str::trim) {
-            content_length = v.parse().map_err(|_| {
-                std::io::Error::new(std::io::ErrorKind::InvalidData, "bad content-length")
-            })?;
-        } else if let Some(v) = lower.strip_prefix("connection:").map(str::trim) {
-            keep_alive = v != "close";
-        }
-    }
-    // Bound request bodies to 16 MiB: the gateway must not be a memory DoS.
-    if content_length > 16 << 20 {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Some(Request { method, path, body, keep_alive }))
+    parse_from(reader)
 }
 
 /// Parse one request from a raw stream (compat shim for one-shot use).
@@ -139,6 +254,75 @@ pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Request> {
 }
 
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A connection a worker can serve many requests over (tiny-http's
+/// `ReadWrite` idiom): one bidirectional stream, owned by one worker for
+/// its whole keep-alive lifetime.
+pub trait ReusableStream: Read + Write + Send {
+    /// Discard whatever the client is still sending on a connection we
+    /// are about to fail: closing a socket with unread bytes RSTs it,
+    /// which can destroy the error response in flight.  Default: no-op
+    /// (in-memory streams have no RST semantics).
+    fn discard_pending(&mut self) {}
+}
+
+impl ReusableStream for TcpStream {
+    fn discard_pending(&mut self) {
+        let _ = self.set_read_timeout(Some(Duration::from_millis(50)));
+        let mut sink = [0u8; 4096];
+        // Bounded drain: enough for any in-flight head/body fragment
+        // without letting a firehose client pin the worker.
+        for _ in 0..16 {
+            match self.read(&mut sink) {
+                Ok(n) if n == sink.len() => continue,
+                _ => break,
+            }
+        }
+    }
+}
+
+/// Serve one whole persistent connection: parse → handle → respond until
+/// the client closes, stops keeping alive, or a framing error ends it.
+pub fn serve_stream<S: ReusableStream>(
+    stream: S,
+    handler: &Handler,
+    stats: &GatewayStats,
+    stop: &AtomicBool,
+) {
+    let mut reader = BufReader::with_capacity(MAX_HEAD_BYTES, stream);
+    loop {
+        match parse_from(&mut reader) {
+            Ok(Some(req)) => {
+                let resp = handler(&req);
+                let keep = req.keep_alive && !stop.load(Ordering::Acquire);
+                // Count before the write completes: clients may observe
+                // the response (and /stats) before this thread runs again.
+                stats.served.fetch_add(1, Ordering::Relaxed);
+                if resp.write_conn(reader.get_mut(), keep).is_err() || !keep {
+                    break;
+                }
+            }
+            Ok(None) => break, // client closed
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break; // idle keep-alive connection timed out: just close
+            }
+            Err(_) => {
+                // Unframeable request (or mid-request EOF): answer 400 on
+                // a best-effort basis and end the connection.
+                stats.parse_errors.fetch_add(1, Ordering::Relaxed);
+                let s = reader.get_mut();
+                s.discard_pending();
+                let _ = Response::bad_request("malformed request").write_conn(s, false);
+                break;
+            }
+        }
+    }
+}
 
 /// Bounded connection queue feeding the worker pool.
 struct ConnQueue {
@@ -192,6 +376,13 @@ pub struct Server {
     pub stats: Arc<GatewayStats>,
 }
 
+/// Accept threads sharing the listener: enough to ride out a connection
+/// burst without serializing behind one accept loop, few enough not to
+/// thundering-herd a mostly-idle listener.
+fn accept_pool_size(workers: usize) -> usize {
+    workers.clamp(1, 4)
+}
+
 impl Server {
     /// Bind and serve `handler` with `workers` worker threads.  Pass port 0
     /// for an ephemeral port; the bound address is `addr()`.
@@ -208,13 +399,18 @@ impl Server {
         let stats = Arc::new(GatewayStats::default());
         let mut threads = Vec::new();
 
-        // Accept thread.
-        {
+        // Accept pool: each thread owns a clone of the shared non-blocking
+        // listener; the kernel hands any given connection to exactly one.
+        for _ in 0..accept_pool_size(workers) {
+            let l = listener.try_clone()?;
             let (stop, queue, stats) = (stop.clone(), queue.clone(), stats.clone());
             threads.push(std::thread::spawn(move || {
                 while !stop.load(Ordering::Acquire) {
-                    match listener.accept() {
+                    match l.accept() {
                         Ok((s, _)) => {
+                            // The accepted fd can inherit the listener's
+                            // non-blocking mode on some platforms.
+                            let _ = s.set_nonblocking(false);
                             stats.accepted.fetch_add(1, Ordering::Relaxed);
                             if let Err(mut s) = queue.push(s) {
                                 // Overload: shed with an explicit 429 so
@@ -223,17 +419,7 @@ impl Server {
                                 // to ~200 ms and must not stall accepts.
                                 stats.shed.fetch_add(1, Ordering::Relaxed);
                                 std::thread::spawn(move || {
-                                    // Drain what the client already sent —
-                                    // closing with unread bytes RSTs the
-                                    // socket and can discard the 429.
-                                    let _ = s.set_read_timeout(Some(Duration::from_millis(50)));
-                                    let mut sink = [0u8; 4096];
-                                    for _ in 0..4 {
-                                        match s.read(&mut sink) {
-                                            Ok(n) if n == sink.len() => continue,
-                                            _ => break,
-                                        }
-                                    }
+                                    s.discard_pending();
                                     let _ = Response::too_many_requests("gateway queue full")
                                         .write_conn(&mut s, false);
                                 });
@@ -248,7 +434,8 @@ impl Server {
             }));
         }
 
-        // Worker pool.
+        // Worker pool: whole persistent connections, one at a time
+        // (paper-faithful: CppCMS workers are per-connection).
         for _ in 0..workers.max(1) {
             let (stop, queue, stats, handler) =
                 (stop.clone(), queue.clone(), stats.clone(), handler.clone());
@@ -256,35 +443,7 @@ impl Server {
                 while let Some(s) = queue.pop(&stop) {
                     let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
                     let _ = s.set_nodelay(true);
-                    let mut writer = match s.try_clone() {
-                        Ok(w) => w,
-                        Err(_) => continue,
-                    };
-                    let mut reader = BufReader::new(s);
-                    // Serve the whole persistent connection on this worker
-                    // (paper-faithful: CppCMS workers are per-connection).
-                    loop {
-                        match parse_request_buf(&mut reader) {
-                            Ok(Some(req)) => {
-                                let resp = handler(&req);
-                                let keep = req.keep_alive && !stop.load(Ordering::Acquire);
-                                // Count before the write completes: clients
-                                // may observe the response (and /stats)
-                                // before this thread runs again.
-                                stats.served.fetch_add(1, Ordering::Relaxed);
-                                if resp.write_conn(&mut writer, keep).is_err() || !keep {
-                                    break;
-                                }
-                            }
-                            Ok(None) => break, // client closed
-                            Err(_) => {
-                                stats.parse_errors.fetch_add(1, Ordering::Relaxed);
-                                let _ = Response::bad_request("malformed request")
-                                    .write_conn(&mut writer, false);
-                                break;
-                            }
-                        }
-                    }
+                    serve_stream(s, &handler, &stats, &stop);
                 }
             }));
         }
@@ -517,10 +676,85 @@ mod tests {
     }
 
     #[test]
+    fn bad_method_token_is_400() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"G@T /noop HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        assert!(srv.stats.parse_errors.load(Ordering::Relaxed) >= 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn duplicate_content_length_is_hard_400() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        // Two conflicting frames for the same request: classic smuggling
+        // shape.  The parser must refuse, not pick one silently.
+        s.write_all(b"POST /echo HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc")
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        assert!(srv.stats.parse_errors.load(Ordering::Relaxed) >= 1);
+        // Server must keep serving afterwards.
+        let (status, _) = http_request(srv.addr(), "GET", "/noop", b"").unwrap();
+        assert_eq!(status, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn non_numeric_content_length_is_400() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"POST /echo HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc").unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_header_rejected() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        // A head that can never fit the stack buffer; the server must
+        // 400 as soon as the buffer fills, not read forever.
+        let mut junk = b"GET /noop HTTP/1.1\r\nX-Filler: ".to_vec();
+        junk.resize(junk.len() + MAX_HEAD_BYTES + 1024, b'a');
+        s.write_all(&junk).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        srv.shutdown();
+    }
+
+    #[test]
     fn oversized_body_rejected() {
         let srv = echo_server();
         let mut s = TcpStream::connect(srv.addr()).unwrap();
         write!(s, "POST /echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 64 << 20).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("400"), "got: {text}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn truncated_body_is_400() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        // Promise 10 body bytes, deliver 3, half-close: the server sees
+        // EOF mid-body and must answer 400 on the still-open write half.
+        s.write_all(b"POST /echo HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
         let mut buf = Vec::new();
         let _ = s.read_to_end(&mut buf);
         let text = String::from_utf8_lossy(&buf);
@@ -556,6 +790,40 @@ mod tests {
         assert_eq!(srv.stats.served.load(Ordering::Relaxed), 20);
         // 20 requests over ONE accepted connection.
         assert_eq!(srv.stats.accepted.load(Ordering::Relaxed), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_all_served() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // Two back-to-back requests in one write: the head scan must not
+        // swallow bytes of the second while framing the first.
+        s.write_all(
+            b"POST /echo HTTP/1.1\r\nContent-Length: 2\r\n\r\nr1\
+              POST /echo HTTP/1.1\r\nContent-Length: 2\r\nConnection: close\r\n\r\nr2",
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("r1") && text.contains("r2"), "got: {text}");
+        assert_eq!(srv.stats.served.load(Ordering::Relaxed), 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        let srv = echo_server();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"GET /noop HTTP/1.0\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        // read_to_end only returns if the server closes the connection.
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("200"), "got: {text}");
+        assert!(text.contains("Connection: close"), "got: {text}");
         srv.shutdown();
     }
 

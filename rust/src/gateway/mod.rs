@@ -1,6 +1,14 @@
-//! HTTP gateway (S6): the real request frontend for the live coordinator,
-//! mirroring the paper's CppCMS accept-thread + worker-pool architecture.
+//! HTTP gateway (S6/S29): the benchmark-grade request frontend for the
+//! live planes — a multi-threaded accept pool over a shared non-blocking
+//! listener, whole-connection keep-alive workers over a reusable stream
+//! trait, and stack-buffer head parsing (no per-header heap allocation on
+//! the hot path).  Mirrors the paper's CppCMS accept-thread + worker-pool
+//! architecture; serves both the PJRT coordinator (S12) and the
+//! simulation-mirroring live platform (S29, [`crate::live`]).
 
 pub mod http;
 
-pub use http::{http_request, parse_request, Handler, Request, Response, Server};
+pub use http::{
+    http_request, parse_request, Handler, HttpClient, GatewayStats, Request, Response,
+    ReusableStream, Server,
+};

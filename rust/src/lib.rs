@@ -19,9 +19,12 @@
 //!   counter-proposal, runtime-keyed shared warm pools, against going
 //!   cold-only — and
 //! * a **live serving** stack ([`gateway`], [`coordinator`], [`exec`],
-//!   [`runtime`]) — a real HTTP control plane whose executors run
-//!   AOT-compiled JAX/Pallas functions through PJRT (python never on the
-//!   request path), with the same startup models applied in real time.
+//!   [`runtime`], [`live`]) — a real HTTP control plane whose executors
+//!   run AOT-compiled JAX/Pallas functions through PJRT (python never on
+//!   the request path), with the same startup models applied in real
+//!   time.  The [`live`] module mirrors the DES warm-pool semantics over
+//!   real sockets, and experiment E18 (`livecheck`) cross-validates the
+//!   two planes against each other.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -45,6 +48,8 @@ pub mod fnplat;
 #[allow(clippy::disallowed_types)] // keyed image registry; iteration audited by DL002
 pub mod image;
 pub mod lambda;
+#[allow(clippy::disallowed_methods)] // simulation-mirroring live platform: modeled clock + scaled sleeps
+pub mod live;
 pub mod metrics;
 pub mod net;
 pub mod obs;

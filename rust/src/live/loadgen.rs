@@ -1,0 +1,240 @@
+//! Open-loop load generator (S29): replays a deterministic tenant trace
+//! (`workload::tenants`) against a live gateway over keep-alive
+//! connections.
+//!
+//! Open-loop means arrivals fire on the trace's schedule, not on
+//! response completion: sender `i % senders` owns arrival `i`, sleeps
+//! until the arrival's scaled due-time, fires, and measures latency
+//! from the *scheduled* send instant — so a slow server shows up as
+//! latency (coordinated-omission-free), not as a quietly stretched
+//! schedule.  This is the same trace representation the DES consumes
+//! (`PlatformLoad::Tenants`), which is what lets E18 `livecheck` replay
+//! one trace through both planes.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use crate::gateway::http::HttpClient;
+use crate::workload::tenants::TenantTrace;
+
+/// One measured request.
+#[derive(Clone, Debug)]
+pub struct LiveSample {
+    pub func: u32,
+    /// Position in the trace (the per-request RNG salt server-side).
+    pub index: u64,
+    /// Server-annotated claim class (`warm` / `specialized` / `cold`),
+    /// or `error` when the request failed.
+    pub class: String,
+    /// Measured latency from the scheduled arrival to the response (ns).
+    pub latency_ns: u64,
+    /// Server-reported modeled (unscaled) cost for the claim class (ns).
+    pub modeled_ns: u64,
+    pub status: u16,
+}
+
+/// A completed replay.
+#[derive(Debug, Default)]
+pub struct LoadgenReport {
+    /// All samples, in trace order.
+    pub samples: Vec<LiveSample>,
+    pub errors: u64,
+}
+
+impl LoadgenReport {
+    /// Measured latencies (ms) for one class, in trace order.
+    pub fn class_latencies_ms(&self, class: &str) -> Vec<f64> {
+        self.samples
+            .iter()
+            .filter(|s| s.class == class)
+            .map(|s| s.latency_ns as f64 / 1e6)
+            .collect()
+    }
+
+    pub fn count(&self, class: &str) -> usize {
+        self.samples.iter().filter(|s| s.class == class).count()
+    }
+
+    /// One-line per-class summary for the CLI.
+    pub fn summary(&self) -> String {
+        let q = |class: &str| {
+            let mut v = self.class_latencies_ms(class);
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if v.is_empty() { 0.0 } else { v[v.len() / 2] }
+        };
+        format!(
+            "{} requests: {} warm (p50 {:.2} ms), {} specialized (p50 {:.2} ms), {} cold (p50 {:.2} ms), {} errors",
+            self.samples.len(),
+            self.count("warm"),
+            q("warm"),
+            self.count("specialized"),
+            q("specialized"),
+            self.count("cold"),
+            q("cold"),
+            self.errors,
+        )
+    }
+}
+
+/// Extract a JSON string field from a flat response body (the gateway's
+/// annotation objects are hand-rolled flat JSON; a full parser would be
+/// overkill for `"class":"warm"`).
+pub fn json_str_field(text: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = text.find(&pat)? + pat.len();
+    let end = text[start..].find('"')?;
+    Some(text[start..start + end].to_string())
+}
+
+/// Extract a JSON number field from a flat response body.
+pub fn json_num_field(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Replay `trace` against `addr`, scaling arrival times by
+/// `time_scale` (1.0 = trace-faithful pacing, 0.0 = as fast as the
+/// senders can go).  `senders` keep-alive connections share the work
+/// round-robin by trace index.
+pub fn run(
+    addr: SocketAddr,
+    trace: &TenantTrace,
+    time_scale: f64,
+    senders: usize,
+) -> LoadgenReport {
+    let senders = senders.max(1);
+    let t0 = Instant::now();
+    let mut per_thread: Vec<Vec<LiveSample>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..senders)
+            .map(|id| {
+                scope.spawn(move || sender_loop(addr, trace, time_scale, senders, id, t0))
+            })
+            .collect();
+        for h in handles {
+            per_thread.push(h.join().expect("sender thread panicked"));
+        }
+    });
+    let mut samples: Vec<LiveSample> = per_thread.into_iter().flatten().collect();
+    samples.sort_by_key(|s| s.index);
+    let errors = samples.iter().filter(|s| s.class == "error").count() as u64;
+    LoadgenReport { samples, errors }
+}
+
+fn sender_loop(
+    addr: SocketAddr,
+    trace: &TenantTrace,
+    time_scale: f64,
+    senders: usize,
+    id: usize,
+    t0: Instant,
+) -> Vec<LiveSample> {
+    let mut out = Vec::new();
+    let mut client = HttpClient::connect(addr).ok();
+    for (i, &(t_ns, func)) in
+        trace.arrivals.iter().enumerate().filter(|(i, _)| i % senders == id)
+    {
+        let due = t0 + Duration::from_nanos((t_ns as f64 * time_scale) as u64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let path = format!("/invoke/{func}/{i}");
+        let result = match client.as_mut() {
+            Some(c) => c.request("POST", &path, b""),
+            None => Err(std::io::Error::new(std::io::ErrorKind::NotConnected, "no connection")),
+        };
+        // Open-loop latency: measured from the scheduled arrival, so
+        // send-side lag counts against the server, not the schedule.
+        let latency_ns = Instant::now().saturating_duration_since(due).as_nanos() as u64;
+        match result {
+            Ok((status, body)) => {
+                let text = String::from_utf8_lossy(&body);
+                let class = if status == 200 {
+                    json_str_field(&text, "class").unwrap_or_else(|| "error".to_string())
+                } else {
+                    "error".to_string()
+                };
+                let modeled_ns = json_num_field(&text, "modeled_ms")
+                    .map_or(0, |ms| (ms * 1e6) as u64);
+                out.push(LiveSample {
+                    func,
+                    index: i as u64,
+                    class,
+                    latency_ns,
+                    modeled_ns,
+                    status,
+                });
+            }
+            Err(_) => {
+                out.push(LiveSample {
+                    func,
+                    index: i as u64,
+                    class: "error".to_string(),
+                    latency_ns,
+                    modeled_ns: 0,
+                    status: 0,
+                });
+                // One reconnect attempt so a single dropped connection
+                // does not poison the rest of this sender's share.
+                client = HttpClient::connect(addr).ok();
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::live::{start, LiveConfig};
+
+    #[test]
+    fn json_field_extraction() {
+        let body = "{\"class\":\"specialized\",\"modeled_ms\":42.125,\"node\":3}";
+        assert_eq!(json_str_field(body, "class").as_deref(), Some("specialized"));
+        assert_eq!(json_num_field(body, "modeled_ms"), Some(42.125));
+        assert_eq!(json_num_field(body, "node"), Some(3.0));
+        assert_eq!(json_str_field(body, "missing"), None);
+        assert_eq!(json_num_field(body, "missing"), None);
+    }
+
+    #[test]
+    fn replays_a_trace_end_to_end() {
+        let srv = start(LiveConfig {
+            functions: 4,
+            time_scale: 0.0,
+            workers: 4,
+            ..LiveConfig::default()
+        })
+        .unwrap();
+        let trace = TenantTrace {
+            functions: 4,
+            arrivals: (0..40).map(|i| (i * 1000, (i % 4) as u32)).collect(),
+        };
+        let report = run(srv.addr(), &trace, 0.0, 3);
+        assert_eq!(report.samples.len(), 40);
+        assert_eq!(report.errors, 0, "{}", report.summary());
+        for s in &report.samples {
+            assert!(
+                matches!(s.class.as_str(), "warm" | "specialized" | "cold"),
+                "unexpected class {:?}",
+                s.class
+            );
+        }
+        // Conservation against the server's own counters.
+        let (st, body) =
+            crate::gateway::http::http_request(srv.addr(), "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert_eq!(json_num_field(&text, "requests"), Some(40.0));
+        let on_wire = report.count("warm") + report.count("specialized") + report.count("cold");
+        assert_eq!(on_wire, 40);
+        srv.shutdown();
+    }
+}

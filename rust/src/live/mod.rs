@@ -1,0 +1,390 @@
+//! Simulation-mirroring live platform (S29): the DES warm-pool dispatch
+//! semantics served over real HTTP, in real time.
+//!
+//! The repo has two measurement planes (EXPERIMENTS.md "Simulation vs.
+//! live measurement").  The DES plane (`platform::run_platform`) is
+//! byte-identical per seed; this module is the *live* plane: the same
+//! [`WarmPool`](crate::fnplat::pool::WarmPool) claim/release state
+//! machine, the same driver pipelines
+//! ([`exec::heat_pipelines`](crate::exec::heat_pipelines)), the same
+//! deterministic per-request RNG streams — but executed behind the
+//! rebuilt gateway (S6) with real sockets, real threads, and real
+//! scaled sleeps.  E18 `livecheck` replays one trace through both
+//! planes and asserts the measured per-class latency distributions land
+//! inside tolerance bands around the DES prediction.
+//!
+//! What is shared with the DES, by construction:
+//! - warm/specialized/cold classification: [`WarmPool::dispatch_shared`]
+//!   with the same [`SharingMode::key_for`] routing keys;
+//! - keep-alive policy: a fixed window (`keep_ns`), applied through
+//!   [`WarmPool::release_shared_until`] in *modeled* time;
+//! - startup/exec cost: sampled from the identical `Step` distributions
+//!   the DES dispatch tail composes (`platform/sim.rs`).
+//!
+//! What is real: connection handling, thread scheduling, lock
+//! contention, and the sleeps themselves — which is why the live side
+//! of E18 is band-gated, never byte-pinned.
+//!
+//! Wall-clock use here is the point (the modeled clock is derived from
+//! `Instant::now`), so `src/live/` is a committed DL001 island in
+//! `rust/detlint.allow`.
+
+pub mod loadgen;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::exec::{heat_pipelines, RealtimeStartup};
+use crate::fnplat::pool::{Dispatch, WarmPool};
+use crate::fnplat::DriverKind;
+use crate::gateway::http::{Handler, Request, Response, Server};
+use crate::platform::SharingMode;
+use crate::sim::Rng;
+
+/// Configuration for a live platform instance.
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    pub driver: DriverKind,
+    /// Worker nodes; each holds its own warm pool.
+    pub nodes: usize,
+    /// Deployed functions, invoked as `/invoke/{func}/{index}`.
+    pub functions: u32,
+    pub sharing: SharingMode,
+    /// Fixed keep-alive window in *modeled* ns (mirrors the DES's
+    /// `FixedKeepAlive` lifecycle policy).
+    pub keep_ns: u64,
+    /// Function-body execution cost (ms), the DES's `exec_ms`.
+    pub exec_ms: f64,
+    /// Real seconds slept per modeled second: 1.0 = model-faithful,
+    /// 0.0 = no sleeps (unit tests).
+    pub time_scale: f64,
+    pub seed: u64,
+    /// Gateway worker threads.
+    pub workers: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> LiveConfig {
+        LiveConfig {
+            driver: DriverKind::DockerWarm,
+            nodes: 4,
+            functions: 24,
+            sharing: SharingMode::PerRuntime { runtimes: 4 },
+            keep_ns: 300_000_000, // 300 ms
+            exec_ms: crate::fnplat::DEFAULT_EXEC_MS,
+            time_scale: 1.0,
+            seed: 0xE18,
+            workers: 8,
+        }
+    }
+}
+
+/// Per-class invocation counters (conservation:
+/// `warm + specialized + cold == requests`).
+#[derive(Default)]
+pub struct LiveStats {
+    pub requests: AtomicU64,
+    pub warm: AtomicU64,
+    pub specialized: AtomicU64,
+    pub cold: AtomicU64,
+}
+
+/// One worker node: a warm pool guarded by a real lock (the live
+/// analogue of the DES's per-node `NodeState`) plus an in-flight gauge
+/// for least-loaded routing.
+struct LiveNode {
+    pool: Mutex<WarmPool>,
+    inflight: AtomicU64,
+}
+
+/// Outcome of one live invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct InvokeOutcome {
+    pub class: Dispatch,
+    /// Modeled startup+exec latency (ns, unscaled) — what the DES would
+    /// have charged for this claim class.
+    pub modeled_ns: u64,
+    pub node: usize,
+}
+
+/// The live platform: N nodes, warm-preferring least-loaded routing,
+/// scaled-realtime execution.
+pub struct LivePlatform {
+    cfg: LiveConfig,
+    nodes: Vec<LiveNode>,
+    /// `func -> sharing key`, precomputed like the DES's `route_keys`.
+    route_keys: Vec<String>,
+    /// `[cold, warm, specialized]` startup pipelines.
+    pipelines: [RealtimeStartup; 3],
+    t0: Instant,
+    /// Real-ns-per-modeled-ns divisor for the modeled clock (the
+    /// configured `time_scale`, floored so 0.0 test runs still get a
+    /// monotonic clock).
+    clock_scale: f64,
+    pub stats: LiveStats,
+}
+
+/// Stable wire name for a claim class — the `"class"` annotation E18
+/// classifies measured requests by.
+pub fn class_name(d: Dispatch) -> &'static str {
+    match d {
+        Dispatch::Warm => "warm",
+        Dispatch::Specialized => "specialized",
+        Dispatch::Cold => "cold",
+    }
+}
+
+impl LivePlatform {
+    pub fn new(cfg: LiveConfig) -> LivePlatform {
+        assert!(cfg.nodes >= 1, "need at least one node");
+        assert!(cfg.functions >= 1, "need at least one function");
+        assert!(cfg.time_scale >= 0.0);
+        let mem = cfg.driver.tech().warm_memory_bytes();
+        let nodes = (0..cfg.nodes)
+            .map(|_| LiveNode {
+                pool: Mutex::new(WarmPool::new(cfg.keep_ns, mem)),
+                inflight: AtomicU64::new(0),
+            })
+            .collect();
+        let route_keys = (0..cfg.functions)
+            .map(|f| cfg.sharing.key_for(f, &format!("fn-{f}")))
+            .collect();
+        let pipelines = heat_pipelines(cfg.driver, cfg.exec_ms, cfg.time_scale);
+        let clock_scale = if cfg.time_scale > 0.0 { cfg.time_scale } else { 1.0 };
+        LivePlatform {
+            cfg,
+            nodes,
+            route_keys,
+            pipelines,
+            t0: Instant::now(),
+            clock_scale,
+            stats: LiveStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &LiveConfig {
+        &self.cfg
+    }
+
+    /// The modeled clock: real elapsed ns divided by the time scale, so
+    /// `keep_ns` means the same thing to this pool as to the DES's.
+    pub fn now_modeled_ns(&self) -> u64 {
+        (self.t0.elapsed().as_nanos() as f64 / self.clock_scale) as u64
+    }
+
+    /// Serve one invocation: route, claim, sleep out the sampled
+    /// pipeline, release back into the keep-alive window.
+    pub fn invoke(&self, func: u32, index: u64) -> InvokeOutcome {
+        let key = &self.route_keys[func as usize];
+        let now = self.now_modeled_ns();
+        // Warm-preferring least-loaded routing: a node holding a warm
+        // slot for this key beats any count of idle cores elsewhere
+        // (the DES scheduler's warm-first placement); ties break on
+        // in-flight load, then node id.
+        let mut best = 0usize;
+        let mut best_rank = (u8::MAX, u64::MAX, usize::MAX);
+        for (id, n) in self.nodes.iter().enumerate() {
+            let warm = n.pool.lock().unwrap().warm_available(key, now) > 0;
+            let rank = (u8::from(!warm), n.inflight.load(Ordering::Relaxed), id);
+            if rank < best_rank {
+                best_rank = rank;
+                best = id;
+            }
+        }
+        let node = &self.nodes[best];
+        node.inflight.fetch_add(1, Ordering::Relaxed);
+        // The claim itself classifies the request (another thread may
+        // have taken the warm slot since routing looked — the claim,
+        // not the routing hint, is the truth the response reports).
+        let class = node.pool.lock().unwrap().dispatch_shared(key, func, now);
+        let pipeline = match class {
+            Dispatch::Cold => &self.pipelines[0],
+            Dispatch::Warm => &self.pipelines[1],
+            Dispatch::Specialized => &self.pipelines[2],
+        };
+        // Per-request RNG stream: a pure function of (seed, index), so
+        // the sampled costs are reproducible across runs regardless of
+        // arrival interleaving.
+        let mut root = Rng::new(self.cfg.seed);
+        let mut rng = root.fork(index);
+        let modeled_ns = pipeline.apply(&mut rng);
+        let done = self.now_modeled_ns();
+        node.pool.lock().unwrap().release_shared_until(
+            key,
+            func,
+            done,
+            done.saturating_add(self.cfg.keep_ns),
+        );
+        node.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match class {
+            Dispatch::Warm => self.stats.warm.fetch_add(1, Ordering::Relaxed),
+            Dispatch::Specialized => self.stats.specialized.fetch_add(1, Ordering::Relaxed),
+            Dispatch::Cold => self.stats.cold.fetch_add(1, Ordering::Relaxed),
+        };
+        InvokeOutcome { class, modeled_ns, node: best }
+    }
+
+    pub fn stats_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"warm\":{},\"specialized\":{},\"cold\":{}}}",
+            self.stats.requests.load(Ordering::Relaxed),
+            self.stats.warm.load(Ordering::Relaxed),
+            self.stats.specialized.load(Ordering::Relaxed),
+            self.stats.cold.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The gateway handler.  Routes:
+    /// - `POST|GET /invoke/{func}/{index}` → JSON with the claim-class
+    ///   annotation (`{"class":"warm",...}`) E18 classifies by;
+    /// - `GET /stats` → per-class counters;
+    /// - `GET /healthz` → liveness.
+    pub fn handler(self: &Arc<Self>) -> Handler {
+        let p = Arc::clone(self);
+        Arc::new(move |req: &Request| {
+            if req.path == "/healthz" {
+                return Response::ok("ok");
+            }
+            if req.path == "/stats" {
+                return Response::json(p.stats_json());
+            }
+            let Some(rest) = req.path.strip_prefix("/invoke/") else {
+                return Response::not_found();
+            };
+            let mut parts = rest.splitn(2, '/');
+            let Some(func) = parts.next().and_then(|s| s.parse::<u32>().ok()) else {
+                return Response::bad_request("bad function id");
+            };
+            let Some(index) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
+                return Response::bad_request("bad request index");
+            };
+            if func >= p.cfg.functions {
+                return Response::not_found();
+            }
+            let out = p.invoke(func, index);
+            Response::json(format!(
+                "{{\"class\":\"{}\",\"modeled_ms\":{:.6},\"node\":{},\"func\":{},\"index\":{}}}",
+                class_name(out.class),
+                out.modeled_ns as f64 / 1e6,
+                out.node,
+                func,
+                index
+            ))
+        })
+    }
+}
+
+/// A running live platform behind its gateway.
+pub struct LiveServer {
+    pub platform: Arc<LivePlatform>,
+    server: Server,
+}
+
+impl LiveServer {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    pub fn gateway_stats(&self) -> Arc<crate::gateway::http::GatewayStats> {
+        Arc::clone(&self.server.stats)
+    }
+
+    pub fn shutdown(self) {
+        self.server.shutdown()
+    }
+}
+
+/// Bind an ephemeral loopback port and serve `cfg`.
+pub fn start(cfg: LiveConfig) -> std::io::Result<LiveServer> {
+    let workers = cfg.workers.max(1);
+    let platform = Arc::new(LivePlatform::new(cfg));
+    let handler = platform.handler();
+    let server = Server::start("127.0.0.1:0", workers, handler)?;
+    Ok(LiveServer { platform, server })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::http::http_request;
+
+    fn quick_cfg() -> LiveConfig {
+        LiveConfig { time_scale: 0.0, workers: 4, ..LiveConfig::default() }
+    }
+
+    #[test]
+    fn heat_transitions_mirror_the_pool() {
+        let p = LivePlatform::new(quick_cfg());
+        // First touch of a runtime key: cold.
+        assert_eq!(p.invoke(0, 0).class, Dispatch::Cold);
+        // Same function inside the keep window: warm.
+        assert_eq!(p.invoke(0, 1).class, Dispatch::Warm);
+        // Different function, same runtime key (4 % 4 == 0): the
+        // runtime is warm but the state is not — specialized.
+        assert_eq!(p.invoke(4, 2).class, Dispatch::Specialized);
+        let s = &p.stats;
+        assert_eq!(s.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(
+            s.warm.load(Ordering::Relaxed)
+                + s.specialized.load(Ordering::Relaxed)
+                + s.cold.load(Ordering::Relaxed),
+            3
+        );
+    }
+
+    #[test]
+    fn routing_reuses_the_warm_node() {
+        let p = LivePlatform::new(quick_cfg());
+        let first = p.invoke(1, 0);
+        let again = p.invoke(1, 1);
+        assert_eq!(again.class, Dispatch::Warm);
+        assert_eq!(again.node, first.node, "warm slot must attract the repeat");
+    }
+
+    #[test]
+    fn modeled_cost_orders_by_class() {
+        let p = LivePlatform::new(quick_cfg());
+        let cold = p.invoke(2, 0);
+        let warm = p.invoke(2, 1);
+        assert!(cold.modeled_ns > warm.modeled_ns, "cold {} warm {}", cold.modeled_ns, warm.modeled_ns);
+    }
+
+    #[test]
+    fn sampled_cost_is_reproducible_per_index() {
+        let a = LivePlatform::new(quick_cfg());
+        let b = LivePlatform::new(quick_cfg());
+        // Same seed, same index, same class => identical modeled cost.
+        assert_eq!(a.invoke(3, 7).modeled_ns, b.invoke(3, 7).modeled_ns);
+    }
+
+    #[test]
+    fn http_round_trip_with_annotations() {
+        let srv = start(quick_cfg()).unwrap();
+        let addr = srv.addr();
+        let (st, body) = http_request(addr, "POST", "/invoke/0/0", b"").unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("\"class\":\"cold\""), "{text}");
+        let (st, body) = http_request(addr, "POST", "/invoke/0/1", b"").unwrap();
+        assert_eq!(st, 200);
+        assert!(String::from_utf8(body).unwrap().contains("\"class\":\"warm\""));
+        let (st, body) = http_request(addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+        assert!(String::from_utf8(body).unwrap().contains("\"requests\":2"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_routes_are_4xx() {
+        let srv = start(quick_cfg()).unwrap();
+        let addr = srv.addr();
+        assert_eq!(http_request(addr, "POST", "/invoke/zz/0", b"").unwrap().0, 400);
+        assert_eq!(http_request(addr, "POST", "/invoke/0", b"").unwrap().0, 400);
+        assert_eq!(http_request(addr, "POST", "/invoke/9999/0", b"").unwrap().0, 404);
+        assert_eq!(http_request(addr, "GET", "/nope", b"").unwrap().0, 404);
+        assert_eq!(http_request(addr, "GET", "/healthz", b"").unwrap().0, 200);
+        srv.shutdown();
+    }
+}

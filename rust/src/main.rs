@@ -9,6 +9,9 @@
 //!   sharing                 universal-worker sharing sweep (E16): shared warm pools
 //!   hyperplanet             sharded sweep (E17): 1024 nodes, 10k fns, parallel cells
 //!   trace                   replay one experiment cell with lifecycle tracing on
+//!   livecheck               E18 cross-validation: one trace through the DES and
+//!                           the live stack, measured classes banded vs prediction
+//!   loadgen                 open-loop load generator against a live gateway
 //!   compare                 bench-regression gate: diff two BENCH_*.json reports
 //!   lint                    determinism audit: run detlint over rust/src (DESIGN.md S28)
 //!   serve                   start the live platform (HTTP + PJRT)
@@ -39,6 +42,8 @@ fn main() {
         "sharing" => cmd_sharing(&args),
         "hyperplanet" => cmd_hyperplanet(&args),
         "trace" => cmd_trace(&args),
+        "livecheck" => cmd_livecheck(&args),
+        "loadgen" => cmd_loadgen(&args),
         "compare" => cmd_compare(&args),
         "lint" => cmd_lint(&args),
         "serve" => cmd_serve(&args),
@@ -211,6 +216,40 @@ USAGE: coldfaas <subcommand> [options]
                             grid shape, as for chaos/planet
       --out FILE            also append the report to FILE
       --json FILE           write a machine-readable report
+
+  livecheck                 E18 sim-vs-live cross-validation (DESIGN.md S29):
+                            replay one deterministic tenant trace through the
+                            DES *and* the live HTTP stack, classify measured
+                            requests warm/specialized/cold from response
+                            annotations, and band each class's measured p50
+                            against the DES prediction; the sim leg is
+                            byte-identical per seed, the live leg is
+                            band-gated (see EXPERIMENTS.md, 'Simulation vs.
+                            live measurement')
+      --quick               CI cell: ~240 requests over 8 s (default: ~1200
+                            over 20 s)
+      --scale F             real seconds per modeled second on the live leg
+                            (default 1.0; smaller compresses the replay and
+                            proportionally widens the bands)
+      --seed N              deterministic seed for trace and startup samples
+      --out FILE            also append the report to FILE
+      --json FILE           write a machine-readable report
+
+  loadgen                   open-loop load generator: replay a deterministic
+                            tenant trace against a live gateway over
+                            keep-alive connections, measuring latency from
+                            each request's *scheduled* arrival
+                            (coordinated-omission-free); self-hosts an S29
+                            live platform unless --target is given
+      --target ADDR         existing gateway to drive (default: self-host)
+      --functions N         distinct functions in the trace (default 24)
+      --rps F               aggregate offered load (default 50)
+      --duration S          trace seconds (default 10)
+      --scale F             pacing scale (default 1.0; 0 = as fast as the
+                            senders can go)
+      --senders N           keep-alive sender connections (default 8)
+      --zipf S              popularity exponent (default 1.1)
+      --seed N              deterministic trace seed
 
   compare <run.json> <baseline.json>
                             bench-regression gate over two machine-readable
@@ -669,6 +708,104 @@ fn cmd_trace(args: &Args) -> i32 {
     }
     let report = replay_report(&out);
     finish_report(args, "trace", report, t0.elapsed().as_secs_f64())
+}
+
+/// `coldfaas livecheck` (E18): the sim-vs-live cross-validation cell.
+/// Unlike `experiment <name>` this is *not* fully deterministic — the
+/// live leg measures the real serving stack — so it has its own
+/// subcommand and is never part of `experiment all`.
+fn cmd_livecheck(args: &Args) -> i32 {
+    use coldfaas::experiments::livecheck::{livecheck_with, LivecheckConfig};
+    let cfg = (|| {
+        let mut cfg =
+            if args.has_flag("quick") { LivecheckConfig::quick() } else { LivecheckConfig::full() };
+        cfg.time_scale = args.try_get_f64("scale", cfg.time_scale)?;
+        cfg.seed = args.try_get_u64("seed", cfg.seed)?;
+        if cfg.time_scale <= 0.0 || cfg.time_scale.is_nan() {
+            return Err("--scale must be positive (the live leg needs a real clock)".to_string());
+        }
+        Ok(cfg)
+    })();
+    let cfg = match cfg {
+        Ok(cfg) => cfg,
+        Err(e) => return usage_error("livecheck", &e),
+    };
+    let t0 = std::time::Instant::now();
+    let report = livecheck_with(&cfg);
+    finish_report(args, "livecheck", report, t0.elapsed().as_secs_f64())
+}
+
+/// `coldfaas loadgen`: drive a live gateway with the open-loop generator.
+/// With no `--target` it self-hosts an S29 live platform so the command
+/// is runnable out of the box (no PJRT artifacts needed).
+fn cmd_loadgen(args: &Args) -> i32 {
+    use coldfaas::live::{loadgen, start, LiveConfig};
+    use coldfaas::workload::tenants::{TenantConfig, TenantTrace};
+    let parsed = (|| {
+        let tenant = TenantConfig {
+            functions: args.try_get_u32("functions", 24)?,
+            duration_s: args.try_get_f64("duration", 10.0)?,
+            total_rps: args.try_get_f64("rps", 50.0)?,
+            zipf_exponent: args.try_get_f64("zipf", 1.1)?,
+            diurnal_depth: 0.0,
+            diurnal_period_s: 60.0,
+            bursty_fraction: 0.0,
+            seed: args.try_get_u64("seed", 0xE18)?,
+        };
+        let scale = args.try_get_f64("scale", 1.0)?;
+        let senders = args.try_get_u64("senders", 8)? as usize;
+        if tenant.functions == 0 || tenant.total_rps <= 0.0 || tenant.duration_s <= 0.0 {
+            return Err("--functions, --rps and --duration must be positive".to_string());
+        }
+        if scale < 0.0 || scale.is_nan() || senders == 0 {
+            return Err("--scale must be >= 0 and --senders positive".to_string());
+        }
+        Ok((tenant, scale, senders))
+    })();
+    let (tenant, scale, senders) = match parsed {
+        Ok(p) => p,
+        Err(e) => return usage_error("loadgen", &e),
+    };
+    let trace = TenantTrace::generate(&tenant);
+    let (addr, server) = match args.get("target") {
+        Some(t) => match t.parse::<std::net::SocketAddr>() {
+            Ok(a) => (a, None),
+            Err(e) => return usage_error("loadgen", &format!("--target {t}: {e}")),
+        },
+        None => {
+            let srv = match start(LiveConfig {
+                functions: tenant.functions,
+                time_scale: scale,
+                seed: tenant.seed,
+                ..LiveConfig::default()
+            }) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("loadgen: self-host live platform: {e}");
+                    return 1;
+                }
+            };
+            println!("self-hosted live platform on http://{}", srv.addr());
+            (srv.addr(), Some(srv))
+        }
+    };
+    println!(
+        "replaying {} arrivals ({} functions, {:.0} rps x {:.0} s) at scale {scale} over {senders} senders",
+        trace.arrivals.len(),
+        tenant.functions,
+        tenant.total_rps,
+        tenant.duration_s
+    );
+    let report = loadgen::run(addr, &trace, scale, senders);
+    println!("{}", report.summary());
+    if let Some(srv) = server {
+        srv.shutdown();
+    }
+    if report.errors == 0 {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_compare(args: &Args) -> i32 {

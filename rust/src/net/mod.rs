@@ -86,6 +86,12 @@ impl Frontend {
     /// the gateway's own TLS/session machinery — modeled as a flat accept
     /// overhead on top of the protocol round trips.
     pub const LAMBDA_API_GW: Frontend = Frontend { kind: ConnKind::Tls, accept_overhead_ms: 42.0 };
+    /// The repo's own rebuilt gateway (S29) measured over loopback: plain
+    /// TCP and a worker-pool accept path.  E18 `livecheck` uses this
+    /// model's nominal setup as the per-request HTTP-overhead term when
+    /// deriving the live-vs-sim tolerance bands (EXPERIMENTS.md
+    /// "Simulation vs. live measurement").
+    pub const LIVE_LOOPBACK: Frontend = Frontend { kind: ConnKind::Tcp, accept_overhead_ms: 0.05 };
 
     /// TLS handshake crypto cost (both sides), ms.
     const TLS_CRYPTO_MS: f64 = 3.0;
@@ -174,6 +180,16 @@ mod tests {
         let ec2 = Frontend::LAMBDA_API_GW.nominal_setup_ms(Site::Ec2SameRegion, Site::AwsStockholm);
         assert!(ec2 < lab);
         assert!(ec2 > lab * 0.5, "should be 'only slightly lower': {ec2} vs {lab}");
+    }
+
+    #[test]
+    fn live_loopback_setup_is_sub_millisecond() {
+        // The live gateway's whole connection-setup model must stay well
+        // under the warm-invoke pipeline (~1.8 ms docker), or the E18
+        // band derivation would be dominated by its own overhead term.
+        let lo = Frontend::LIVE_LOOPBACK.nominal_setup_ms(Site::LabStockholm, Site::LabStockholm);
+        assert!(lo < 1.0, "loopback setup {lo}");
+        assert!(lo > 0.0);
     }
 
     #[test]

@@ -355,6 +355,10 @@ pub fn run_burst(cfg: &ClusterConfig) -> BurstResult {
         faults: super::FaultPlan::default(),
         obs: crate::obs::ObsConfig::default(),
         shards: 1,
+        checkpoint_every_ns: 0,
+        checkpoint_path: None,
+        resume_from: None,
+        state_hash: false,
         seed: cfg.seed,
     };
     let r: PlatformResult =

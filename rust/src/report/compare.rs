@@ -19,7 +19,14 @@
 //!   regression, while speedups and small jitter are informational.
 //!   Throughput baselines must therefore come from the runner class
 //!   that gates them (CI regenerates via `make baselines` on its own
-//!   hardware).
+//!   hardware);
+//! * **live-plane rows are verdict-only** — E18 `livecheck` measures the
+//!   real serving stack, so every row whose label or metric starts with
+//!   `live` carries wall-clock noise in its values.  The band *verdict*
+//!   (pass boolean) still compares exactly — the tolerance bands already
+//!   encode how much live jitter is acceptable — but the measured values
+//!   and series quantiles are informational.  The sim leg of the same
+//!   report has no `live` prefix and gates at full strength.
 //!
 //! A baseline whose top level carries `"bootstrap": true` is a committed
 //! placeholder (no toolchain was available to generate real numbers):
@@ -101,6 +108,14 @@ fn field_num(obj: &Json, key: &str) -> Option<f64> {
 /// one-sidedly via [`gate_throughput`] instead of the symmetric band.
 fn throughput(metric: &str) -> bool {
     metric.contains("events/s")
+}
+
+/// Live-plane rows (E18 `livecheck`): measured on the real serving
+/// stack, so values are wall-clock noise and only the verdict gates.
+/// Keyed on the `live` prefix the livecheck report puts on every
+/// live-leg label and metric.
+fn live_plane(label: &str, metric: &str) -> bool {
+    label.starts_with("live") || metric.starts_with("live")
 }
 
 /// One-sided throughput gate: drift only when the run falls more than
@@ -218,6 +233,18 @@ fn compare_labelled(
                 run_it.get("pass").and_then(as_bool),
                 base_it.get("pass").and_then(as_bool),
             );
+            if live_plane(&key.0, &key.1) {
+                // E18: the verdict (compared above) is the gate; the
+                // measured value is live wall-clock noise.
+                if let (Some(r), Some(b)) =
+                    (field_num(run_it, "measured"), field_num(base_it, "measured"))
+                {
+                    cmp.infos.push(format!(
+                        "{ctx}: live-plane measured {r:.3} vs baseline {b:.3} (verdict-only)"
+                    ));
+                }
+                continue;
+            }
             if throughput(&key.1) {
                 // The band's edges are configuration and compare
                 // symmetrically; the measured value is wall-clock
@@ -240,6 +267,11 @@ fn compare_labelled(
                 );
                 continue;
             }
+        } else if live_plane(&key.0, &key.1) {
+            // Live-plane series carry measured-latency quantiles with no
+            // pass boolean of their own: nothing to gate.
+            cmp.infos.push(format!("{ctx}: live-plane series (informational, not gated)"));
+            continue;
         }
         for f in fields {
             compare_num(&mut cmp.drifts, &ctx, f, field_num(run_it, f), field_num(base_it, f), tol);
@@ -443,6 +475,71 @@ mod tests {
         // Just inside the floor: still a pass.
         let edge = base.replace("\"measured\":12345", "\"measured\":6500");
         assert!(compare_documents(&edge, &base, DEFAULT_TOL).unwrap().ok());
+    }
+
+    fn livecheck_doc(p50: f64, measured: f64, pass: bool) -> String {
+        format!(
+            "{{\"generator\":\"coldfaas\",\"total_wall_s\":9.0,\"experiments\":[\
+             {{\"id\":\"livecheck_quick\",\"title\":\"E18\",\"wall_s\":8.5,\"all_pass\":true,\
+             \"series\":[\
+             {{\"label\":\"sim warm latency (ms)\",\"n\":100,\"p1\":1,\"p25\":2,\"p50\":{p50},\
+             \"p75\":4,\"p99\":5,\"mean\":3,\"max\":6}},\
+             {{\"label\":\"live warm latency (modeled ms)\",\"n\":90,\"p1\":1,\"p25\":2,\
+             \"p50\":{measured},\"p75\":40,\"p99\":80,\"mean\":20,\"max\":90}}],\
+             \"checks\":[],\
+             \"bands\":[{{\"label\":\"live warm p50 vs sim p50\",\"metric\":\"live ms\",\
+             \"lo\":0.5,\"hi\":10.0,\"measured\":{measured},\"pass\":{pass}}}],\
+             \"notes\":[]}}]}}"
+        )
+    }
+
+    #[test]
+    fn live_plane_rows_gate_on_verdict_only() {
+        let base = livecheck_doc(3.0, 2.5, true);
+        // Wildly different live measurements — but the band verdict and
+        // the sim-side series agree, so the gate stays green and the
+        // delta is informational.
+        let jittery = livecheck_doc(3.0, 9.5, true);
+        let cmp = compare_documents(&jittery, &base, DEFAULT_TOL).unwrap();
+        assert!(cmp.ok(), "{:?}", cmp.drifts);
+        assert!(
+            cmp.infos.iter().any(|i| i.contains("verdict-only")),
+            "{:?}",
+            cmp.infos
+        );
+        assert!(
+            cmp.infos.iter().any(|i| i.contains("live-plane series")),
+            "{:?}",
+            cmp.infos
+        );
+    }
+
+    #[test]
+    fn live_plane_verdict_flips_still_gate() {
+        let base = livecheck_doc(3.0, 2.5, true);
+        let failed = livecheck_doc(3.0, 2.5, false);
+        let cmp = compare_documents(&failed, &base, DEFAULT_TOL).unwrap();
+        assert!(!cmp.ok());
+        assert!(
+            cmp.drifts.iter().any(|d| d.contains("live warm p50 vs sim p50")),
+            "{:?}",
+            cmp.drifts
+        );
+    }
+
+    #[test]
+    fn sim_side_of_a_livecheck_report_gates_at_full_strength() {
+        let base = livecheck_doc(3.0, 2.5, true);
+        // The sim leg is deterministic: a drifted sim p50 gates even
+        // though it sits in the same report as the live rows.
+        let drifted = livecheck_doc(6.0, 2.5, true);
+        let cmp = compare_documents(&drifted, &base, DEFAULT_TOL).unwrap();
+        assert!(!cmp.ok());
+        assert!(
+            cmp.drifts.iter().any(|d| d.contains("sim warm latency")),
+            "{:?}",
+            cmp.drifts
+        );
     }
 
     fn doc_with_profile(events: u64, eps: f64, ts_max: f64) -> String {

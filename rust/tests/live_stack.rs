@@ -253,6 +253,139 @@ fn lazy_compile_on_second_engine() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Gateway-tier tests (S29): no PJRT artifacts needed — these drive the
+// benchmark-grade HTTP server directly, so they run on every `cargo test`.
+// ---------------------------------------------------------------------------
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use coldfaas::gateway::http::{Handler, HttpClient, Request, Response, Server, MAX_HEAD_BYTES};
+
+fn echo_gateway(workers: usize) -> Server {
+    let handler: Handler = Arc::new(|req: &Request| match req.path.as_str() {
+        "/noop" => Response::ok(""),
+        p if p.starts_with("/echo") => Response::ok(req.body.clone()),
+        _ => Response::not_found(),
+    });
+    Server::start("127.0.0.1:0", workers, handler).unwrap()
+}
+
+#[test]
+fn gateway_keep_alive_reuses_one_connection() {
+    let srv = echo_gateway(4);
+    let mut c = HttpClient::connect(srv.addr()).unwrap();
+    for i in 0..25 {
+        let body = format!("req-{i}");
+        let (status, got) = c.request("POST", "/echo", body.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(got, body.as_bytes());
+    }
+    // 25 requests, ONE accepted TCP connection: keep-alive actually held.
+    assert_eq!(srv.stats.served.load(Ordering::Relaxed), 25);
+    assert_eq!(srv.stats.accepted.load(Ordering::Relaxed), 1);
+    assert_eq!(srv.stats.shed.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn gateway_malformed_requests_all_get_4xx() {
+    let srv = echo_gateway(4);
+    // Each raw byte blob is an unframeable request; the server must
+    // answer 400 (never hang, never crash) and count a parse error.
+    let blobs: Vec<Vec<u8>> = vec![
+        b"G@T /noop HTTP/1.1\r\n\r\n".to_vec(),
+        b"POST /echo HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 3\r\n\r\nabc".to_vec(),
+        b"POST /echo HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(),
+        {
+            let mut junk = b"GET /noop HTTP/1.1\r\nX-Filler: ".to_vec();
+            junk.resize(junk.len() + MAX_HEAD_BYTES + 512, b'a');
+            junk
+        },
+    ];
+    let n_blobs = blobs.len() as u64;
+    for blob in blobs {
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&blob).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "got: {text}");
+    }
+    // Truncated body: promise 10 bytes, half-close after 3.
+    let mut s = TcpStream::connect(srv.addr()).unwrap();
+    s.write_all(b"POST /echo HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    assert!(String::from_utf8_lossy(&buf).starts_with("HTTP/1.1 400"), "{buf:?}");
+    assert_eq!(srv.stats.parse_errors.load(Ordering::Relaxed), n_blobs + 1);
+    // The server keeps serving clean requests afterwards.
+    let (status, _) = http_request(srv.addr(), "GET", "/noop", b"").unwrap();
+    assert_eq!(status, 200);
+    srv.shutdown();
+}
+
+#[test]
+fn gateway_accept_pool_accounts_concurrent_connections() {
+    // Workers own whole persistent connections, so 8 concurrent clients
+    // need 8 workers; the accept pool (capped at 4 threads) must still
+    // account exactly one accept per client and shed nothing.
+    let srv = echo_gateway(8);
+    let addr = srv.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(addr).unwrap();
+                for i in 0..10 {
+                    let body = format!("t{t}-r{i}");
+                    let (status, got) = c.request("POST", "/echo", body.as_bytes()).unwrap();
+                    assert_eq!(status, 200);
+                    assert_eq!(got, body.as_bytes());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(srv.stats.served.load(Ordering::Relaxed), 80);
+    assert_eq!(srv.stats.accepted.load(Ordering::Relaxed), 8);
+    assert_eq!(srv.stats.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(srv.stats.parse_errors.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn live_platform_handler_4xx_keeps_connection_alive() {
+    // Handler-level 4xx (bad route) is not a framing error: the same
+    // keep-alive connection must keep serving real invokes afterwards.
+    let srv = coldfaas::live::start(coldfaas::live::LiveConfig {
+        functions: 4,
+        time_scale: 0.0,
+        workers: 4,
+        ..coldfaas::live::LiveConfig::default()
+    })
+    .unwrap();
+    let mut c = HttpClient::connect(srv.addr()).unwrap();
+    let (s, _) = c.request("POST", "/invoke/99/0", b"").unwrap();
+    assert_eq!(s, 404); // function out of range
+    let (s, _) = c.request("POST", "/invoke/abc/0", b"").unwrap();
+    assert_eq!(s, 400); // non-numeric function id
+    let (s, body) = c.request("POST", "/invoke/0/0", b"").unwrap();
+    assert_eq!(s, 200);
+    assert!(String::from_utf8_lossy(&body).contains("\"class\":\"cold\""));
+    // All three rode one accepted connection; only the invoke counted.
+    let gw = srv.gateway_stats();
+    assert_eq!(gw.accepted.load(Ordering::Relaxed), 1);
+    assert_eq!(gw.served.load(Ordering::Relaxed), 3);
+    assert_eq!(srv.platform.stats.requests.load(Ordering::Relaxed), 1);
+    srv.shutdown();
+}
+
 #[test]
 fn realtime_startup_model_actually_delays() {
     require_artifacts!();
